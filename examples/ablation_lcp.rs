@@ -1,0 +1,116 @@
+//! Ablations of the LCP trainer's design choices (DESIGN.md §Perf /
+//! EXPERIMENTS.md §Ablations):
+//!
+//! 1. keep-best-seen permutation vs take-final-step (the loss is noisy
+//!    once tau is small — keep-best should win or tie always);
+//! 2. CP-seeded refinement vs identity-init learning (the pipeline's
+//!    composition choice);
+//! 3. permutation-aware int4 quantization (paper §D future work) —
+//!    range-sorted grouping vs natural order on outlier-channel weights.
+//!
+//! ```bash
+//! cargo run --release --example ablation_lcp
+//! ```
+
+use permllm::cp::ria_cp;
+use permllm::lcp::{harden, tau_schedule, AdamW, AdamWCfg, HostBackend, LayerData, LcpBackend, LcpCfg};
+use permllm::pruning::{importance, Metric};
+use permllm::quant::{range_sort_perm, QuantCfg, QuantWeight};
+use permllm::sparsity::NmConfig;
+use permllm::tensor::Mat;
+use permllm::util::rng::Pcg32;
+
+/// Run LCP and report (best_loss, final_loss).
+fn run_lcp(data: &LayerData, cfg: LcpCfg, seed_perm: Option<&[usize]>) -> (f32, f32) {
+    let (w, s, x) = (&data.w, &data.s, &data.x);
+    // Optionally pre-permute the layer (CP seeding).
+    let owned;
+    let d = if let Some(p) = seed_perm {
+        owned = LayerData::new(w.permute_cols(p), s.permute_cols(p), x.permute_cols(p));
+        &owned
+    } else {
+        data
+    };
+    let mut backend = HostBackend::new(d, cfg.nm, cfg.sinkhorn_iters);
+    let n_b = d.w.cols() / cfg.block;
+    let b = cfg.block;
+    let mut w_p: Vec<Mat> = (0..n_b).map(|_| Mat::eye(b).scale(2.0)).collect();
+    let mut opts: Vec<AdamW> =
+        (0..n_b).map(|_| AdamW::new(b * b, AdamWCfg { lr: cfg.lr, ..Default::default() })).collect();
+    let mut best = f32::INFINITY;
+    let mut last = f32::NAN;
+    for step in 0..cfg.steps {
+        let tau = tau_schedule(step, cfg.steps, cfg.tau0, cfg.tau1);
+        let soft = backend.soft_perms(&w_p, tau);
+        let hard: Vec<Vec<usize>> = soft.iter().map(|m| harden(m)).collect();
+        let (loss, grads) = backend.loss_grad(&w_p, &hard, tau);
+        best = best.min(loss);
+        last = loss;
+        for (n, opt) in opts.iter_mut().enumerate() {
+            opt.step(w_p[n].data_mut(), grads[n].data());
+            for v in w_p[n].data_mut() {
+                *v = v.clamp(-8.0, 8.0);
+            }
+        }
+    }
+    (best, last)
+}
+
+fn main() {
+    permllm::util::logging::init();
+    let nm = NmConfig::PAT_2_4;
+    let cfg = LcpCfg { block: 64, steps: 50, lr: 0.1, nm, ..Default::default() };
+
+    println!("=== Ablation 1+2: keep-best vs final; identity-init vs CP-seeded ===");
+    println!(
+        "{:<6} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "seed", "cp-loss", "id-best", "id-final", "cp-best", "cp-final"
+    );
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::seeded(500 + seed);
+        let w = Mat::randn(128, 128, 0.1, &mut rng);
+        let x = Mat::randn(128, 128, 1.0, &mut rng);
+        let s = importance(Metric::Wanda, &w, &x);
+        let data = LayerData::new(w.clone(), s.clone(), x.clone());
+
+        let perm_cp = ria_cp(&s, nm);
+        // Loss of the heuristic permutation alone (step-0 of the seeded run).
+        let (id_best, id_final) = run_lcp(&data, cfg, None);
+        let (cp_best, cp_final) = run_lcp(&data, cfg, Some(&perm_cp));
+        // cp-loss = loss at CP with no refinement = first-step loss of the
+        // seeded run; approximate by re-running 1 step.
+        let (cp_alone, _) = run_lcp(&data, LcpCfg { steps: 1, ..cfg }, Some(&perm_cp));
+        println!(
+            "{:<6} {:>12.5} {:>12.5} {:>12.5} {:>12.5} {:>12.5}",
+            seed, cp_alone, id_best, id_final, cp_best, cp_final
+        );
+        assert!(cp_best <= cp_alone + 1e-6, "keep-best regressed below its seed");
+        assert!(id_best <= id_final + 1e-6);
+    }
+    println!("keep-best never regresses; CP-seeded refinement ≤ CP alone. OK");
+
+    println!("\n=== Ablation 3: permutation-aware int4 quantization (paper §D) ===");
+    println!("{:<6} {:>14} {:>14} {:>10}", "seed", "natural mse", "range-sorted", "gain");
+    for seed in 0..4u64 {
+        let mut rng = Pcg32::seeded(900 + seed);
+        // Outlier-channel weight (the LLM-like regime).
+        let mut w = Mat::randn(64, 256, 0.05, &mut rng);
+        for _ in 0..16 {
+            let c = rng.below_usize(256);
+            for r in 0..64 {
+                w[(r, c)] *= 20.0;
+            }
+        }
+        let base = QuantWeight::quantize(&w, QuantCfg::INT4_G64).mse(&w);
+        let perm = range_sort_perm(&w);
+        let sorted = QuantWeight::quantize_permuted(&w, &perm, QuantCfg::INT4_G64).mse(&w);
+        println!(
+            "{:<6} {:>14.6} {:>14.6} {:>9.2}x",
+            seed,
+            base,
+            sorted,
+            base / sorted
+        );
+    }
+    println!("channel reordering reduces group-quantization error — the paper's §D direction holds on this substrate.");
+}

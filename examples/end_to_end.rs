@@ -1,0 +1,120 @@
+//! End-to-end validation (DESIGN.md §4): all three layers composing.
+//!
+//! 1. Pretrain the tiny LM **from Rust** by executing the AOT
+//!    `train_step` artifact (L2 JAX graph, lowered once at build time).
+//! 2. Prune with Wanda / Wanda+CP / PermLLM_Wanda (LCP via the Rust
+//!    trainer with the Hungarian hardening + AdamW loop; gradient math
+//!    identical to the `lcp_grad` artifact).
+//! 3. Evaluate perplexity of every variant through BOTH the host forward
+//!    and the `lm_forward` artifact, verifying they agree.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+
+use permllm::coordinator::{pretrain, prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{batch_to_i32, sample_batch, Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::model::ParamStore;
+use permllm::pruning::Metric;
+use permllm::runtime::{literal_to_vec, tokens_to_literal, vec_to_literal, Engine};
+use permllm::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    permllm::util::logging::init();
+    let artifacts = Path::new("artifacts/tiny-m");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let model_path = Path::new("models/tiny-m.bin");
+
+    // ---- 1. pretrain via the train_step artifact --------------------------
+    if !model_path.exists() {
+        let steps = std::env::var("E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+        println!("pretraining tiny-m for {steps} steps via the AOT train_step artifact...");
+        let losses = pretrain(artifacts, CorpusKind::C4Like, steps, 25, model_path)?;
+        println!("loss curve (every 25 steps):");
+        for (i, l) in losses.iter().enumerate() {
+            if i % 25 == 0 || i + 1 == losses.len() {
+                println!("  step {i:>4}: {l:.4}");
+            }
+        }
+    } else {
+        println!("using cached pretrained model {}", model_path.display());
+    }
+    let ps = ParamStore::load(model_path)?;
+
+    // ---- 2. prune ----------------------------------------------------------
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: 30, lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+    let methods = [
+        PruneMethod::Dense,
+        PruneMethod::OneShot(Metric::Wanda),
+        PruneMethod::OneShotCp(Metric::Wanda),
+        PruneMethod::PermLlm(Metric::Wanda),
+    ];
+
+    // ---- 3. evaluate through host AND artifact forward --------------------
+    let mut engine = Engine::load_lazy(artifacts)?;
+    println!("\n{:<16} {:>14} {:>16} {:>10}", "method", "host ppl", "artifact ppl", "time(s)");
+    for method in methods {
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let host_ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+        let art_ppl = artifact_perplexity(&mut engine, &pruned.params, &evalc)?;
+        println!(
+            "{:<16} {:>14.3} {:>16.3} {:>10.1}",
+            method.name(),
+            host_ppl,
+            art_ppl,
+            pruned.elapsed_s
+        );
+        anyhow::ensure!(
+            (host_ppl - art_ppl).abs() / host_ppl < 0.02,
+            "host and artifact forward disagree: {host_ppl} vs {art_ppl}"
+        );
+    }
+    println!("\nhost forward == lm_forward artifact on every variant: OK");
+    Ok(())
+}
+
+/// Perplexity via the `lm_forward` artifact (the no-Python request path).
+fn artifact_perplexity(
+    engine: &mut Engine,
+    ps: &ParamStore,
+    corpus: &Corpus,
+) -> anyhow::Result<f64> {
+    let (cfg, batch_size, param_order) =
+        (engine.manifest().config.clone(), engine.manifest().batch, engine.manifest().param_order.clone());
+    let mut inputs: Vec<xla::Literal> = Vec::with_capacity(param_order.len() + 1);
+    for (name, shape) in &param_order {
+        inputs.push(vec_to_literal(ps.get(name).data(), shape)?);
+    }
+    let mut rng = Pcg32::new(555, 999);
+    let batch = sample_batch(corpus, &mut rng, batch_size, cfg.seq_len);
+    inputs.push(tokens_to_literal(&batch_to_i32(&batch), batch_size, cfg.seq_len)?);
+    let outs = engine.run("lm_forward", &inputs)?;
+    let logits = literal_to_vec(&outs[0])?; // [B, T, V]
+    let (t, v) = (cfg.seq_len, cfg.vocab);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (bi, seq) in batch.iter().enumerate() {
+        for pos in 0..t - 1 {
+            let row = &logits[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
+            let target = seq[pos + 1] as usize;
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|x| (x - mx).exp()).sum();
+            total += -((row[target] - mx) as f64 - (z as f64).ln());
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}

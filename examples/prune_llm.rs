@@ -1,0 +1,51 @@
+//! Prune a whole tiny LLM with every method and compare perplexity —
+//! a miniature Table 1 run on one model.
+//!
+//! ```bash
+//! cargo run --release --example prune_llm -- [model] [steps]
+//! ```
+
+use permllm::bench::trained_or_synth;
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+
+fn main() {
+    permllm::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("tiny-s");
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+
+    let (ps, prov) = trained_or_synth(model);
+    println!("model {model} ({prov}), {} params", ps.n_params());
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps, lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+
+    let methods = [
+        PruneMethod::Dense,
+        PruneMethod::SparseGpt,
+        PruneMethod::OneShot(Metric::Wanda),
+        PruneMethod::OneShotCp(Metric::Wanda),
+        PruneMethod::PermLlm(Metric::Wanda),
+        PruneMethod::OneShot(Metric::Ria),
+        PruneMethod::OneShotCp(Metric::Ria),
+        PruneMethod::PermLlm(Metric::Ria),
+    ];
+    println!("{:<16} {:>12} {:>14} {:>10}", "method", "ppl", "mean-layer-err", "time(s)");
+    for method in methods {
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let ppl = eval_perplexity(&pruned.params, &evalc, 555, 6, 64);
+        let err: f32 = if pruned.layer_errors.is_empty() {
+            0.0
+        } else {
+            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
+        };
+        println!("{:<16} {:>12.3} {:>14.5} {:>10.1}", method.name(), ppl, err, pruned.elapsed_s);
+    }
+}

@@ -1,0 +1,52 @@
+//! Quickstart: prune one linear layer three ways and compare output error.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the core public API on a single `[C_out, C_in]` layer:
+//! one-shot Wanda (Eq. 7), Wanda + RIA's heuristic channel permutation,
+//! and PermLLM's learnable channel permutation (Sinkhorn + Hungarian +
+//! AdamW with straight-through gradients).
+
+use permllm::cp::ria_cp;
+use permllm::lcp::{train_lcp, HostBackend, LayerData, LcpCfg};
+use permllm::pruning::{importance, prune_oneshot, prune_permuted, Metric};
+use permllm::sparsity::NmConfig;
+use permllm::tensor::Mat;
+use permllm::util::rng::Pcg32;
+
+fn main() {
+    permllm::util::logging::init();
+    let nm = NmConfig::PAT_2_4;
+    let mut rng = Pcg32::seeded(7);
+
+    // A synthetic layer: weight [64, 128], calibration activations [96, 128].
+    let w = Mat::randn(64, 128, 0.1, &mut rng);
+    let x = Mat::randn(96, 128, 1.0, &mut rng);
+    let y_dense = x.matmul_bt(&w);
+
+    // 1. One-shot Wanda pruning (no permutation).
+    let plain = prune_oneshot(Metric::Wanda, &w, &x, nm);
+    println!("wanda            cosine-err = {:.5}", plain.cosine_error(&x, &y_dense));
+
+    // 2. Wanda + heuristic channel permutation (RIA's two-stage CP).
+    let s = importance(Metric::Wanda, &w, &x);
+    let perm = ria_cp(&s, nm);
+    let cp = prune_permuted(Metric::Wanda, &w, &x, nm, &perm);
+    println!("wanda+CP         cosine-err = {:.5}", cp.cosine_error(&x, &y_dense));
+
+    // 3. PermLLM: learnable channel permutation.
+    let data = LayerData::new(w.clone(), s, x.clone());
+    let mut backend = HostBackend::new(&data, nm, 5);
+    let cfg = LcpCfg { block: 64, steps: 50, lr: 0.05, nm, ..Default::default() };
+    let res = train_lcp(&mut backend, w.cols(), cfg);
+    let lcp = prune_permuted(Metric::Wanda, &w, &x, nm, &res.src_of);
+    println!(
+        "PermLLM(wanda)   cosine-err = {:.5}  (baseline {:.5}, {} LCP steps)",
+        lcp.cosine_error(&x, &y_dense),
+        res.baseline_loss,
+        res.history.len()
+    );
+    println!("mask is valid 2:4: {}", lcp.mask.verify());
+}

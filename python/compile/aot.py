@@ -1,0 +1,253 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.json.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the rust `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts emitted for a model config (default tiny-m):
+
+  train_step.hlo.txt           flat params/m/v (x P) + step(1) + tokens[B,T]
+                               -> params'/m'/v' + step' + loss(1)
+  lm_forward.hlo.txt           flat params + tokens[B,T] -> logits[B,T,V]
+  lcp_grad_{o}x{i}.hlo.txt     (W,S,X,Y,W_P,P_hard,tau) -> (loss, dW_P)
+  sinkhorn_soft_{n}x{b}.hlo.txt (W_P, tau) -> P_soft
+  sparse_fwd_{o}x{i}.hlo.txt   (vals, idx, x, src_of) -> y   [Pallas permute
+                               + nm_spmm inference hot path]
+
+manifest.json records the model/train configs, the canonical parameter
+order, and per-artifact input/output specs so the Rust runtime is fully
+generic over shapes.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--config tiny-m]
+        [--block 64] [--calib-rows 128] [--batch 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import lcp as lcp_mod
+from . import model as model_mod
+from .kernels import nm_spmm_pallas, permute_pallas
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype=F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name: str, shape: Sequence[int], dtype: str = "f32") -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _lower(fn: Callable, specs: List[jax.ShapeDtypeStruct], path: str) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def linear_shapes(cfg: model_mod.ModelConfig) -> List[Tuple[int, int]]:
+    """Distinct [C_out, C_in] shapes of the prunable linear layers."""
+    d, f = cfg.dim, cfg.ffn
+    shapes = {(d, d), (f, d), (d, f)}
+    return sorted(shapes)
+
+
+def build(outdir: str, cfg_name: str, block: int, calib_rows: int, batch: int,
+          m: int, keep: int, sinkhorn_iters: int) -> dict:
+    cfg = model_mod.CONFIGS[cfg_name]
+    tc = model_mod.TrainConfig()
+    os.makedirs(outdir, exist_ok=True)
+    names = model_mod.param_names(cfg)
+    shapes = model_mod.param_shapes(cfg)
+    n_params = len(names)
+    artifacts = []
+
+    # ---- train_step -------------------------------------------------------
+    def train_step_flat(*args):
+        params = list(args[:n_params])
+        m_state = list(args[n_params:2 * n_params])
+        v_state = list(args[2 * n_params:3 * n_params])
+        step = args[3 * n_params].reshape(())
+        tokens = args[3 * n_params + 1]
+        new_p, new_m, new_v, t, loss = model_mod.train_step(
+            cfg, tc, params, m_state, v_state, step, tokens)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (t.reshape(1), loss.reshape(1))
+
+    p_specs = [_spec(shapes[n]) for n in names]
+    ts_specs = p_specs * 3 + [_spec((1,)), _spec((batch, cfg.seq_len), I32)]
+    _lower(train_step_flat, ts_specs, os.path.join(outdir, "train_step.hlo.txt"))
+    artifacts.append({
+        "name": "train_step",
+        "file": "train_step.hlo.txt",
+        "kind": "train_step",
+        "inputs": (
+            [_io_entry(f"param.{n}", shapes[n]) for n in names]
+            + [_io_entry(f"m.{n}", shapes[n]) for n in names]
+            + [_io_entry(f"v.{n}", shapes[n]) for n in names]
+            + [_io_entry("step", (1,)), _io_entry("tokens", (batch, cfg.seq_len), "i32")]
+        ),
+        "outputs": (
+            [_io_entry(f"param.{n}", shapes[n]) for n in names]
+            + [_io_entry(f"m.{n}", shapes[n]) for n in names]
+            + [_io_entry(f"v.{n}", shapes[n]) for n in names]
+            + [_io_entry("step", (1,)), _io_entry("loss", (1,))]
+        ),
+    })
+
+    # ---- lm_forward -------------------------------------------------------
+    def lm_forward_flat(*args):
+        params = list(args[:n_params])
+        tokens = args[n_params]
+        return (model_mod.forward(cfg, params, tokens),)
+
+    _lower(lm_forward_flat, p_specs + [_spec((batch, cfg.seq_len), I32)],
+           os.path.join(outdir, "lm_forward.hlo.txt"))
+    artifacts.append({
+        "name": "lm_forward",
+        "file": "lm_forward.hlo.txt",
+        "kind": "lm_forward",
+        "inputs": [_io_entry(f"param.{n}", shapes[n]) for n in names]
+        + [_io_entry("tokens", (batch, cfg.seq_len), "i32")],
+        "outputs": [_io_entry("logits", (batch, cfg.seq_len, cfg.vocab))],
+    })
+
+    # ---- per linear shape: lcp_grad / sinkhorn_soft / sparse_fwd ----------
+    sinkhorn_done = set()
+    for (c_out, c_in) in linear_shapes(cfg):
+        n_b = c_in // block
+        tag = f"{c_out}x{c_in}"
+
+        def lcp_grad_fn(w, s, x, y, w_p, p_hard, tau, _m=m, _keep=keep):
+            loss, grad = lcp_mod.lcp_grad(
+                w, s, x, y, w_p, p_hard, tau.reshape(()),
+                m=_m, keep=_keep, iters=sinkhorn_iters)
+            return loss.reshape(1), grad
+
+        specs = [
+            _spec((c_out, c_in)), _spec((c_out, c_in)),
+            _spec((calib_rows, c_in)), _spec((calib_rows, c_out)),
+            _spec((n_b, block, block)), _spec((n_b, block, block)),
+            _spec((1,)),
+        ]
+        fname = f"lcp_grad_{tag}.hlo.txt"
+        _lower(lcp_grad_fn, specs, os.path.join(outdir, fname))
+        artifacts.append({
+            "name": f"lcp_grad_{tag}",
+            "file": fname,
+            "kind": "lcp_grad",
+            "c_out": c_out, "c_in": c_in, "n_b": n_b, "block": block,
+            "m": m, "keep": keep,
+            "inputs": [
+                _io_entry("w", (c_out, c_in)), _io_entry("s", (c_out, c_in)),
+                _io_entry("x", (calib_rows, c_in)), _io_entry("y", (calib_rows, c_out)),
+                _io_entry("w_p", (n_b, block, block)),
+                _io_entry("p_hard", (n_b, block, block)),
+                _io_entry("tau", (1,)),
+            ],
+            "outputs": [_io_entry("loss", (1,)), _io_entry("d_w_p", (n_b, block, block))],
+        })
+
+        if n_b not in sinkhorn_done:
+            sinkhorn_done.add(n_b)
+
+            def sink_fn(w_p, tau):
+                return (lcp_mod.sinkhorn_soft(w_p, tau.reshape(()), iters=sinkhorn_iters),)
+
+            sname = f"sinkhorn_soft_{n_b}x{block}.hlo.txt"
+            _lower(sink_fn, [_spec((n_b, block, block)), _spec((1,))],
+                   os.path.join(outdir, sname))
+            artifacts.append({
+                "name": f"sinkhorn_soft_{n_b}x{block}",
+                "file": sname,
+                "kind": "sinkhorn_soft",
+                "n_b": n_b, "block": block, "iters": sinkhorn_iters,
+                "inputs": [_io_entry("w_p", (n_b, block, block)), _io_entry("tau", (1,))],
+                "outputs": [_io_entry("p_soft", (n_b, block, block))],
+            })
+
+        # Sparse inference hot path: permute activations then compressed spmm.
+        k = c_in // m * keep
+
+        def sparse_fwd_fn(vals, idx, x, src_of):
+            xp = permute_pallas(x, src_of)
+            return (nm_spmm_pallas(vals, idx, xp),)
+
+        spname = f"sparse_fwd_{tag}.hlo.txt"
+        _lower(sparse_fwd_fn,
+               [_spec((c_out, k)), _spec((c_out, k), I32),
+                _spec((calib_rows, c_in)), _spec((c_in,), I32)],
+               os.path.join(outdir, spname))
+        artifacts.append({
+            "name": f"sparse_fwd_{tag}",
+            "file": spname,
+            "kind": "sparse_fwd",
+            "c_out": c_out, "c_in": c_in, "k": k, "m": m, "keep": keep,
+            "inputs": [
+                _io_entry("vals", (c_out, k)), _io_entry("idx", (c_out, k), "i32"),
+                _io_entry("x", (calib_rows, c_in)), _io_entry("src_of", (c_in,), "i32"),
+            ],
+            "outputs": [_io_entry("y", (calib_rows, c_out))],
+        })
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "dim": cfg.dim,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "ffn": cfg.ffn,
+            "seq_len": cfg.seq_len, "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+        },
+        "train": {"lr": tc.lr, "beta1": tc.beta1, "beta2": tc.beta2,
+                  "eps": tc.eps, "weight_decay": tc.weight_decay,
+                  "batch": batch},
+        "lcp": {"block": block, "calib_rows": calib_rows, "m": m,
+                "keep": keep, "sinkhorn_iters": sinkhorn_iters},
+        "param_order": [{"name": n, "shape": list(shapes[n])} for n in names],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--config", default="tiny-m", choices=sorted(model_mod.CONFIGS))
+    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--calib-rows", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--keep", type=int, default=2)
+    ap.add_argument("--sinkhorn-iters", type=int, default=5)
+    args = ap.parse_args()
+    manifest = build(args.outdir, args.config, args.block, args.calib_rows,
+                     args.batch, args.m, args.keep, args.sinkhorn_iters)
+    total = sum(os.path.getsize(os.path.join(args.outdir, a["file"]))
+                for a in manifest["artifacts"])
+    print(f"wrote {len(manifest['artifacts'])} artifacts "
+          f"({total / 1e6:.1f} MB) + manifest.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for PermLLM (interpret=True on CPU PJRT).
+
+Every kernel has a pure-jnp oracle in :mod:`ref`; kernels that participate
+in gradients (`sinkhorn`, `nm_mask_ste`) carry a custom_vjp whose backward
+is the exact VJP of the oracle.
+"""
+
+from .ref import (  # noqa: F401
+    nm_compress_ref,
+    nm_mask_ref,
+    nm_spmm_ref,
+    permute_ref,
+    sinkhorn_ref,
+    soft_mask_ref,
+)
+from .sinkhorn import sinkhorn, sinkhorn_pallas  # noqa: F401
+from .nm_mask import nm_mask_ste, nm_mask_pallas  # noqa: F401
+from .permute import permute_pallas  # noqa: F401
+from .nm_spmm import nm_spmm_pallas  # noqa: F401

@@ -1,0 +1,72 @@
+"""Pallas kernel: hard N:M mask selection (paper Eq. 7/8).
+
+Given an importance matrix ``scores`` [C_out, C_in], emit the {0,1} mask
+that keeps the ``keep = M - N`` largest entries in every group of ``m``
+consecutive input channels.
+
+TPU mapping (DESIGN.md §7): the grid tiles C_out; each kernel instance
+ranks its [TILE, C_in] slab entirely in VMEM.  Ranking over a group of
+m <= 8 lanes is a fixed sequence of VPU compares (we materialize it as a
+rank-from-stable-argsort, which XLA lowers to a small sort network).
+
+``nm_mask_ste`` wraps the kernel in the paper's Eq. 9 straight-through
+estimator: forward = hard Pallas mask, backward = gradient of the
+group-softmax soft mask — this is exactly how the mask enters the
+``lcp_grad`` artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+_TILE = 8  # C_out rows per grid step
+
+
+def _nm_mask_kernel(s_ref, out_ref, *, m: int, keep: int):
+    s = s_ref[...]
+    rows, c_in = s.shape
+    g = s.reshape(rows, c_in // m, m)
+    order = jnp.argsort(-g, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    out_ref[...] = (ranks < keep).astype(s.dtype).reshape(rows, c_in)
+
+
+def nm_mask_pallas(scores: jnp.ndarray, m: int, keep: int) -> jnp.ndarray:
+    """Raw Pallas call: scores [C_out, C_in] -> {0,1} mask [C_out, C_in]."""
+    c_out, c_in = scores.shape
+    tile = _TILE if c_out % _TILE == 0 else 1
+    kernel = functools.partial(_nm_mask_kernel, m=m, keep=keep)
+    return pl.pallas_call(
+        kernel,
+        grid=(c_out // tile,),
+        in_specs=[pl.BlockSpec((tile, c_in), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, c_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, c_in), scores.dtype),
+        interpret=True,
+    )(scores)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def nm_mask_ste(scores: jnp.ndarray, m: int, keep: int) -> jnp.ndarray:
+    """STE mask: hard N:M selection forward, soft-mask (Eq. 9) gradient."""
+    return nm_mask_pallas(scores, m, keep)
+
+
+def _ste_fwd(scores, m, keep):
+    return nm_mask_pallas(scores, m, keep), scores
+
+
+def _ste_bwd(m, keep, scores, g):
+    # d(hard)/d(scores) ~= d(softmax over each group)/d(scores)   (Eq. 9)
+    _, vjp = jax.vjp(lambda s: _ref.soft_mask_ref(s, m), scores)
+    (ds,) = vjp(g)
+    return (ds,)
+
+
+nm_mask_ste.defvjp(_ste_fwd, _ste_bwd)

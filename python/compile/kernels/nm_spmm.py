@@ -1,0 +1,54 @@
+"""Pallas kernel: compressed N:M sparse x dense matmul.
+
+The Sparse-Tensor-Core analogue for TPU (DESIGN.md §7).  NVIDIA's 2:4 GEMM
+multiplies a compressed [C_out, C_in/2] value matrix against activations
+selected by 2-bit metadata inside the tensor core.  The TPU has no sparse
+MXU, so the equivalent win is *memory traffic*: stream the compressed
+values + int32 indices HBM->VMEM (half the weight bytes for 2:4),
+decompress to a dense tile **in VMEM** via a one-hot contraction, and feed
+the MXU a standard dense tile.  Decompress-then-MXU beats per-element
+gather on a systolic array.
+
+Layout: ``vals``/``idx`` [C_out, K] with K = C_in/m*keep, produced by
+``ref.nm_compress_ref`` (indices are absolute column ids, ascending within
+each group).  y[t, o] = sum_k vals[o, k] * x[t, idx[o, k]].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OUT_TILE = 8
+
+
+def _nm_spmm_kernel(vals_ref, idx_ref, x_ref, out_ref):
+    vals = vals_ref[...]           # [TILE, K]
+    idx = idx_ref[...]             # [TILE, K]
+    x = x_ref[...]                 # [T, C_in]
+    c_in = x.shape[-1]
+    # Decompress in VMEM: one-hot scatter of compressed values to a dense
+    # [TILE, C_in] tile, then a standard dense contraction (MXU-shaped).
+    onehot = (idx[..., None] == jnp.arange(c_in)[None, None, :]).astype(vals.dtype)
+    w_dense = jnp.einsum("ok,okc->oc", vals, onehot)
+    out_ref[...] = jnp.dot(x, w_dense.T)
+
+
+def nm_spmm_pallas(vals: jnp.ndarray, idx: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Compressed sparse matmul: ([C_out,K], [C_out,K] i32, [T,C_in]) -> [T,C_out]."""
+    c_out, _k = vals.shape
+    t, c_in = x.shape
+    tile = _OUT_TILE if c_out % _OUT_TILE == 0 else 1
+    return pl.pallas_call(
+        _nm_spmm_kernel,
+        grid=(c_out // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, _k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, _k), lambda i: (i, 0)),
+            pl.BlockSpec((t, c_in), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, c_out), x.dtype),
+        interpret=True,
+    )(vals, idx.astype(jnp.int32), x)

@@ -1,0 +1,45 @@
+"""Pallas kernel: channel permutation (gather along the channel axis).
+
+This is the Pallas analogue of the paper's custom CUDA permutation kernel
+(§4, Table 3: 84x over the PyTorch index-select).  The CUDA kernel's win is
+a coalesced gather; the TPU rethink (DESIGN.md §7) is a *lane permutation*:
+
+  * the permutation index vector ``src_of`` is small (C_in int32) and rides
+    in via a full-width block (SMEM-class operand on real TPU);
+  * the activation matrix is tiled [ROW_TILE, C_in]; each VMEM tile is read
+    once and written once — the gather happens entirely within registers/
+    VMEM, so the kernel is purely bandwidth-bound with no HBM re-reads
+    (the PyTorch baseline materializes an intermediate index tensor and
+    re-reads the source per output element).
+
+Used forward-only (inference path of the pruned model), so no custom_vjp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ROW_TILE = 8
+
+
+def _permute_kernel(idx_ref, x_ref, out_ref):
+    out_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=-1)
+
+
+def permute_pallas(x: jnp.ndarray, src_of: jnp.ndarray) -> jnp.ndarray:
+    """out[..., j] = x[..., src_of[j]] for x [T, C_in], src_of [C_in] int32."""
+    t, c_in = x.shape
+    tile = _ROW_TILE if t % _ROW_TILE == 0 else 1
+    return pl.pallas_call(
+        _permute_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((c_in,), lambda i: (0,)),      # index vector: broadcast
+            pl.BlockSpec((tile, c_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, c_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c_in), x.dtype),
+        interpret=True,
+    )(src_of.astype(jnp.int32), x)

@@ -1,0 +1,97 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle to float32 tolerance on every shape/dtype hypothesis
+generates (python/tests/test_kernels.py), and the Rust host implementations
+mirror the same math (rust/src/lcp/sinkhorn.rs etc.).
+
+Conventions (match the paper and the Rust side):
+  * weights are [C_out, C_in];
+  * a permutation is stored as ``src_of`` with ``out[:, j] = in[:, src_of[j]]``
+    (i.e. ``src_of[j] = i`` where the permutation matrix has P[i, j] = 1,
+    so ``W @ P`` == ``permute_ref(W, src_of)`` and ``P.T @ x`` gathers
+    activations with the same index vector);
+  * N:M sparsity follows the paper's notation: N of every M consecutive
+    input channels are ZEROED, ``keep = M - N`` survive per group.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sinkhorn_ref(w_p: jnp.ndarray, tau: float | jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Temperature-scaled Sinkhorn normalization (paper Eqs. 2-5).
+
+    ``w_p``: [..., B, B] batched logits. Returns the soft permutation matrix
+    S^L(w_p / tau): exp, then ``iters`` rounds of row- then column-
+    normalization.  ``iters == 0`` returns plain ``exp(w_p / tau)`` (the
+    paper's Table 4 ablation point).
+    """
+    s = jnp.exp(w_p / tau)
+    for _ in range(iters):
+        s = s / jnp.sum(s, axis=-1, keepdims=True)  # T_r: rows sum to 1
+        s = s / jnp.sum(s, axis=-2, keepdims=True)  # T_c: cols sum to 1
+    return s
+
+
+def nm_mask_ref(scores: jnp.ndarray, m: int, keep: int) -> jnp.ndarray:
+    """Hard N:M mask (paper Eq. 7): per group of ``m`` consecutive input
+    channels, set the ``keep`` largest-score entries to 1.
+
+    ``scores``: [C_out, C_in]; returns a {0,1} float mask of the same shape.
+    Ties broken toward the lower index (stable, matches the Rust side).
+    """
+    c_out, c_in = scores.shape
+    g = scores.reshape(c_out, c_in // m, m)
+    # Stable argsort: equal scores keep ascending index order, so the lower
+    # index wins a tie for a retained slot.
+    order = jnp.argsort(-g, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (ranks < keep).astype(scores.dtype)
+    return mask.reshape(c_out, c_in)
+
+
+def soft_mask_ref(scores: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Soft mask (paper Eq. 9): group-wise softmax over ``m`` channels."""
+    c_out, c_in = scores.shape
+    g = scores.reshape(c_out, c_in // m, m)
+    g = g - jnp.max(g, axis=-1, keepdims=True)
+    e = jnp.exp(g)
+    sm = e / jnp.sum(e, axis=-1, keepdims=True)
+    return sm.reshape(c_out, c_in)
+
+
+def permute_ref(x: jnp.ndarray, src_of: jnp.ndarray) -> jnp.ndarray:
+    """Channel permutation along the last axis: out[..., j] = x[..., src_of[j]]."""
+    return jnp.take(x, src_of, axis=-1)
+
+
+def nm_compress_ref(w: jnp.ndarray, mask: jnp.ndarray, m: int, keep: int):
+    """Compress an N:M-masked weight into (values, indices).
+
+    ``w``, ``mask``: [C_out, C_in]. Returns values [C_out, C_in//m*keep]
+    and int32 indices (absolute column ids) of the retained entries, in
+    ascending column order inside each group — the layout ``nm_spmm``
+    consumes (the Sparse-Tensor-Core metadata analogue).
+    """
+    c_out, c_in = w.shape
+    groups = c_in // m
+    mg = mask.reshape(c_out, groups, m)
+    # Retained positions, ascending: sort by (1 - mask, index).
+    key = (1.0 - mg) * m + jnp.arange(m)[None, None, :]
+    pos = jnp.argsort(key, axis=-1, stable=True)[..., :keep]  # [C_out, G, keep]
+    col = pos + (jnp.arange(groups) * m)[None, :, None]
+    vals = jnp.take_along_axis(w.reshape(c_out, groups, m), pos, axis=-1)
+    return vals.reshape(c_out, groups * keep), col.reshape(c_out, groups * keep).astype(jnp.int32)
+
+
+def nm_spmm_ref(vals: jnp.ndarray, idx: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Compressed N:M sparse matmul oracle.
+
+    ``vals``/``idx``: [C_out, K] compressed weights (from nm_compress_ref),
+    ``x``: [T, C_in] activations. Returns y [T, C_out] with
+    y[t, o] = sum_k vals[o, k] * x[t, idx[o, k]].
+    """
+    gathered = x[:, idx]  # [T, C_out, K]
+    return jnp.einsum("tok,ok->to", gathered, vals)

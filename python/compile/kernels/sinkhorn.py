@@ -1,0 +1,75 @@
+"""Pallas kernel: batched block Sinkhorn normalization (paper Eqs. 2-5).
+
+This is the hot spot of learnable-channel-permutation training: every LCP
+step normalizes ``N_B`` independent ``B x B`` logit blocks (B = 64 default)
+into doubly-stochastic soft permutation matrices.
+
+TPU mapping (DESIGN.md §7): one grid step per block; the whole ``B x B``
+tile lives in VMEM across all ``iters`` row/column normalizations — zero
+HBM round-trips between iterations.  Row and column sums are VPU
+reductions; no MXU involvement.  ``tau`` rides in as a (1, 1) scalar.
+
+The kernel is wrapped in a ``custom_vjp`` whose backward pass is the exact
+VJP of the jnp reference (``ref.sinkhorn_ref``), so the kernel composes
+with ``jax.grad`` inside the ``lcp_grad`` artifact while the forward value
+comes from Pallas.  Equivalence kernel == ref is property-tested in
+python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+
+def _sinkhorn_kernel(tau_ref, wp_ref, out_ref, *, iters: int):
+    """One block: out = S^iters(exp(wp / tau)) with row-then-col normalization."""
+    tau = tau_ref[0, 0]
+    s = jnp.exp(wp_ref[...] / tau)
+    for _ in range(iters):
+        s = s / jnp.sum(s, axis=-1, keepdims=True)
+        s = s / jnp.sum(s, axis=-2, keepdims=True)
+    out_ref[...] = s
+
+
+def sinkhorn_pallas(w_p: jnp.ndarray, tau: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Raw Pallas call: w_p [N_B, B, B], tau scalar array -> [N_B, B, B]."""
+    n_b, b, _ = w_p.shape
+    tau2 = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_sinkhorn_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_b,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # tau: broadcast scalar
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),  # one block per step
+        ],
+        out_specs=pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_b, b, b), jnp.float32),
+        interpret=True,
+    )(tau2, w_p)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def sinkhorn(w_p: jnp.ndarray, tau: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Differentiable Sinkhorn: Pallas forward, reference-VJP backward."""
+    return sinkhorn_pallas(w_p, tau, iters)
+
+
+def _sinkhorn_fwd(w_p, tau, iters):
+    return sinkhorn_pallas(w_p, tau, iters), (w_p, tau)
+
+
+def _sinkhorn_bwd(iters, res, g):
+    w_p, tau = res
+    _, vjp = jax.vjp(lambda wp, t: _ref.sinkhorn_ref(wp, t, iters), w_p, tau)
+    dw_p, dtau = vjp(g)
+    return dw_p, dtau
+
+
+sinkhorn.defvjp(_sinkhorn_fwd, _sinkhorn_bwd)

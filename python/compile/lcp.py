@@ -1,0 +1,94 @@
+"""Layer-2 compute graphs for learnable channel permutation (paper §3-§4).
+
+Two graphs get AOT-lowered per linear-layer shape:
+
+``sinkhorn_soft``  (W_P [N_B,B,B], tau) -> P_soft
+    Forward-only soft permutation, computed by the L1 Pallas kernel.  The
+    Rust coordinator hardens P_soft into strict permutations with the
+    Hungarian algorithm (Eq. 6) — discrete, sequential work that belongs on
+    the host.
+
+``lcp_grad``  (W, S, X, Y, W_P, P_hard, tau) -> (loss, dW_P)
+    One LCP optimization step's loss and gradient.  The STE of §3.1 is
+    factored across the language boundary: the graph receives the *hard*
+    permutation as an input and forms
+
+        P_ste = P_hard + P_soft - stop_gradient(P_soft)
+
+    so the forward value uses the strict permutation while the backward
+    pass flows through the Sinkhorn soft matrix.  The N:M mask is re-derived
+    from the permuted importance S' = S . P each call (Eq. 8) through the
+    Pallas ``nm_mask_ste`` kernel (hard forward, group-softmax backward,
+    Eq. 9).  The loss is the paper's cosine discrepancy (Eq. 10) between
+    the dense output Y and the sparse layer output, averaged over rows.
+
+Shapes: W,S [C_out, C_in]; X [T, C_in]; Y [T, C_out]; W_P, P_hard
+[N_B, B, B] with N_B*B == C_in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nm_mask_ste, sinkhorn, sinkhorn_pallas
+
+SINKHORN_ITERS = 5  # paper default (Table 4 ablates 0 vs 5)
+
+
+def apply_block_perm(a: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Right-multiply by the block-diagonal permutation: A . diag(P_1..P_NB).
+
+    ``a``: [R, C_in] (rows = C_out for weights/scores, rows = T for
+    activations — note (P^T x)_j = sum_i P_ij x_i uses the same contraction),
+    ``p``: [N_B, B, B].  Returns [R, C_in].
+    """
+    r, c_in = a.shape
+    n_b, b, _ = p.shape
+    blocks = a.reshape(r, n_b, b)
+    out = jnp.einsum("rnb,nbc->rnc", blocks, p)
+    return out.reshape(r, c_in)
+
+
+def sinkhorn_soft(w_p: jnp.ndarray, tau: jnp.ndarray, iters: int = SINKHORN_ITERS) -> jnp.ndarray:
+    """Forward-only soft permutation for the host-side Hungarian hardening."""
+    return sinkhorn_pallas(w_p, tau, iters)
+
+
+def lcp_loss(
+    w: jnp.ndarray,
+    s: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    w_p: jnp.ndarray,
+    p_hard: jnp.ndarray,
+    tau: jnp.ndarray,
+    *,
+    m: int = 4,
+    keep: int = 2,
+    iters: int = SINKHORN_ITERS,
+) -> jnp.ndarray:
+    """Cosine discrepancy of the permuted+pruned layer vs the dense output."""
+    p_soft = sinkhorn(w_p, tau, iters)
+    p_ste = p_hard + p_soft - jax.lax.stop_gradient(p_soft)
+
+    w_perm = apply_block_perm(w, p_ste)   # W . P_B
+    s_perm = apply_block_perm(s, p_ste)   # S . P_B   (Eq. 8 input)
+    x_perm = apply_block_perm(x, p_ste)   # (P_B^T x)^T rows
+
+    mask = nm_mask_ste(s_perm, m, keep)   # hard fwd / softmax-STE bwd (Eq. 9)
+    y_sp = x_perm @ (mask * w_perm).T     # [T, C_out]
+
+    # Eq. 10, averaged over calibration rows.
+    dot = jnp.sum(y * y_sp, axis=-1)
+    nrm = jnp.linalg.norm(y, axis=-1) * jnp.linalg.norm(y_sp, axis=-1) + 1e-8
+    return jnp.mean(1.0 - dot / nrm)
+
+
+def lcp_grad(w, s, x, y, w_p, p_hard, tau, *, m: int = 4, keep: int = 2,
+             iters: int = SINKHORN_ITERS):
+    """(loss, dL/dW_P) for one LCP step — the AOT artifact body."""
+    loss, grad = jax.value_and_grad(
+        lambda wp: lcp_loss(w, s, x, y, wp, p_hard, tau, m=m, keep=keep, iters=iters)
+    )(w_p)
+    return loss, grad

@@ -1,0 +1,206 @@
+"""Layer-2 JAX model: a tiny LLaMA-style causal LM.
+
+This is the end-to-end validation model (DESIGN.md §4): pretrained *from
+Rust* by repeatedly executing the AOT ``train_step`` artifact, evaluated
+from Rust via the ``lm_forward`` artifact, and pruned by the PermLLM
+pipeline.  The Rust host forward (rust/src/model/forward.rs) mirrors this
+math exactly and is cross-checked against ``lm_forward`` in integration
+tests, so every operation here is chosen to be reproducible in plain f32:
+
+  * RMSNorm (eps 1e-5), split-half RoPE (theta 10000), causal softmax
+    attention, SwiGLU MLP, untied LM head;
+  * weights are stored [C_out, C_in] (paper convention) and applied as
+    ``x @ W.T``;
+  * parameters travel as a FLAT LIST in the order given by
+    :func:`param_names` — the AOT manifest records this order and the Rust
+    side follows it verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for the tiny LM."""
+
+    name: str = "tiny-m"
+    vocab: int = 256
+    dim: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn: int = 256
+    seq_len: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+
+#: Named model sizes used across the experiment harness (Table 1 "models").
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny-s": ModelConfig(name="tiny-s", vocab=256, dim=64, n_layers=2, n_heads=2, ffn=128, seq_len=128),
+    "tiny-m": ModelConfig(name="tiny-m", vocab=256, dim=128, n_layers=4, n_heads=4, ffn=256, seq_len=128),
+    "tiny-l": ModelConfig(name="tiny-l", vocab=256, dim=192, n_layers=6, n_heads=6, ffn=384, seq_len=128),
+}
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """Canonical flat parameter order (the artifact I/O contract)."""
+    names = ["tok_embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"layers.{l}.attn_norm",
+            f"layers.{l}.wq",
+            f"layers.{l}.wk",
+            f"layers.{l}.wv",
+            f"layers.{l}.wo",
+            f"layers.{l}.mlp_norm",
+            f"layers.{l}.w_gate",
+            f"layers.{l}.w_up",
+            f"layers.{l}.w_down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Shape of every parameter, keyed by canonical name ([C_out, C_in])."""
+    d, f, v = cfg.dim, cfg.ffn, cfg.vocab
+    shapes: Dict[str, Tuple[int, ...]] = {"tok_embed": (v, d)}
+    for l in range(cfg.n_layers):
+        shapes[f"layers.{l}.attn_norm"] = (d,)
+        shapes[f"layers.{l}.wq"] = (d, d)
+        shapes[f"layers.{l}.wk"] = (d, d)
+        shapes[f"layers.{l}.wv"] = (d, d)
+        shapes[f"layers.{l}.wo"] = (d, d)
+        shapes[f"layers.{l}.mlp_norm"] = (d,)
+        shapes[f"layers.{l}.w_gate"] = (f, d)
+        shapes[f"layers.{l}.w_up"] = (f, d)
+        shapes[f"layers.{l}.w_down"] = (d, f)
+    shapes["final_norm"] = (d,)
+    shapes["lm_head"] = (v, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic init (numpy PCG64 so Rust never needs to replicate it)."""
+    rng = np.random.default_rng(seed)
+    shapes = param_shapes(cfg)
+    out: List[jnp.ndarray] = []
+    for name in param_names(cfg):
+        shape = shapes[name]
+        if name.endswith("norm"):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-1]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return out
+
+
+def _rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * g
+
+
+def _rope(x: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Split-half RoPE over [T, H, hd]."""
+    t, _h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / hd)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Causal LM forward: tokens [B, T] int32 -> logits [B, T, V]."""
+    p = dict(zip(param_names(cfg), params))
+    d, h, hd = cfg.dim, cfg.n_heads, cfg.head_dim
+
+    def one(seq: jnp.ndarray) -> jnp.ndarray:
+        t = seq.shape[0]
+        x = p["tok_embed"][seq]  # [T, d]
+        causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+        neg = jnp.float32(-1e9)
+        for l in range(cfg.n_layers):
+            a = _rmsnorm(x, p[f"layers.{l}.attn_norm"], cfg.norm_eps)
+            q = (a @ p[f"layers.{l}.wq"].T).reshape(t, h, hd)
+            k = (a @ p[f"layers.{l}.wk"].T).reshape(t, h, hd)
+            v = (a @ p[f"layers.{l}.wv"].T).reshape(t, h, hd)
+            q = _rope(q, cfg.rope_theta)
+            k = _rope(k, cfg.rope_theta)
+            att = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.float32(hd))
+            att = jnp.where(causal[None, :, :] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, d)
+            x = x + o @ p[f"layers.{l}.wo"].T
+            m = _rmsnorm(x, p[f"layers.{l}.mlp_norm"], cfg.norm_eps)
+            gate = m @ p[f"layers.{l}.w_gate"].T
+            up = m @ p[f"layers.{l}.w_up"].T
+            x = x + (jax.nn.silu(gate) * up) @ p[f"layers.{l}.w_down"].T
+        x = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
+        return x @ p["lm_head"].T
+
+    return jax.vmap(one)(tokens)
+
+
+def lm_loss(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over all positions (nats)."""
+    logits = forward(cfg, params, tokens)  # [B, T, V]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """AdamW hyperparameters baked into the train_step artifact."""
+
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def train_step(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    params: List[jnp.ndarray],
+    m_state: List[jnp.ndarray],
+    v_state: List[jnp.ndarray],
+    step: jnp.ndarray,
+    tokens: jnp.ndarray,
+):
+    """One AdamW step.  Returns (params', m', v', step', loss).
+
+    Flat-list I/O keeps the artifact signature a plain tuple of arrays in
+    ``param_names`` order (x3 for params/m/v), executable from Rust.
+    """
+    loss, grads = jax.value_and_grad(lambda ps: lm_loss(cfg, ps, tokens))(params)
+    t = step + 1.0
+    b1, b2 = jnp.float32(tc.beta1), jnp.float32(tc.beta2)
+    new_p, new_m, new_v = [], [], []
+    for pa, mo, vo, g in zip(params, m_state, v_state, grads):
+        m_n = b1 * mo + (1.0 - b1) * g
+        v_n = b2 * vo + (1.0 - b2) * g * g
+        m_hat = m_n / (1.0 - b1 ** t)
+        v_hat = v_n / (1.0 - b2 ** t)
+        upd = m_hat / (jnp.sqrt(v_hat) + tc.eps) + tc.weight_decay * pa
+        new_p.append(pa - tc.lr * upd)
+        new_m.append(m_n)
+        new_v.append(v_n)
+    return new_p, new_m, new_v, t, loss

@@ -1,0 +1,82 @@
+"""AOT pipeline: HLO text emission + manifest consistency.
+
+Lowers a trivial config's graphs to a temp dir and checks the manifest
+contract the Rust runtime depends on (shapes, artifact inventory, HLO text
+parseability markers). The heavyweight end-to-end execution check lives on
+the Rust side (tests/model_parity.rs, tests/lcp_cross_check.rs).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as model_mod
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, "tiny-s", block=32, calib_rows=16, batch=2,
+                         m=4, keep=2, sinkhorn_iters=3)
+    return out, manifest
+
+
+def test_manifest_lists_all_artifacts(built):
+    out, manifest = built
+    kinds = [a["kind"] for a in manifest["artifacts"]]
+    assert kinds.count("train_step") == 1
+    assert kinds.count("lm_forward") == 1
+    # tiny-s has 3 distinct linear shapes -> 3 lcp_grad + 3 sparse_fwd.
+    assert kinds.count("lcp_grad") == 3
+    assert kinds.count("sparse_fwd") == 3
+    assert kinds.count("sinkhorn_soft") >= 1
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(out, a["file"])), a["name"]
+
+
+def test_hlo_files_are_text_modules(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        head = open(os.path.join(out, a["file"])).read(200)
+        assert "HloModule" in head, f"{a['name']} is not HLO text"
+
+
+def test_param_order_matches_model(built):
+    _, manifest = built
+    cfg = model_mod.CONFIGS["tiny-s"]
+    names = [p["name"] for p in manifest["param_order"]]
+    assert names == model_mod.param_names(cfg)
+    shapes = model_mod.param_shapes(cfg)
+    for p in manifest["param_order"]:
+        assert tuple(p["shape"]) == shapes[p["name"]]
+
+
+def test_train_step_io_arity(built):
+    _, manifest = built
+    cfg = model_mod.CONFIGS["tiny-s"]
+    n = len(model_mod.param_names(cfg))
+    ts = next(a for a in manifest["artifacts"] if a["kind"] == "train_step")
+    assert len(ts["inputs"]) == 3 * n + 2   # params, m, v, step, tokens
+    assert len(ts["outputs"]) == 3 * n + 2  # params', m', v', step', loss
+
+
+def test_lcp_grad_shapes_consistent(built):
+    _, manifest = built
+    for a in manifest["artifacts"]:
+        if a["kind"] != "lcp_grad":
+            continue
+        assert a["n_b"] * a["block"] == a["c_in"]
+        w_p = next(i for i in a["inputs"] if i["name"] == "w_p")
+        assert w_p["shape"] == [a["n_b"], a["block"], a["block"]]
+        out = next(o for o in a["outputs"] if o["name"] == "d_w_p")
+        assert out["shape"] == w_p["shape"]
+
+
+def test_manifest_is_valid_json_on_disk(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        j = json.load(f)
+    assert j["config"]["name"] == "tiny-s"
+    assert j["lcp"]["block"] == 32

@@ -1,0 +1,130 @@
+"""L2 LCP graph: STE wiring, identity-permutation baseline, training signal.
+
+The strongest check — lcp_grad numerics vs the pure-Rust LCP path — lives
+on the Rust side (tests/lcp_cross_check.rs); here we verify the JAX graph
+is internally consistent and actually reduces the pruning discrepancy.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import lcp
+from compile.kernels import nm_mask_ref, sinkhorn_ref
+
+
+def _layer(rng, c_out=16, c_in=32, t=24):
+    w = jnp.asarray(rng.normal(size=(c_out, c_in)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(t, c_in)).astype(np.float32))
+    y = x @ w.T
+    s = jnp.abs(w)  # magnitude importance
+    return w, s, x, y
+
+
+def _identity_blocks(n_b, b):
+    return jnp.tile(jnp.eye(b, dtype=jnp.float32)[None], (n_b, 1, 1))
+
+
+def test_apply_block_perm_identity():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    p = _identity_blocks(4, 8)
+    assert_allclose(np.asarray(lcp.apply_block_perm(a, p)), np.asarray(a))
+
+
+def test_apply_block_perm_matches_full_blockdiag_matmul():
+    rng = np.random.default_rng(1)
+    a = np.asarray(rng.normal(size=(6, 16)).astype(np.float32))
+    blocks = []
+    full = np.zeros((16, 16), np.float32)
+    for i in range(2):
+        perm = rng.permutation(8)
+        pm = np.zeros((8, 8), np.float32)
+        pm[perm, np.arange(8)] = 1.0
+        blocks.append(pm)
+        full[i * 8:(i + 1) * 8, i * 8:(i + 1) * 8] = pm
+    got = lcp.apply_block_perm(jnp.asarray(a), jnp.asarray(np.stack(blocks)))
+    assert_allclose(np.asarray(got), a @ full, rtol=1e-6)
+
+
+def test_lcp_loss_identity_perm_equals_plain_pruning_error():
+    """With P = I (hard and soft pinned), the loss is the cosine error of
+    direct N:M pruning — the paper's no-permutation baseline."""
+    rng = np.random.default_rng(2)
+    w, s, x, y = _layer(rng)
+    n_b, b = 4, 8
+    # Large positive diagonal logits => sinkhorn(WP) ~= I.
+    w_p = jnp.asarray(np.tile((np.eye(b) * 40.0 - 20.0).astype(np.float32), (n_b, 1, 1)))
+    p_hard = _identity_blocks(n_b, b)
+    loss = lcp.lcp_loss(w, s, x, y, w_p, p_hard, jnp.float32(1.0))
+
+    mask = np.asarray(nm_mask_ref(s, 4, 2))
+    y_sp = np.asarray(x) @ (mask * np.asarray(w)).T
+    yn = np.asarray(y)
+    cos = 1.0 - (yn * y_sp).sum(-1) / (
+        np.linalg.norm(yn, axis=-1) * np.linalg.norm(y_sp, axis=-1) + 1e-8)
+    assert_allclose(float(loss), cos.mean(), rtol=1e-4, atol=1e-5)
+
+
+def test_lcp_grad_nonzero_and_finite():
+    rng = np.random.default_rng(3)
+    w, s, x, y = _layer(rng)
+    n_b, b = 4, 8
+    w_p = jnp.asarray(rng.normal(size=(n_b, b, b)).astype(np.float32) * 0.1)
+    p_soft = sinkhorn_ref(w_p, 1.0, 5)
+    # Greedy row-wise hardening is fine for a smoke test.
+    p_hard = np.zeros((n_b, b, b), np.float32)
+    for n in range(n_b):
+        cols = list(range(b))
+        sp = np.asarray(p_soft[n])
+        for i in np.argsort(-sp.max(axis=1)):
+            j = max(cols, key=lambda c: sp[i, c])
+            p_hard[n, i, j] = 1.0
+            cols.remove(j)
+    loss, grad = lcp.lcp_grad(w, s, x, y, w_p, jnp.asarray(p_hard), jnp.float32(1.0))
+    g = np.asarray(grad)
+    assert np.isfinite(float(loss)) and np.isfinite(g).all()
+    assert np.abs(g).max() > 0.0
+
+
+def test_lcp_adam_beats_identity_baseline():
+    """Learned permutation must beat the no-permutation pruning error —
+    the core claim of the paper in miniature.  Mirrors the Rust trainer:
+    AdamW on W_P, linear tau decay 1.0 -> 0.1, keep the best-seen
+    permutation (the loss oscillates once tau is small)."""
+    rng = np.random.default_rng(4)
+    w, s, x, y = _layer(rng, c_out=24, c_in=32, t=32)
+    n_b, b = 4, 8
+    # Identity-biased init: step 0 reproduces the no-permutation baseline.
+    w_p = jnp.asarray(np.tile((np.eye(b) * 2.0).astype(np.float32), (n_b, 1, 1)))
+    m_st = np.zeros((n_b, b, b), np.float32)
+    v_st = np.zeros_like(m_st)
+
+    def harden(p_soft):
+        out = np.zeros_like(np.asarray(p_soft))
+        for n in range(p_soft.shape[0]):
+            sp = np.asarray(p_soft[n])
+            cols = list(range(b))
+            for i in np.argsort(-sp.max(axis=1)):
+                j = max(cols, key=lambda c: sp[i, c])
+                out[n, i, j] = 1.0
+                cols.remove(j)
+        return jnp.asarray(out)
+
+    losses = []
+    steps, lr = 50, 0.1
+    for it in range(steps):
+        tau = jnp.float32(1.0 + (0.1 - 1.0) * it / (steps - 1))
+        p_hard = harden(lcp.sinkhorn_soft(w_p, tau))
+        loss, grad = lcp.lcp_grad(w, s, x, y, w_p, p_hard, tau)
+        losses.append(float(loss))
+        g = np.asarray(grad)
+        m_st = 0.9 * m_st + 0.1 * g
+        v_st = 0.999 * v_st + 0.001 * g * g
+        mh = m_st / (1 - 0.9 ** (it + 1))
+        vh = v_st / (1 - 0.999 ** (it + 1))
+        w_p = w_p - lr * jnp.asarray(mh / (np.sqrt(vh) + 1e-8))
+
+    baseline = losses[0]  # identity permutation == plain N:M pruning
+    assert min(losses) < baseline, losses
+    assert np.isfinite(losses).all()

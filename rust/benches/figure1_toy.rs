@@ -1,0 +1,107 @@
+//! Figure 1: the handcrafted quality metric can mislead.
+//!
+//! Exhaustively enumerate every channel-to-group partition of a small
+//! layer (magnitude pruning, 2:4), score each by the retained-importance
+//! metric S, and measure true output MSE.  The paper's point: the
+//! score-maximizing permutation is often NOT the loss-minimizing one and
+//! can even be worse than no permutation at all.  We report how often
+//! that happens over random layers, plus one concrete example.
+
+use permllm::cp::{exhaustive_partitions, permutation_score};
+
+use permllm::sparsity::{NmConfig, NmMask};
+use permllm::tensor::Mat;
+use permllm::util::benchkit::{fmt, Table};
+use permllm::util::rng::Pcg32;
+
+fn output_mse(w: &Mat, x: &Mat, y: &Mat, perm: &[usize], cfg: NmConfig) -> f64 {
+    let s = w.map(f32::abs); // magnitude pruning, as in Fig. 1
+    let wp = w.permute_cols(perm);
+    let sp = s.permute_cols(perm);
+    let mask = NmMask::from_scores(&sp, cfg);
+    let xp = x.permute_cols(perm);
+    let y_sp = xp.matmul_bt(&mask.apply(&wp));
+    y.mse(&y_sp) as f64
+}
+
+fn main() {
+    permllm::util::logging::init();
+    let cfg = NmConfig::PAT_2_4;
+    let (c_out, c_in, t) = (4usize, 8usize, 16usize);
+    let partitions = exhaustive_partitions(c_in, cfg.m);
+    println!(
+        "enumerating {} channel-to-group partitions of C_in={c_in}, M={}",
+        partitions.len(),
+        cfg.m
+    );
+
+    let trials = 200;
+    let mut score_max_not_loss_min = 0;
+    let mut score_max_worse_than_identity = 0;
+    let mut example: Option<(f64, f64, f64, f64)> = None;
+
+    for trial in 0..trials {
+        let mut rng = Pcg32::seeded(3000 + trial);
+        let w = Mat::randn(c_out, c_in, 1.0, &mut rng);
+        let x = Mat::randn(t, c_in, 1.0, &mut rng);
+        let y = x.matmul_bt(&w);
+        let s = w.map(f32::abs);
+        let id: Vec<usize> = (0..c_in).collect();
+
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best_score_perm = id.clone();
+        let mut best_loss = f64::INFINITY;
+        for p in &partitions {
+            let sc = permutation_score(&s, p, cfg);
+            if sc > best_score {
+                best_score = sc;
+                best_score_perm = p.clone();
+            }
+            let l = output_mse(&w, &x, &y, p, cfg);
+            if l < best_loss {
+                best_loss = l;
+            }
+        }
+        let loss_of_score_max = output_mse(&w, &x, &y, &best_score_perm, cfg);
+        let loss_identity = output_mse(&w, &x, &y, &id, cfg);
+
+        if loss_of_score_max > best_loss + 1e-9 {
+            score_max_not_loss_min += 1;
+        }
+        if loss_of_score_max > loss_identity + 1e-9 {
+            score_max_worse_than_identity += 1;
+            if example.is_none() {
+                example = Some((
+                    loss_identity,
+                    loss_of_score_max,
+                    best_loss,
+                    best_score - permutation_score(&s, &id, cfg),
+                ));
+            }
+        }
+    }
+
+    let mut table = Table::new(
+        "Figure 1: score-max CP vs true output loss (magnitude, 2:4, exhaustive)",
+        &["Statistic", "Value"],
+    );
+    table.row(&[
+        "trials".into(),
+        trials.to_string(),
+    ]);
+    table.row(&[
+        "score-max perm != loss-min perm".into(),
+        format!("{score_max_not_loss_min} / {trials} ({:.0}%)", 100.0 * score_max_not_loss_min as f64 / trials as f64),
+    ]);
+    table.row(&[
+        "score-max perm WORSE than identity".into(),
+        format!("{score_max_worse_than_identity} / {trials} ({:.0}%)", 100.0 * score_max_worse_than_identity as f64 / trials as f64),
+    ]);
+    if let Some((l_id, l_smax, l_best, dscore)) = example {
+        table.row(&["example: identity loss".into(), fmt(l_id, 4)]);
+        table.row(&["example: score-max loss (higher!)".into(), fmt(l_smax, 4)]);
+        table.row(&["example: true optimum loss".into(), fmt(l_best, 4)]);
+        table.row(&["example: score gain of score-max".into(), fmt(dscore, 4)]);
+    }
+    table.finish("figure1_toy");
+}

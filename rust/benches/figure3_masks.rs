@@ -1,0 +1,105 @@
+//! Figure 3: mask visualization for layer `w_down` of the last decoder
+//! layer under Wanda / RIA+CP / PermLLM_RIA (channels permuted back to
+//! the original order, as in the paper).
+//!
+//! Emits an ASCII crop to stdout and PGM images to bench_results/, plus
+//! retained-position overlap statistics between the methods.
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::lcp::LcpCfg;
+use permllm::model::{LinearKind, LinearRef};
+use permllm::pruning::Metric;
+use permllm::tensor::Mat;
+use permllm::util::benchkit::Table;
+
+fn mask_in_original_order(
+    pruned: &permllm::coordinator::PrunedModel,
+    lin: LinearRef,
+) -> Mat {
+    let res = &pruned.layers[&lin];
+    let mut inv = vec![0usize; res.src_of.len()];
+    for (j, &i) in res.src_of.iter().enumerate() {
+        inv[i] = j;
+    }
+    res.mask.to_dense().permute_cols(&inv)
+}
+
+fn save_pgm(path: &str, m: &Mat, crop: usize) {
+    let r = m.rows().min(crop);
+    let c = m.cols().min(crop);
+    let mut out = format!("P2\n{c} {r}\n255\n");
+    for i in 0..r {
+        for j in 0..c {
+            // paper: blue = pruned, white = retained -> 0 = pruned here.
+            out.push_str(if m[(i, j)] != 0.0 { "255 " } else { "40 " });
+        }
+        out.push('\n');
+    }
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write(path, out);
+}
+
+fn ascii_crop(m: &Mat, rows: usize, cols: usize) -> String {
+    let mut s = String::new();
+    for i in 0..rows.min(m.rows()) {
+        for j in 0..cols.min(m.cols()) {
+            s.push(if m[(i, j)] != 0.0 { '#' } else { '.' });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+fn main() {
+    permllm::util::logging::init();
+    let (ps, prov) = trained_or_synth("tiny-m");
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let lin = LinearRef { layer: ps.cfg().n_layers - 1, kind: LinearKind::WDown };
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+
+    let methods = [
+        PruneMethod::OneShot(Metric::Wanda),
+        PruneMethod::OneShotCp(Metric::Ria),
+        PruneMethod::PermLlm(Metric::Ria),
+    ];
+    let mut masks = Vec::new();
+    for method in methods {
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let mask = mask_in_original_order(&pruned, lin);
+        println!("\n--- {} mask ({}), {}:{} crop 24x48 ---", method.name(), prov,
+                 lin.layer, "w_down");
+        print!("{}", ascii_crop(&mask, 24, 48));
+        save_pgm(
+            &format!("bench_results/figure3_{}.pgm", method.name().replace('+', "_")),
+            &mask,
+            128,
+        );
+        masks.push((method.name(), mask));
+    }
+
+    // Overlap statistics (paper's point: retained sets genuinely differ).
+    let mut table = Table::new(
+        "Figure 3: retained-weight overlap between methods (w_down, original order)",
+        &["Pair", "Overlap (%)"],
+    );
+    for i in 0..masks.len() {
+        for j in i + 1..masks.len() {
+            let (na, a) = &masks[i];
+            let (nb, b) = &masks[j];
+            let total: f32 = a.data().iter().sum();
+            let inter: f32 = a
+                .data()
+                .iter()
+                .zip(b.data())
+                .map(|(x, y)| if *x != 0.0 && *y != 0.0 { 1.0 } else { 0.0 })
+                .sum();
+            table.row(&[format!("{na} vs {nb}"), format!("{:.1}", 100.0 * inter / total)]);
+        }
+    }
+    table.finish("figure3_masks");
+}

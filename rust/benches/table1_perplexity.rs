@@ -1,0 +1,60 @@
+//! Table 1: 2:4 semi-structured pruning, perplexity on the held-out
+//! wikitext2-like corpus (calibration on c4-like, as in the paper).
+//!
+//! Paper shape to reproduce: PermLLM_X < X+CP < X for X in {Wanda, RIA};
+//! SparseGPT competitive with one-shot metrics; Dense lowest.
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::util::benchkit::{fmt, Table};
+
+fn main() {
+    permllm::util::logging::init();
+    let models = ["tiny-s", "tiny-m", "tiny-l"];
+    let methods = [
+        PruneMethod::Dense,
+        PruneMethod::SparseGpt,
+        PruneMethod::OneShot(Metric::Wanda),
+        PruneMethod::OneShotCp(Metric::Wanda),
+        PruneMethod::PermLlm(Metric::Wanda),
+        PruneMethod::OneShot(Metric::Ria),
+        PruneMethod::OneShotCp(Metric::Ria),
+        PruneMethod::PermLlm(Metric::Ria),
+    ];
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+
+    let mut header = vec!["Method".to_string()];
+    let mut provs = Vec::new();
+    for m in models {
+        let (_, prov) = trained_or_synth(m);
+        provs.push(prov);
+        header.push(format!("{m} ({prov})"));
+    }
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Table 1: Wikitext2-like perplexity, 2:4 sparsity", &hdr_refs);
+
+    let mut rows: Vec<Vec<String>> = methods.iter().map(|m| vec![m.name()]).collect();
+    for model in models {
+        let (ps, _) = trained_or_synth(model);
+        let cfg = PipelineCfg {
+            lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+            ..Default::default()
+        };
+        for (mi, method) in methods.iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            let pruned = prune_model(&ps, &calib, *method, &cfg);
+            let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+            log::info!("{model}/{}: ppl {ppl:.3} ({:.1}s)", method.name(), t0.elapsed().as_secs_f64());
+            rows[mi].push(fmt(ppl, 3));
+        }
+    }
+    for r in rows {
+        table.row(&r);
+    }
+    table.finish("table1_perplexity");
+}

@@ -1,0 +1,51 @@
+//! Table 2: zero-shot accuracy of 2:4 sparse models on the 5-task suite.
+//!
+//! Paper shape: PermLLM_Wanda achieves the highest sparse average,
+//! Wanda+CP beats Wanda, SparseGPT in between; Dense on top.
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::{zeroshot_accuracy, zeroshot_suite};
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::util::benchkit::{fmt, Table};
+
+fn main() {
+    permllm::util::logging::init();
+    let model = "tiny-m";
+    let (ps, prov) = trained_or_synth(model);
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let methods = [
+        (PruneMethod::Dense, "-"),
+        (PruneMethod::SparseGpt, "yes"),
+        (PruneMethod::OneShot(Metric::Wanda), "no"),
+        (PruneMethod::OneShotCp(Metric::Wanda), "no"),
+        (PruneMethod::PermLlm(Metric::Wanda), "no"),
+    ];
+    let n_items = scaled(60);
+
+    let mut table = Table::new(
+        &format!("Table 2: zero-shot accuracy (%), 2:4, {model} ({prov})"),
+        &["Method", "WeightUpd", "HellaSwag", "ARC_E", "ARC_C", "OBQA", "RTE", "Average"],
+    );
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+    for (method, upd) in methods {
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let mut row = vec![method.name(), upd.to_string()];
+        let mut mean = 0.0;
+        for mut task in zeroshot_suite() {
+            task.n_items = n_items;
+            let acc = zeroshot_accuracy(&pruned.params, &task, 7) * 100.0;
+            row.push(fmt(acc, 2));
+            mean += acc;
+        }
+        row.push(fmt(mean / 5.0, 2));
+        log::info!("{}: avg {:.2}", method.name(), mean / 5.0);
+        table.row(&row);
+    }
+    table.finish("table2_zeroshot");
+}

@@ -1,0 +1,42 @@
+//! Table 6: block-size trade-off for block-wise LCP (32 / 64 / 128).
+//!
+//! Paper shape: larger blocks = larger optimization space = lower error,
+//! at superlinear runtime cost (Hungarian is O(C_in * B^2); convergence
+//! needs more iterations).
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::util::benchkit::{fmt, Table};
+
+fn main() {
+    permllm::util::logging::init();
+    let (ps, prov) = trained_or_synth("tiny-m");
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+
+    let mut table = Table::new(
+        &format!("Table 6: LCP block size, PermLLM_Wanda, tiny-m ({prov})"),
+        &["Block", "MeanLayerErr", "Wikitext2 ppl", "Prune time (s)"],
+    );
+    for block in [32usize, 64, 128] {
+        let cfg = PipelineCfg {
+            lcp: LcpCfg { block, steps: scaled(50), lr: 0.05, ..Default::default() },
+            ..Default::default()
+        };
+        let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
+        let err: f32 =
+            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+        let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+        table.row(&[
+            block.to_string(),
+            fmt(err as f64, 5),
+            fmt(ppl, 3),
+            fmt(pruned.elapsed_s, 1),
+        ]);
+    }
+    table.finish("table6_blocksize");
+}

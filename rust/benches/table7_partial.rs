@@ -1,0 +1,46 @@
+//! Table 7 (Appendix A): partial PermLLM — learnable permutation on the
+//! last layers only, heuristic CP on the rest.
+//!
+//! Paper shape: RIA+CP < partial PermLLM < full PermLLM in quality, with
+//! partial's prune time close to the heuristic's.
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::util::benchkit::{fmt, Table};
+
+fn main() {
+    permllm::util::logging::init();
+    let (ps, prov) = trained_or_synth("tiny-m");
+    let n_layers = ps.cfg().n_layers;
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+
+    let runs: [(&str, PruneMethod, usize); 3] = [
+        ("RIA+CP", PruneMethod::OneShotCp(Metric::Ria), 0),
+        // last half of the decoder layers get LCP (paper: last 6 of 32)
+        ("PermLLM_RIA (partial)", PruneMethod::PermLlm(Metric::Ria), n_layers / 2),
+        ("PermLLM_RIA (full)", PruneMethod::PermLlm(Metric::Ria), 0),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 7: partial PermLLM, tiny-m ({prov})"),
+        &["Method", "MeanLayerErr", "Wikitext2 ppl", "Prune time (s)"],
+    );
+    for (name, method, from_layer) in runs {
+        let cfg = PipelineCfg {
+            lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+            lcp_from_layer: from_layer,
+            ..Default::default()
+        };
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let err: f32 =
+            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+        let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+        table.row(&[name.to_string(), fmt(err as f64, 5), fmt(ppl, 3), fmt(pruned.elapsed_s, 1)]);
+    }
+    table.finish("table7_partial");
+}

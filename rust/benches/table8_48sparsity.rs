@@ -1,0 +1,49 @@
+//! Table 8 (Appendix B): 4:8 sparsity — PermLLM is not 2:4-specific.
+//!
+//! Paper shape: same ordering as Table 1/2 under the looser 4:8 pattern,
+//! with smaller absolute degradation than 2:4 (more mask freedom).
+
+use permllm::bench::{scaled, trained_or_synth};
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::eval_perplexity;
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::sparsity::NmConfig;
+use permllm::util::benchkit::{fmt, Table};
+
+fn main() {
+    permllm::util::logging::init();
+    let (ps, prov) = trained_or_synth("tiny-m");
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+    let methods = [
+        (PruneMethod::Dense, "-"),
+        (PruneMethod::SparseGpt, "yes"),
+        (PruneMethod::OneShot(Metric::Wanda), "no"),
+        (PruneMethod::OneShotCp(Metric::Wanda), "no"),
+        (PruneMethod::PermLlm(Metric::Wanda), "no"),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 8: 4:8 sparsity, tiny-m ({prov})"),
+        &["Method", "WeightUpd", "MeanLayerErr", "Wikitext2 ppl"],
+    );
+    let nm = NmConfig::PAT_4_8;
+    for (method, upd) in methods {
+        let cfg = PipelineCfg {
+            nm,
+            lcp: LcpCfg { nm, steps: scaled(50), lr: 0.05, ..Default::default() },
+            ..Default::default()
+        };
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let err: f32 = if pruned.layer_errors.is_empty() {
+            0.0
+        } else {
+            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
+        };
+        let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+        table.row(&[method.name(), upd.to_string(), fmt(err as f64, 5), fmt(ppl, 3)]);
+    }
+    table.finish("table8_48sparsity");
+}

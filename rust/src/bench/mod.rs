@@ -1,0 +1,36 @@
+//! Shared support for the paper-table bench binaries.
+
+use std::path::Path;
+
+use crate::model::{synth_trained_params, ModelConfig, ParamStore};
+
+/// Get weights for a named model size, preferring (in order):
+/// 1. `models/<name>.bin` — genuinely pretrained via the train_step
+///    artifact (`make models`);
+/// 2. synthetic trained-statistics weights (DESIGN.md §5 substitution).
+///
+/// Returns the store and a provenance tag printed in bench headers.
+pub fn trained_or_synth(name: &str) -> (ParamStore, &'static str) {
+    let path = format!("models/{name}.bin");
+    if Path::new(&path).exists() {
+        if let Ok(ps) = ParamStore::load(Path::new(&path)) {
+            return (ps, "pretrained");
+        }
+    }
+    let cfg = ModelConfig::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+    (synth_trained_params(&cfg, 42), "synthetic")
+}
+
+/// Fast-mode scaling for bench workloads (`PERMLLM_BENCH_FAST=1`).
+pub fn fast_mode() -> bool {
+    std::env::var("PERMLLM_BENCH_FAST").is_ok()
+}
+
+/// Scale an iteration/step count down in fast mode.
+pub fn scaled(n: usize) -> usize {
+    if fast_mode() {
+        (n / 4).max(1)
+    } else {
+        n
+    }
+}

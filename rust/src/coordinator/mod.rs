@@ -1,0 +1,27 @@
+//! The pruning pipeline coordinator (the "PermLLM framework" of §4-§5).
+//!
+//! Orchestrates, for a model + calibration corpus + method:
+//!
+//! 1. capture per-linear calibration activations (host forward);
+//! 2. prune every linear layer (fanned out over the worker pool) with the
+//!    chosen method — one-shot metric, SparseGPT, heuristic CP, or
+//!    learnable channel permutation;
+//! 3. rebuild the model with pruned weights.
+//!
+//! On permutation handling: like the paper's runtime, each linear keeps
+//! its own `src_of` and activations are permuted on the fly before the
+//! sparse GEMM (the paper's custom CP kernel; Table 3 measures its cost —
+//! see `benches/table3_runtime.rs`).  For *evaluation* we fold the
+//! permutation back into the weight (`W' P^T`), which is numerically
+//! identical and keeps the host forward untouched; Eq. 12's
+//! fold-into-previous-layer optimization applies to `w_down` (whose input
+//! producers `w_gate`/`w_up` can absorb the row permutation exactly) and
+//! is exercised in `propagation::fold_down_proj`.
+
+mod pipeline;
+mod pretrain;
+mod propagation;
+
+pub use pipeline::{prune_model, PipelineCfg, PruneMethod, PrunedModel};
+pub use pretrain::pretrain;
+pub use propagation::fold_down_proj;

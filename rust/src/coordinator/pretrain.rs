@@ -1,0 +1,129 @@
+//! Pretraining driver: run the AOT `train_step` artifact from Rust.
+//!
+//! The end-to-end validation path (DESIGN.md §4): Python lowered one AdamW
+//! step of the tiny LM to HLO once; this loop feeds it token batches from
+//! a synthetic corpus and threads the parameter/optimizer-state literals
+//! from step to step — no Python anywhere at runtime.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::data::{batch_to_i32, sample_batch, Corpus, CorpusKind};
+use crate::model::ParamStore;
+use crate::runtime::{literal_to_vec, tokens_to_literal, vec_to_literal, Engine};
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// Pretrain for `steps` batches; logs loss every `log_every` steps,
+/// saves the final parameters to `out` (PLLM binary), and returns the
+/// loss curve.
+pub fn pretrain(
+    artifacts: &Path,
+    corpus_kind: CorpusKind,
+    steps: usize,
+    log_every: usize,
+    out: &Path,
+) -> Result<Vec<f32>> {
+    let mut engine = Engine::load_lazy(artifacts)?;
+    engine.ensure_compiled("train_step")?;
+    let manifest = engine.manifest().clone_config();
+    let (cfg, batch_size, param_order) = manifest;
+
+    // Initial parameter literals (deterministic Rust init; the artifact is
+    // a pure function so init provenance does not matter).
+    let mut rng = Pcg32::seeded(7);
+    let init = ParamStore::init(&cfg, &mut rng);
+    let mut params: Vec<xla::Literal> = Vec::with_capacity(param_order.len());
+    let mut m_state: Vec<xla::Literal> = Vec::with_capacity(param_order.len());
+    let mut v_state: Vec<xla::Literal> = Vec::with_capacity(param_order.len());
+    for (name, shape) in &param_order {
+        let mat = init.get(name);
+        params.push(vec_to_literal(mat.data(), shape)?);
+        let zeros = vec![0.0f32; mat.data().len()];
+        m_state.push(vec_to_literal(&zeros, shape)?);
+        v_state.push(vec_to_literal(&zeros, shape)?);
+    }
+    let mut step_lit = vec_to_literal(&[0.0], &[1])?;
+
+    // Train on a mixture: the requested corpus plus the other two, so the
+    // model has genuine signal on every eval corpus (the paper's LLMs are
+    // general-purpose; a single-corpus tiny model is near-random off-domain
+    // and pruning deltas would drown in eval noise).
+    let corpora = [
+        Corpus::build(corpus_kind, 2024),
+        Corpus::build(CorpusKind::WikitextLike, 2024),
+        Corpus::build(CorpusKind::PileLike, 2024),
+        Corpus::build(CorpusKind::C4Like, 2024),
+    ];
+    let mut data_rng = Pcg32::seeded(99);
+    let n = param_order.len();
+    let mut losses = Vec::with_capacity(steps);
+
+    for step in 0..steps {
+        let corpus = &corpora[step % corpora.len()];
+        let batch = sample_batch(corpus, &mut data_rng, batch_size, cfg.seq_len);
+        let tokens = tokens_to_literal(&batch_to_i32(&batch), batch_size, cfg.seq_len)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 2);
+        inputs.extend(params.drain(..));
+        inputs.extend(m_state.drain(..));
+        inputs.extend(v_state.drain(..));
+        inputs.push(step_lit);
+        inputs.push(tokens);
+
+        let mut outs = engine.run("train_step", &inputs)?;
+        // Outputs: params' (n) + m' (n) + v' (n) + step' + loss.
+        let loss = literal_to_vec(&outs[3 * n + 1])?[0];
+        losses.push(loss);
+        step_lit = outs.remove(3 * n);
+        let mut it = outs.into_iter();
+        params = it.by_ref().take(n).collect();
+        m_state = it.by_ref().take(n).collect();
+        v_state = it.by_ref().take(n).collect();
+
+        if log_every > 0 && (step % log_every == 0 || step + 1 == steps) {
+            log::info!("train step {step}: loss {loss:.4}");
+        }
+        anyhow::ensure!(loss.is_finite(), "training diverged at step {step}");
+    }
+
+    // Convert final params to a ParamStore and save.
+    let mut store = init;
+    for ((name, shape), lit) in param_order.iter().zip(&params) {
+        let data = literal_to_vec(lit)?;
+        let mat = if shape.len() == 1 {
+            Mat::from_vec(1, shape[0], data)
+        } else {
+            Mat::from_vec(shape[0], shape[1], data)
+        };
+        store.set(name, mat);
+    }
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    store.save(out)?;
+    Ok(losses)
+}
+
+/// Small helper on Manifest to pull what pretraining needs without holding
+/// a borrow across the training loop.
+trait CloneConfig {
+    fn clone_config(&self) -> (crate::model::ModelConfig, usize, Vec<(String, Vec<usize>)>);
+}
+
+impl CloneConfig for crate::runtime::Manifest {
+    fn clone_config(&self) -> (crate::model::ModelConfig, usize, Vec<(String, Vec<usize>)>) {
+        (self.config.clone(), self.batch, self.param_order.clone())
+    }
+}
+
+#[allow(unused)]
+fn _assert_send() {}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end (with real artifacts) by examples/end_to_end.rs
+    // and tests/artifact_integration.rs; no artifact-free unit surface here.
+}

@@ -1,0 +1,100 @@
+//! Eq. 12: fold a layer's input permutation into the preceding layer.
+//!
+//! For `w_down` (input = silu(w_gate x) * (w_up x), elementwise in the ffn
+//! dimension) the permutation of `w_down`'s input channels is exactly a
+//! row permutation of BOTH `w_gate` and `w_up`:
+//!
+//!   silu(g x) * (u x)  permuted by P  ==  silu((P^T g) x) * ((P^T u) x)
+//!
+//! Row permutations preserve the N:M pattern of an already-pruned weight
+//! (the paper's point after Eq. 12), so this removes the runtime permute
+//! for the down projection entirely.
+
+use crate::tensor::Mat;
+
+/// Apply Eq. 12: given `w_down`'s `src_of`, return the row-permuted
+/// `(w_gate', w_up')` such that running the MLP *without* an activation
+/// permute before `w_down_permuted` is numerically identical.
+///
+/// `src_of[j] = i` means `w_down`'s stored column `j` reads original ffn
+/// channel `i`; so stored channel `j` must be produced by original row `i`
+/// of gate/up: `w'_{j,:} = w_{src_of[j],:}` — a row gather.
+pub fn fold_down_proj(w_gate: &Mat, w_up: &Mat, src_of: &[usize]) -> (Mat, Mat) {
+    (w_gate.permute_rows(src_of), w_up.permute_rows(src_of))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::{NmConfig, NmMask};
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit;
+
+    fn silu(v: f32) -> f32 {
+        v / (1.0 + (-v).exp())
+    }
+
+    fn mlp(w_gate: &Mat, w_up: &Mat, w_down: &Mat, x: &Mat) -> Mat {
+        let g = x.matmul_bt(w_gate);
+        let u = x.matmul_bt(w_up);
+        let mut h = Mat::zeros(g.rows(), g.cols());
+        for r in 0..g.rows() {
+            for c in 0..g.cols() {
+                h[(r, c)] = silu(g[(r, c)]) * u[(r, c)];
+            }
+        }
+        h.matmul_bt(w_down)
+    }
+
+    #[test]
+    fn prop_folding_is_numerically_exact() {
+        testkit::check_n("eq12-exact", 16, |rng| {
+            let (d, f, t) = (8, 16, 5);
+            let w_gate = Mat::randn(f, d, 1.0, rng);
+            let w_up = Mat::randn(f, d, 1.0, rng);
+            let w_down = Mat::randn(d, f, 1.0, rng);
+            let x = Mat::randn(t, d, 1.0, rng);
+            let src_of = rng.permutation(f);
+
+            // Runtime-permute path: w_down stored permuted, activations
+            // permuted before the down matmul.
+            let w_down_perm = w_down.permute_cols(&src_of);
+            let g = x.matmul_bt(&w_gate);
+            let u = x.matmul_bt(&w_up);
+            let mut h = Mat::zeros(t, f);
+            for r in 0..t {
+                for c in 0..f {
+                    h[(r, c)] = silu(g[(r, c)]) * u[(r, c)];
+                }
+            }
+            let y_runtime = h.permute_cols(&src_of).matmul_bt(&w_down_perm);
+
+            // Eq. 12 path: fold into gate/up rows, no activation permute.
+            let (g2, u2) = fold_down_proj(&w_gate, &w_up, &src_of);
+            let y_folded = mlp(&g2, &u2, &w_down_perm, &x);
+
+            testkit::assert_close(y_runtime.data(), y_folded.data(), 1e-4)
+        });
+    }
+
+    #[test]
+    fn row_permutation_preserves_nm_sparsity() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Mat::randn(16, 16, 1.0, &mut rng);
+        let mask = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let sparse = mask.apply(&w);
+        let perm = rng.permutation(16);
+        let permuted = sparse.permute_rows(&perm);
+        // Every row still satisfies 2:4 (row permutation does not touch
+        // the grouping along C_in).
+        let as_mask = permuted.map(|v| if v != 0.0 { 1.0 } else { 0.0 });
+        // rows may have fewer nonzeros if original had zeros, so verify
+        // group-wise <= keep.
+        for r in 0..16 {
+            for g in 0..4 {
+                let ones: f32 = (0..4).map(|k| as_mask[(r, g * 4 + k)]).sum();
+                assert!(ones <= 2.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Greedy and exhaustive channel permutation (Pool & Yu style).
+
+use super::permutation_score;
+use crate::sparsity::NmConfig;
+use crate::tensor::Mat;
+
+/// Greedy hill-climbing on the retained-importance score: repeatedly try
+/// swapping channel pairs across groups, accept improving swaps, stop at a
+/// local optimum or `max_sweeps`.  This is the "exhaustive search + greedy
+/// incremental refinement" of Pool & Yu [46] scaled to small layers.
+pub fn greedy_cp(s: &Mat, cfg: NmConfig, max_sweeps: usize) -> Vec<usize> {
+    let c_in = s.cols();
+    let mut perm: Vec<usize> = (0..c_in).collect();
+    let mut best = permutation_score(s, &perm, cfg);
+    for _ in 0..max_sweeps {
+        let mut improved = false;
+        for a in 0..c_in {
+            for b in a + 1..c_in {
+                // Swapping within a group never changes the mask's score.
+                if a / cfg.m == b / cfg.m {
+                    continue;
+                }
+                perm.swap(a, b);
+                let sc = permutation_score(s, &perm, cfg);
+                if sc > best + 1e-9 {
+                    best = sc;
+                    improved = true;
+                } else {
+                    perm.swap(a, b);
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    perm
+}
+
+/// Enumerate every distinct channel-to-group partition for tiny `c_in`
+/// (Fig. 1 ground truth).  Returns each partition as a `src_of` vector.
+/// The count is `c_in! / ((m!)^g * g!)` — caller is responsible for
+/// keeping `c_in` small (<= 12).
+pub fn exhaustive_partitions(c_in: usize, m: usize) -> Vec<Vec<usize>> {
+    assert_eq!(c_in % m, 0);
+    assert!(c_in <= 12, "exhaustive enumeration is for toy sizes");
+    let mut out = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut used = vec![false; c_in];
+    fn rec(
+        c_in: usize,
+        m: usize,
+        used: &mut Vec<bool>,
+        groups: &mut Vec<Vec<usize>>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if groups.len() == c_in / m && groups.iter().all(|g| g.len() == m) {
+            out.push(groups.iter().flatten().copied().collect());
+            return;
+        }
+        // Extend the last unfinished group, or open a new one anchored at
+        // the smallest unused channel (canonical form kills group-order and
+        // within-group-order duplicates).
+        if let Some(last) = groups.last_mut() {
+            if last.len() < m {
+                let min_in_group = *last.last().unwrap();
+                let candidates: Vec<usize> =
+                    (min_in_group + 1..c_in).filter(|&c| !used[c]).collect();
+                for c in candidates {
+                    used[c] = true;
+                    groups.last_mut().unwrap().push(c);
+                    rec(c_in, m, used, groups, out);
+                    groups.last_mut().unwrap().pop();
+                    used[c] = false;
+                }
+                return;
+            }
+        }
+        // Open a new group with the smallest unused channel.
+        if let Some(anchor) = (0..c_in).find(|&c| !used[c]) {
+            used[anchor] = true;
+            groups.push(vec![anchor]);
+            rec(c_in, m, used, groups, out);
+            groups.pop();
+            used[anchor] = false;
+        }
+    }
+    rec(c_in, m, &mut used, &mut groups, &mut out);
+    out
+}
+
+/// Exact best permutation (by retained-importance score) over all
+/// partitions; Fig. 1's "max score S" solution.
+pub fn exhaustive_best(s: &Mat, cfg: NmConfig) -> (Vec<usize>, f64) {
+    let mut best_perm: Vec<usize> = (0..s.cols()).collect();
+    let mut best_score = f64::NEG_INFINITY;
+    for perm in exhaustive_partitions(s.cols(), cfg.m) {
+        let sc = permutation_score(s, &perm, cfg);
+        if sc > best_score {
+            best_score = sc;
+            best_perm = perm;
+        }
+    }
+    (best_perm, best_score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    #[test]
+    fn partition_count_matches_formula() {
+        // 8 channels, groups of 4: 8! / (4!^2 * 2!) = 35.
+        assert_eq!(exhaustive_partitions(8, 4).len(), 35);
+        // 8 channels, groups of 2: 8! / (2!^4 * 4!) = 105.
+        assert_eq!(exhaustive_partitions(8, 2).len(), 105);
+    }
+
+    #[test]
+    fn partitions_are_valid_permutations() {
+        for p in exhaustive_partitions(8, 4) {
+            let mut seen = vec![false; 8];
+            for &c in &p {
+                assert!(!seen[c]);
+                seen[c] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn prop_greedy_never_below_identity() {
+        testkit::check_n("greedy-monotone", 16, |rng| {
+            let cfg = crate::sparsity::NmConfig::PAT_2_4;
+            let s = Mat::randn(4, 8, 1.0, rng).map(f32::abs);
+            let id: Vec<usize> = (0..8).collect();
+            let sc_id = permutation_score(&s, &id, cfg);
+            let p = greedy_cp(&s, cfg, 4);
+            let sc_g = permutation_score(&s, &p, cfg);
+            if sc_g + 1e-9 < sc_id {
+                return Err(format!("greedy {sc_g} < identity {sc_id}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_exhaustive_at_least_greedy() {
+        testkit::check_n("exhaustive-is-max", 8, |rng| {
+            let cfg = crate::sparsity::NmConfig::PAT_2_4;
+            let s = Mat::randn(3, 8, 1.0, rng).map(f32::abs);
+            let (_, sc_ex) = exhaustive_best(&s, cfg);
+            let sc_greedy = permutation_score(&s, &greedy_cp(&s, cfg, 4), cfg);
+            if sc_ex + 1e-6 < sc_greedy {
+                return Err(format!("exhaustive {sc_ex} < greedy {sc_greedy}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Heuristic channel-permutation baselines (the methods PermLLM improves).
+//!
+//! * [`ria_cp`] — RIA's two-stage CP (paper [62] §, used for the
+//!   "Wanda+CP" / "RIA+CP" rows): heuristic channel allocation that
+//!   spreads important channels across groups, then linear-sum-assignment
+//!   refinement maximizing retained importance.
+//! * [`greedy_cp`] — Pool & Yu-style greedy/exhaustive search for small
+//!   layers (Figure 1's toy enumeration).
+//! * [`exhaustive_best`] — exact enumeration of channel-to-group
+//!   partitions for tiny C_in; ground truth for Fig. 1 and the property
+//!   tests.
+
+mod ria_cp;
+mod greedy;
+
+pub use greedy::{exhaustive_best, exhaustive_partitions, greedy_cp};
+pub use ria_cp::ria_cp;
+
+use crate::sparsity::{NmConfig, NmMask};
+use crate::tensor::Mat;
+
+/// Sum of retained importance after permuting `s` by `src_of` and applying
+/// the Eq. 7 mask — the handcrafted quality metric "Score S" of Fig. 1.
+pub fn permutation_score(s: &Mat, src_of: &[usize], cfg: NmConfig) -> f64 {
+    let sp = s.permute_cols(src_of);
+    let mask = NmMask::from_scores(&sp, cfg);
+    mask.retained_score(&sp)
+}
+
+/// Compose group assignment (list of channel ids per group, in order) into
+/// a `src_of` permutation vector.
+pub fn groups_to_perm(groups: &[Vec<usize>]) -> Vec<usize> {
+    groups.iter().flat_map(|g| g.iter().copied()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn identity_score_matches_mask_score() {
+        let mut rng = Pcg32::seeded(1);
+        let s = Mat::randn(4, 16, 1.0, &mut rng).map(f32::abs);
+        let id: Vec<usize> = (0..16).collect();
+        let score = permutation_score(&s, &id, NmConfig::PAT_2_4);
+        let mask = NmMask::from_scores(&s, NmConfig::PAT_2_4);
+        assert!((score - mask.retained_score(&s)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn groups_to_perm_flattens() {
+        let groups = vec![vec![3, 1], vec![0, 2]];
+        assert_eq!(groups_to_perm(&groups), vec![3, 1, 0, 2]);
+    }
+}

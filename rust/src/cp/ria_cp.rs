@@ -1,0 +1,146 @@
+//! RIA's two-stage channel permutation (heuristic allocation + LSA refine).
+
+use super::groups_to_perm;
+use crate::lcp::hungarian::assign_max;
+use crate::sparsity::NmConfig;
+use crate::tensor::Mat;
+
+/// RIA channel permutation: returns the `src_of` permutation maximizing
+/// the sum of retained importance (the paper's handcrafted quality metric).
+///
+/// Stage 1 — heuristic allocation: sort channels by total importance
+/// (column sums of S) descending and deal them round-robin across the
+/// `G = C_in / M` groups, so heavy channels land in different groups
+/// instead of competing for the same `keep` slots.
+///
+/// Stage 2 — LSA refinement: repeatedly pick one member slot per group,
+/// build the G x G gain matrix "retained score if channel c moved to
+/// group g", and solve the assignment exactly with the Hungarian
+/// algorithm.  Iterate over slots until a full sweep yields no gain.
+pub fn ria_cp(s: &Mat, cfg: NmConfig) -> Vec<usize> {
+    let c_in = s.cols();
+    assert_eq!(c_in % cfg.m, 0);
+    let g = c_in / cfg.m;
+
+    // ---- Stage 1: round-robin allocation by column importance ----------
+    let mut col_imp: Vec<(f64, usize)> = (0..c_in)
+        .map(|c| (s.col(c).iter().map(|&v| v as f64).sum::<f64>(), c))
+        .collect();
+    col_imp.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut groups: Vec<Vec<usize>> = vec![Vec::with_capacity(cfg.m); g];
+    for (rank, &(_, c)) in col_imp.iter().enumerate() {
+        groups[rank % g].push(c);
+    }
+
+    // ---- Stage 2: per-slot LSA refinement -------------------------------
+    let mut best_score = score_groups(s, &groups, cfg);
+    loop {
+        let mut improved = false;
+        for slot in 0..cfg.m {
+            // Candidate channel from each group (its `slot`-th member).
+            let cands: Vec<usize> = groups.iter().map(|gr| gr[slot]).collect();
+            // gain[g][c] = group score if groups[g] swaps its slot for cands[c].
+            let mut gain = Mat::zeros(g, g);
+            for (gi, gr) in groups.iter().enumerate() {
+                for (ci, &cand) in cands.iter().enumerate() {
+                    let mut members = gr.clone();
+                    members[slot] = cand;
+                    gain[(gi, ci)] = group_score(s, &members, cfg) as f32;
+                }
+            }
+            let assign = assign_max(&gain); // assign[group] = candidate idx
+            let mut new_groups = groups.clone();
+            for (gi, &ci) in assign.iter().enumerate() {
+                new_groups[gi][slot] = cands[ci];
+            }
+            let new_score = score_groups(s, &new_groups, cfg);
+            if new_score > best_score + 1e-9 {
+                groups = new_groups;
+                best_score = new_score;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    groups_to_perm(&groups)
+}
+
+/// Retained importance of one group's member channels (Eq. 7 per group).
+fn group_score(s: &Mat, members: &[usize], cfg: NmConfig) -> f64 {
+    let mut total = 0.0f64;
+    let mut vals: Vec<f32> = Vec::with_capacity(members.len());
+    for r in 0..s.rows() {
+        vals.clear();
+        let row = s.row(r);
+        vals.extend(members.iter().map(|&c| row[c]));
+        vals.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        total += vals.iter().take(cfg.keep).map(|&v| v as f64).sum::<f64>();
+    }
+    total
+}
+
+fn score_groups(s: &Mat, groups: &[Vec<usize>], cfg: NmConfig) -> f64 {
+    groups.iter().map(|gr| group_score(s, gr, cfg)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::permutation_score;
+    use crate::util::testkit;
+
+    #[test]
+    fn prop_output_is_valid_permutation() {
+        testkit::check("ria-cp-valid-perm", |rng| {
+            let c_in = 4 * (2 + rng.below_usize(6));
+            let s = Mat::randn(6, c_in, 1.0, rng).map(f32::abs);
+            let p = ria_cp(&s, crate::sparsity::NmConfig::PAT_2_4);
+            let mut seen = vec![false; c_in];
+            for &i in &p {
+                if seen[i] {
+                    return Err(format!("duplicate channel {i}"));
+                }
+                seen[i] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_never_worse_than_identity_score() {
+        // The retained-importance score (RIA's own objective) must not
+        // decrease relative to no permutation.
+        testkit::check("ria-cp-score-monotone", |rng| {
+            let cfg = crate::sparsity::NmConfig::PAT_2_4;
+            let c_in = 4 * (2 + rng.below_usize(6));
+            let s = Mat::randn(4, c_in, 1.0, rng).map(f32::abs);
+            let id: Vec<usize> = (0..c_in).collect();
+            let p = ria_cp(&s, cfg);
+            let sc_id = permutation_score(&s, &id, cfg);
+            let sc_cp = permutation_score(&s, &p, cfg);
+            if sc_cp + 1e-6 < sc_id {
+                return Err(format!("cp score {sc_cp} < identity {sc_id}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn separates_two_dominant_channels() {
+        // Two huge channels inside one group must end up in different
+        // groups so both survive 2:4 pruning... with keep=2 both survive
+        // anyway; use keep=1 to force the separation.
+        let cfg = crate::sparsity::NmConfig { m: 4, keep: 1 };
+        let mut s = Mat::full(2, 8, 0.01);
+        s[(0, 0)] = 10.0;
+        s[(1, 0)] = 10.0;
+        s[(0, 1)] = 9.0;
+        s[(1, 1)] = 9.0;
+        let p = ria_cp(&s, cfg);
+        let g_of = |c: usize| p.iter().position(|&x| x == c).unwrap() / 4;
+        assert_ne!(g_of(0), g_of(1), "dominant channels share a group: {p:?}");
+    }
+}

@@ -1,0 +1,38 @@
+//! Synthetic corpora and calibration sampling (DESIGN.md §5).
+//!
+//! Stand-ins for C4 / Wikitext2 / Pile: three generators with *distinct*
+//! token statistics (different Zipf exponents, Markov orders, and
+//! document structure), enough for Table 5's calibration-robustness
+//! ablation and for pretraining the tiny LM. Byte-level tokens (vocab
+//! 256) so no tokenizer state needs to cross the language boundary.
+
+mod corpus;
+
+pub use corpus::{Corpus, CorpusKind};
+
+use crate::util::rng::Pcg32;
+
+/// Sample a batch of fixed-length sequences from a corpus stream.
+pub fn sample_batch(corpus: &Corpus, rng: &mut Pcg32, batch: usize, seq_len: usize) -> Vec<Vec<u8>> {
+    (0..batch).map(|_| corpus.sample_seq(rng, seq_len)).collect()
+}
+
+/// Flatten a batch into the i32 token buffer the artifacts consume.
+pub fn batch_to_i32(batch: &[Vec<u8>]) -> Vec<i32> {
+    batch.iter().flat_map(|s| s.iter().map(|&b| b as i32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let c = Corpus::build(CorpusKind::C4Like, 7);
+        let mut rng = Pcg32::seeded(1);
+        let b = sample_batch(&c, &mut rng, 3, 32);
+        assert_eq!(b.len(), 3);
+        assert!(b.iter().all(|s| s.len() == 32));
+        assert_eq!(batch_to_i32(&b).len(), 96);
+    }
+}

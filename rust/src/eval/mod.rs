@@ -1,0 +1,40 @@
+//! Evaluation harness: perplexity + zero-shot tasks.
+//!
+//! * Perplexity re-exports the host forward's [`model::perplexity`] over a
+//!   held-out sample of a corpus (Table 1 / Table 8 metric).
+//! * [`zeroshot`] builds five synthetic classification tasks mirroring the
+//!   paper's HellaSwag / ARC-E / ARC-C / OBQA / RTE suite (Table 2): each
+//!   task asks the model to rank a true corpus continuation above
+//!   distractors by total log-likelihood, with task-specific difficulty
+//!   knobs (context length, number and closeness of distractors).
+
+mod zeroshot;
+
+pub use zeroshot::{zeroshot_accuracy, zeroshot_suite, ZeroshotTask};
+
+use crate::data::{sample_batch, Corpus};
+use crate::model::{perplexity, ParamStore};
+use crate::util::rng::Pcg32;
+
+/// Held-out perplexity on `n_seqs` sequences from `corpus`.
+pub fn eval_perplexity(ps: &ParamStore, corpus: &Corpus, seed: u64, n_seqs: usize, seq_len: usize) -> f64 {
+    let mut rng = Pcg32::new(seed, 999);
+    let batch = sample_batch(corpus, &mut rng, n_seqs, seq_len);
+    perplexity(ps, &batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusKind;
+    use crate::model::{synth_trained_params, ModelConfig};
+
+    #[test]
+    fn eval_ppl_runs() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 1);
+        let corpus = Corpus::build(CorpusKind::C4Like, 2);
+        let ppl = eval_perplexity(&ps, &corpus, 3, 2, 32);
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+}

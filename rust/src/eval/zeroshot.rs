@@ -1,0 +1,132 @@
+//! Synthetic zero-shot tasks (Table 2 analogue).
+//!
+//! Construction: sample a context from the task's corpus, continue it with
+//! the true Markov continuation, and generate distractors by sampling
+//! continuations from a *different* state (hard distractors resample from
+//! a nearby state).  The model scores each candidate by total conditional
+//! log-likelihood; accuracy = fraction of items where the true
+//! continuation wins.  A trained model beats chance; pruning degrades
+//! accuracy — the same signal the paper reads off lm-evaluation-harness.
+
+use crate::data::{Corpus, CorpusKind};
+use crate::model::ParamStore;
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// One synthetic zero-shot task definition.
+#[derive(Debug, Clone)]
+pub struct ZeroshotTask {
+    /// Display name (mirrors the paper's column).
+    pub name: &'static str,
+    pub corpus: CorpusKind,
+    pub context_len: usize,
+    pub cont_len: usize,
+    pub n_distractors: usize,
+    /// Distractors drawn from a nearby state (harder) vs random state.
+    pub hard: bool,
+    pub n_items: usize,
+}
+
+/// The five-task suite mirroring HellaSwag/ARC-E/ARC-C/OBQA/RTE.
+pub fn zeroshot_suite() -> Vec<ZeroshotTask> {
+    vec![
+        ZeroshotTask { name: "HellaSwag", corpus: CorpusKind::C4Like, context_len: 24, cont_len: 8, n_distractors: 3, hard: false, n_items: 80 },
+        ZeroshotTask { name: "ARC_E", corpus: CorpusKind::WikitextLike, context_len: 16, cont_len: 6, n_distractors: 3, hard: false, n_items: 80 },
+        ZeroshotTask { name: "ARC_C", corpus: CorpusKind::WikitextLike, context_len: 16, cont_len: 6, n_distractors: 3, hard: true, n_items: 80 },
+        ZeroshotTask { name: "OBQA", corpus: CorpusKind::PileLike, context_len: 12, cont_len: 8, n_distractors: 3, hard: true, n_items: 80 },
+        ZeroshotTask { name: "RTE", corpus: CorpusKind::C4Like, context_len: 20, cont_len: 6, n_distractors: 1, hard: false, n_items: 80 },
+    ]
+}
+
+/// Log-likelihood of `cont` given `ctx` under the model.
+fn cont_loglik(ps: &ParamStore, ctx: &[u8], cont: &[u8]) -> f64 {
+    let mut seq = ctx.to_vec();
+    seq.extend_from_slice(cont);
+    let logits = crate::model::lm_forward(ps, &[seq.clone()]);
+    let l: &Mat = &logits[0];
+    let mut total = 0.0f64;
+    for (k, &tok) in cont.iter().enumerate() {
+        let pos = ctx.len() + k - 1; // logits at pos predict token pos+1
+        let row = l.row(pos);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|v| (v - mx).exp()).sum();
+        total += (row[tok as usize] - mx) as f64 - (z as f64).ln();
+    }
+    total
+}
+
+/// Accuracy of `ps` on one task (deterministic per seed).
+pub fn zeroshot_accuracy(ps: &ParamStore, task: &ZeroshotTask, seed: u64) -> f64 {
+    let corpus = Corpus::build(task.corpus, 1000 + task.corpus as u64);
+    let mut rng = Pcg32::new(seed ^ 0xBEEF, 17);
+    let mut correct = 0usize;
+    for _ in 0..task.n_items {
+        let full = corpus.sample_seq(&mut rng, task.context_len + task.cont_len);
+        let (ctx, truth) = full.split_at(task.context_len);
+        // Distractors: continuations sampled from a different start state.
+        let mut cands: Vec<Vec<u8>> = vec![truth.to_vec()];
+        for _ in 0..task.n_distractors {
+            let d = if task.hard {
+                // Hard: a continuation of a slightly perturbed context —
+                // statistically close to the truth.
+                let mut pert = ctx.to_vec();
+                let at = pert.len() - 1;
+                pert[at] = pert[at].wrapping_add(1 + rng.below(4) as u8);
+                let seq = continue_from(&corpus, &mut rng, *pert.last().unwrap(), task.cont_len);
+                seq
+            } else {
+                let start = rng.below(256) as u8;
+                continue_from(&corpus, &mut rng, start, task.cont_len)
+            };
+            cands.push(d);
+        }
+        let scores: Vec<f64> = cands.iter().map(|c| cont_loglik(ps, ctx, c)).collect();
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == 0 {
+            correct += 1;
+        }
+    }
+    correct as f64 / task.n_items as f64
+}
+
+/// Walk the chain `len` steps from `state` (the state itself is context,
+/// not part of the continuation).
+fn continue_from(corpus: &Corpus, rng: &mut Pcg32, mut state: u8, len: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        state = corpus.step(state, rng);
+        out.push(state);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{synth_trained_params, ModelConfig};
+
+    #[test]
+    fn suite_has_five_named_tasks() {
+        let suite = zeroshot_suite();
+        assert_eq!(suite.len(), 5);
+        let names: Vec<_> = suite.iter().map(|t| t.name).collect();
+        assert_eq!(names, vec!["HellaSwag", "ARC_E", "ARC_C", "OBQA", "RTE"]);
+    }
+
+    #[test]
+    fn accuracy_in_unit_interval_and_deterministic() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 1);
+        let mut task = zeroshot_suite()[4].clone(); // RTE: cheapest (1 distractor)
+        task.n_items = 10;
+        let a = zeroshot_accuracy(&ps, &task, 42);
+        let b = zeroshot_accuracy(&ps, &task, 42);
+        assert_eq!(a, b);
+        assert!((0.0..=1.0).contains(&a));
+    }
+}

@@ -1,0 +1,98 @@
+//! AdamW optimizer over flat f32 buffers (paper §5.1 uses AdamW [33]).
+
+/// AdamW hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWCfg {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWCfg {
+    fn default() -> Self {
+        // Paper: lr in {1e-3, 5e-3}; our tiny layers tolerate larger steps,
+        // callers override per experiment.
+        AdamWCfg { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// AdamW state for one parameter buffer.
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    cfg: AdamWCfg,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl AdamW {
+    pub fn new(n: usize, cfg: AdamWCfg) -> AdamW {
+        AdamW { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// One update step: `param -= lr * (m̂ / (√v̂ + eps) + wd * param)`.
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        for i in 0..param.len() {
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * grad[i];
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * grad[i] * grad[i];
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            param[i] -= c.lr * (m_hat / (v_hat.sqrt() + c.eps) + c.weight_decay * param[i]);
+        }
+    }
+}
+
+/// Linear temperature decay from `tau0` to `tau1` over `steps` (paper:
+/// 1.0 -> 0.1 over the 50 LCP iterations).
+pub fn tau_schedule(step: usize, steps: usize, tau0: f32, tau1: f32) -> f32 {
+    if steps <= 1 {
+        return tau1;
+    }
+    tau0 + (tau1 - tau0) * step as f32 / (steps - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        let cfg = AdamWCfg { lr: 0.1, ..Default::default() };
+        let mut opt = AdamW::new(3, cfg);
+        let mut x = vec![3.0f32, -2.0, 1.0];
+        for _ in 0..200 {
+            let g: Vec<f32> = x.iter().map(|v| 2.0 * v).collect();
+            opt.step(&mut x, &g);
+        }
+        for v in &x {
+            assert!(v.abs() < 1e-2, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params_with_zero_grad() {
+        let cfg = AdamWCfg { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut opt = AdamW::new(1, cfg);
+        let mut x = vec![1.0f32];
+        for _ in 0..10 {
+            opt.step(&mut x, &[0.0]);
+        }
+        assert!(x[0] < 1.0 && x[0] > 0.0);
+    }
+
+    #[test]
+    fn tau_schedule_endpoints() {
+        assert_eq!(tau_schedule(0, 50, 1.0, 0.1), 1.0);
+        assert!((tau_schedule(49, 50, 1.0, 0.1) - 0.1).abs() < 1e-6);
+        let mid = tau_schedule(25, 50, 1.0, 0.1);
+        assert!(mid < 1.0 && mid > 0.1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Learnable channel permutation (the paper's core contribution).
+//!
+//! * [`sinkhorn`] — host Sinkhorn normalization with hand-derived VJP;
+//! * [`hungarian`] — exact linear-sum-assignment hardening (Eq. 6);
+//! * [`adamw`] — the optimizer + temperature schedule;
+//! * [`trainer`] — the per-layer LCP loop with straight-through gradients,
+//!   generic over a [`trainer::LcpBackend`] (pure-Rust or AOT artifact).
+
+pub mod adamw;
+pub mod hungarian;
+pub mod sinkhorn;
+pub mod trainer;
+
+pub use adamw::{tau_schedule, AdamW, AdamWCfg};
+pub use hungarian::{assign_max, harden};
+pub use sinkhorn::SinkhornTape;
+pub use trainer::{cosine_loss_grad, train_lcp, HostBackend, LayerData, LcpBackend, LcpCfg, LcpResult};

@@ -1,0 +1,211 @@
+//! Host Sinkhorn normalization: forward + hand-derived backward.
+//!
+//! Mirrors the L1 Pallas kernel / jnp reference exactly (same operation
+//! order, same eps-free math) so the pure-Rust LCP path cross-checks
+//! against the AOT `lcp_grad` artifact to float tolerance.
+
+use crate::tensor::Mat;
+
+/// Forward pass with saved intermediates for the backward pass.
+///
+/// `S0 = exp(W_P / tau)`, then `iters` rounds of row normalization
+/// followed by column normalization (paper Eqs. 2-4).
+pub struct SinkhornTape {
+    tau: f32,
+    /// exp(W_P / tau).
+    a0: Mat,
+    /// Input to each column-normalization (i.e. output of the row step).
+    row_outs: Vec<Mat>,
+    /// Output of each column-normalization.
+    col_outs: Vec<Mat>,
+}
+
+impl SinkhornTape {
+    /// Run the forward pass on one `B x B` block.
+    pub fn forward(w_p: &Mat, tau: f32, iters: usize) -> SinkhornTape {
+        let a0 = w_p.map(|v| (v / tau).exp());
+        let mut cur = a0.clone();
+        let mut row_outs = Vec::with_capacity(iters);
+        let mut col_outs = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let r = row_normalize(&cur);
+            let c = col_normalize(&r);
+            row_outs.push(r);
+            col_outs.push(c.clone());
+            cur = c;
+        }
+        SinkhornTape { tau, a0, row_outs, col_outs }
+    }
+
+    /// The soft permutation matrix (output of the last iteration).
+    pub fn output(&self) -> &Mat {
+        self.col_outs.last().unwrap_or(&self.a0)
+    }
+
+    /// Backward: given dL/dP_soft, return dL/dW_P.
+    pub fn backward(&self, d_out: &Mat) -> Mat {
+        let mut g = d_out.clone();
+        for l in (0..self.row_outs.len()).rev() {
+            // col_norm consumed row_outs[l] and produced col_outs[l].
+            g = col_normalize_bwd(&self.row_outs[l], &self.col_outs[l], &g);
+            // row_norm consumed (a0 or col_outs[l-1]) and produced row_outs[l].
+            let input = if l == 0 { &self.a0 } else { &self.col_outs[l - 1] };
+            g = row_normalize_bwd(input, &self.row_outs[l], &g);
+        }
+        // dW_P = g * a0 / tau   (a0 = exp(W_P/tau)).
+        let mut out = g;
+        for (o, &a) in out.data_mut().iter_mut().zip(self.a0.data()) {
+            *o *= a / self.tau;
+        }
+        out
+    }
+}
+
+/// `Y = X / rowsum(X)`.
+fn row_normalize(x: &Mat) -> Mat {
+    let (n, m) = x.shape();
+    let mut out = x.clone();
+    for r in 0..n {
+        let s: f32 = x.row(r).iter().sum();
+        for v in out.row_mut(r) {
+            *v /= s;
+        }
+        let _ = m;
+    }
+    out
+}
+
+/// `Y = X / colsum(X)`.
+fn col_normalize(x: &Mat) -> Mat {
+    let (n, m) = x.shape();
+    let mut sums = vec![0.0f32; m];
+    for r in 0..n {
+        for (s, &v) in sums.iter_mut().zip(x.row(r)) {
+            *s += v;
+        }
+    }
+    let mut out = x.clone();
+    for r in 0..n {
+        for (v, &s) in out.row_mut(r).iter_mut().zip(&sums) {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// VJP of row normalization: `dX_ij = (dY_ij - Σ_k dY_ik Y_ik) / s_i`.
+fn row_normalize_bwd(x: &Mat, y: &Mat, dy: &Mat) -> Mat {
+    let (n, _m) = x.shape();
+    let mut out = dy.clone();
+    for r in 0..n {
+        let s: f32 = x.row(r).iter().sum();
+        let inner: f32 = dy.row(r).iter().zip(y.row(r)).map(|(d, v)| d * v).sum();
+        for v in out.row_mut(r) {
+            *v = (*v - inner) / s;
+        }
+    }
+    out
+}
+
+/// VJP of column normalization: `dX_ij = (dY_ij - Σ_k dY_kj Y_kj) / s_j`.
+fn col_normalize_bwd(x: &Mat, y: &Mat, dy: &Mat) -> Mat {
+    let (n, m) = x.shape();
+    let mut sums = vec![0.0f32; m];
+    let mut inners = vec![0.0f32; m];
+    for r in 0..n {
+        for c in 0..m {
+            sums[c] += x[(r, c)];
+            inners[c] += dy[(r, c)] * y[(r, c)];
+        }
+    }
+    let mut out = dy.clone();
+    for r in 0..n {
+        for c in 0..m {
+            out[(r, c)] = (out[(r, c)] - inners[c]) / sums[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit;
+
+    #[test]
+    fn forward_is_doubly_stochastic_at_convergence() {
+        let mut rng = Pcg32::seeded(1);
+        let w_p = Mat::randn(16, 16, 1.0, &mut rng);
+        let tape = SinkhornTape::forward(&w_p, 0.7, 40);
+        let p = tape.output();
+        for r in 0..16 {
+            let rs: f32 = p.row(r).iter().sum();
+            assert!((rs - 1.0).abs() < 1e-3, "row {r} sums to {rs}");
+        }
+        for c in 0..16 {
+            let cs: f32 = p.col(c).iter().sum();
+            assert!((cs - 1.0).abs() < 1e-3, "col {c} sums to {cs}");
+        }
+    }
+
+    #[test]
+    fn zero_iters_is_plain_exp() {
+        let w_p = Mat::from_vec(2, 2, vec![0.0, 1.0, -1.0, 0.5]);
+        let tape = SinkhornTape::forward(&w_p, 1.0, 0);
+        let want: Vec<f32> = w_p.data().iter().map(|v| v.exp()).collect();
+        testkit::assert_close(tape.output().data(), &want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn prop_backward_matches_finite_differences() {
+        testkit::check_n("sinkhorn-fd", 12, |rng| {
+            let b = 4 + rng.below_usize(4);
+            let iters = rng.below_usize(6);
+            let tau = 0.5 + rng.uniform();
+            let w_p = Mat::randn(b, b, 0.5, rng);
+            // Random downstream cotangent.
+            let dy = Mat::randn(b, b, 1.0, rng);
+
+            let tape = SinkhornTape::forward(&w_p, tau, iters);
+            let grad = tape.backward(&dy);
+
+            // Directional finite difference along a random direction.
+            let dir = Mat::randn(b, b, 1.0, rng);
+            let eps = 1e-3f32;
+            let wp_plus = w_p.add(&dir.scale(eps));
+            let wp_minus = w_p.sub(&dir.scale(eps));
+            let f = |m: &Mat| -> f64 {
+                let t = SinkhornTape::forward(m, tau, iters);
+                t.output()
+                    .data()
+                    .iter()
+                    .zip(dy.data())
+                    .map(|(&y, &g)| (y * g) as f64)
+                    .sum()
+            };
+            let fd = (f(&wp_plus) - f(&wp_minus)) / (2.0 * eps as f64);
+            let analytic: f64 = grad
+                .data()
+                .iter()
+                .zip(dir.data())
+                .map(|(&g, &d)| (g * d) as f64)
+                .sum();
+            let denom = fd.abs().max(analytic.abs()).max(1e-3);
+            if (fd - analytic).abs() / denom > 0.02 {
+                return Err(format!("fd {fd} vs analytic {analytic}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backward_shape_matches() {
+        let mut rng = Pcg32::seeded(2);
+        let w_p = Mat::randn(8, 8, 1.0, &mut rng);
+        let tape = SinkhornTape::forward(&w_p, 1.0, 5);
+        let g = tape.backward(&Mat::full(8, 8, 1.0));
+        assert_eq!(g.shape(), (8, 8));
+        assert!(g.data().iter().all(|v| v.is_finite()));
+    }
+}

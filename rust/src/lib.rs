@@ -1,0 +1,32 @@
+//! # PermLLM — Learnable Channel Permutation for N:M Sparse LLMs
+//!
+//! A Rust + JAX + Pallas reproduction of *PermLLM: Learnable Channel
+//! Permutation for N:M Sparse Large Language Models* (2025).
+//!
+//! Three layers (DESIGN.md §2):
+//! * **L1** Pallas kernels (`python/compile/kernels/`) — Sinkhorn, N:M mask
+//!   selection, channel permutation, compressed 2:4 SpMM;
+//! * **L2** JAX graphs (`python/compile/`) — tiny LLaMA-style LM
+//!   (train/forward) and the LCP loss+grad graphs, AOT-lowered to HLO text;
+//! * **L3** this crate — the pruning pipeline: calibration, importance
+//!   metrics, one-shot pruning (magnitude/Wanda/RIA/SparseGPT), heuristic
+//!   channel permutation baselines, the learnable-channel-permutation
+//!   trainer (Sinkhorn + Hungarian + AdamW + STE), permutation propagation,
+//!   evaluation, and the experiment harness for every paper table/figure.
+//!
+//! Python never runs on the request path: the `xla` crate loads the AOT
+//! artifacts once and executes them via PJRT (see [`runtime`]).
+
+pub mod bench;
+pub mod coordinator;
+pub mod cp;
+pub mod data;
+pub mod eval;
+pub mod lcp;
+pub mod model;
+pub mod pruning;
+pub mod quant;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,212 @@
+//! `permllm` — CLI for the PermLLM pruning framework.
+//!
+//! Subcommands:
+//!   prune   prune a model with a chosen method and report perplexity
+//!   eval    evaluate a saved model (perplexity + zero-shot suite)
+//!   train   pretrain the tiny LM via the AOT train_step artifact
+//!   info    print artifact manifest / model summary
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::{eval_perplexity, zeroshot_accuracy, zeroshot_suite};
+use permllm::lcp::LcpCfg;
+use permllm::model::{synth_trained_params, ModelConfig, ParamStore};
+use permllm::pruning::Metric;
+use permllm::sparsity::NmConfig;
+use permllm::util::cli::Cli;
+
+fn main() {
+    permllm::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let code = match cmd {
+        "prune" => run(cmd_prune(&rest)),
+        "eval" => run(cmd_eval(&rest)),
+        "train" => run(cmd_train(&rest)),
+        "info" => run(cmd_info(&rest)),
+        _ => {
+            eprintln!(
+                "usage: permllm <prune|eval|train|info> [options]\n\
+                 \n  permllm prune --model tiny-s --method permllm-wanda --sparsity 2:4\
+                 \n  permllm eval  --params models/tiny-m.bin\
+                 \n  permllm train --artifacts artifacts --steps 300 --out models/tiny-m.bin\
+                 \n  permllm info  --artifacts artifacts\n"
+            );
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn parse_method(s: &str) -> Result<PruneMethod> {
+    Ok(match s {
+        "dense" => PruneMethod::Dense,
+        "sparsegpt" => PruneMethod::SparseGpt,
+        "magnitude" => PruneMethod::OneShot(Metric::Magnitude),
+        "wanda" => PruneMethod::OneShot(Metric::Wanda),
+        "ria" => PruneMethod::OneShot(Metric::Ria),
+        "wanda-cp" => PruneMethod::OneShotCp(Metric::Wanda),
+        "ria-cp" => PruneMethod::OneShotCp(Metric::Ria),
+        "permllm-wanda" => PruneMethod::PermLlm(Metric::Wanda),
+        "permllm-ria" => PruneMethod::PermLlm(Metric::Ria),
+        _ => return Err(anyhow!("unknown method '{s}'")),
+    })
+}
+
+fn load_or_synth(model: &str, params: &str) -> Result<ParamStore> {
+    if !params.is_empty() && Path::new(params).exists() {
+        log::info!("loading params from {params}");
+        return ParamStore::load(Path::new(params));
+    }
+    let cfg = ModelConfig::by_name(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    log::info!("using synthetic trained-statistics weights for {model}");
+    Ok(synth_trained_params(&cfg, 42))
+}
+
+fn cmd_prune(args: &[String]) -> Result<()> {
+    let p = Cli::new("permllm prune", "prune a model and report perplexity")
+        .opt("model", "tiny-s", "model config (tiny-s|tiny-m|tiny-l)")
+        .opt("params", "", "path to a trained .bin (default: synthetic weights)")
+        .opt("method", "permllm-wanda", "dense|sparsegpt|magnitude|wanda|ria|wanda-cp|ria-cp|permllm-wanda|permllm-ria")
+        .opt("sparsity", "2:4", "N:M pattern (zeros:group)")
+        .opt("corpus", "c4", "calibration corpus: c4|wikitext2|pile")
+        .opt("block", "64", "LCP block size")
+        .opt("steps", "50", "LCP optimization steps")
+        .opt("lr", "0.05", "LCP learning rate")
+        .opt("lcp-from-layer", "0", "apply LCP only to layers >= this (partial PermLLM)")
+        .opt("out", "", "save pruned model to this path")
+        .parse_from(args)
+        .map_err(|e| anyhow!(e))?;
+
+    let ps = load_or_synth(p.get("model"), p.get("params"))?;
+    let method = parse_method(p.get("method"))?;
+    let nm = NmConfig::parse(p.get("sparsity")).ok_or_else(|| anyhow!("bad sparsity"))?;
+    let corpus = Corpus::build(
+        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
+        2024,
+    );
+    let cfg = PipelineCfg {
+        nm,
+        lcp: LcpCfg {
+            block: p.get_usize("block"),
+            steps: p.get_usize("steps"),
+            lr: p.get_f32("lr"),
+            nm,
+            ..Default::default()
+        },
+        lcp_from_layer: p.get_usize("lcp-from-layer"),
+        ..Default::default()
+    };
+
+    let dense_ppl = eval_perplexity(&ps, &corpus, 99, 8, 64);
+    log::info!("dense perplexity: {dense_ppl:.3}");
+    let pruned = prune_model(&ps, &corpus, method, &cfg);
+    let ppl = eval_perplexity(&pruned.params, &corpus, 99, 8, 64);
+    let mean_err: f32 = if pruned.layer_errors.is_empty() {
+        0.0
+    } else {
+        pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
+    };
+    println!(
+        "method={} sparsity={} ppl={:.3} (dense {:.3}) mean-layer-cosine-err={:.5} prune-time={:.1}s",
+        method.name(),
+        nm.name(),
+        ppl,
+        dense_ppl,
+        mean_err,
+        pruned.elapsed_s
+    );
+    let out = p.get("out");
+    if !out.is_empty() {
+        pruned.params.save(Path::new(out))?;
+        log::info!("saved pruned model to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let p = Cli::new("permllm eval", "evaluate a model: perplexity + zero-shot")
+        .opt("model", "tiny-s", "model config if no params file")
+        .opt("params", "", "path to .bin params")
+        .opt("corpus", "c4", "perplexity corpus")
+        .opt("items", "40", "items per zero-shot task")
+        .parse_from(args)
+        .map_err(|e| anyhow!(e))?;
+    let ps = load_or_synth(p.get("model"), p.get("params"))?;
+    let corpus = Corpus::build(
+        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
+        2024,
+    );
+    let ppl = eval_perplexity(&ps, &corpus, 99, 8, 64);
+    println!("perplexity({}): {ppl:.3}", p.get("corpus"));
+    let mut mean = 0.0;
+    for mut task in zeroshot_suite() {
+        task.n_items = p.get_usize("items");
+        let acc = zeroshot_accuracy(&ps, &task, 7);
+        println!("{:<10} acc = {:.2}%", task.name, acc * 100.0);
+        mean += acc;
+    }
+    println!("{:<10} acc = {:.2}%", "Average", mean / 5.0 * 100.0);
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = Cli::new("permllm train", "pretrain the tiny LM via the train_step artifact")
+        .opt("artifacts", "artifacts/tiny-m", "artifact directory")
+        .opt("steps", "200", "training steps")
+        .opt("corpus", "c4", "training corpus")
+        .opt("out", "models/tiny-m.bin", "output params path")
+        .opt("log-every", "20", "loss log cadence")
+        .parse_from(args)
+        .map_err(|e| anyhow!(e))?;
+    let losses = permllm::coordinator::pretrain(
+        Path::new(p.get("artifacts")),
+        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
+        p.get_usize("steps"),
+        p.get_usize("log-every"),
+        Path::new(p.get("out")),
+    )?;
+    println!(
+        "trained {} steps: loss {:.4} -> {:.4}; saved {}",
+        losses.len(),
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN),
+        p.get("out")
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let p = Cli::new("permllm info", "print artifact manifest summary")
+        .opt("artifacts", "artifacts/tiny-m", "artifact directory")
+        .parse_from(args)
+        .map_err(|e| anyhow!(e))?;
+    let m = permllm::runtime::Manifest::load(Path::new(p.get("artifacts")))?;
+    println!(
+        "model {}: d={} layers={} heads={} ffn={} vocab={} seq={}",
+        m.config.name, m.config.dim, m.config.n_layers, m.config.n_heads, m.config.ffn,
+        m.config.vocab, m.config.seq_len
+    );
+    println!("lcp: block={} calib_rows={} pattern keep {}/{} sinkhorn={}",
+        m.lcp_block, m.lcp_calib_rows, m.lcp_keep, m.lcp_m, m.sinkhorn_iters);
+    println!("{} artifacts:", m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {:<24} kind={:<14} inputs={} outputs={}", a.name, a.kind, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Model architecture configuration (mirror of python ModelConfig).
+
+/// Architecture hyperparameters of the tiny causal LM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub seq_len: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Named sizes matching `python/compile/model.py::CONFIGS`.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        let (vocab, dim, n_layers, n_heads, ffn) = match name {
+            "tiny-s" => (256, 64, 2, 2, 128),
+            "tiny-m" => (256, 128, 4, 4, 256),
+            "tiny-l" => (256, 192, 6, 6, 384),
+            _ => return None,
+        };
+        Some(ModelConfig {
+            name: name.to_string(),
+            vocab,
+            dim,
+            n_layers,
+            n_heads,
+            ffn,
+            seq_len: 128,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        })
+    }
+
+    /// Canonical flat parameter order (the artifact I/O contract; must
+    /// equal `python/compile/model.py::param_names`).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_embed".to_string()];
+        for l in 0..self.n_layers {
+            for t in ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"] {
+                names.push(format!("layers.{l}.{t}"));
+            }
+        }
+        names.push("final_norm".to_string());
+        names.push("lm_head".to_string());
+        names
+    }
+
+    /// Shape of a named parameter (`[C_out, C_in]` for linears).
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, f, v) = (self.dim, self.ffn, self.vocab);
+        if name == "tok_embed" {
+            return vec![v, d];
+        }
+        if name == "final_norm" {
+            return vec![d];
+        }
+        if name == "lm_head" {
+            return vec![v, d];
+        }
+        let kind = name.rsplit('.').next().unwrap();
+        match kind {
+            "attn_norm" | "mlp_norm" => vec![d],
+            "wq" | "wk" | "wv" | "wo" => vec![d, d],
+            "w_gate" | "w_up" => vec![f, d],
+            "w_down" => vec![d, f],
+            _ => panic!("unknown param {name}"),
+        }
+    }
+
+    /// The prunable linear layers, in forward order (embedding and head
+    /// are skipped, as in the paper §5.1).
+    pub fn prunable_linears(&self) -> Vec<LinearRef> {
+        let mut out = Vec::new();
+        for l in 0..self.n_layers {
+            for kind in [
+                LinearKind::Wq,
+                LinearKind::Wk,
+                LinearKind::Wv,
+                LinearKind::Wo,
+                LinearKind::WGate,
+                LinearKind::WUp,
+                LinearKind::WDown,
+            ] {
+                out.push(LinearRef { layer: l, kind });
+            }
+        }
+        out
+    }
+}
+
+/// Which linear inside a decoder layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    WGate,
+    WUp,
+    WDown,
+}
+
+impl LinearKind {
+    pub fn param_suffix(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "wq",
+            LinearKind::Wk => "wk",
+            LinearKind::Wv => "wv",
+            LinearKind::Wo => "wo",
+            LinearKind::WGate => "w_gate",
+            LinearKind::WUp => "w_up",
+            LinearKind::WDown => "w_down",
+        }
+    }
+}
+
+/// A specific prunable linear layer in the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinearRef {
+    pub layer: usize,
+    pub kind: LinearKind,
+}
+
+impl LinearRef {
+    pub fn param_name(&self) -> String {
+        format!("layers.{}.{}", self.layer, self.kind.param_suffix())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_formula() {
+        for name in ["tiny-s", "tiny-m", "tiny-l"] {
+            let cfg = ModelConfig::by_name(name).unwrap();
+            assert_eq!(cfg.param_names().len(), 3 + 9 * cfg.n_layers);
+        }
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let cfg = ModelConfig::by_name("tiny-m").unwrap();
+        assert_eq!(cfg.param_shape("tok_embed"), vec![256, 128]);
+        assert_eq!(cfg.param_shape("layers.2.w_gate"), vec![256, 128]);
+        assert_eq!(cfg.param_shape("layers.0.w_down"), vec![128, 256]);
+        assert_eq!(cfg.param_shape("lm_head"), vec![256, 128]);
+    }
+
+    #[test]
+    fn prunable_linears_cover_all_layers() {
+        let cfg = ModelConfig::by_name("tiny-m").unwrap();
+        let lins = cfg.prunable_linears();
+        assert_eq!(lins.len(), 7 * 4);
+        assert_eq!(lins[0].param_name(), "layers.0.wq");
+        assert_eq!(lins.last().unwrap().param_name(), "layers.3.w_down");
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(ModelConfig::by_name("gpt-5").is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! The tiny LLaMA-style LM on the Rust side.
+//!
+//! Mirrors `python/compile/model.py` exactly (same parameter order, same
+//! RMSNorm/RoPE/attention/SwiGLU math in f32) so that:
+//! * weights trained via the `train_step` artifact evaluate identically
+//!   through the host forward and the `lm_forward` artifact
+//!   (`tests/model_parity.rs` pins this);
+//! * the pruning pipeline can capture per-linear calibration activations
+//!   with [`forward::forward_captured`].
+
+mod config;
+mod forward;
+mod params;
+mod synth;
+
+pub use config::{LinearKind, LinearRef, ModelConfig};
+pub use forward::{forward_captured, lm_forward, lm_loss, perplexity, Captured};
+pub use params::ParamStore;
+pub use synth::synth_trained_params;

@@ -1,0 +1,218 @@
+//! Parameter store: named tensors + binary serialization.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::config::ModelConfig;
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+const MAGIC: &[u8; 4] = b"PLLM";
+const VERSION: u32 = 1;
+
+/// All model parameters, keyed by canonical name. Rank-1 params (norms)
+/// are stored as `[1, d]` matrices.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    cfg: ModelConfig,
+    params: BTreeMap<String, Mat>,
+}
+
+impl ParamStore {
+    /// Gaussian init: std = fan_in^-0.5, norms = 1 (matches python init in
+    /// spirit; exact pretrain init comes from the train_step artifact path).
+    pub fn init(cfg: &ModelConfig, rng: &mut Pcg32) -> ParamStore {
+        let mut params = BTreeMap::new();
+        for name in cfg.param_names() {
+            let shape = cfg.param_shape(&name);
+            let m = if shape.len() == 1 {
+                Mat::full(1, shape[0], 1.0)
+            } else {
+                let std = (shape[1] as f32).powf(-0.5);
+                Mat::randn(shape[0], shape[1], std, rng)
+            };
+            params.insert(name, m);
+        }
+        ParamStore { cfg: cfg.clone(), params }
+    }
+
+    /// Build from a flat list in canonical order (artifact output).
+    pub fn from_flat(cfg: &ModelConfig, flat: Vec<Mat>) -> Result<ParamStore> {
+        let names = cfg.param_names();
+        anyhow::ensure!(flat.len() == names.len(), "expected {} params, got {}", names.len(), flat.len());
+        let mut params = BTreeMap::new();
+        for (name, m) in names.into_iter().zip(flat) {
+            let shape = cfg.param_shape(&name);
+            let want = if shape.len() == 1 { (1, shape[0]) } else { (shape[0], shape[1]) };
+            anyhow::ensure!(m.shape() == want, "param {name}: shape {:?} != {:?}", m.shape(), want);
+            params.insert(name, m);
+        }
+        Ok(ParamStore { cfg: cfg.clone(), params })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn get(&self, name: &str) -> &Mat {
+        self.params.get(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Mat {
+        self.params.get_mut(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, m: Mat) {
+        assert!(self.params.contains_key(name), "unknown param {name}");
+        self.params.insert(name.to_string(), m);
+    }
+
+    /// Flat list in canonical order (artifact input).
+    pub fn to_flat(&self) -> Vec<&Mat> {
+        self.cfg.param_names().iter().map(|n| self.get(n)).collect()
+    }
+
+    /// Total scalar count.
+    pub fn n_params(&self) -> usize {
+        self.params.values().map(|m| m.data().len()).sum()
+    }
+
+    /// Serialize to the `PLLM` binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let cfg_line = format!(
+            "{} {} {} {} {} {} {} {} {}",
+            self.cfg.name,
+            self.cfg.vocab,
+            self.cfg.dim,
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.ffn,
+            self.cfg.seq_len,
+            self.cfg.rope_theta,
+            self.cfg.norm_eps
+        );
+        f.write_all(&(cfg_line.len() as u32).to_le_bytes())?;
+        f.write_all(cfg_line.as_bytes())?;
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for name in self.cfg.param_names() {
+            let m = self.get(&name);
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(m.rows() as u32).to_le_bytes())?;
+            f.write_all(&(m.cols() as u32).to_le_bytes())?;
+            for v in m.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the `PLLM` binary format.
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad magic");
+        let version = read_u32(&mut f)?;
+        anyhow::ensure!(version == VERSION, "unsupported version {version}");
+        let cfg_len = read_u32(&mut f)? as usize;
+        let mut cfg_buf = vec![0u8; cfg_len];
+        f.read_exact(&mut cfg_buf)?;
+        let cfg_line = String::from_utf8(cfg_buf)?;
+        let parts: Vec<&str> = cfg_line.split_whitespace().collect();
+        anyhow::ensure!(parts.len() == 9, "bad config line");
+        let cfg = ModelConfig {
+            name: parts[0].to_string(),
+            vocab: parts[1].parse()?,
+            dim: parts[2].parse()?,
+            n_layers: parts[3].parse()?,
+            n_heads: parts[4].parse()?,
+            ffn: parts[5].parse()?,
+            seq_len: parts[6].parse()?,
+            rope_theta: parts[7].parse()?,
+            norm_eps: parts[8].parse()?,
+        };
+        let n = read_u32(&mut f)? as usize;
+        let mut params = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let rows = read_u32(&mut f)? as usize;
+            let cols = read_u32(&mut f)? as usize;
+            let mut data = vec![0f32; rows * cols];
+            let mut buf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            params.insert(name, Mat::from_vec(rows, cols, data));
+        }
+        for name in cfg.param_names() {
+            if !params.contains_key(&name) {
+                return Err(anyhow!("missing param {name} in file"));
+            }
+        }
+        Ok(ParamStore { cfg, params })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    f.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_match_config() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let ps = ParamStore::init(&cfg, &mut rng);
+        assert_eq!(ps.get("tok_embed").shape(), (256, 64));
+        assert_eq!(ps.get("layers.0.attn_norm").shape(), (1, 64));
+        assert_eq!(ps.get("layers.1.w_down").shape(), (64, 128));
+        assert!(ps.n_params() > 100_000);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let mut rng = Pcg32::seeded(2);
+        let ps = ParamStore::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("permllm_test_params.bin");
+        ps.save(&dir).unwrap();
+        let back = ParamStore::load(&dir).unwrap();
+        assert_eq!(back.cfg(), ps.cfg());
+        for name in cfg.param_names() {
+            assert_eq!(back.get(&name).data(), ps.get(&name).data(), "{name}");
+        }
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn from_flat_validates_shapes() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let ps = ParamStore::init(&cfg, &mut rng);
+        let flat: Vec<Mat> = ps.to_flat().into_iter().cloned().collect();
+        let back = ParamStore::from_flat(&cfg, flat).unwrap();
+        assert_eq!(back.n_params(), ps.n_params());
+        // wrong count rejected
+        assert!(ParamStore::from_flat(&cfg, vec![Mat::zeros(1, 1)]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Synthetic "trained-like" weights (DESIGN.md §5 substitution).
+//!
+//! Benches must run without artifacts or a pretraining pass, but pruning
+//! dynamics are only interesting on weights with realistic statistics.
+//! Trained LLM weights are (a) heavy-tailed, (b) have a minority of
+//! high-magnitude *outlier channels*, and (c) rows with very different
+//! norms; activations correspondingly have outlier channels (the
+//! motivation for Wanda/RIA).  [`synth_trained_params`] instills exactly
+//! those properties deterministically.  When `examples/end_to_end.rs` has
+//! produced genuinely trained weights (`models/<name>.bin`), the benches
+//! prefer them.
+
+use super::config::ModelConfig;
+use super::params::ParamStore;
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// Fraction of channels made outliers.
+const OUTLIER_FRAC: f32 = 0.06;
+/// Outlier magnitude multiplier range.
+const OUTLIER_GAIN: (f32, f32) = (3.0, 8.0);
+
+fn heavy_tailed(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Mat {
+    // Student-t-ish: normal / sqrt(uniform) gives excess kurtosis.
+    let mut m = Mat::zeros(rows, cols);
+    for v in m.data_mut() {
+        let g = rng.normal();
+        let u = 0.3 + 0.7 * rng.uniform();
+        *v = g * std / u.sqrt();
+    }
+    m
+}
+
+fn add_outlier_channels(m: &mut Mat, rng: &mut Pcg32) {
+    let cols = m.cols();
+    let n_out = ((cols as f32 * OUTLIER_FRAC).ceil() as usize).max(1);
+    for _ in 0..n_out {
+        let c = rng.below_usize(cols);
+        let gain = rng.range_f32(OUTLIER_GAIN.0, OUTLIER_GAIN.1);
+        for r in 0..m.rows() {
+            m[(r, c)] *= gain;
+        }
+    }
+}
+
+/// Deterministic trained-statistics parameters for a config.
+pub fn synth_trained_params(cfg: &ModelConfig, seed: u64) -> ParamStore {
+    let mut rng = Pcg32::seeded(seed);
+    let mut ps = ParamStore::init(cfg, &mut rng);
+    for name in cfg.param_names() {
+        let shape = cfg.param_shape(&name);
+        if shape.len() == 1 {
+            // Norm gains drift slightly away from 1 during training.
+            let mut g = Mat::zeros(1, shape[0]);
+            for v in g.data_mut() {
+                *v = 1.0 + 0.15 * rng.normal();
+            }
+            ps.set(&name, g);
+            continue;
+        }
+        let std = (shape[1] as f32).powf(-0.5);
+        let mut m = heavy_tailed(shape[0], shape[1], std, &mut rng);
+        add_outlier_channels(&mut m, &mut rng);
+        // Row-norm diversity: scale rows by lognormal-ish factors.
+        for r in 0..m.rows() {
+            let f = (0.5 * rng.normal()).exp();
+            for v in m.row_mut(r) {
+                *v *= f;
+            }
+        }
+        ps.set(&name, m);
+    }
+    ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kurtosis(xs: &[f32]) -> f64 {
+        let n = xs.len() as f64;
+        let mean: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let m2: f64 = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        let m4: f64 = xs.iter().map(|&v| (v as f64 - mean).powi(4)).sum::<f64>() / n;
+        m4 / (m2 * m2)
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let a = synth_trained_params(&cfg, 9);
+        let b = synth_trained_params(&cfg, 9);
+        assert_eq!(a.get("layers.0.wq").data(), b.get("layers.0.wq").data());
+    }
+
+    #[test]
+    fn weights_are_heavy_tailed() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 1);
+        let k = kurtosis(ps.get("layers.0.w_gate").data());
+        assert!(k > 4.0, "kurtosis {k} not heavy-tailed (normal = 3)");
+    }
+
+    #[test]
+    fn has_outlier_channels() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 2);
+        let w = ps.get("layers.0.wq");
+        let norms: Vec<f32> = (0..w.cols())
+            .map(|c| w.col(c).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect();
+        let mean: f32 = norms.iter().sum::<f32>() / norms.len() as f32;
+        let max = norms.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 2.5 * mean, "max/mean = {}", max / mean);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let a = synth_trained_params(&cfg, 1);
+        let b = synth_trained_params(&cfg, 2);
+        assert_ne!(a.get("layers.0.wq").data(), b.get("layers.0.wq").data());
+    }
+}

@@ -1,0 +1,165 @@
+//! Weight importance metrics for one-shot pruning.
+
+use crate::tensor::Mat;
+
+/// Importance metric selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// `|W_ij|` — magnitude pruning (Han et al. [21]).
+    Magnitude,
+    /// `|W_ij| * ||X_j||_2` — Wanda (Sun et al. [50]).
+    Wanda,
+    /// RIA (Zhang et al. [62]): relative importance x activation:
+    /// `(|W_ij| / sum_i' |W_i'j|... ` see [`importance`] for the exact form.
+    Ria,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Magnitude => "magnitude",
+            Metric::Wanda => "wanda",
+            Metric::Ria => "ria",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "magnitude" | "mag" => Some(Metric::Magnitude),
+            "wanda" => Some(Metric::Wanda),
+            "ria" => Some(Metric::Ria),
+            _ => None,
+        }
+    }
+}
+
+/// RIA's activation exponent `a` (paper uses 0.5).
+const RIA_ALPHA: f32 = 0.5;
+
+/// Compute the importance matrix `S` for weight `w` `[C_out, C_in]` given
+/// calibration activations `x` `[T, C_in]`.
+///
+/// * Magnitude: `S_ij = |W_ij|` (x unused).
+/// * Wanda:     `S_ij = |W_ij| * ||X_j||_2`.
+/// * RIA:       `S_ij = (|W_ij| / Σ_j'|W_ij'| + |W_ij| / Σ_i'|W_i'j|) *
+///               (||X_j||_2)^a` — the relative-importance form that avoids
+///               channel corruption (both row- and column-relative terms).
+pub fn importance(metric: Metric, w: &Mat, x: &Mat) -> Mat {
+    let (c_out, c_in) = w.shape();
+    match metric {
+        Metric::Magnitude => w.map(f32::abs),
+        Metric::Wanda => {
+            assert_eq!(x.cols(), c_in, "activation/weight width mismatch");
+            let norms = x.col_l2_norms();
+            let mut s = Mat::zeros(c_out, c_in);
+            for r in 0..c_out {
+                let wrow = w.row(r);
+                let srow = s.row_mut(r);
+                for c in 0..c_in {
+                    srow[c] = wrow[c].abs() * norms[c];
+                }
+            }
+            s
+        }
+        Metric::Ria => {
+            assert_eq!(x.cols(), c_in, "activation/weight width mismatch");
+            let norms = x.col_l2_norms();
+            let abs = w.map(f32::abs);
+            // Row sums Σ_j' |W_ij'| and column sums Σ_i' |W_i'j|.
+            let mut row_sum = vec![0.0f32; c_out];
+            let mut col_sum = vec![0.0f32; c_in];
+            for r in 0..c_out {
+                for (c, &a) in abs.row(r).iter().enumerate() {
+                    row_sum[r] += a;
+                    col_sum[c] += a;
+                }
+            }
+            let mut s = Mat::zeros(c_out, c_in);
+            for r in 0..c_out {
+                let arow = abs.row(r);
+                let srow = s.row_mut(r);
+                for c in 0..c_in {
+                    let rel = arow[c] / (row_sum[r] + 1e-12) + arow[c] / (col_sum[c] + 1e-12);
+                    srow[c] = rel * norms[c].powf(RIA_ALPHA);
+                }
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit;
+
+    #[test]
+    fn magnitude_is_abs() {
+        let w = Mat::from_vec(1, 4, vec![-3.0, 1.0, 0.0, -0.5]);
+        let x = Mat::zeros(2, 4);
+        let s = importance(Metric::Magnitude, &w, &x);
+        assert_eq!(s.data(), &[3.0, 1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn wanda_scales_by_column_norm() {
+        let w = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        // col 0 has norm 2, col 1 has norm 0.
+        let x = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 0.0]);
+        let s = importance(Metric::Wanda, &w, &x);
+        assert_eq!(s.data(), &[2.0, 0.0]);
+    }
+
+    #[test]
+    fn wanda_dead_channel_gets_zero_importance() {
+        // A channel whose activation is always zero contributes nothing
+        // regardless of its weight — this is Wanda's core insight.
+        let w = Mat::from_vec(2, 4, vec![9.0, 0.1, 0.1, 0.1, 9.0, 0.1, 0.1, 0.1]);
+        let mut x = Mat::zeros(8, 4);
+        for t in 0..8 {
+            for c in 1..4 {
+                x[(t, c)] = 1.0;
+            }
+        }
+        let s = importance(Metric::Wanda, &w, &x);
+        assert_eq!(s[(0, 0)], 0.0);
+        assert!(s[(0, 1)] > 0.0);
+    }
+
+    #[test]
+    fn ria_counteracts_channel_corruption() {
+        // RIA's relative term boosts the only surviving weight in an
+        // otherwise-small column so whole input channels aren't zeroed.
+        let mut rng = Pcg32::seeded(3);
+        let mut w = Mat::randn(8, 8, 1.0, &mut rng);
+        // Column 0 tiny everywhere except row 0.
+        for r in 1..8 {
+            w[(r, 0)] = 1e-4;
+        }
+        w[(0, 0)] = 0.05; // small in absolute terms but dominates its column
+        let x = Mat::full(4, 8, 1.0);
+        let s = importance(Metric::Ria, &w, &x);
+        // Relative importance of (0,0) within column 0 should rescue it
+        // relative to plain magnitude ranking.
+        let mag = importance(Metric::Magnitude, &w, &x);
+        let rank_ria = s.row(0).iter().filter(|&&v| v > s[(0, 0)]).count();
+        let rank_mag = mag.row(0).iter().filter(|&&v| v > mag[(0, 0)]).count();
+        assert!(rank_ria < rank_mag, "ria rank {rank_ria} vs mag rank {rank_mag}");
+    }
+
+    #[test]
+    fn prop_metrics_nonnegative_and_finite() {
+        testkit::check("metric-sane", |rng| {
+            let w = Mat::randn(6, 8, 1.0, rng);
+            let x = Mat::randn(5, 8, 1.0, rng);
+            for m in [Metric::Magnitude, Metric::Wanda, Metric::Ria] {
+                let s = importance(m, &w, &x);
+                if s.data().iter().any(|v| !v.is_finite() || *v < 0.0) {
+                    return Err(format!("{} produced invalid score", m.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

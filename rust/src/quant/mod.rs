@@ -1,0 +1,200 @@
+//! Channel-permutation-aware quantization (paper §D future work).
+//!
+//! The paper's Limitations section points out that channel reordering
+//! also helps *quantization* (RPTQ [59], DuQuant [30]).  This module
+//! implements that direction on the same permutation substrate: per-group
+//! symmetric integer quantization of `[C_out, C_in]` weights along the
+//! input-channel axis, where a channel permutation regroups channels of
+//! similar dynamic range so outlier channels stop inflating their
+//! group's scale.
+//!
+//! Two permutation strategies are provided:
+//! * [`range_sort_perm`] — RPTQ-style: sort channels by dynamic range;
+//! * reuse of the N:M machinery — any `src_of` from `cp::ria_cp` or the
+//!   LCP trainer can be passed to [`quantize_permuted`].
+
+use crate::tensor::Mat;
+
+/// Quantization configuration: `bits` signed symmetric, channels grouped
+/// along C_in in groups of `group` (one scale per row per group).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantCfg {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl QuantCfg {
+    pub const INT8_G64: QuantCfg = QuantCfg { bits: 8, group: 64 };
+    pub const INT4_G64: QuantCfg = QuantCfg { bits: 4, group: 64 };
+
+    fn qmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1) as f32
+    }
+}
+
+/// A quantized weight: int codes + per-(row, group) scales, plus the
+/// channel permutation used for grouping (`src_of`; identity if none).
+#[derive(Debug, Clone)]
+pub struct QuantWeight {
+    cfg: QuantCfg,
+    c_out: usize,
+    c_in: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    src_of: Vec<usize>,
+}
+
+impl QuantWeight {
+    /// Quantize `w` in its given channel order.
+    pub fn quantize(w: &Mat, cfg: QuantCfg) -> QuantWeight {
+        let id: Vec<usize> = (0..w.cols()).collect();
+        Self::quantize_permuted(w, &id, cfg)
+    }
+
+    /// Quantize `w` after permuting input channels by `src_of`.
+    pub fn quantize_permuted(w: &Mat, src_of: &[usize], cfg: QuantCfg) -> QuantWeight {
+        let wp = w.permute_cols(src_of);
+        let (c_out, c_in) = wp.shape();
+        assert_eq!(c_in % cfg.group, 0, "C_in must be divisible by group");
+        assert!(cfg.bits >= 2 && cfg.bits <= 8);
+        let groups = c_in / cfg.group;
+        let qmax = cfg.qmax();
+        let mut codes = vec![0i8; c_out * c_in];
+        let mut scales = vec![0.0f32; c_out * groups];
+        for r in 0..c_out {
+            let row = wp.row(r);
+            for g in 0..groups {
+                let seg = &row[g * cfg.group..(g + 1) * cfg.group];
+                let absmax = seg.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+                scales[r * groups + g] = scale;
+                for (k, &v) in seg.iter().enumerate() {
+                    let q = (v / scale).round().clamp(-qmax, qmax);
+                    codes[r * c_in + g * cfg.group + k] = q as i8;
+                }
+            }
+        }
+        QuantWeight { cfg, c_out, c_in, codes, scales, src_of: src_of.to_vec() }
+    }
+
+    /// Dequantize back to the ORIGINAL channel order.
+    pub fn dequantize(&self) -> Mat {
+        let groups = self.c_in / self.cfg.group;
+        let mut out = Mat::zeros(self.c_out, self.c_in);
+        for r in 0..self.c_out {
+            for c in 0..self.c_in {
+                let s = self.scales[r * groups + c / self.cfg.group];
+                out[(r, c)] = self.codes[r * self.c_in + c] as f32 * s;
+            }
+        }
+        // Undo the permutation.
+        let mut inv = vec![0usize; self.c_in];
+        for (j, &i) in self.src_of.iter().enumerate() {
+            inv[i] = j;
+        }
+        out.permute_cols(&inv)
+    }
+
+    /// Mean squared quantization error vs the original weight.
+    pub fn mse(&self, w: &Mat) -> f32 {
+        self.dequantize().mse(w)
+    }
+
+    /// Storage bytes: codes at `bits` + one f32 scale per row-group.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() * self.cfg.bits as usize / 8
+            + self.scales.len() * 4
+            + self.src_of.len() * 2
+    }
+}
+
+/// RPTQ-style permutation: sort channels by dynamic range (column absmax)
+/// so similarly-ranged channels share quantization groups.
+pub fn range_sort_perm(w: &Mat) -> Vec<usize> {
+    let mut ranges: Vec<(f32, usize)> = (0..w.cols())
+        .map(|c| (w.col(c).iter().fold(0.0f32, |m, v| m.max(v.abs())), c))
+        .collect();
+    ranges.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    ranges.into_iter().map(|(_, c)| c).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit;
+
+    /// Weight with a few high-magnitude outlier channels (the regime where
+    /// reordering pays, per RPTQ/DuQuant and the paper's §D).
+    fn outlier_weight(rng: &mut Pcg32, c_out: usize, c_in: usize) -> Mat {
+        let mut w = Mat::randn(c_out, c_in, 0.05, rng);
+        for _ in 0..c_in / 16 {
+            let c = rng.below_usize(c_in);
+            for r in 0..c_out {
+                w[(r, c)] *= 20.0;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn roundtrip_identity_perm_small_error() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Mat::randn(8, 64, 1.0, &mut rng);
+        let q = QuantWeight::quantize(&w, QuantCfg::INT8_G64);
+        assert!(q.mse(&w) < 1e-4, "int8 mse {}", q.mse(&w));
+    }
+
+    #[test]
+    fn prop_dequant_in_original_order() {
+        testkit::check_n("quant-order", 12, |rng| {
+            let w = Mat::randn(4, 64, 1.0, rng);
+            let perm = rng.permutation(64);
+            let q = QuantWeight::quantize_permuted(&w, &perm, QuantCfg::INT8_G64);
+            // Dequantized matrix approximates w element-wise in ORIGINAL order.
+            let dq = q.dequantize();
+            testkit::assert_close(dq.data(), w.data(), 0.02)
+        });
+    }
+
+    #[test]
+    fn range_sort_reduces_int4_error_with_outliers() {
+        let mut rng = Pcg32::seeded(3);
+        let mut wins = 0;
+        for _ in 0..5 {
+            let w = outlier_weight(&mut rng, 16, 128);
+            let base = QuantWeight::quantize(&w, QuantCfg::INT4_G64).mse(&w);
+            let perm = range_sort_perm(&w);
+            let sorted = QuantWeight::quantize_permuted(&w, &perm, QuantCfg::INT4_G64).mse(&w);
+            if sorted < base {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "range-sort won only {wins}/5");
+    }
+
+    #[test]
+    fn int4_worse_than_int8() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Mat::randn(8, 64, 1.0, &mut rng);
+        let e8 = QuantWeight::quantize(&w, QuantCfg::INT8_G64).mse(&w);
+        let e4 = QuantWeight::quantize(&w, QuantCfg::INT4_G64).mse(&w);
+        assert!(e4 > e8 * 10.0, "int4 {e4} vs int8 {e8}");
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Mat::randn(8, 128, 1.0, &mut rng);
+        let q8 = QuantWeight::quantize(&w, QuantCfg::INT8_G64);
+        // codes: 1024 B; scales: 8 rows * 2 groups * 4 B; perm 256 B.
+        assert_eq!(q8.storage_bytes(), 8 * 128 + 8 * 2 * 4 + 128 * 2);
+    }
+
+    #[test]
+    fn zero_weight_handled() {
+        let w = Mat::zeros(2, 64);
+        let q = QuantWeight::quantize(&w, QuantCfg::INT8_G64);
+        assert_eq!(q.mse(&w), 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! AOT-artifact gradient backend for the LCP trainer.
+//!
+//! Drop-in [`LcpBackend`] that routes `soft_perms` through the
+//! `sinkhorn_soft_{n}x{b}` artifact and `loss_grad` through
+//! `lcp_grad_{c_out}x{c_in}` — the L1 Pallas kernels and L2 STE graph run
+//! inside XLA while Rust keeps the Hungarian hardening and AdamW loop.
+//! Cross-checked against the pure-Rust [`HostBackend`] in
+//! `tests/lcp_cross_check.rs`.
+
+use anyhow::Result;
+
+use super::convert::{literal_to_vec, mat_to_literal, scalar_literal, vec_to_literal};
+use super::engine::Engine;
+use crate::lcp::{LayerData, LcpBackend};
+use crate::tensor::Mat;
+
+/// Artifact-powered LCP gradient backend for one layer shape.
+pub struct ArtifactBackend<'e> {
+    engine: &'e mut Engine,
+    grad_name: String,
+    sink_name: String,
+    n_b: usize,
+    block: usize,
+    /// Pre-converted layer literals (w, s, x, y) reused every step.
+    w_lit: xla::Literal,
+    s_lit: xla::Literal,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+}
+
+impl<'e> ArtifactBackend<'e> {
+    /// Build for layer `data`; resolves the artifact names from the shape.
+    pub fn new(engine: &'e mut Engine, data: &LayerData) -> Result<ArtifactBackend<'e>> {
+        let (c_out, c_in) = data.w.shape();
+        let grad_name = format!("lcp_grad_{c_out}x{c_in}");
+        let spec = engine
+            .manifest()
+            .artifact(&grad_name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {grad_name} (rebuild with this shape)"))?;
+        let n_b = spec.attrs["n_b"];
+        let block = spec.attrs["block"];
+        let calib_rows = spec.inputs.iter().find(|i| i.name == "x").unwrap().shape[0];
+        anyhow::ensure!(
+            data.x.rows() == calib_rows,
+            "calibration rows {} != artifact expectation {calib_rows}",
+            data.x.rows()
+        );
+        let sink_name = format!("sinkhorn_soft_{n_b}x{block}");
+        Ok(ArtifactBackend {
+            grad_name,
+            sink_name,
+            n_b,
+            block,
+            w_lit: mat_to_literal(&data.w)?,
+            s_lit: mat_to_literal(&data.s)?,
+            x_lit: mat_to_literal(&data.x)?,
+            y_lit: mat_to_literal(&data.y)?,
+            engine,
+        })
+    }
+
+    fn stack_blocks(&self, blocks: &[Mat]) -> Result<xla::Literal> {
+        let b = self.block;
+        let mut flat = Vec::with_capacity(self.n_b * b * b);
+        for blk in blocks {
+            flat.extend_from_slice(blk.data());
+        }
+        vec_to_literal(&flat, &[self.n_b, b, b])
+    }
+
+    fn unstack_blocks(&self, flat: &[f32]) -> Vec<Mat> {
+        let b = self.block;
+        (0..self.n_b)
+            .map(|n| Mat::from_vec(b, b, flat[n * b * b..(n + 1) * b * b].to_vec()))
+            .collect()
+    }
+}
+
+impl LcpBackend for ArtifactBackend<'_> {
+    fn soft_perms(&mut self, w_p: &[Mat], tau: f32) -> Vec<Mat> {
+        let inputs = [self.stack_blocks(w_p).unwrap(), scalar_literal(tau).unwrap()];
+        let outs = self.engine.run(&self.sink_name, &inputs).expect("sinkhorn artifact");
+        self.unstack_blocks(&literal_to_vec(&outs[0]).unwrap())
+    }
+
+    fn loss_grad(&mut self, w_p: &[Mat], p_hard_src: &[Vec<usize>], tau: f32) -> (f32, Vec<Mat>) {
+        // src_of -> dense permutation blocks (P[src_of[j], j] = 1).
+        let b = self.block;
+        let hard_blocks: Vec<Mat> = p_hard_src
+            .iter()
+            .map(|src| {
+                let mut p = Mat::zeros(b, b);
+                for (j, &i) in src.iter().enumerate() {
+                    p[(i, j)] = 1.0;
+                }
+                p
+            })
+            .collect();
+        let inputs = [
+            self.w_lit.clone(),
+            self.s_lit.clone(),
+            self.x_lit.clone(),
+            self.y_lit.clone(),
+            self.stack_blocks(w_p).unwrap(),
+            self.stack_blocks(&hard_blocks).unwrap(),
+            scalar_literal(tau).unwrap(),
+        ];
+        let outs = self.engine.run(&self.grad_name, &inputs).expect("lcp_grad artifact");
+        let loss = literal_to_vec(&outs[0]).unwrap()[0];
+        let grads = self.unstack_blocks(&literal_to_vec(&outs[1]).unwrap());
+        (loss, grads)
+    }
+}

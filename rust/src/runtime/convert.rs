@@ -1,0 +1,63 @@
+//! Host <-> XLA literal conversion helpers.
+
+use anyhow::Result;
+
+use crate::tensor::Mat;
+
+/// `[rows, cols]` f32 literal from a host matrix.
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    let (r, c) = m.shape();
+    Ok(xla::Literal::vec1(m.data()).reshape(&[r as i64, c as i64])?)
+}
+
+/// f32 literal of arbitrary shape from a flat buffer.
+pub fn vec_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/{n} vs data/{}", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// `[b, t]` i32 token literal.
+pub fn tokens_to_literal(tokens: &[i32], b: usize, t: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(tokens.len() == b * t);
+    Ok(xla::Literal::vec1(tokens).reshape(&[b as i64, t as i64])?)
+}
+
+/// `(1,)` f32 literal (the AOT graphs take scalars as rank-1 size-1).
+pub fn scalar_literal(v: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[v]).reshape(&[1])?)
+}
+
+/// Flatten any f32 literal back to a host vector.
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mat_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(3, 5, 1.0, &mut rng);
+        let l = mat_to_literal(&m).unwrap();
+        assert_eq!(l.element_count(), 15);
+        let back = literal_to_vec(&l).unwrap();
+        assert_eq!(back, m.data());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let l = scalar_literal(2.5).unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert_eq!(literal_to_vec(&l).unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn vec_shape_mismatch_rejected() {
+        assert!(vec_to_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+}

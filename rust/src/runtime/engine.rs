@@ -1,0 +1,165 @@
+//! Artifact engine: compile-once, execute-many over the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Owns the PJRT client and every compiled artifact executable.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Load `manifest.json` from `dir` and compile every artifact eagerly.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let mut e = Engine::load_lazy(dir)?;
+        let names: Vec<String> = e.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in names {
+            e.ensure_compiled(&n)?;
+        }
+        Ok(e)
+    }
+
+    /// Load the manifest but compile artifacts on first use.
+    pub fn load_lazy(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        log::info!(
+            "PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { client, manifest, dir: dir.to_path_buf(), executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile an artifact if not already compiled.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact: literals in, tuple-decomposed literals out.
+    ///
+    /// Validates input arity against the manifest spec so shape bugs
+    /// surface as errors, not crashes inside XLA.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.artifact(name).unwrap();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "artifact {name}: got {} inputs, manifest expects {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        for (lit, io) in inputs.iter().zip(&spec.inputs) {
+            anyhow::ensure!(
+                lit.element_count() == io.elements(),
+                "artifact {name}: input '{}' has {} elements, expected {:?}",
+                io.name,
+                lit.element_count(),
+                io.shape
+            );
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        // AOT graphs are lowered with return_tuple=True.
+        let outs = lit.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == spec.outputs.len(),
+            "artifact {name}: got {} outputs, manifest expects {}",
+            outs.len(),
+            spec.outputs.len()
+        );
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::convert::*;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg32;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m")
+    }
+
+    #[test]
+    fn sinkhorn_soft_artifact_matches_host_sinkhorn() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        let spec = engine
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "sinkhorn_soft")
+            .expect("no sinkhorn artifact")
+            .clone();
+        let n_b = spec.attrs["n_b"];
+        let b = spec.attrs["block"];
+        let iters = spec.attrs["iters"];
+        let mut rng = Pcg32::seeded(7);
+        let blocks: Vec<Mat> = (0..n_b).map(|_| Mat::randn(b, b, 0.5, &mut rng)).collect();
+        let mut flat = Vec::with_capacity(n_b * b * b);
+        for blk in &blocks {
+            flat.extend_from_slice(blk.data());
+        }
+        let tau = 0.7f32;
+        let outs = engine
+            .run(
+                &spec.name,
+                &[vec_to_literal(&flat, &[n_b, b, b]).unwrap(), scalar_literal(tau).unwrap()],
+            )
+            .unwrap();
+        let got = literal_to_vec(&outs[0]).unwrap();
+
+        // Host reference.
+        let mut want = Vec::with_capacity(flat.len());
+        for blk in &blocks {
+            let tape = crate::lcp::SinkhornTape::forward(blk, tau, iters);
+            want.extend_from_slice(tape.output().data());
+        }
+        crate::util::testkit::assert_close(&got, &want, 2e-4).unwrap();
+    }
+}

@@ -1,0 +1,178 @@
+//! Parse `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// One input or output of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Extra integer attributes (c_out, c_in, n_b, block, m, keep, ...).
+    pub attrs: std::collections::BTreeMap<String, usize>,
+}
+
+/// The full manifest: model/train/lcp configs + artifact specs.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub batch: usize,
+    pub lcp_block: usize,
+    pub lcp_calib_rows: usize,
+    pub lcp_m: usize,
+    pub lcp_keep: usize,
+    pub sinkhorn_iters: usize,
+    /// Canonical parameter order: (name, shape).
+    pub param_order: Vec<(String, Vec<usize>)>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("io list not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: e.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let cfgj = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let us = |k: &str| -> Result<usize> {
+            cfgj.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let config = ModelConfig {
+            name: cfgj.get("name").and_then(Json::as_str).unwrap_or("tiny-m").to_string(),
+            vocab: us("vocab")?,
+            dim: us("dim")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            ffn: us("ffn")?,
+            seq_len: us("seq_len")?,
+            rope_theta: cfgj.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0) as f32,
+            norm_eps: cfgj.get("norm_eps").and_then(Json::as_f64).unwrap_or(1e-5) as f32,
+        };
+        let lcpj = j.get("lcp").ok_or_else(|| anyhow!("missing lcp section"))?;
+        let lu = |k: &str| lcpj.get(k).and_then(Json::as_usize).unwrap_or(0);
+
+        let param_order = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing param_order"))?
+            .iter()
+            .map(|e| {
+                let name = e.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+                let shape = e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(|v| v.as_usize().unwrap_or(0)).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|a| {
+                let mut attrs = std::collections::BTreeMap::new();
+                if let Some(o) = a.as_obj() {
+                    for (k, v) in o {
+                        if let Some(n) = v.as_f64() {
+                            attrs.insert(k.clone(), n as usize);
+                        }
+                    }
+                }
+                Ok(ArtifactSpec {
+                    name: a.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    file: a.get("file").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    kind: a.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    inputs: io_specs(a.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?,
+                    outputs: io_specs(a.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?)?,
+                    attrs,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            config,
+            batch: j.path(&["train", "batch"]).and_then(Json::as_usize).unwrap_or(8),
+            lcp_block: lu("block"),
+            lcp_calib_rows: lu("calib_rows"),
+            lcp_m: lu("m"),
+            lcp_keep: lu("keep"),
+            sinkhorn_iters: lu("sinkhorn_iters"),
+            param_order,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.config.dim > 0);
+        assert!(m.artifact("train_step").is_some());
+        assert!(m.artifact("lm_forward").is_some());
+        assert!(!m.param_order.is_empty());
+        // param count: 3 + 9 per layer.
+        assert_eq!(m.param_order.len(), 3 + 9 * m.config.n_layers);
+        // every lcp_grad artifact is self-consistent.
+        for a in m.artifacts.iter().filter(|a| a.kind == "lcp_grad") {
+            assert_eq!(a.attrs["n_b"] * a.attrs["block"], a.attrs["c_in"]);
+        }
+    }
+}

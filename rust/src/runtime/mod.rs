@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The request path is Rust-only: `make artifacts` (python, build-time)
+//! emits `artifacts/*.hlo.txt` + `manifest.json`; [`Engine::load`] compiles
+//! every artifact on the PJRT CPU client at startup and [`Engine::run`]
+//! executes them with host tensors. HLO *text* is the interchange format
+//! (xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos; the text parser
+//! reassigns ids — see DESIGN.md §2).
+
+mod backend;
+mod convert;
+mod engine;
+mod manifest;
+
+pub use backend::ArtifactBackend;
+pub use convert::{literal_to_vec, mat_to_literal, scalar_literal, tokens_to_literal, vec_to_literal};
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};

@@ -1,0 +1,248 @@
+//! N:M pruning masks.
+
+use super::NmConfig;
+use crate::tensor::Mat;
+
+/// A {0,1} pruning mask over a `[C_out, C_in]` weight matrix, constructed
+/// to satisfy an N:M pattern (paper Eq. 7: per group of `m` consecutive
+/// input channels, exactly `keep` entries are 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NmMask {
+    cfg: NmConfig,
+    bits: Vec<bool>,
+    rows: usize,
+    cols: usize,
+}
+
+impl NmMask {
+    /// Select the mask that maximizes retained importance per group
+    /// (Eq. 7): keep the `keep` largest `scores` in every group of `m`.
+    /// Ties break toward the lower index (matches the jnp oracle).
+    pub fn from_scores(scores: &Mat, cfg: NmConfig) -> NmMask {
+        let (rows, cols) = scores.shape();
+        assert_eq!(cols % cfg.m, 0, "C_in must be divisible by M");
+        let mut bits = vec![false; rows * cols];
+        let mut idx: Vec<usize> = Vec::with_capacity(cfg.m);
+        for r in 0..rows {
+            let srow = scores.row(r);
+            for g in 0..cols / cfg.m {
+                let base = g * cfg.m;
+                idx.clear();
+                idx.extend(0..cfg.m);
+                // Stable sort descending by score -> lower index wins ties.
+                idx.sort_by(|&a, &b| {
+                    srow[base + b]
+                        .partial_cmp(&srow[base + a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                for &i in idx.iter().take(cfg.keep) {
+                    bits[r * cols + base + i] = true;
+                }
+            }
+        }
+        NmMask { cfg, bits, rows, cols }
+    }
+
+    /// Build from an explicit dense 0/1 matrix (validated).
+    pub fn from_dense(mask: &Mat, cfg: NmConfig) -> Option<NmMask> {
+        let (rows, cols) = mask.shape();
+        if cols % cfg.m != 0 {
+            return None;
+        }
+        let bits: Vec<bool> = mask.data().iter().map(|&x| x != 0.0).collect();
+        let out = NmMask { cfg, bits, rows, cols };
+        if out.verify() {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    pub fn cfg(&self) -> NmConfig {
+        self.cfg
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.bits[r * self.cols + c]
+    }
+
+    /// Check the N:M invariant: every group has exactly `keep` ones.
+    pub fn verify(&self) -> bool {
+        for r in 0..self.rows {
+            for g in 0..self.cols / self.cfg.m {
+                let base = r * self.cols + g * self.cfg.m;
+                let ones = self.bits[base..base + self.cfg.m].iter().filter(|&&b| b).count();
+                if ones != self.cfg.keep {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Dense 0/1 matrix view.
+    pub fn to_dense(&self) -> Mat {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        )
+    }
+
+    /// `mask ⊙ W`.
+    pub fn apply(&self, w: &Mat) -> Mat {
+        assert_eq!(w.shape(), (self.rows, self.cols));
+        let data = w
+            .data()
+            .iter()
+            .zip(&self.bits)
+            .map(|(&x, &b)| if b { x } else { 0.0 })
+            .collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Sum of retained scores — the handcrafted CP quality metric `S`
+    /// the paper argues against (Fig. 1); needed for the baselines.
+    pub fn retained_score(&self, scores: &Mat) -> f64 {
+        scores
+            .data()
+            .iter()
+            .zip(&self.bits)
+            .filter(|(_, &b)| b)
+            .map(|(&s, _)| s as f64)
+            .sum()
+    }
+
+    /// Column permutation of the mask (for un-permuting in Fig. 3 dumps):
+    /// `out[:, j] = self[:, src_of[j]]`.
+    pub fn permute_cols(&self, src_of: &[usize]) -> NmMask {
+        // NOTE: the permuted mask generally no longer satisfies N:M —
+        // that is the whole point of channel permutation (Eq. 12 keeps the
+        // *stored* weight N:M; the logical original-order view is free-form).
+        let mut bits = vec![false; self.bits.len()];
+        for r in 0..self.rows {
+            for (j, &i) in src_of.iter().enumerate() {
+                bits[r * self.cols + j] = self.bits[r * self.cols + i];
+            }
+        }
+        NmMask { cfg: self.cfg, bits, rows: self.rows, cols: self.cols }
+    }
+
+    /// Fraction of ones (should equal cfg.density()).
+    pub fn density(&self) -> f32 {
+        self.bits.iter().filter(|&&b| b).count() as f32 / self.bits.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit;
+
+    #[test]
+    fn keeps_largest_per_group() {
+        let s = Mat::from_vec(1, 4, vec![0.1, 3.0, -2.0, 0.5]);
+        let m = NmMask::from_scores(&s, NmConfig::PAT_2_4);
+        assert!(!m.get(0, 0) && m.get(0, 1) && !m.get(0, 2) && m.get(0, 3));
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_index() {
+        let s = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let m = NmMask::from_scores(&s, NmConfig::PAT_2_4);
+        assert!(m.get(0, 0) && m.get(0, 1) && !m.get(0, 2) && !m.get(0, 3));
+    }
+
+    #[test]
+    fn prop_mask_always_satisfies_nm() {
+        testkit::check("nm-invariant", |rng| {
+            let rows = 1 + rng.below_usize(8);
+            let groups = 1 + rng.below_usize(8);
+            for cfg in [NmConfig::PAT_2_4, NmConfig::PAT_4_8, NmConfig { m: 4, keep: 1 }] {
+                let cols = groups * cfg.m;
+                let s = Mat::randn(rows, cols, 1.0, rng);
+                let m = NmMask::from_scores(&s, cfg);
+                if !m.verify() {
+                    return Err(format!("invariant broken for {:?}", cfg));
+                }
+                let d = m.density();
+                if (d - cfg.density()).abs() > 1e-6 {
+                    return Err(format!("density {d} != {}", cfg.density()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mask_maximizes_group_score() {
+        // From-scores mask must retain at least as much score per group as
+        // any random valid selection.
+        testkit::check("mask-greedy-optimal", |rng| {
+            let cfg = NmConfig::PAT_2_4;
+            let s = Mat::randn(4, 16, 1.0, rng);
+            let m = NmMask::from_scores(&s, cfg);
+            let best = m.retained_score(&s);
+            // Random alternative masks.
+            for _ in 0..4 {
+                let mut bits = Mat::zeros(4, 16);
+                for r in 0..4 {
+                    for g in 0..4 {
+                        let mut cand: Vec<usize> = (0..4).collect();
+                        rng.shuffle(&mut cand);
+                        for &i in cand.iter().take(2) {
+                            bits[(r, g * 4 + i)] = 1.0;
+                        }
+                    }
+                }
+                let alt = NmMask::from_dense(&bits, cfg).unwrap();
+                if alt.retained_score(&s) > best + 1e-4 {
+                    return Err("found better selection than argmax mask".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn apply_zeroes_pruned_entries() {
+        let mut rng = Pcg32::seeded(5);
+        let w = Mat::randn(4, 8, 1.0, &mut rng);
+        let m = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let sparse = m.apply(&w);
+        for r in 0..4 {
+            for c in 0..8 {
+                if m.get(r, c) {
+                    assert_eq!(sparse[(r, c)], w[(r, c)]);
+                } else {
+                    assert_eq!(sparse[(r, c)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_rejects_invalid() {
+        let bad = Mat::full(1, 4, 1.0); // all ones is not 2:4
+        assert!(NmMask::from_dense(&bad, NmConfig::PAT_2_4).is_none());
+    }
+
+    #[test]
+    fn permute_cols_roundtrip() {
+        let mut rng = Pcg32::seeded(6);
+        let w = Mat::randn(3, 8, 1.0, &mut rng);
+        let m = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let perm = rng.permutation(8);
+        let mut inv = vec![0usize; 8];
+        for (j, &i) in perm.iter().enumerate() {
+            inv[i] = j;
+        }
+        let back = m.permute_cols(&perm).permute_cols(&inv);
+        assert_eq!(back.to_dense().data(), m.to_dense().data());
+    }
+}

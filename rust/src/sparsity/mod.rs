@@ -1,0 +1,74 @@
+//! N:M semi-structured sparsity: masks, compressed storage, sparse matmul.
+//!
+//! Paper notation (§2.2): "N:M sparsity" zeroes N of every M consecutive
+//! input channels; `keep = M - N` survive per group. The NVIDIA 2:4
+//! pattern is `NmConfig { m: 4, keep: 2 }`, 4:8 is `{ m: 8, keep: 4 }`.
+//!
+//! [`Compressed`] is the Sparse-Tensor-Core storage analogue: retained
+//! values plus per-entry column metadata, halving weight bytes for 2:4 and
+//! halving every inner product's length — the source of the paper's
+//! Table 3 speedup (see `benches/table3_runtime.rs`).
+
+mod mask;
+mod compressed;
+
+pub use compressed::Compressed;
+pub use mask::NmMask;
+
+/// An N:M sparsity pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NmConfig {
+    /// Group size (consecutive input channels).
+    pub m: usize,
+    /// Retained entries per group (`M - N` in the paper's notation).
+    pub keep: usize,
+}
+
+impl NmConfig {
+    /// The 2:4 pattern natively supported by Ampere Sparse Tensor Cores.
+    pub const PAT_2_4: NmConfig = NmConfig { m: 4, keep: 2 };
+    /// The 4:8 pattern (paper Appendix B).
+    pub const PAT_4_8: NmConfig = NmConfig { m: 8, keep: 4 };
+
+    /// Fraction of weights retained.
+    pub fn density(&self) -> f32 {
+        self.keep as f32 / self.m as f32
+    }
+
+    /// Human-readable name in the paper's "zeros:group" convention.
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.m - self.keep, self.m)
+    }
+
+    /// Parse "2:4"-style names (zeros:group).
+    pub fn parse(s: &str) -> Option<NmConfig> {
+        let (n, m) = s.split_once(':')?;
+        let n: usize = n.trim().parse().ok()?;
+        let m: usize = m.trim().parse().ok()?;
+        if n >= m || m == 0 {
+            return None;
+        }
+        Some(NmConfig { m, keep: m - n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_parse_roundtrip() {
+        assert_eq!(NmConfig::PAT_2_4.name(), "2:4");
+        assert_eq!(NmConfig::PAT_4_8.name(), "4:8");
+        assert_eq!(NmConfig::parse("2:4"), Some(NmConfig::PAT_2_4));
+        assert_eq!(NmConfig::parse("4:8"), Some(NmConfig::PAT_4_8));
+        assert_eq!(NmConfig::parse("4:4"), None);
+        assert_eq!(NmConfig::parse("x"), None);
+    }
+
+    #[test]
+    fn density() {
+        assert_eq!(NmConfig::PAT_2_4.density(), 0.5);
+        assert_eq!(NmConfig { m: 4, keep: 1 }.density(), 0.25);
+    }
+}

@@ -1,0 +1,136 @@
+//! Dense linear algebra: Cholesky factorization and triangular solves.
+//!
+//! SparseGPT's OBS weight update needs `H^{-1}` for the damped Hessian
+//! `H = X^T X + λI` (symmetric positive definite by construction); we
+//! factor `H = L L^T` and form the inverse via two triangular solves,
+//! matching the reference implementation's `torch.cholesky_inverse`.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` of an SPD matrix (`A = L L^T`).
+///
+/// Returns `None` if the matrix is not positive definite (non-positive
+/// pivot) — callers add damping and retry.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky: square required");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[(i, k)] as f64 * l[(j, k)] as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = (sum.sqrt()) as f32;
+            } else {
+                l[(i, j)] = (sum / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l[(i, k)] as f64 * y[k] as f64;
+        }
+        y[i] = (sum / l[(i, i)] as f64) as f32;
+    }
+    y
+}
+
+/// Solve `L^T x = y` for lower-triangular `L` (backward substitution).
+pub fn solve_upper(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= l[(k, i)] as f64 * x[k] as f64;
+        }
+        x[i] = (sum / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Full inverse of an SPD matrix via its Cholesky factor.
+pub fn cholesky_inverse(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&l, &y);
+        for i in 0..n {
+            inv[(i, j)] = x[i];
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg32::seeded(seed);
+        let x = Mat::randn(2 * n, n, 1.0, &mut rng);
+        let mut h = x.matmul_at(&x); // X^T X
+        for i in 0..n {
+            h[(i, i)] += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let recon = l.matmul_bt(&l); // L L^T
+        assert!(recon.mse(&a) < 1e-6, "mse {}", recon.mse(&a));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solves_invert_factor() {
+        let a = spd(6, 2);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_upper(&l, &y);
+        // A x should equal b.
+        for i in 0..6 {
+            let ax: f32 = (0..6).map(|j| a[(i, j)] * x[j]).sum();
+            assert!((ax - b[i]).abs() < 1e-3, "row {i}: {ax} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = spd(10, 3);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.mse(&Mat::eye(10)) < 1e-5, "mse {}", prod.mse(&Mat::eye(10)));
+    }
+}

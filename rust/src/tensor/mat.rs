@@ -1,0 +1,413 @@
+//! Row-major f32 matrix.
+
+use crate::util::rng::Pcg32;
+
+/// Dense row-major matrix of f32.
+///
+/// Weights follow the paper's `[C_out, C_in]` convention: `rows = C_out`,
+/// `cols = C_in`, and a linear layer computes `y = x W^T` for activation
+/// rows `x: [T, C_in]` (see [`Mat::matmul_bt`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Wrap an existing buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix with standard deviation `std`.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Borrow row `r` mutably.
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — [m,k] x [k,n] -> [m,n].
+    ///
+    /// ikj loop order with a row accumulator: the inner loop is a
+    /// contiguous axpy over `other`'s row, which the compiler
+    /// auto-vectorizes.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (l, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * n..(l + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other^T` — [m,k] x [n,k] -> [m,n].  The linear-layer product
+    /// `y = x W^T`: both operands stream row-contiguously (dot products).
+    pub fn matmul_bt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_bt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                out[(i, j)] = dot(arow, other.row(j));
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` — [k,m] x [k,n] -> [m,n] (Gram-style product,
+    /// used for Hessian accumulation X^T X in SparseGPT).
+    pub fn matmul_at(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_at shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for l in 0..k {
+            let arow = self.row(l);
+            let brow = &other.data[l * n..(l + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise product (same shape).
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise difference.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise sum.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scaled copy.
+    pub fn scale(&self, s: f32) -> Mat {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Map a function over all elements.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        let data = self.data.iter().map(|&a| f(a)).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean squared difference vs another matrix.
+    pub fn mse(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        let n = self.data.len() as f32;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n
+    }
+
+    /// L2 norm of every column (the `||X_j||_2` in Wanda's metric).
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x * x;
+            }
+        }
+        for o in out.iter_mut() {
+            *o = o.sqrt();
+        }
+        out
+    }
+
+    /// Permute columns: `out[:, j] = self[:, src_of[j]]` (this is `W @ P`
+    /// with `P[src_of[j], j] = 1` — the paper's channel permutation).
+    ///
+    /// Hot path of the runtime permute (Table 3's CP column): indices are
+    /// validated once, then the per-row gather runs without bounds checks
+    /// (§Perf iteration 2).
+    pub fn permute_cols(&self, src_of: &[usize]) -> Mat {
+        assert_eq!(src_of.len(), self.cols);
+        assert!(
+            src_of.iter().all(|&i| i < self.cols),
+            "permutation index out of range"
+        );
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (d, &i) in dst.iter_mut().zip(src_of) {
+                // SAFETY: every index checked against `cols` above.
+                *d = unsafe { *src.get_unchecked(i) };
+            }
+        }
+        out
+    }
+
+    /// Permute rows: `out[i, :] = self[dst_to_src[i], :]` (row reorder used
+    /// for Eq. 12's propagation to the preceding layer's output channels).
+    pub fn permute_rows(&self, src_of: &[usize]) -> Mat {
+        assert_eq!(src_of.len(), self.rows);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (i, &s) in src_of.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(s));
+        }
+        out
+    }
+
+    /// Mean cosine distance between corresponding rows (paper Eq. 10).
+    pub fn mean_cosine_distance(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        let mut acc = 0.0f64;
+        for r in 0..self.rows {
+            let (a, b) = (self.row(r), other.row(r));
+            let dot = dot(a, b);
+            let na = dot_self(a).sqrt();
+            let nb = dot_self(b).sqrt();
+            acc += (1.0 - dot / (na * nb + 1e-8)) as f64;
+        }
+        (acc / self.rows as f64) as f32
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dense dot product (contiguous slices).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+fn dot_self(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 2, &[5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_of_transpose() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let b = Mat::randn(4, 7, 1.0, &mut rng);
+        let via_bt = a.matmul_bt(&b);
+        let via_t = a.matmul(&b.transpose());
+        assert!(via_bt.mse(&via_t) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_at_matches_matmul_of_transpose() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Mat::randn(6, 3, 1.0, &mut rng);
+        let b = Mat::randn(6, 5, 1.0, &mut rng);
+        let via_at = a.matmul_at(&b);
+        let via_t = a.transpose().matmul(&b);
+        assert!(via_at.mse(&via_t) < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        assert!(a.matmul(&Mat::eye(4)).mse(&a) < 1e-12);
+        assert!(Mat::eye(4).matmul(&a).mse(&a) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(6);
+        let a = Mat::randn(3, 8, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn permute_cols_matches_matrix_product() {
+        let mut rng = Pcg32::seeded(7);
+        let a = Mat::randn(3, 6, 1.0, &mut rng);
+        let src_of = rng.permutation(6);
+        // P[src_of[j], j] = 1
+        let mut p = Mat::zeros(6, 6);
+        for (j, &i) in src_of.iter().enumerate() {
+            p[(i, j)] = 1.0;
+        }
+        let got = a.permute_cols(&src_of);
+        let want = a.matmul(&p);
+        assert!(got.mse(&want) < 1e-12);
+    }
+
+    #[test]
+    fn permute_rows_then_inverse_is_identity() {
+        let mut rng = Pcg32::seeded(8);
+        let a = Mat::randn(6, 3, 1.0, &mut rng);
+        let src_of = rng.permutation(6);
+        let mut inv = vec![0usize; 6];
+        for (j, &i) in src_of.iter().enumerate() {
+            inv[i] = j;
+        }
+        let back = a.permute_rows(&src_of).permute_rows(&inv);
+        assert!(back.mse(&a) < 1e-12);
+    }
+
+    #[test]
+    fn col_l2_norms_match_naive() {
+        let a = m(2, 3, &[3., 0., 1., 4., 0., 1.]);
+        let norms = a.col_l2_norms();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert!(norms[1].abs() < 1e-6);
+        assert!((norms[2] - 2f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_distance_zero_for_equal() {
+        let mut rng = Pcg32::seeded(9);
+        let a = Mat::randn(4, 9, 1.0, &mut rng);
+        assert!(a.mean_cosine_distance(&a) < 1e-6);
+    }
+
+    #[test]
+    fn cosine_distance_positive_for_different() {
+        let mut rng = Pcg32::seeded(10);
+        let a = Mat::randn(4, 9, 1.0, &mut rng);
+        let b = Mat::randn(4, 9, 1.0, &mut rng);
+        assert!(a.mean_cosine_distance(&b) > 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

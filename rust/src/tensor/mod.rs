@@ -1,0 +1,14 @@
+//! Minimal dense f32 host tensor substrate.
+//!
+//! Everything the pruning stack needs on the host: a row-major 2-D matrix
+//! with matmul (all transpose variants), row/column utilities, norms, and
+//! the Cholesky factorization SparseGPT's OBS update requires.  Kept
+//! deliberately small — the heavy lifting at scale happens inside the AOT
+//! XLA artifacts; this type exists for calibration math, pruning metrics,
+//! and the pure-Rust LCP path.
+
+mod mat;
+mod linalg;
+
+pub use linalg::{cholesky, cholesky_inverse, solve_lower, solve_upper};
+pub use mat::Mat;

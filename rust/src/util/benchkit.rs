@@ -1,0 +1,215 @@
+//! Benchmark harness substrate (the offline registry has no criterion).
+//!
+//! Criterion-like discipline for `harness = false` bench binaries: warmup,
+//! N timed iterations, mean/p50/p95 reporting, and machine-readable JSON
+//! appended to `bench_results/`. Every paper table/figure bench is built
+//! on [`Bench`] + [`Table`].
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// Micro-benchmark runner.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+    max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // PERMLLM_BENCH_FAST=1 trims iterations for CI-style smoke runs.
+        let fast = std::env::var("PERMLLM_BENCH_FAST").is_ok();
+        Bench {
+            warmup: if fast { 1 } else { 3 },
+            iters: if fast { 5 } else { 30 },
+            max_time: Duration::from_secs(if fast { 5 } else { 20 }),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters, max_time: Duration::from_secs(60) }
+    }
+
+    /// Time `f`, returning stats. `f` should return something observable
+    /// (its result is black-boxed to keep the optimizer honest).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if start.elapsed() > self.max_time {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            min_ns: samples[0],
+        }
+    }
+}
+
+/// Plain-text table printer that mirrors the paper's row/column layout.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout with aligned columns.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                out.push_str(&format!("{c:<width$}  ", width = w));
+            }
+            println!("{}", out.trim_end());
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Serialize as JSON for bench_results/.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("header", arr(self.header.iter().map(|h| s(h)).collect())),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Print and persist under `bench_results/<file>.json`.
+    pub fn finish(&self, file: &str) {
+        self.print();
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut payload = self.to_json();
+        if let Json::Obj(ref mut o) = payload {
+            o.insert("unix_time".into(), num(now_unix()));
+        }
+        let path = dir.join(format!("{file}.json"));
+        if let Err(e) = std::fs::write(&path, payload.to_string()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("[saved {}]", path.display());
+        }
+    }
+}
+
+fn now_unix() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Format a float with fixed decimals for table cells.
+pub fn fmt(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bench::new(1, 10);
+        let st = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(st.iters, 10);
+        assert!(st.mean_ns > 0.0);
+        assert!(st.min_ns <= st.p50_ns);
+        assert!(st.p50_ns <= st.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()]);
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn table_json_shape() {
+        let mut t = Table::new("title", &["c1"]);
+        t.row(&["v".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("title"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

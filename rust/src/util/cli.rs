@@ -1,0 +1,209 @@
+//! Tiny CLI argument parser substrate (the offline registry has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help` text. Used by the `permllm`
+//! binary and every example.
+
+use std::collections::BTreeMap;
+
+/// Declarative CLI: register options, then parse.
+pub struct Cli {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+struct OptSpec {
+    key: String,
+    default: Option<String>,
+    help: String,
+    is_bool: bool,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Cli {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Register `--key <value>` with a default.
+    pub fn opt(mut self, key: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            key: key.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a required `--key <value>` (no default).
+    pub fn req(mut self, key: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            key: key.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--key` switch (default false).
+    pub fn flag(mut self, key: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            key: key.to_string(),
+            default: Some("false".to_string()),
+            help: help.to_string(),
+            is_bool: true,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.is_bool { format!("--{}", o.key) } else { format!("--{} <v>", o.key) };
+            let def = match &o.default {
+                Some(d) if !o.is_bool => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  {arg:<24} {}{def}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse an explicit argument list (no program name). Returns an error
+    /// string on unknown/malformed flags; prints usage + exits on --help.
+    pub fn parse_from(mut self, args: &[String]) -> Result<Parsed, String> {
+        let known: BTreeMap<String, bool> =
+            self.opts.iter().map(|o| (o.key.clone(), o.is_bool)).collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let is_bool = *known.get(&key).ok_or(format!("unknown option --{key}"))?;
+                let value = if is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i).cloned().ok_or(format!("--{key} needs a value"))?
+                };
+                self.values.insert(key, value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, detect missing required options.
+        let mut out = BTreeMap::new();
+        for o in &self.opts {
+            match self.values.get(&o.key).cloned().or_else(|| o.default.clone()) {
+                Some(v) => {
+                    out.insert(o.key.clone(), v);
+                }
+                None => return Err(format!("missing required option --{}", o.key)),
+            }
+        }
+        Ok(Parsed { values: out, positionals: self.positionals })
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse(self) -> Result<Parsed, String> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&args)
+    }
+}
+
+/// Parsed CLI values with typed getters.
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or_else(|| panic!("unregistered option {key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_f32(&self, key: &str) -> f32 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), "true" | "1" | "yes")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("alpha", "1.5", "a number")
+            .opt("name", "x", "a string")
+            .flag("verbose", "switch")
+            .req("model", "required path")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cli().parse_from(&args(&["--model", "m.bin"])).unwrap();
+        assert_eq!(p.get_f32("alpha"), 1.5);
+        assert_eq!(p.get("name"), "x");
+        assert!(!p.get_bool("verbose"));
+        assert_eq!(p.get("model"), "m.bin");
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = cli().parse_from(&args(&["--model=a", "--alpha=2", "--verbose"])).unwrap();
+        assert_eq!(p.get_f32("alpha"), 2.0);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&args(&["--alpha", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse_from(&args(&["--model", "m", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = cli().parse_from(&args(&["--model", "m", "pos1", "pos2"])).unwrap();
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+}

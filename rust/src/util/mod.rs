@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-repo because the offline registry
+//! lacks the usual crates (DESIGN.md §6): PRNG (`rand`), JSON (`serde`),
+//! CLI (`clap`), thread pool (`tokio`/`rayon`), property testing
+//! (`proptest`), bench harness (`criterion`), logging backend
+//! (`env_logger`).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod rng;
+pub mod testkit;

@@ -1,0 +1,95 @@
+//! Thread-pool substrate (the offline registry has no tokio/rayon).
+//!
+//! The coordinator fans LCP layer jobs out across workers with
+//! [`parallel_map`]; it uses scoped threads so jobs can borrow calibration
+//! data without `Arc` gymnastics. On this testbed `nproc` is often 1 —
+//! the pool degrades gracefully to sequential execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (`PERMLLM_THREADS` override).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PERMLLM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item index in parallel, collecting results in order.
+///
+/// Work-stealing via a shared atomic counter: each worker claims the next
+/// unprocessed index, so heterogeneous job costs (layers of different
+/// shapes) balance automatically.
+pub fn parallel_map<T, F>(n_items: usize, n_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = n_threads.max(1).min(n_items.max(1));
+    if threads <= 1 || n_items <= 1 {
+        return (0..n_items).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_items {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker panicked before storing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicU32::new(0);
+        let out = parallel_map(57, 3, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 57);
+        assert_eq!(out.len(), 57);
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn borrows_environment() {
+        let data = vec![10u32, 20, 30];
+        let out = parallel_map(3, 2, |i| data[i] * 2);
+        assert_eq!(out, vec![20, 40, 60]);
+    }
+}

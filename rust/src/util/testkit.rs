@@ -1,0 +1,94 @@
+//! Property-testing substrate (the offline registry has no proptest).
+//!
+//! Proptest-like discipline with the pieces we actually use: seeded case
+//! generation from [`Pcg32`], N-case sweeps, and failure reporting that
+//! includes the per-case seed so any counterexample replays with
+//! `case_rng(seed)`. No shrinking — cases are kept small instead.
+
+use crate::util::rng::Pcg32;
+
+/// Number of cases per property (override with `PERMLLM_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PERMLLM_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Deterministic per-case RNG.
+pub fn case_rng(case: u64) -> Pcg32 {
+    Pcg32::new(0x9E3779B97F4A7C15 ^ case, case.wrapping_mul(2) + 1)
+}
+
+/// Run `prop` for `default_cases()` seeded cases; panic with the seed of
+/// the first failing case.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    check_n(name, default_cases(), prop)
+}
+
+/// Run `prop` for exactly `n` cases.
+pub fn check_n<F>(name: &str, n: u64, prop: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..n {
+        let mut rng = case_rng(case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (replay: case_rng({case})): {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        check_n("trivial", 10, |_rng| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check_n("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn case_rng_is_deterministic() {
+        let a: Vec<u32> = (0..8).map(|_| case_rng(3).next_u32()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+    }
+
+    #[test]
+    fn assert_close_rejects_far() {
+        assert!(assert_close(&[1.0], &[2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Failure-injection tests: malformed inputs must produce errors, not
+//! panics or silent misbehaviour.
+
+use std::path::{Path, PathBuf};
+
+use permllm::runtime::{Engine, Manifest};
+use permllm::sparsity::NmConfig;
+use permllm::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("permllm_robust_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn manifest_missing_dir_mentions_make_artifacts() {
+    let err = Manifest::load(Path::new("/nonexistent/permllm")).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn manifest_invalid_json_is_an_error() {
+    let d = tmp_dir("badjson");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn manifest_missing_sections_is_an_error() {
+    let d = tmp_dir("nosection");
+    std::fs::write(d.join("manifest.json"), r#"{"config": {"vocab": 4}}"#).unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn engine_rejects_wrong_input_arity_and_shape() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut engine = Engine::load_lazy(&dir).unwrap();
+    // Wrong arity.
+    let err = match engine.run("lm_forward", &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("accepted empty inputs"),
+    };
+    assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+    // Unknown artifact.
+    assert!(engine.run("nonexistent", &[]).is_err());
+    // Wrong element count on the first input.
+    let spec = engine.manifest().artifact("lm_forward").unwrap().clone();
+    let mut bad: Vec<xla::Literal> = Vec::new();
+    for _ in 0..spec.inputs.len() {
+        bad.push(xla::Literal::vec1(&[0.0f32]));
+    }
+    let err = match engine.run("lm_forward", &bad) {
+        Err(e) => e,
+        Ok(_) => panic!("accepted wrong shapes"),
+    };
+    assert!(format!("{err:#}").contains("elements"), "{err:#}");
+}
+
+#[test]
+fn nm_parse_never_panics_on_garbage() {
+    for s in ["", ":", "a:b", "4:2", "0:0", "-1:4", "2:4:8", "999999999999:4", "2: 4 "] {
+        let _ = NmConfig::parse(s); // must not panic
+    }
+    assert_eq!(NmConfig::parse("2:4"), Some(NmConfig::PAT_2_4));
+}
+
+#[test]
+fn json_parser_survives_fuzzish_inputs() {
+    let cases = [
+        "", "{", "}", "[", "]", "\"", "{\"a\":}", "[1,,2]", "nul", "tru", "-",
+        "1e", "\"\\u12\"", "{\"a\":1}extra", "[\"\\q\"]",
+    ];
+    for c in cases {
+        assert!(Json::parse(c).is_err(), "accepted garbage: {c:?}");
+    }
+    // Deep nesting parses fine at reasonable depth.
+    let deep = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+    assert!(Json::parse(&deep).is_ok());
+}
+
+#[test]
+fn param_store_load_rejects_corrupt_files() {
+    let d = tmp_dir("params");
+    let p = d.join("bad.bin");
+    std::fs::write(&p, b"XXXX-not-a-model").unwrap();
+    assert!(permllm::model::ParamStore::load(&p).is_err());
+    std::fs::write(&p, b"PL").unwrap(); // truncated magic
+    assert!(permllm::model::ParamStore::load(&p).is_err());
+}

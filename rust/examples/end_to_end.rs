@@ -1,0 +1,117 @@
+//! End-to-end validation (DESIGN.md §4): all three layers composing.
+//!
+//! 1. Obtain tiny-m weights — pretrained via the AOT `train_step`
+//!    artifact when built with `--features pjrt` and `make artifacts` has
+//!    run, else synthetic trained-statistics weights (offline default).
+//! 2. Prune with Wanda / Wanda+CP / PermLLM_Wanda (LCP routed through the
+//!    `ExecBackend` trait — the native engine serving `sinkhorn_soft_*`
+//!    and `lcp_grad_*`).
+//! 3. Evaluate perplexity of every variant through BOTH the host forward
+//!    and the backend's `lm_forward` artifact, verifying they agree.
+//!
+//! ```bash
+//! cargo run --release --example end_to_end            # offline, native
+//! make artifacts && cargo run --release --features pjrt --example end_to_end
+//! ```
+
+use permllm::bench::trained_or_synth;
+use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::eval::{eval_perplexity, eval_perplexity_exec};
+use permllm::lcp::LcpCfg;
+use permllm::pruning::Metric;
+use permllm::runtime::NativeEngine;
+
+fn main() -> anyhow::Result<()> {
+    permllm::util::logging::init();
+
+    // ---- 1. weights --------------------------------------------------------
+    #[cfg(feature = "pjrt")]
+    maybe_pretrain();
+    let (ps, prov) = trained_or_synth("tiny-m");
+    println!("tiny-m weights: {prov}");
+
+    // ---- 2. prune ----------------------------------------------------------
+    let calib = Corpus::build(CorpusKind::C4Like, 2024);
+    let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: 30, lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+    let methods = [
+        PruneMethod::Dense,
+        PruneMethod::OneShot(Metric::Wanda),
+        PruneMethod::OneShotCp(Metric::Wanda),
+        PruneMethod::PermLlm(Metric::Wanda),
+    ];
+
+    // ---- 3. evaluate through host AND the exec backend ---------------------
+    let mut engine = NativeEngine::with_model(ps.cfg().clone());
+    println!("\n{:<16} {:>14} {:>16} {:>10}", "method", "host ppl", "backend ppl", "time(s)");
+    for method in methods {
+        let pruned = prune_model(&ps, &calib, method, &cfg);
+        let host_ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
+        let exec_ppl = eval_perplexity_exec(&mut engine, &pruned.params, &evalc, 555, 8, 64)?;
+        println!(
+            "{:<16} {:>14.3} {:>16.3} {:>10.1}",
+            method.name(),
+            host_ppl,
+            exec_ppl,
+            pruned.elapsed_s
+        );
+        anyhow::ensure!(
+            (host_ppl - exec_ppl).abs() / host_ppl < 1e-6,
+            "host and backend forward disagree: {host_ppl} vs {exec_ppl}"
+        );
+    }
+    println!("\nhost forward == ExecBackend lm_forward on every variant: OK");
+
+    #[cfg(feature = "pjrt")]
+    pjrt_cross_check(&ps, &evalc)?;
+    Ok(())
+}
+
+/// Pretrain via the train_step artifact if artifacts exist and no cached
+/// model does (pjrt builds only).
+#[cfg(feature = "pjrt")]
+fn maybe_pretrain() {
+    use std::path::Path;
+    let artifacts = Path::new("artifacts/tiny-m");
+    let model_path = Path::new("models/tiny-m.bin");
+    if !artifacts.join("manifest.json").exists() || model_path.exists() {
+        return;
+    }
+    let steps = std::env::var("E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    println!("pretraining tiny-m for {steps} steps via the AOT train_step artifact...");
+    match permllm::coordinator::pretrain(artifacts, CorpusKind::C4Like, steps, 25, model_path) {
+        Ok(losses) => println!(
+            "loss {:.4} -> {:.4} over {} steps",
+            losses.first().copied().unwrap_or(f32::NAN),
+            losses.last().copied().unwrap_or(f32::NAN),
+            losses.len()
+        ),
+        Err(e) => eprintln!("pretrain unavailable ({e:#}); falling back to synthetic weights"),
+    }
+}
+
+/// With artifacts present, also pin the host forward to the PJRT engine's
+/// `lm_forward` (the artifact consumes its baked batch/seq shape).
+#[cfg(feature = "pjrt")]
+fn pjrt_cross_check(ps: &permllm::model::ParamStore, evalc: &Corpus) -> anyhow::Result<()> {
+    use std::path::Path;
+    let dir = Path::new("artifacts/tiny-m");
+    if !dir.join("manifest.json").exists() {
+        println!("(pjrt cross-check skipped: artifacts not built)");
+        return Ok(());
+    }
+    let mut engine = permllm::runtime::Engine::load_lazy(dir)?;
+    let (batch, seq_len) = (engine.manifest().batch, engine.manifest().config.seq_len);
+    let host_ppl = eval_perplexity(ps, evalc, 555, batch, seq_len);
+    let art_ppl = eval_perplexity_exec(&mut engine, ps, evalc, 555, batch, seq_len)?;
+    println!("pjrt lm_forward ppl {art_ppl:.3} vs host {host_ppl:.3}");
+    anyhow::ensure!(
+        (host_ppl - art_ppl).abs() / host_ppl < 0.02,
+        "host and pjrt artifact forward disagree: {host_ppl} vs {art_ppl}"
+    );
+    Ok(())
+}

@@ -12,6 +12,7 @@
 use permllm::cp::ria_cp;
 use permllm::lcp::{train_lcp, HostBackend, LayerData, LcpCfg};
 use permllm::pruning::{importance, prune_oneshot, prune_permuted, Metric};
+use permllm::runtime::{ExecLcpBackend, NativeCfg, NativeEngine};
 use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
 use permllm::util::rng::Pcg32;
@@ -49,4 +50,13 @@ fn main() {
         res.history.len()
     );
     println!("mask is valid 2:4: {}", lcp.mask.verify());
+
+    // 4. The same training loop routed through the ExecBackend trait (the
+    //    interface the PJRT artifact engine also serves): identical result.
+    let mut engine = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+    let mut exec_backend =
+        ExecLcpBackend::new(&mut engine, &data, cfg.block).expect("native backend");
+    let res_exec = train_lcp(&mut exec_backend, w.cols(), cfg);
+    assert_eq!(res.src_of, res_exec.src_of, "trait-routed LCP must match the direct path");
+    println!("ExecBackend(native) reproduces the host trajectory: OK");
 }

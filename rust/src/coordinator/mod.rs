@@ -19,9 +19,15 @@
 //! is exercised in `propagation::fold_down_proj`.
 
 mod pipeline;
-mod pretrain;
 mod propagation;
 
-pub use pipeline::{prune_model, PipelineCfg, PruneMethod, PrunedModel};
-pub use pretrain::pretrain;
+// Pretraining executes the AOT `train_step` artifact, which only the PJRT
+// engine can serve; the module is feature-gated with it.
+#[cfg(feature = "pjrt")]
+mod pretrain;
+
+pub use pipeline::{prune_model, LcpExecutor, PipelineCfg, PruneMethod, PrunedModel};
 pub use propagation::fold_down_proj;
+
+#[cfg(feature = "pjrt")]
+pub use pretrain::pretrain;

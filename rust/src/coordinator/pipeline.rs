@@ -4,9 +4,10 @@ use std::collections::HashMap;
 
 use crate::cp::ria_cp;
 use crate::data::{sample_batch, Corpus};
-use crate::lcp::{train_lcp, HostBackend, LayerData, LcpCfg};
+use crate::lcp::{train_lcp, HostBackend, LayerData, LcpCfg, LcpResult};
 use crate::model::{forward_captured, LinearRef, ParamStore};
 use crate::pruning::{importance, prune_oneshot, prune_permuted, sparsegpt, Metric, PruneResult, SparseGptCfg};
+use crate::runtime::{ExecLcpBackend, NativeCfg, NativeEngine};
 use crate::sparsity::NmConfig;
 use crate::tensor::Mat;
 use crate::util::pool::parallel_map;
@@ -47,6 +48,33 @@ fn cap(s: &str) -> String {
     }
 }
 
+/// How the PermLLM methods execute the LCP trainer's per-step kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LcpExecutor {
+    /// Call [`HostBackend`] directly (no artifact indirection).
+    Host,
+    /// Route through the [`crate::runtime::ExecBackend`] trait served by
+    /// [`NativeEngine`] — the same math behind the artifact interface the
+    /// PJRT engine implements.  Numerically identical to `Host` (pinned
+    /// by `host_and_native_executors_prune_identically`); pays a small
+    /// per-step tensor copy at the trait boundary, an order below the
+    /// matmul cost, in exchange for exercising the artifact plumbing on
+    /// every default run.  Use `Host` (`--backend host`) to shave that
+    /// off when benchmarking raw LCP throughput.
+    Native,
+}
+
+impl LcpExecutor {
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> Option<LcpExecutor> {
+        match s {
+            "host" => Some(LcpExecutor::Host),
+            "native" => Some(LcpExecutor::Native),
+            _ => None,
+        }
+    }
+}
+
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineCfg {
@@ -64,6 +92,8 @@ pub struct PipelineCfg {
     pub lcp_from_layer: usize,
     /// Worker threads for the per-layer fan-out.
     pub threads: usize,
+    /// LCP kernel executor (default: the trait-based native engine).
+    pub executor: LcpExecutor,
 }
 
 impl Default for PipelineCfg {
@@ -77,6 +107,7 @@ impl Default for PipelineCfg {
             lcp: LcpCfg::default(),
             lcp_from_layer: 0,
             threads: crate::util::pool::default_threads(),
+            executor: LcpExecutor::Native,
         }
     }
 }
@@ -188,8 +219,7 @@ fn prune_layer(
                 }
                 lcp_cfg.block = b.max(cfg.nm.m);
             }
-            let mut backend = HostBackend::new(&data, cfg.nm, lcp_cfg.sinkhorn_iters);
-            let res = train_lcp(&mut backend, w.cols(), lcp_cfg);
+            let res = run_lcp(&data, w.cols(), lcp_cfg, cfg);
             // Compose: global heuristic then block refinement.
             let src_total: Vec<usize> = res.src_of.iter().map(|&j| perm_cp[j]).collect();
             let refined = prune_permuted(metric, w, x, cfg.nm, &src_total);
@@ -202,6 +232,32 @@ fn prune_layer(
             } else {
                 refined
             }
+        }
+    }
+}
+
+/// Train LCP for one layer through the configured executor.
+///
+/// The `Native` path goes through the artifact-name interface
+/// ([`ExecLcpBackend`] over [`NativeEngine`]) — the same plumbing the
+/// PJRT engine serves — with internal fan-out disabled (`threads: 1`)
+/// because this function already runs inside the per-layer worker pool.
+fn run_lcp(data: &LayerData, c_in: usize, lcp_cfg: LcpCfg, cfg: &PipelineCfg) -> LcpResult {
+    match cfg.executor {
+        LcpExecutor::Host => {
+            let mut backend = HostBackend::new(data, cfg.nm, lcp_cfg.sinkhorn_iters);
+            train_lcp(&mut backend, c_in, lcp_cfg)
+        }
+        LcpExecutor::Native => {
+            let mut engine = NativeEngine::new(NativeCfg {
+                nm: cfg.nm,
+                sinkhorn_iters: lcp_cfg.sinkhorn_iters,
+                threads: 1,
+                model: None,
+            });
+            let mut backend = ExecLcpBackend::new(&mut engine, data, lcp_cfg.block)
+                .expect("native LCP backend");
+            train_lcp(&mut backend, c_in, lcp_cfg)
         }
     }
 }
@@ -310,6 +366,29 @@ mod tests {
         // LCP keeps the best-seen permutation starting from identity, so it
         // can only tie or beat plain pruning on its own objective.
         assert!(better * 10 >= total * 9, "only {better}/{total} layers kept or improved");
+    }
+
+    #[test]
+    fn host_and_native_executors_prune_identically() {
+        // The native executor routes every LCP step through the
+        // ExecBackend artifact interface; the math is the host's, so the
+        // two trajectories (and the pruned weights) must match exactly.
+        let (ps, corpus, mut pc) = setup();
+        pc.executor = LcpExecutor::Host;
+        let host = prune_model(&ps, &corpus, PruneMethod::PermLlm(Metric::Wanda), &pc);
+        pc.executor = LcpExecutor::Native;
+        let native = prune_model(&ps, &corpus, PruneMethod::PermLlm(Metric::Wanda), &pc);
+        for lin in ps.cfg().prunable_linears() {
+            assert_eq!(
+                host.layers[&lin].src_of, native.layers[&lin].src_of,
+                "{lin:?} diverged"
+            );
+            assert_eq!(
+                host.params.get(&lin.param_name()).data(),
+                native.params.get(&lin.param_name()).data(),
+                "{lin:?} weights diverged"
+            );
+        }
     }
 
     #[test]

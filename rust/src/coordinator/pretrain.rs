@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::data::{batch_to_i32, sample_batch, Corpus, CorpusKind};
 use crate::model::ParamStore;
 use crate::runtime::{literal_to_vec, tokens_to_literal, vec_to_literal, Engine};
+// NOTE: this whole module is `#[cfg(feature = "pjrt")]` (see coordinator/mod.rs).
 use crate::tensor::Mat;
 use crate::util::rng::Pcg32;
 
@@ -71,7 +72,7 @@ pub fn pretrain(
         inputs.push(step_lit);
         inputs.push(tokens);
 
-        let mut outs = engine.run("train_step", &inputs)?;
+        let mut outs = engine.run_literals("train_step", &inputs)?;
         // Outputs: params' (n) + m' (n) + v' (n) + step' + loss.
         let loss = literal_to_vec(&outs[3 * n + 1])?[0];
         losses.push(loss);

@@ -1,7 +1,11 @@
 //! Evaluation harness: perplexity + zero-shot tasks.
 //!
 //! * Perplexity re-exports the host forward's [`model::perplexity`] over a
-//!   held-out sample of a corpus (Table 1 / Table 8 metric).
+//!   held-out sample of a corpus (Table 1 / Table 8 metric), or — via
+//!   [`eval_perplexity_exec`] — runs the same metric through any
+//!   [`ExecBackend`]'s `lm_forward` artifact (native by default, PJRT
+//!   with `--features pjrt`), which is what makes pruned-model evaluation
+//!   backend-agnostic.
 //! * [`zeroshot`] builds five synthetic classification tasks mirroring the
 //!   paper's HellaSwag / ARC-E / ARC-C / OBQA / RTE suite (Table 2): each
 //!   task asks the model to rank a true corpus continuation above
@@ -12,8 +16,11 @@ mod zeroshot;
 
 pub use zeroshot::{zeroshot_accuracy, zeroshot_suite, ZeroshotTask};
 
-use crate::data::{sample_batch, Corpus};
+use anyhow::Result;
+
+use crate::data::{batch_to_i32, sample_batch, Corpus};
 use crate::model::{perplexity, ParamStore};
+use crate::runtime::{ExecBackend, TensorValue};
 use crate::util::rng::Pcg32;
 
 /// Held-out perplexity on `n_seqs` sequences from `corpus`.
@@ -21,6 +28,56 @@ pub fn eval_perplexity(ps: &ParamStore, corpus: &Corpus, seed: u64, n_seqs: usiz
     let mut rng = Pcg32::new(seed, 999);
     let batch = sample_batch(corpus, &mut rng, n_seqs, seq_len);
     perplexity(ps, &batch)
+}
+
+/// Held-out perplexity through an execution backend's `lm_forward`
+/// artifact.  Samples the same batch as [`eval_perplexity`] for the same
+/// seed, so host and backend paths are directly comparable.
+pub fn eval_perplexity_exec(
+    engine: &mut dyn ExecBackend,
+    ps: &ParamStore,
+    corpus: &Corpus,
+    seed: u64,
+    n_seqs: usize,
+    seq_len: usize,
+) -> Result<f64> {
+    let cfg = ps.cfg().clone();
+    let mut rng = Pcg32::new(seed, 999);
+    let batch = sample_batch(corpus, &mut rng, n_seqs, seq_len);
+    let mut inputs = Vec::new();
+    for name in cfg.param_names() {
+        inputs.push(TensorValue::f32(cfg.param_shape(&name), ps.get(&name).data().to_vec())?);
+    }
+    inputs.push(TensorValue::i32(vec![n_seqs, seq_len], batch_to_i32(&batch))?);
+    let outs = engine.run("lm_forward", &inputs)?;
+    ppl_from_flat_logits(&batch, outs[0].as_f32()?, cfg.vocab)
+}
+
+/// Perplexity from flat `[B, T, V]` logits — exp of the mean next-token
+/// cross-entropy, identical math to [`crate::model::lm_loss`].
+pub fn ppl_from_flat_logits(batch: &[Vec<u8>], logits: &[f32], vocab: usize) -> Result<f64> {
+    anyhow::ensure!(!batch.is_empty(), "empty batch");
+    let t = batch[0].len();
+    anyhow::ensure!(t >= 2, "sequences must have >= 2 tokens for next-token loss, got {t}");
+    anyhow::ensure!(
+        logits.len() == batch.len() * t * vocab,
+        "logits have {} elements, expected {}",
+        logits.len(),
+        batch.len() * t * vocab
+    );
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (bi, seq) in batch.iter().enumerate() {
+        for pos in 0..t - 1 {
+            let row = &logits[bi * t * vocab + pos * vocab..bi * t * vocab + (pos + 1) * vocab];
+            let target = seq[pos + 1] as usize;
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = row.iter().map(|x| (x - mx).exp()).sum();
+            total += -((row[target] - mx) as f64 - (z as f64).ln());
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
 }
 
 #[cfg(test)]
@@ -36,5 +93,19 @@ mod tests {
         let corpus = Corpus::build(CorpusKind::C4Like, 2);
         let ppl = eval_perplexity(&ps, &corpus, 3, 2, 32);
         assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    #[test]
+    fn exec_ppl_matches_host_ppl() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 1);
+        let corpus = Corpus::build(CorpusKind::C4Like, 2);
+        let host = eval_perplexity(&ps, &corpus, 3, 2, 32);
+        let mut engine = crate::runtime::NativeEngine::with_model(cfg);
+        let exec = eval_perplexity_exec(&mut engine, &ps, &corpus, 3, 2, 32).unwrap();
+        assert!(
+            (host - exec).abs() < 1e-9 * host.abs().max(1.0),
+            "host {host} vs exec {exec}"
+        );
     }
 }

@@ -15,7 +15,9 @@
 //!
 //! Two interchangeable gradient backends ([`LcpBackend`]):
 //! * [`HostBackend`] — the pure-Rust hand-derived backward in this file;
-//! * `runtime::ArtifactBackend` — the AOT `lcp_grad` XLA artifact.
+//! * `runtime::ExecLcpBackend` — the same steps served through any
+//!   `runtime::ExecBackend` (native engine, or the AOT `lcp_grad` XLA
+//!   artifact with `--features pjrt`).
 //! `tests/lcp_cross_check.rs` pins them to each other.
 
 use crate::sparsity::{NmConfig, NmMask};

@@ -14,8 +14,48 @@
 //!   trainer (Sinkhorn + Hungarian + AdamW + STE), permutation propagation,
 //!   evaluation, and the experiment harness for every paper table/figure.
 //!
-//! Python never runs on the request path: the `xla` crate loads the AOT
-//! artifacts once and executes them via PJRT (see [`runtime`]).
+//! ## Execution backends
+//!
+//! Compute kernels are addressed as named artifacts behind the
+//! [`runtime::ExecBackend`] trait:
+//!
+//! * **default (offline)** — [`runtime::NativeEngine`], pure Rust, no
+//!   external dependencies or artifacts.  `cargo build && cargo test`
+//!   work on a clean machine with no network.
+//! * **`--features pjrt`** — [`runtime::Engine`] loads the AOT artifacts
+//!   (`make artifacts`) and executes them once-compiled via PJRT.  The
+//!   workspace ships a typed `xla` stub so this feature type-checks
+//!   offline; executing real artifacts requires swapping in the genuine
+//!   `xla` bindings.  Python never runs on the request path either way.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use permllm::lcp::{train_lcp, LayerData, LcpCfg};
+//! use permllm::pruning::{importance, prune_permuted, Metric};
+//! use permllm::runtime::{ExecLcpBackend, NativeEngine};
+//! use permllm::sparsity::NmConfig;
+//! use permllm::tensor::Mat;
+//! use permllm::util::rng::Pcg32;
+//!
+//! let nm = NmConfig::PAT_2_4;
+//! let mut rng = Pcg32::seeded(7);
+//! let w = Mat::randn(64, 128, 0.1, &mut rng); // a [C_out, C_in] layer
+//! let x = Mat::randn(96, 128, 1.0, &mut rng); // calibration activations
+//! let s = importance(Metric::Wanda, &w, &x);
+//! let data = LayerData::new(w.clone(), s, x.clone());
+//!
+//! // Learn a channel permutation through the execution-backend trait.
+//! let mut engine = NativeEngine::default();
+//! let cfg = LcpCfg { block: 64, steps: 50, nm, ..Default::default() };
+//! let mut backend = ExecLcpBackend::new(&mut engine, &data, cfg.block).unwrap();
+//! let res = train_lcp(&mut backend, w.cols(), cfg);
+//! let pruned = prune_permuted(Metric::Wanda, &w, &x, nm, &res.src_of);
+//! assert!(pruned.mask.verify());
+//! ```
+//!
+//! See `examples/` (`quickstart`, `prune_llm`, `end_to_end`,
+//! `sparse_inference`, `ablation_lcp`) and the README for the full tour.
 
 pub mod bench;
 pub mod coordinator;

@@ -1,21 +1,23 @@
 //! `permllm` — CLI for the PermLLM pruning framework.
 //!
 //! Subcommands:
-//!   prune   prune a model with a chosen method and report perplexity
-//!   eval    evaluate a saved model (perplexity + zero-shot suite)
-//!   train   pretrain the tiny LM via the AOT train_step artifact
-//!   info    print artifact manifest / model summary
+//!   prune     prune a model with a chosen method and report perplexity
+//!   eval      evaluate a saved model (perplexity + zero-shot suite)
+//!   train     pretrain the tiny LM via the AOT train_step artifact (pjrt)
+//!   info      print artifact manifest / model summary
+//!   backends  list the execution backends compiled into this binary
 
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_model, LcpExecutor, PipelineCfg, PruneMethod};
 use permllm::data::{Corpus, CorpusKind};
-use permllm::eval::{eval_perplexity, zeroshot_accuracy, zeroshot_suite};
+use permllm::eval::{eval_perplexity, eval_perplexity_exec, zeroshot_accuracy, zeroshot_suite};
 use permllm::lcp::LcpCfg;
 use permllm::model::{synth_trained_params, ModelConfig, ParamStore};
 use permllm::pruning::Metric;
+use permllm::runtime::NativeEngine;
 use permllm::sparsity::NmConfig;
 use permllm::util::cli::Cli;
 
@@ -29,13 +31,15 @@ fn main() {
         "eval" => run(cmd_eval(&rest)),
         "train" => run(cmd_train(&rest)),
         "info" => run(cmd_info(&rest)),
+        "backends" => run(cmd_backends()),
         _ => {
             eprintln!(
-                "usage: permllm <prune|eval|train|info> [options]\n\
+                "usage: permllm <prune|eval|train|info|backends> [options]\n\
                  \n  permllm prune --model tiny-s --method permllm-wanda --sparsity 2:4\
-                 \n  permllm eval  --params models/tiny-m.bin\
+                 \n  permllm eval  --params models/tiny-m.bin --backend native\
                  \n  permllm train --artifacts artifacts --steps 300 --out models/tiny-m.bin\
-                 \n  permllm info  --artifacts artifacts\n"
+                 \n  permllm info  --artifacts artifacts\n\
+                 \n  permllm backends\n"
             );
             1
         }
@@ -89,6 +93,7 @@ fn cmd_prune(args: &[String]) -> Result<()> {
         .opt("steps", "50", "LCP optimization steps")
         .opt("lr", "0.05", "LCP learning rate")
         .opt("lcp-from-layer", "0", "apply LCP only to layers >= this (partial PermLLM)")
+        .opt("backend", "native", "LCP kernel executor: native (ExecBackend trait) | host (direct)")
         .opt("out", "", "save pruned model to this path")
         .parse_from(args)
         .map_err(|e| anyhow!(e))?;
@@ -96,6 +101,8 @@ fn cmd_prune(args: &[String]) -> Result<()> {
     let ps = load_or_synth(p.get("model"), p.get("params"))?;
     let method = parse_method(p.get("method"))?;
     let nm = NmConfig::parse(p.get("sparsity")).ok_or_else(|| anyhow!("bad sparsity"))?;
+    let executor = LcpExecutor::parse(p.get("backend"))
+        .ok_or_else(|| anyhow!("unknown backend '{}'", p.get("backend")))?;
     let corpus = Corpus::build(
         CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
         2024,
@@ -110,6 +117,7 @@ fn cmd_prune(args: &[String]) -> Result<()> {
             ..Default::default()
         },
         lcp_from_layer: p.get_usize("lcp-from-layer"),
+        executor,
         ..Default::default()
     };
 
@@ -145,6 +153,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         .opt("params", "", "path to .bin params")
         .opt("corpus", "c4", "perplexity corpus")
         .opt("items", "40", "items per zero-shot task")
+        .opt("backend", "host", "perplexity path: host (direct forward) | native (ExecBackend lm_forward)")
         .parse_from(args)
         .map_err(|e| anyhow!(e))?;
     let ps = load_or_synth(p.get("model"), p.get("params"))?;
@@ -152,7 +161,14 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
         2024,
     );
-    let ppl = eval_perplexity(&ps, &corpus, 99, 8, 64);
+    let ppl = match p.get("backend") {
+        "host" => eval_perplexity(&ps, &corpus, 99, 8, 64),
+        "native" => {
+            let mut engine = NativeEngine::with_model(ps.cfg().clone());
+            eval_perplexity_exec(&mut engine, &ps, &corpus, 99, 8, 64)?
+        }
+        other => return Err(anyhow!("unknown backend '{other}'")),
+    };
     println!("perplexity({}): {ppl:.3}", p.get("corpus"));
     let mut mean = 0.0;
     for mut task in zeroshot_suite() {
@@ -165,6 +181,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = Cli::new("permllm train", "pretrain the tiny LM via the train_step artifact")
         .opt("artifacts", "artifacts/tiny-m", "artifact directory")
@@ -188,6 +205,23 @@ fn cmd_train(args: &[String]) -> Result<()> {
         losses.last().copied().unwrap_or(f32::NAN),
         p.get("out")
     );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &[String]) -> Result<()> {
+    Err(anyhow!(
+        "the train subcommand executes the AOT train_step artifact, which needs the \
+         PJRT engine; rebuild with `cargo build --features pjrt` (and a real xla crate)"
+    ))
+}
+
+fn cmd_backends() -> Result<()> {
+    println!("native  always available; serves sinkhorn_soft_*, lcp_grad_*, sparse_fwd_*, lm_forward");
+    #[cfg(feature = "pjrt")]
+    println!("pjrt    compiled in; serves whatever artifacts/<model>/manifest.json lists");
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt    not compiled (rebuild with --features pjrt)");
     Ok(())
 }
 

@@ -1,8 +1,18 @@
-//! Host <-> XLA literal conversion helpers.
+//! Host <-> XLA literal conversion helpers (`--features pjrt` only).
 
 use anyhow::Result;
 
+use super::exec::TensorValue;
 use crate::tensor::Mat;
+
+/// Literal from a backend-boundary tensor value (dtype-preserving).
+pub fn value_to_literal(v: &TensorValue) -> Result<xla::Literal> {
+    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+    Ok(match v {
+        TensorValue::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        TensorValue::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+    })
+}
 
 /// `[rows, cols]` f32 literal from a host matrix.
 pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {

@@ -1,10 +1,15 @@
 //! Artifact engine: compile-once, execute-many over the PJRT CPU client.
+//!
+//! Compiled only with `--features pjrt`; implements [`ExecBackend`] so the
+//! rest of the codebase is agnostic to which engine serves an artifact.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::convert::value_to_literal;
+use super::exec::{ExecBackend, TensorValue};
 use super::manifest::Manifest;
 
 /// Owns the PJRT client and every compiled artifact executable.
@@ -73,7 +78,7 @@ impl Engine {
     ///
     /// Validates input arity against the manifest spec so shape bugs
     /// surface as errors, not crashes inside XLA.
-    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn run_literals(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.ensure_compiled(name)?;
         let spec = self.manifest.artifact(name).unwrap();
         anyhow::ensure!(
@@ -107,6 +112,40 @@ impl Engine {
             spec.outputs.len()
         );
         Ok(outs)
+    }
+}
+
+impl ExecBackend for Engine {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports(&self, artifact: &str) -> bool {
+        self.manifest.artifact(artifact).is_some()
+    }
+
+    fn input_shape(&self, artifact: &str, input: &str) -> Option<Vec<usize>> {
+        let spec = self.manifest.artifact(artifact)?;
+        spec.inputs.iter().find(|io| io.name == input).map(|io| io.shape.clone())
+    }
+
+    fn run(&mut self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(value_to_literal).collect::<Result<_>>()?;
+        let outs = self.run_literals(artifact, &lits)?;
+        // run_literals validated output arity against the spec.
+        let spec = self.manifest.artifact(artifact).unwrap().clone();
+        let mut values = Vec::with_capacity(outs.len());
+        for (lit, io) in outs.iter().zip(&spec.outputs) {
+            anyhow::ensure!(
+                io.dtype == "f32",
+                "artifact {artifact}: output '{}' has unsupported dtype {}",
+                io.name,
+                io.dtype
+            );
+            values.push(TensorValue::f32(io.shape.clone(), lit.to_vec::<f32>()?)?);
+        }
+        Ok(values)
     }
 }
 
@@ -147,7 +186,7 @@ mod tests {
         }
         let tau = 0.7f32;
         let outs = engine
-            .run(
+            .run_literals(
                 &spec.name,
                 &[vec_to_literal(&flat, &[n_b, b, b]).unwrap(), scalar_literal(tau).unwrap()],
             )

@@ -1,0 +1,264 @@
+//! The execution-backend abstraction.
+//!
+//! Every compute kernel the pipeline consumes is addressed as a named
+//! *artifact* (the AOT naming scheme from `python/compile/aot.py`):
+//!
+//! | name                        | inputs                                   | outputs            |
+//! |-----------------------------|------------------------------------------|--------------------|
+//! | `sinkhorn_soft_{n}x{b}`     | `w_p [n,b,b]`, `tau [1]`                 | `p_soft [n,b,b]`   |
+//! | `lcp_grad_{c_out}x{c_in}`   | `w`, `s`, `x`, `y`, `w_p`, `p_hard`, `tau` | `loss [1]`, `grads` |
+//! | `sparse_fwd_{c_out}x{c_in}` | `vals`, `idx`, `x`, `src`                | `y [t,c_out]`      |
+//! | `lm_forward`                | params (canonical order), `tokens [b,t]` | `logits [b,t,v]`   |
+//!
+//! [`ExecBackend`] abstracts who serves them:
+//! * [`super::NativeEngine`] — pure Rust, always available, dispatches to
+//!   the host implementations (`lcp::SinkhornTape`, `lcp::HostBackend`,
+//!   `sparsity::Compressed`, `model::lm_forward`);
+//! * [`super::Engine`] (`--features pjrt`) — compiles and executes the AOT
+//!   HLO artifacts on the PJRT CPU client.
+//!
+//! [`ExecLcpBackend`] adapts any `ExecBackend` to the LCP trainer's
+//! [`LcpBackend`] interface, which is how the pipeline runs learnable
+//! channel permutation through this layer.
+
+use anyhow::{anyhow, Result};
+
+use crate::lcp::{LayerData, LcpBackend};
+use crate::tensor::Mat;
+
+/// A host tensor crossing the backend boundary: shape + typed flat buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorValue {
+    /// f32 tensor (shape must match the buffer length).
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<TensorValue> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {shape:?} needs {n} elements, got {}", data.len());
+        Ok(TensorValue::F32 { shape, data })
+    }
+
+    /// i32 tensor (shape must match the buffer length).
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<TensorValue> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(n == data.len(), "shape {shape:?} needs {n} elements, got {}", data.len());
+        Ok(TensorValue::I32 { shape, data })
+    }
+
+    /// `[1]`-shaped f32 scalar (the artifact convention for scalars).
+    pub fn scalar(v: f32) -> TensorValue {
+        TensorValue::F32 { shape: vec![1], data: vec![v] }
+    }
+
+    /// `[rows, cols]` f32 tensor from a host matrix.
+    pub fn from_mat(m: &Mat) -> TensorValue {
+        let (r, c) = m.shape();
+        TensorValue::F32 { shape: vec![r, c], data: m.data().to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorValue::F32 { shape, .. } | TensorValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            TensorValue::F32 { data, .. } => data.len(),
+            TensorValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow the f32 buffer (errors on i32 tensors).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorValue::F32 { data, .. } => Ok(data),
+            TensorValue::I32 { .. } => Err(anyhow!("expected f32 tensor, got i32")),
+        }
+    }
+
+    /// Borrow the i32 buffer (errors on f32 tensors).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorValue::I32 { data, .. } => Ok(data),
+            TensorValue::F32 { .. } => Err(anyhow!("expected i32 tensor, got f32")),
+        }
+    }
+
+    /// View a rank-2 f32 tensor as a host matrix (copies).
+    pub fn to_mat(&self) -> Result<Mat> {
+        let shape = self.shape();
+        anyhow::ensure!(shape.len() == 2, "expected rank-2 tensor, got shape {shape:?}");
+        let (r, c) = (shape[0], shape[1]);
+        Ok(Mat::from_vec(r, c, self.as_f32()?.to_vec()))
+    }
+}
+
+/// An executor of named artifacts (see the module docs for the contract).
+pub trait ExecBackend {
+    /// Short backend identifier ("native", "pjrt").
+    fn backend_name(&self) -> &'static str;
+
+    /// Whether this backend can serve `artifact`.
+    fn supports(&self, artifact: &str) -> bool;
+
+    /// Execute one artifact.  Implementations validate input arity and
+    /// element counts so shape bugs surface as errors, not corruption.
+    fn run(&mut self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>>;
+
+    /// Declared shape of one named input of `artifact`, if this backend
+    /// fixes it ahead of time (the PJRT engine's manifest does; the
+    /// native engine accepts any consistent shape and returns None).
+    /// Lets adapters fail fast at construction instead of mid-run.
+    fn input_shape(&self, _artifact: &str, _input: &str) -> Option<Vec<usize>> {
+        None
+    }
+}
+
+/// [`LcpBackend`] adapter over any [`ExecBackend`]: routes the trainer's
+/// `soft_perms` through `sinkhorn_soft_{n}x{b}` and `loss_grad` through
+/// `lcp_grad_{c_out}x{c_in}`.  Replaces the old xla-only ArtifactBackend;
+/// cross-checked against the pure-Rust [`crate::lcp::HostBackend`] in
+/// `tests/lcp_cross_check.rs`.
+pub struct ExecLcpBackend<'e, E: ?Sized> {
+    engine: &'e mut E,
+    sink_name: String,
+    grad_name: String,
+    n_b: usize,
+    block: usize,
+    /// Pre-converted layer tensors (w, s, x, y) reused every step.
+    w: TensorValue,
+    s: TensorValue,
+    x: TensorValue,
+    y: TensorValue,
+}
+
+impl<'e, E: ExecBackend + ?Sized> ExecLcpBackend<'e, E> {
+    /// Build for layer `data` with LCP block size `block`.
+    pub fn new(engine: &'e mut E, data: &LayerData, block: usize) -> Result<ExecLcpBackend<'e, E>> {
+        let (c_out, c_in) = data.w.shape();
+        anyhow::ensure!(block > 0 && c_in % block == 0, "C_in {c_in} not divisible by block {block}");
+        let n_b = c_in / block;
+        let sink_name = format!("sinkhorn_soft_{n_b}x{block}");
+        let grad_name = format!("lcp_grad_{c_out}x{c_in}");
+        for name in [&sink_name, &grad_name] {
+            anyhow::ensure!(
+                engine.supports(name),
+                "backend '{}' does not serve artifact '{name}'",
+                engine.backend_name()
+            );
+        }
+        // Backends with baked input shapes (PJRT artifacts) must match the
+        // calibration data now, not via a panic mid-training.
+        if let Some(shape) = engine.input_shape(&grad_name, "x") {
+            anyhow::ensure!(
+                shape.first() == Some(&data.x.rows()),
+                "calibration rows {} != artifact expectation {:?}",
+                data.x.rows(),
+                shape.first()
+            );
+        }
+        Ok(ExecLcpBackend {
+            sink_name,
+            grad_name,
+            n_b,
+            block,
+            w: TensorValue::from_mat(&data.w),
+            s: TensorValue::from_mat(&data.s),
+            x: TensorValue::from_mat(&data.x),
+            y: TensorValue::from_mat(&data.y),
+            engine,
+        })
+    }
+
+    fn stack_blocks(&self, blocks: &[Mat]) -> TensorValue {
+        let b = self.block;
+        let mut flat = Vec::with_capacity(self.n_b * b * b);
+        for blk in blocks {
+            flat.extend_from_slice(blk.data());
+        }
+        TensorValue::F32 { shape: vec![self.n_b, b, b], data: flat }
+    }
+}
+
+/// Split a stacked `[n_b, b, b]` buffer into per-block matrices (shared
+/// with the native engine's artifact implementations).
+pub(crate) fn unstack_blocks(flat: &[f32], n_b: usize, b: usize) -> Vec<Mat> {
+    (0..n_b)
+        .map(|n| Mat::from_vec(b, b, flat[n * b * b..(n + 1) * b * b].to_vec()))
+        .collect()
+}
+
+impl<E: ExecBackend + ?Sized> LcpBackend for ExecLcpBackend<'_, E> {
+    fn soft_perms(&mut self, w_p: &[Mat], tau: f32) -> Vec<Mat> {
+        let inputs = [self.stack_blocks(w_p), TensorValue::scalar(tau)];
+        let outs = self.engine.run(&self.sink_name, &inputs).expect("sinkhorn artifact");
+        unstack_blocks(outs[0].as_f32().expect("sinkhorn output dtype"), self.n_b, self.block)
+    }
+
+    fn loss_grad(&mut self, w_p: &[Mat], p_hard_src: &[Vec<usize>], tau: f32) -> (f32, Vec<Mat>) {
+        // src_of -> dense permutation blocks (P[src_of[j], j] = 1).
+        let b = self.block;
+        let hard_blocks: Vec<Mat> = p_hard_src
+            .iter()
+            .map(|src| {
+                let mut p = Mat::zeros(b, b);
+                for (j, &i) in src.iter().enumerate() {
+                    p[(i, j)] = 1.0;
+                }
+                p
+            })
+            .collect();
+        let inputs = [
+            self.w.clone(),
+            self.s.clone(),
+            self.x.clone(),
+            self.y.clone(),
+            self.stack_blocks(w_p),
+            self.stack_blocks(&hard_blocks),
+            TensorValue::scalar(tau),
+        ];
+        let outs = self.engine.run(&self.grad_name, &inputs).expect("lcp_grad artifact");
+        let loss = outs[0].as_f32().expect("loss dtype")[0];
+        let grads = unstack_blocks(outs[1].as_f32().expect("grad dtype"), self.n_b, self.block);
+        (loss, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_constructors_validate_shape() {
+        assert!(TensorValue::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorValue::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(TensorValue::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+        assert!(TensorValue::i32(vec![4], vec![1]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank_one() {
+        let s = TensorValue::scalar(2.5);
+        assert_eq!(s.shape(), &[1]);
+        assert_eq!(s.as_f32().unwrap(), &[2.5]);
+        assert!(s.as_i32().is_err());
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = TensorValue::from_mat(&m);
+        assert_eq!(v.element_count(), 6);
+        assert_eq!(v.to_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn to_mat_rejects_wrong_rank() {
+        let v = TensorValue::f32(vec![8], vec![0.0; 8]).unwrap();
+        assert!(v.to_mat().is_err());
+    }
+}

@@ -1,18 +1,39 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Execution runtime: named compute artifacts behind [`ExecBackend`].
 //!
-//! The request path is Rust-only: `make artifacts` (python, build-time)
-//! emits `artifacts/*.hlo.txt` + `manifest.json`; [`Engine::load`] compiles
-//! every artifact on the PJRT CPU client at startup and [`Engine::run`]
-//! executes them with host tensors. HLO *text* is the interchange format
-//! (xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos; the text parser
-//! reassigns ids — see DESIGN.md §2).
+//! Two interchangeable backends serve the artifact names (see `exec.rs`
+//! for the name/shape contract):
+//!
+//! * [`NativeEngine`] — pure Rust, the default and the only backend
+//!   compiled without extra features.  Always available (CI, offline),
+//!   dispatches to the host implementations of the same math.
+//! * [`Engine`] (`--features pjrt`) — loads AOT HLO-text artifacts
+//!   (`make artifacts` emits `artifacts/*.hlo.txt` + `manifest.json`),
+//!   compiles each once on the PJRT CPU client, and executes them with
+//!   host tensors.  HLO *text* is the interchange format (xla_extension
+//!   0.5.1 rejects jax>=0.5 64-bit-id protos; the text parser reassigns
+//!   ids — see DESIGN.md §2).  All `xla::` usage lives behind the
+//!   feature gate; the offline build ships a typed stub (`shims/xla`).
+//!
+//! [`Manifest`] parsing is feature-independent so tooling (`permllm
+//! info`) can inspect artifact directories without the PJRT runtime.
 
-mod backend;
-mod convert;
-mod engine;
+mod exec;
 mod manifest;
+mod native;
 
-pub use backend::ArtifactBackend;
-pub use convert::{literal_to_vec, mat_to_literal, scalar_literal, tokens_to_literal, vec_to_literal};
-pub use engine::Engine;
+#[cfg(feature = "pjrt")]
+mod convert;
+#[cfg(feature = "pjrt")]
+mod engine;
+
+pub use exec::{ExecBackend, ExecLcpBackend, TensorValue};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use native::{NativeCfg, NativeEngine};
+
+#[cfg(feature = "pjrt")]
+pub use convert::{
+    literal_to_vec, mat_to_literal, scalar_literal, tokens_to_literal, value_to_literal,
+    vec_to_literal,
+};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;

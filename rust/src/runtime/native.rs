@@ -1,0 +1,550 @@
+//! Pure-Rust execution backend: serves the AOT artifact names offline.
+//!
+//! [`NativeEngine`] implements [`ExecBackend`] by dispatching each
+//! artifact family to the host implementation of the same math:
+//!
+//! * `sinkhorn_soft_{n}x{b}` -> [`crate::lcp::SinkhornTape`] per block,
+//!   fanned out over [`parallel_map`];
+//! * `lcp_grad_{c_out}x{c_in}` -> [`crate::lcp::HostBackend`]'s
+//!   hand-derived STE backward;
+//! * `sparse_fwd_{c_out}x{c_in}` -> channel permute + compressed N:M
+//!   SpMM ([`Compressed`]), row-tiled over [`parallel_map`];
+//! * `lm_forward` -> the host transformer ([`crate::model::lm_forward`];
+//!   requires a [`ModelConfig`], see [`NativeEngine::with_model`]).
+//!
+//! This is the reference path every CI run and offline environment uses;
+//! `--features pjrt` swaps in the XLA-compiled artifacts behind the same
+//! [`ExecBackend`] trait, and `tests/lcp_cross_check.rs` pins the two
+//! together when artifacts are present.
+
+use anyhow::{anyhow, Result};
+
+use super::exec::{unstack_blocks, ExecBackend, TensorValue};
+use crate::lcp::{HostBackend, LayerData, LcpBackend, SinkhornTape};
+use crate::model::ModelConfig;
+use crate::sparsity::{Compressed, NmConfig};
+use crate::tensor::Mat;
+use crate::util::pool::parallel_map;
+
+/// Configuration for the native backend.
+#[derive(Debug, Clone)]
+pub struct NativeCfg {
+    /// N:M pattern used by `lcp_grad` and `sparse_fwd`.
+    pub nm: NmConfig,
+    /// Sinkhorn iterations for `sinkhorn_soft` and `lcp_grad`.
+    pub sinkhorn_iters: usize,
+    /// Worker threads for block/row fan-out (1 = sequential; the pruning
+    /// pipeline parallelizes across layers instead and passes 1 here).
+    pub threads: usize,
+    /// Model served by `lm_forward` (None disables that artifact).
+    pub model: Option<ModelConfig>,
+}
+
+impl Default for NativeCfg {
+    fn default() -> Self {
+        NativeCfg { nm: NmConfig::PAT_2_4, sinkhorn_iters: 5, threads: 1, model: None }
+    }
+}
+
+/// The pure-Rust [`ExecBackend`].
+#[derive(Debug, Clone, Default)]
+pub struct NativeEngine {
+    cfg: NativeCfg,
+}
+
+impl NativeEngine {
+    pub fn new(cfg: NativeCfg) -> NativeEngine {
+        NativeEngine { cfg }
+    }
+
+    /// Default config plus a model for `lm_forward`.
+    pub fn with_model(model: ModelConfig) -> NativeEngine {
+        NativeEngine { cfg: NativeCfg { model: Some(model), ..NativeCfg::default() } }
+    }
+
+    pub fn cfg(&self) -> &NativeCfg {
+        &self.cfg
+    }
+
+    fn run_sinkhorn(
+        &self,
+        name: &str,
+        dims: &str,
+        inputs: &[TensorValue],
+    ) -> Result<Vec<TensorValue>> {
+        let (n_b, b) = parse_dims(dims)
+            .ok_or_else(|| anyhow!("artifact '{name}': malformed shape suffix '{dims}'"))?;
+        anyhow::ensure!(
+            inputs.len() == 2,
+            "artifact {name}: got {} inputs, expected 2 (w_p, tau)",
+            inputs.len()
+        );
+        check_shape(name, "w_p", &inputs[0], &[n_b, b, b])?;
+        check_shape(name, "tau", &inputs[1], &[1])?;
+        let flat = inputs[0].as_f32()?;
+        let tau = inputs[1].as_f32()?[0];
+        let iters = self.cfg.sinkhorn_iters;
+        let bb = b * b;
+        let blocks = parallel_map(n_b, self.cfg.threads, |n| {
+            let blk = Mat::from_vec(b, b, flat[n * bb..(n + 1) * bb].to_vec());
+            SinkhornTape::forward(&blk, tau, iters).output().data().to_vec()
+        });
+        let mut out = Vec::with_capacity(n_b * bb);
+        for blk in blocks {
+            out.extend_from_slice(&blk);
+        }
+        Ok(vec![TensorValue::f32(vec![n_b, b, b], out)?])
+    }
+
+    fn run_lcp_grad(
+        &self,
+        name: &str,
+        dims: &str,
+        inputs: &[TensorValue],
+    ) -> Result<Vec<TensorValue>> {
+        let (c_out, c_in) = parse_dims(dims)
+            .ok_or_else(|| anyhow!("artifact '{name}': malformed shape suffix '{dims}'"))?;
+        anyhow::ensure!(
+            inputs.len() == 7,
+            "artifact {name}: got {} inputs, expected 7 (w, s, x, y, w_p, p_hard, tau)",
+            inputs.len()
+        );
+        check_shape(name, "w", &inputs[0], &[c_out, c_in])?;
+        check_shape(name, "s", &inputs[1], &[c_out, c_in])?;
+        let xshape = inputs[2].shape().to_vec();
+        anyhow::ensure!(
+            xshape.len() == 2 && xshape[1] == c_in,
+            "artifact {name}: input 'x' has shape {xshape:?}, expected [T, {c_in}]"
+        );
+        let t = xshape[0];
+        check_shape(name, "y", &inputs[3], &[t, c_out])?;
+        let wp_shape = inputs[4].shape().to_vec();
+        anyhow::ensure!(
+            wp_shape.len() == 3 && wp_shape[1] == wp_shape[2] && wp_shape[0] * wp_shape[1] == c_in,
+            "artifact {name}: input 'w_p' has shape {wp_shape:?}, expected [N_B, B, B] with N_B*B = {c_in}"
+        );
+        let (n_b, b) = (wp_shape[0], wp_shape[1]);
+        check_shape(name, "p_hard", &inputs[5], &[n_b, b, b])?;
+        check_shape(name, "tau", &inputs[6], &[1])?;
+
+        let data = LayerData {
+            w: inputs[0].to_mat()?,
+            s: inputs[1].to_mat()?,
+            x: inputs[2].to_mat()?,
+            y: inputs[3].to_mat()?,
+        };
+        let w_p = unstack_blocks(inputs[4].as_f32()?, n_b, b);
+        let hard = unstack_blocks(inputs[5].as_f32()?, n_b, b);
+        let tau = inputs[6].as_f32()?[0];
+        // Dense one-hot permutation blocks back to per-block src_of.
+        let hard_src: Vec<Vec<usize>> = hard.iter().map(argmax_cols).collect();
+
+        let mut host = HostBackend::new(&data, self.cfg.nm, self.cfg.sinkhorn_iters);
+        let (loss, grads) = host.loss_grad(&w_p, &hard_src, tau);
+        let mut flat = Vec::with_capacity(n_b * b * b);
+        for g in &grads {
+            flat.extend_from_slice(g.data());
+        }
+        Ok(vec![
+            TensorValue::f32(vec![1], vec![loss])?,
+            TensorValue::f32(vec![n_b, b, b], flat)?,
+        ])
+    }
+
+    fn run_sparse_fwd(
+        &self,
+        name: &str,
+        dims: &str,
+        inputs: &[TensorValue],
+    ) -> Result<Vec<TensorValue>> {
+        let (c_out, c_in) = parse_dims(dims)
+            .ok_or_else(|| anyhow!("artifact '{name}': malformed shape suffix '{dims}'"))?;
+        anyhow::ensure!(
+            inputs.len() == 4,
+            "artifact {name}: got {} inputs, expected 4 (vals, idx, x, src)",
+            inputs.len()
+        );
+        let nm = self.cfg.nm;
+        anyhow::ensure!(c_in % nm.m == 0, "artifact {name}: C_in {c_in} not divisible by M {}", nm.m);
+        let k = c_in / nm.m * nm.keep;
+        check_shape(name, "vals", &inputs[0], &[c_out, k])?;
+        check_shape(name, "idx", &inputs[1], &[c_out, k])?;
+        let xshape = inputs[2].shape().to_vec();
+        anyhow::ensure!(
+            xshape.len() == 2 && xshape[1] == c_in,
+            "artifact {name}: input 'x' has shape {xshape:?}, expected [T, {c_in}]"
+        );
+        check_shape(name, "src", &inputs[3], &[c_in])?;
+
+        let idx: Vec<u32> = inputs[1]
+            .as_i32()?
+            .iter()
+            .map(|&v| {
+                u32::try_from(v)
+                    .map_err(|_| anyhow!("artifact {name}: negative column index {v}"))
+            })
+            .collect::<Result<_>>()?;
+        let comp = Compressed::from_parts(nm, c_out, c_in, inputs[0].as_f32()?.to_vec(), idx)?;
+        let src: Vec<usize> = inputs[3].as_i32()?.iter().map(|&v| v as usize).collect();
+        // Must be a true permutation: in-range AND no duplicates, else the
+        // gather silently duplicates/drops channels.
+        let mut seen = vec![false; c_in];
+        for &i in &src {
+            anyhow::ensure!(i < c_in, "artifact {name}: permutation index {i} out of range");
+            anyhow::ensure!(!seen[i], "artifact {name}: duplicate permutation index {i}");
+            seen[i] = true;
+        }
+        let x = inputs[2].to_mat()?;
+        let xp = x.permute_cols(&src);
+
+        // Row-tiled sparse matmul over the worker pool.
+        let t = xp.rows();
+        let n_chunks = self.cfg.threads.max(1).min(t.max(1));
+        let y = if n_chunks <= 1 {
+            comp.matmul_xt(&xp)
+        } else {
+            let per = t.div_ceil(n_chunks);
+            let tiles = parallel_map(n_chunks, self.cfg.threads, |ci| {
+                let lo = ci * per;
+                let hi = ((ci + 1) * per).min(t);
+                let mut sub = Mat::zeros(hi - lo, c_in);
+                for (r, src_row) in (lo..hi).enumerate() {
+                    sub.row_mut(r).copy_from_slice(xp.row(src_row));
+                }
+                comp.matmul_xt(&sub)
+            });
+            let mut out = Mat::zeros(t, c_out);
+            let mut r0 = 0;
+            for tile in tiles {
+                for r in 0..tile.rows() {
+                    out.row_mut(r0 + r).copy_from_slice(tile.row(r));
+                }
+                r0 += tile.rows();
+            }
+            out
+        };
+        let (yr, yc) = y.shape();
+        Ok(vec![TensorValue::f32(vec![yr, yc], y.into_vec())?])
+    }
+
+    fn run_lm_forward(&self, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let cfg = self.cfg.model.as_ref().ok_or_else(|| {
+            anyhow!(
+                "artifact lm_forward: native backend built without a model \
+                 (use NativeEngine::with_model)"
+            )
+        })?;
+        let names = cfg.param_names();
+        anyhow::ensure!(
+            inputs.len() == names.len() + 1,
+            "artifact lm_forward: got {} inputs, expected {} params + tokens",
+            inputs.len(),
+            names.len()
+        );
+        let mut flat = Vec::with_capacity(names.len());
+        for (v, name) in inputs.iter().zip(&names) {
+            let shape = cfg.param_shape(name);
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                v.element_count() == want,
+                "artifact lm_forward: input '{name}' has {} elements, expected {shape:?}",
+                v.element_count()
+            );
+            let data = v.as_f32()?.to_vec();
+            flat.push(if shape.len() == 1 {
+                Mat::from_vec(1, shape[0], data)
+            } else {
+                Mat::from_vec(shape[0], shape[1], data)
+            });
+        }
+        let ps = crate::model::ParamStore::from_flat(cfg, flat)?;
+
+        let tok = &inputs[names.len()];
+        let tshape = tok.shape().to_vec();
+        anyhow::ensure!(
+            tshape.len() == 2,
+            "artifact lm_forward: tokens have shape {tshape:?}, expected [B, T]"
+        );
+        let (bsz, t) = (tshape[0], tshape[1]);
+        let toks = tok.as_i32()?;
+        let mut batch: Vec<Vec<u8>> = Vec::with_capacity(bsz);
+        for bi in 0..bsz {
+            let row = &toks[bi * t..(bi + 1) * t];
+            let seq: Vec<u8> = row
+                .iter()
+                .map(|&v| {
+                    if (0..cfg.vocab.min(256) as i32).contains(&v) {
+                        Ok(v as u8)
+                    } else {
+                        Err(anyhow!("artifact lm_forward: token {v} outside vocab {}", cfg.vocab))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            batch.push(seq);
+        }
+        let logits = crate::model::lm_forward(&ps, &batch);
+        let v = cfg.vocab;
+        let mut out = Vec::with_capacity(bsz * t * v);
+        for l in &logits {
+            out.extend_from_slice(l.data());
+        }
+        Ok(vec![TensorValue::f32(vec![bsz, t, v], out)?])
+    }
+}
+
+impl ExecBackend for NativeEngine {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, artifact: &str) -> bool {
+        if artifact == "lm_forward" {
+            return self.cfg.model.is_some();
+        }
+        for prefix in ["sinkhorn_soft_", "lcp_grad_", "sparse_fwd_"] {
+            if let Some(dims) = artifact.strip_prefix(prefix) {
+                return parse_dims(dims).is_some();
+            }
+        }
+        false
+    }
+
+    fn run(&mut self, artifact: &str, inputs: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        if let Some(dims) = artifact.strip_prefix("sinkhorn_soft_") {
+            self.run_sinkhorn(artifact, dims, inputs)
+        } else if let Some(dims) = artifact.strip_prefix("lcp_grad_") {
+            self.run_lcp_grad(artifact, dims, inputs)
+        } else if let Some(dims) = artifact.strip_prefix("sparse_fwd_") {
+            self.run_sparse_fwd(artifact, dims, inputs)
+        } else if artifact == "lm_forward" {
+            self.run_lm_forward(inputs)
+        } else {
+            Err(anyhow!("native backend: unknown artifact '{artifact}'"))
+        }
+    }
+}
+
+/// Parse an `"{A}x{B}"` artifact-name suffix.
+fn parse_dims(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    let a: usize = a.parse().ok()?;
+    let b: usize = b.parse().ok()?;
+    if a == 0 || b == 0 {
+        return None;
+    }
+    Some((a, b))
+}
+
+fn check_shape(artifact: &str, input: &str, v: &TensorValue, want: &[usize]) -> Result<()> {
+    let n: usize = want.iter().product();
+    anyhow::ensure!(
+        v.element_count() == n,
+        "artifact {artifact}: input '{input}' has {} elements, expected {want:?}",
+        v.element_count()
+    );
+    Ok(())
+}
+
+/// `src_of[j]` = row index of the maximum in column `j` (ties -> lowest).
+fn argmax_cols(blk: &Mat) -> Vec<usize> {
+    let (rows, cols) = blk.shape();
+    (0..cols)
+        .map(|j| {
+            let mut best = 0;
+            for i in 1..rows {
+                if blk[(i, j)] > blk[(best, j)] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lcp::harden;
+    use crate::pruning::{importance, Metric};
+    use crate::sparsity::NmMask;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    #[test]
+    fn sinkhorn_artifact_matches_host_tape() {
+        let mut rng = Pcg32::seeded(7);
+        let (n_b, b, tau, iters) = (3usize, 8usize, 0.7f32, 5usize);
+        let blocks: Vec<Mat> = (0..n_b).map(|_| Mat::randn(b, b, 0.5, &mut rng)).collect();
+        let mut flat = Vec::new();
+        for blk in &blocks {
+            flat.extend_from_slice(blk.data());
+        }
+        let mut engine = NativeEngine::new(NativeCfg { sinkhorn_iters: iters, ..NativeCfg::default() });
+        let outs = engine
+            .run(
+                &format!("sinkhorn_soft_{n_b}x{b}"),
+                &[
+                    TensorValue::f32(vec![n_b, b, b], flat).unwrap(),
+                    TensorValue::scalar(tau),
+                ],
+            )
+            .unwrap();
+        let got = outs[0].as_f32().unwrap();
+        let mut want = Vec::new();
+        for blk in &blocks {
+            want.extend_from_slice(SinkhornTape::forward(blk, tau, iters).output().data());
+        }
+        assert_close(got, &want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn sinkhorn_parallel_matches_sequential() {
+        let mut rng = Pcg32::seeded(8);
+        let (n_b, b) = (4usize, 6usize);
+        let flat: Vec<f32> = (0..n_b * b * b).map(|_| rng.normal()).collect();
+        let inputs = [
+            TensorValue::f32(vec![n_b, b, b], flat).unwrap(),
+            TensorValue::scalar(0.9),
+        ];
+        let name = format!("sinkhorn_soft_{n_b}x{b}");
+        let seq = NativeEngine::default().run(&name, &inputs).unwrap();
+        let mut par_engine =
+            NativeEngine::new(NativeCfg { threads: 4, ..NativeCfg::default() });
+        let par = par_engine.run(&name, &inputs).unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn lcp_grad_artifact_matches_host_backend() {
+        let mut rng = Pcg32::seeded(21);
+        let (c_out, c_in, t, b) = (8usize, 16usize, 12usize, 8usize);
+        let n_b = c_in / b;
+        let w = Mat::randn(c_out, c_in, 0.2, &mut rng);
+        let x = Mat::randn(t, c_in, 1.0, &mut rng);
+        let s = importance(Metric::Wanda, &w, &x);
+        let data = LayerData::new(w, s, x);
+
+        let w_p: Vec<Mat> = (0..n_b).map(|_| Mat::randn(b, b, 0.4, &mut rng)).collect();
+        let tau = 0.6f32;
+        let mut host = HostBackend::new(&data, NmConfig::PAT_2_4, 5);
+        let soft = host.soft_perms(&w_p, tau);
+        let hard: Vec<Vec<usize>> = soft.iter().map(harden).collect();
+        let (loss_h, grads_h) = host.loss_grad(&w_p, &hard, tau);
+
+        let stack = |blocks: &[Mat]| {
+            let mut flat = Vec::new();
+            for blk in blocks {
+                flat.extend_from_slice(blk.data());
+            }
+            TensorValue::f32(vec![n_b, b, b], flat).unwrap()
+        };
+        let hard_dense: Vec<Mat> = hard
+            .iter()
+            .map(|src| {
+                let mut p = Mat::zeros(b, b);
+                for (j, &i) in src.iter().enumerate() {
+                    p[(i, j)] = 1.0;
+                }
+                p
+            })
+            .collect();
+        let inputs = [
+            TensorValue::from_mat(&data.w),
+            TensorValue::from_mat(&data.s),
+            TensorValue::from_mat(&data.x),
+            TensorValue::from_mat(&data.y),
+            stack(&w_p),
+            stack(&hard_dense),
+            TensorValue::scalar(tau),
+        ];
+        let outs = NativeEngine::default()
+            .run(&format!("lcp_grad_{c_out}x{c_in}"), &inputs)
+            .unwrap();
+        let loss_n = outs[0].as_f32().unwrap()[0];
+        assert!((loss_h - loss_n).abs() < 1e-6, "{loss_h} vs {loss_n}");
+        let grads_n = outs[1].as_f32().unwrap();
+        let mut flat_h = Vec::new();
+        for g in &grads_h {
+            flat_h.extend_from_slice(g.data());
+        }
+        assert_close(grads_n, &flat_h, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn sparse_fwd_matches_dense_reference() {
+        let mut rng = Pcg32::seeded(5);
+        let (c_out, c_in, t) = (6usize, 16usize, 9usize);
+        let w = Mat::randn(c_out, c_in, 1.0, &mut rng);
+        let mask = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let comp = Compressed::compress(&w, &mask);
+        let x = Mat::randn(t, c_in, 1.0, &mut rng);
+        let src = rng.permutation(c_in);
+
+        let idx: Vec<i32> = comp.idx().iter().map(|&v| v as i32).collect();
+        let src_i: Vec<i32> = src.iter().map(|&v| v as i32).collect();
+        let inputs = [
+            TensorValue::f32(vec![c_out, comp.k()], comp.vals().to_vec()).unwrap(),
+            TensorValue::i32(vec![c_out, comp.k()], idx).unwrap(),
+            TensorValue::from_mat(&x),
+            TensorValue::i32(vec![c_in], src_i).unwrap(),
+        ];
+        let name = format!("sparse_fwd_{c_out}x{c_in}");
+        for threads in [1usize, 3] {
+            let mut engine = NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() });
+            let outs = engine.run(&name, &inputs).unwrap();
+            let want = x.permute_cols(&src).matmul_bt(&mask.apply(&w));
+            assert_close(outs[0].as_f32().unwrap(), want.data(), 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn lm_forward_matches_host_forward() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = crate::model::synth_trained_params(&cfg, 3);
+        let mut rng = Pcg32::seeded(4);
+        let (bsz, t) = (2usize, 16usize);
+        let batch: Vec<Vec<u8>> =
+            (0..bsz).map(|_| (0..t).map(|_| rng.below(256) as u8).collect()).collect();
+
+        let mut inputs = Vec::new();
+        for name in cfg.param_names() {
+            let shape = cfg.param_shape(&name);
+            inputs.push(TensorValue::f32(shape, ps.get(&name).data().to_vec()).unwrap());
+        }
+        let toks: Vec<i32> = batch.iter().flat_map(|s| s.iter().map(|&b| b as i32)).collect();
+        inputs.push(TensorValue::i32(vec![bsz, t], toks).unwrap());
+
+        let mut engine = NativeEngine::with_model(cfg.clone());
+        let outs = engine.run("lm_forward", &inputs).unwrap();
+        assert_eq!(outs[0].shape(), &[bsz, t, cfg.vocab]);
+        let host = crate::model::lm_forward(&ps, &batch);
+        let mut want = Vec::new();
+        for l in &host {
+            want.extend_from_slice(l.data());
+        }
+        assert_eq!(outs[0].as_f32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn unknown_and_malformed_artifacts_error() {
+        let mut engine = NativeEngine::default();
+        assert!(engine.run("nonexistent", &[]).is_err());
+        assert!(engine.run("sinkhorn_soft_axb", &[]).is_err());
+        assert!(!engine.supports("lm_forward")); // no model configured
+        assert!(engine.supports("sinkhorn_soft_4x16"));
+        assert!(engine.run("lm_forward", &[]).is_err());
+    }
+
+    #[test]
+    fn arity_and_shape_are_validated() {
+        let mut engine = NativeEngine::default();
+        let err = engine.run("sinkhorn_soft_2x4", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+        let bad = [
+            TensorValue::f32(vec![3], vec![0.0; 3]).unwrap(),
+            TensorValue::scalar(1.0),
+        ];
+        let err = engine.run("sinkhorn_soft_2x4", &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    }
+}

@@ -43,6 +43,33 @@ impl Compressed {
         Compressed { cfg, c_out, c_in, vals, idx }
     }
 
+    /// Rebuild compressed storage from raw buffers (the `sparse_fwd`
+    /// artifact's input layout).  Validates entry counts and column-index
+    /// bounds; the per-group structure is whatever the producer encoded.
+    pub fn from_parts(
+        cfg: NmConfig,
+        c_out: usize,
+        c_in: usize,
+        vals: Vec<f32>,
+        idx: Vec<u32>,
+    ) -> anyhow::Result<Compressed> {
+        anyhow::ensure!(cfg.m > 0 && cfg.keep <= cfg.m, "bad N:M config {cfg:?}");
+        anyhow::ensure!(c_in % cfg.m == 0, "C_in {c_in} not divisible by M {}", cfg.m);
+        let k = c_in / cfg.m * cfg.keep;
+        anyhow::ensure!(
+            vals.len() == c_out * k && idx.len() == c_out * k,
+            "vals/idx have {}/{} entries, expected {}",
+            vals.len(),
+            idx.len(),
+            c_out * k
+        );
+        anyhow::ensure!(
+            idx.iter().all(|&c| (c as usize) < c_in),
+            "column index out of range (C_in {c_in})"
+        );
+        Ok(Compressed { cfg, c_out, c_in, vals, idx })
+    }
+
     pub fn cfg(&self) -> NmConfig {
         self.cfg
     }
@@ -183,6 +210,29 @@ mod tests {
         // values: exactly half the dense bytes; metadata adds 1 byte/entry
         // (u8 here vs NVIDIA's 2-bit) => 0.625x dense total.
         assert!(comp.storage_bytes() <= dense_bytes * 65 / 100);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let mut rng = Pcg32::seeded(3);
+        let (w, m) = sample(&mut rng, 4, 16, NmConfig::PAT_2_4);
+        let comp = Compressed::compress(&w, &m);
+        let back = Compressed::from_parts(
+            comp.cfg(),
+            4,
+            16,
+            comp.vals().to_vec(),
+            comp.idx().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back.to_dense().data(), comp.to_dense().data());
+        // Wrong entry count and out-of-range indices are rejected.
+        assert!(Compressed::from_parts(comp.cfg(), 4, 16, vec![0.0; 3], vec![0; 3]).is_err());
+        let mut bad_idx = comp.idx().to_vec();
+        bad_idx[0] = 999;
+        assert!(
+            Compressed::from_parts(comp.cfg(), 4, 16, comp.vals().to_vec(), bad_idx).is_err()
+        );
     }
 
     #[test]

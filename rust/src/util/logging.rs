@@ -1,46 +1,14 @@
-//! Minimal `log` backend: timestamped stderr logging.
+//! Logging init: level selection for the in-repo `log` shim.
 //!
-//! `permllm` and the examples call [`init`] once; `RUST_LOG`-style level
-//! selection via the `PERMLLM_LOG` env var (error|warn|info|debug|trace,
-//! default info).
+//! The shim (`shims/log`) ships its own timestamped stderr backend, so
+//! all this wrapper does is pick the level.  `permllm` and the examples
+//! call [`init`] once; `RUST_LOG`-style level selection via the
+//! `PERMLLM_LOG` env var (error|warn|info|debug|trace, default info).
 
-use std::time::Instant;
+use log::LevelFilter;
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
-
-static START: OnceCell<Instant> = OnceCell::new();
-
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
-        let lvl = match record.level() {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
-    }
-
-    fn flush(&self) {}
-}
-
-static LOGGER: StderrLogger = StderrLogger;
-
-/// Install the logger (idempotent).
+/// Install the log level (idempotent).
 pub fn init() {
-    let _ = START.set(Instant::now());
     let level = match std::env::var("PERMLLM_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
@@ -48,9 +16,7 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
-    if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
-    }
+    log::set_max_level(level);
 }
 
 #[cfg(test)]

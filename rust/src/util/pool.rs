@@ -5,6 +5,7 @@
 //! data without `Arc` gymnastics. On this testbed `nproc` is often 1 —
 //! the pool degrades gracefully to sequential execution.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -23,6 +24,12 @@ pub fn default_threads() -> usize {
 /// Work-stealing via a shared atomic counter: each worker claims the next
 /// unprocessed index, so heterogeneous job costs (layers of different
 /// shapes) balance automatically.
+///
+/// A panicking job does not poison the pool with a generic join error:
+/// the worker catches the unwind, remaining workers stop claiming new
+/// jobs, and the original panic payload is re-raised on the caller's
+/// thread — so `parallel_map(n, k, f)` fails with the same message a
+/// plain `(0..n).map(f)` would.
 pub fn parallel_map<T, F>(n_items: usize, n_threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -33,7 +40,8 @@ where
         return (0..n_items).map(&f).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<T>>> = (0..n_items).map(|_| Mutex::new(None)).collect();
+    type Slot<T> = Mutex<Option<std::thread::Result<T>>>;
+    let results: Vec<Slot<T>> = (0..n_items).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -41,15 +49,29 @@ where
                 if i >= n_items {
                     break;
                 }
-                let out = f(i);
+                let out = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let panicked = out.is_err();
                 *results[i].lock().unwrap() = Some(out);
+                if panicked {
+                    // Park the counter so no worker claims further jobs.
+                    next.store(n_items, Ordering::Relaxed);
+                    break;
+                }
             });
         }
     });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker panicked before storing result"))
-        .collect()
+    // Claim order is monotonic, so any abandoned (None) slot has a higher
+    // index than every completed one; scanning in order therefore hits a
+    // stored panic payload before any abandoned slot.
+    let mut out = Vec::with_capacity(n_items);
+    for slot in results {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(payload)) => resume_unwind(payload),
+            None => unreachable!("job abandoned without a stored panic"),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -91,5 +113,35 @@ mod tests {
         let data = vec![10u32, 20, 30];
         let out = parallel_map(3, 2, |i| data[i] * 2);
         assert_eq!(out, vec![20, 40, 60]);
+    }
+
+    #[test]
+    fn panic_payload_propagates_from_worker() {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map(8, 3, |i| {
+                if i == 5 {
+                    panic!("job {i} exploded");
+                }
+                i * 2
+            })
+        }));
+        let payload = res.expect_err("parallel_map should have panicked");
+        let msg = payload.downcast_ref::<String>().expect("formatted panic payload");
+        assert!(msg.contains("job 5 exploded"), "payload lost: {msg}");
+    }
+
+    #[test]
+    fn panic_payload_propagates_sequentially() {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map(3, 1, |i| {
+                if i == 1 {
+                    panic!("sequential boom");
+                }
+                i
+            })
+        }));
+        let payload = res.expect_err("sequential path should have panicked");
+        let msg = payload.downcast_ref::<&str>().expect("static panic payload");
+        assert!(msg.contains("sequential boom"));
     }
 }

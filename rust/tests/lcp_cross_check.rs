@@ -1,53 +1,45 @@
-//! Cross-check: pure-Rust LCP gradients vs the AOT `lcp_grad` artifact.
+//! Cross-check: pure-Rust LCP gradients vs the `ExecBackend` route.
 //!
 //! The repo's strongest correctness signal for the paper's core math
 //! (DESIGN.md §8): the hand-derived Sinkhorn/STE/cosine backward in
-//! `lcp::trainer::HostBackend` must match the JAX `jax.value_and_grad`
-//! graph (which itself runs the L1 Pallas kernels) to float tolerance —
-//! loss AND gradient, across temperatures and permutations.
+//! `lcp::trainer::HostBackend` must match what the artifact interface
+//! serves — loss AND gradient, across temperatures and permutations, and
+//! whole training trajectories.
 //!
-//! Skips (with a notice) when artifacts are absent.
+//! * Default build: [`HostBackend`] vs [`ExecLcpBackend`] over the native
+//!   engine.  Runs everywhere, no artifacts needed.
+//! * `--features pjrt` with artifacts built: the same harness against the
+//!   AOT `lcp_grad` XLA graph (which itself runs the L1 Pallas kernels).
 
-use std::path::{Path, PathBuf};
-
-use permllm::lcp::{harden, HostBackend, LayerData, LcpBackend};
+use permllm::lcp::{harden, train_lcp, HostBackend, LayerData, LcpBackend, LcpCfg};
 use permllm::pruning::{importance, Metric};
-use permllm::runtime::{ArtifactBackend, Engine};
+use permllm::runtime::{ExecLcpBackend, NativeCfg, NativeEngine};
 use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
 use permllm::util::rng::Pcg32;
 use permllm::util::testkit::assert_close;
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m")
-}
-
-#[test]
-fn host_and_artifact_backends_agree_on_loss_and_grad() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let mut engine = Engine::load_lazy(&dir).unwrap();
-    let spec = engine
-        .manifest()
-        .artifacts
-        .iter()
-        .find(|a| a.kind == "lcp_grad")
-        .expect("no lcp_grad artifact")
-        .clone();
-    let (c_out, c_in) = (spec.attrs["c_out"], spec.attrs["c_in"]);
-    let (n_b, b) = (spec.attrs["n_b"], spec.attrs["block"]);
-    let rows = spec.inputs.iter().find(|i| i.name == "x").unwrap().shape[0];
-    let iters = engine.manifest().sinkhorn_iters;
-    let nm = NmConfig { m: engine.manifest().lcp_m, keep: engine.manifest().lcp_keep };
-
-    let mut rng = Pcg32::seeded(21);
+fn layer(seed: u64, c_out: usize, c_in: usize, rows: usize) -> LayerData {
+    let mut rng = Pcg32::seeded(seed);
     let w = Mat::randn(c_out, c_in, 0.2, &mut rng);
     let x = Mat::randn(rows, c_in, 1.0, &mut rng);
     let s = importance(Metric::Wanda, &w, &x);
-    let data = LayerData::new(w, s, x);
+    LayerData::new(w, s, x)
+}
+
+#[test]
+fn host_and_native_exec_backends_agree_on_loss_and_grad() {
+    let (c_out, c_in, rows, b) = (12usize, 32usize, 20usize, 8usize);
+    let n_b = c_in / b;
+    let nm = NmConfig::PAT_2_4;
+    let iters = 5;
+    let data = layer(21, c_out, c_in, rows);
+
+    let mut engine = NativeEngine::new(NativeCfg {
+        nm,
+        sinkhorn_iters: iters,
+        ..NativeCfg::default()
+    });
 
     for (case, tau) in [(0u64, 1.0f32), (1, 0.5), (2, 0.15)] {
         let mut case_rng = Pcg32::seeded(100 + case);
@@ -58,67 +50,166 @@ fn host_and_artifact_backends_agree_on_loss_and_grad() {
         let hard: Vec<Vec<usize>> = soft_host.iter().map(harden).collect();
         let (loss_h, grad_h) = host.loss_grad(&w_p, &hard, tau);
 
-        let mut art = ArtifactBackend::new(&mut engine, &data).unwrap();
-        let soft_art = art.soft_perms(&w_p, tau);
-        for (a, h) in soft_art.iter().zip(&soft_host) {
-            assert_close(a.data(), h.data(), 5e-4).unwrap();
+        let mut exec = ExecLcpBackend::new(&mut engine, &data, b).unwrap();
+        let soft_exec = exec.soft_perms(&w_p, tau);
+        for (a, h) in soft_exec.iter().zip(&soft_host) {
+            assert_close(a.data(), h.data(), 1e-4).unwrap();
         }
-        let (loss_a, grad_a) = art.loss_grad(&w_p, &hard, tau);
+        let (loss_e, grad_e) = exec.loss_grad(&w_p, &hard, tau);
 
         assert!(
-            (loss_h - loss_a).abs() < 5e-4 * loss_h.abs().max(1e-3),
-            "tau {tau}: loss host {loss_h} vs artifact {loss_a}"
+            (loss_h - loss_e).abs() < 1e-4 * loss_h.abs().max(1e-3),
+            "tau {tau}: loss host {loss_h} vs exec {loss_e}"
         );
-        for (n, (gh, ga)) in grad_h.iter().zip(&grad_a).enumerate() {
-            assert_close(gh.data(), ga.data(), 5e-3)
+        for (n, (gh, ge)) in grad_h.iter().zip(&grad_e).enumerate() {
+            assert_close(gh.data(), ge.data(), 1e-4)
                 .unwrap_or_else(|e| panic!("tau {tau} block {n}: {e}"));
         }
     }
 }
 
 #[test]
-fn artifact_backend_trains_like_host_backend() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let mut engine = Engine::load_lazy(&dir).unwrap();
-    let spec = engine
-        .manifest()
-        .artifacts
-        .iter()
-        .find(|a| a.kind == "lcp_grad")
-        .unwrap()
-        .clone();
-    let (c_out, c_in) = (spec.attrs["c_out"], spec.attrs["c_in"]);
-    let rows = spec.inputs.iter().find(|i| i.name == "x").unwrap().shape[0];
-    let iters = engine.manifest().sinkhorn_iters;
-    let nm = NmConfig { m: engine.manifest().lcp_m, keep: engine.manifest().lcp_keep };
+fn native_exec_backend_trains_like_host_backend() {
+    let (c_out, c_in, rows) = (16usize, 32usize, 24usize);
+    let nm = NmConfig::PAT_2_4;
+    let iters = 5;
+    let data = layer(33, c_out, c_in, rows);
+    let cfg = LcpCfg { block: 8, sinkhorn_iters: iters, steps: 12, lr: 0.05, nm, ..Default::default() };
 
-    let mut rng = Pcg32::seeded(33);
-    let w = Mat::randn(c_out, c_in, 0.2, &mut rng);
-    let x = Mat::randn(rows, c_in, 1.0, &mut rng);
-    let s = importance(Metric::Wanda, &w, &x);
-    let data = LayerData::new(w, s, x);
-
-    let cfg = permllm::lcp::LcpCfg {
-        block: engine.manifest().lcp_block,
-        sinkhorn_iters: iters,
-        steps: 8,
-        lr: 0.05,
-        nm,
-        ..Default::default()
-    };
     let res_host = {
         let mut b = HostBackend::new(&data, nm, iters);
-        permllm::lcp::train_lcp(&mut b, c_in, cfg)
+        train_lcp(&mut b, c_in, cfg)
     };
-    let res_art = {
-        let mut b = ArtifactBackend::new(&mut engine, &data).unwrap();
-        permllm::lcp::train_lcp(&mut b, c_in, cfg)
+    let res_exec = {
+        let mut engine = NativeEngine::new(NativeCfg {
+            nm,
+            sinkhorn_iters: iters,
+            ..NativeCfg::default()
+        });
+        let mut b = ExecLcpBackend::new(&mut engine, &data, cfg.block).unwrap();
+        train_lcp(&mut b, c_in, cfg)
     };
     // Identical math + identical init => identical trajectories.
-    assert_eq!(res_host.src_of, res_art.src_of, "diverged permutations");
-    assert!((res_host.best_loss - res_art.best_loss).abs() < 1e-3);
+    assert_eq!(res_host.src_of, res_exec.src_of, "diverged permutations");
+    assert!((res_host.best_loss - res_exec.best_loss).abs() < 1e-4);
+    assert_eq!(res_host.history.len(), res_exec.history.len());
+    for (h, e) in res_host.history.iter().zip(&res_exec.history) {
+        assert!((h - e).abs() < 1e-4, "history diverged: {h} vs {e}");
+    }
+}
+
+/// The same cross-checks against the AOT artifacts (pjrt builds with
+/// `make artifacts` run; skips with a notice otherwise).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use std::path::{Path, PathBuf};
+
+    use permllm::runtime::Engine;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m")
+    }
+
+    #[test]
+    fn host_and_artifact_backends_agree_on_loss_and_grad() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        let spec = engine
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "lcp_grad")
+            .expect("no lcp_grad artifact")
+            .clone();
+        let (c_out, c_in) = (spec.attrs["c_out"], spec.attrs["c_in"]);
+        let (n_b, b) = (spec.attrs["n_b"], spec.attrs["block"]);
+        let rows = spec.inputs.iter().find(|i| i.name == "x").unwrap().shape[0];
+        let iters = engine.manifest().sinkhorn_iters;
+        let nm = NmConfig { m: engine.manifest().lcp_m, keep: engine.manifest().lcp_keep };
+
+        let mut rng = Pcg32::seeded(21);
+        let w = Mat::randn(c_out, c_in, 0.2, &mut rng);
+        let x = Mat::randn(rows, c_in, 1.0, &mut rng);
+        let s = importance(Metric::Wanda, &w, &x);
+        let data = LayerData::new(w, s, x);
+
+        for (case, tau) in [(0u64, 1.0f32), (1, 0.5), (2, 0.15)] {
+            let mut case_rng = Pcg32::seeded(100 + case);
+            let w_p: Vec<Mat> =
+                (0..n_b).map(|_| Mat::randn(b, b, 0.4, &mut case_rng)).collect();
+
+            let mut host = HostBackend::new(&data, nm, iters);
+            let soft_host = host.soft_perms(&w_p, tau);
+            let hard: Vec<Vec<usize>> = soft_host.iter().map(harden).collect();
+            let (loss_h, grad_h) = host.loss_grad(&w_p, &hard, tau);
+
+            let mut art = ExecLcpBackend::new(&mut engine, &data, b).unwrap();
+            let soft_art = art.soft_perms(&w_p, tau);
+            for (a, h) in soft_art.iter().zip(&soft_host) {
+                assert_close(a.data(), h.data(), 5e-4).unwrap();
+            }
+            let (loss_a, grad_a) = art.loss_grad(&w_p, &hard, tau);
+
+            assert!(
+                (loss_h - loss_a).abs() < 5e-4 * loss_h.abs().max(1e-3),
+                "tau {tau}: loss host {loss_h} vs artifact {loss_a}"
+            );
+            for (n, (gh, ga)) in grad_h.iter().zip(&grad_a).enumerate() {
+                assert_close(gh.data(), ga.data(), 5e-3)
+                    .unwrap_or_else(|e| panic!("tau {tau} block {n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_backend_trains_like_host_backend() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        let spec = engine
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "lcp_grad")
+            .unwrap()
+            .clone();
+        let (c_out, c_in) = (spec.attrs["c_out"], spec.attrs["c_in"]);
+        let rows = spec.inputs.iter().find(|i| i.name == "x").unwrap().shape[0];
+        let iters = engine.manifest().sinkhorn_iters;
+        let nm = NmConfig { m: engine.manifest().lcp_m, keep: engine.manifest().lcp_keep };
+
+        let mut rng = Pcg32::seeded(33);
+        let w = Mat::randn(c_out, c_in, 0.2, &mut rng);
+        let x = Mat::randn(rows, c_in, 1.0, &mut rng);
+        let s = importance(Metric::Wanda, &w, &x);
+        let data = LayerData::new(w, s, x);
+
+        let cfg = LcpCfg {
+            block: engine.manifest().lcp_block,
+            sinkhorn_iters: iters,
+            steps: 8,
+            lr: 0.05,
+            nm,
+            ..Default::default()
+        };
+        let res_host = {
+            let mut b = HostBackend::new(&data, nm, iters);
+            train_lcp(&mut b, c_in, cfg)
+        };
+        let res_art = {
+            let mut b = ExecLcpBackend::new(&mut engine, &data, cfg.block).unwrap();
+            train_lcp(&mut b, c_in, cfg)
+        };
+        // Identical math + identical init => identical trajectories.
+        assert_eq!(res_host.src_of, res_art.src_of, "diverged permutations");
+        assert!((res_host.best_loss - res_art.best_loss).abs() < 1e-3);
+    }
 }

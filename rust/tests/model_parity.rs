@@ -1,83 +1,153 @@
-//! Parity: Rust host forward vs the AOT `lm_forward` artifact.
+//! Parity: Rust host forward vs the `lm_forward` artifact route.
 //!
 //! The same parameters and tokens must produce (near-)identical logits
-//! through the host transformer (rust/src/model/forward.rs) and the JAX
-//! graph — this is what makes host-side perplexity evaluation of pruned
-//! models trustworthy. Skips when artifacts are absent.
-
-use std::path::{Path, PathBuf};
+//! through the host transformer (rust/src/model/forward.rs) and the
+//! `ExecBackend` serving `lm_forward` — this is what makes backend-routed
+//! perplexity evaluation of pruned models trustworthy.
+//!
+//! * Default build: the native engine (exercises the full param
+//!   flatten/rebuild + token plumbing; logits must match bit-for-bit).
+//! * `--features pjrt` with artifacts: the AOT JAX graph (tolerance-based;
+//!   skips with a notice when artifacts are absent).
 
 use permllm::data::{batch_to_i32, sample_batch, Corpus, CorpusKind};
-use permllm::model::{synth_trained_params, ParamStore};
-use permllm::runtime::{literal_to_vec, tokens_to_literal, vec_to_literal, Engine};
+use permllm::model::{synth_trained_params, ModelConfig};
+use permllm::runtime::{ExecBackend, NativeEngine, TensorValue};
 use permllm::util::rng::Pcg32;
 
-fn artifacts_dir() -> PathBuf {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m")
-}
-
 #[test]
-fn host_forward_matches_lm_forward_artifact() {
-    let dir = artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let mut engine = Engine::load_lazy(&dir).unwrap();
-    let cfg = engine.manifest().config.clone();
-    let batch_size = engine.manifest().batch;
-    let param_order = engine.manifest().param_order.clone();
-
-    let ps: ParamStore = synth_trained_params(&cfg, 77);
+fn host_forward_matches_native_lm_forward_exactly() {
+    let cfg = ModelConfig::by_name("tiny-m").unwrap();
+    let ps = synth_trained_params(&cfg, 77);
     let corpus = Corpus::build(CorpusKind::C4Like, 1);
     let mut rng = Pcg32::seeded(5);
-    let batch = sample_batch(&corpus, &mut rng, batch_size, cfg.seq_len);
+    let (batch_size, seq_len) = (3usize, 24usize);
+    let batch = sample_batch(&corpus, &mut rng, batch_size, seq_len);
 
-    // Artifact path.
-    let mut inputs: Vec<xla::Literal> = Vec::new();
-    for (name, shape) in &param_order {
-        inputs.push(vec_to_literal(ps.get(name).data(), shape).unwrap());
+    // Backend path: params flattened in canonical order + i32 tokens.
+    let mut inputs: Vec<TensorValue> = Vec::new();
+    for name in cfg.param_names() {
+        inputs.push(
+            TensorValue::f32(cfg.param_shape(&name), ps.get(&name).data().to_vec()).unwrap(),
+        );
     }
-    inputs.push(tokens_to_literal(&batch_to_i32(&batch), batch_size, cfg.seq_len).unwrap());
+    inputs
+        .push(TensorValue::i32(vec![batch_size, seq_len], batch_to_i32(&batch)).unwrap());
+    let mut engine = NativeEngine::with_model(cfg.clone());
     let outs = engine.run("lm_forward", &inputs).unwrap();
-    let logits_art = literal_to_vec(&outs[0]).unwrap(); // [B, T, V]
+    assert_eq!(outs[0].shape(), &[batch_size, seq_len, cfg.vocab]);
+    let logits_exec = outs[0].as_f32().unwrap();
 
     // Host path.
     let logits_host = permllm::model::lm_forward(&ps, &batch);
 
-    let (t, v) = (cfg.seq_len, cfg.vocab);
-    let mut max_abs = 0.0f32;
-    let mut max_rel = 0.0f32;
+    let (t, v) = (seq_len, cfg.vocab);
     for (bi, l) in logits_host.iter().enumerate() {
         for pos in 0..t {
             let host_row = l.row(pos);
-            let art_row = &logits_art[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
-            for (h, a) in host_row.iter().zip(art_row) {
-                let d = (h - a).abs();
-                max_abs = max_abs.max(d);
-                max_rel = max_rel.max(d / h.abs().max(1.0));
-            }
-        }
-    }
-    eprintln!("max |host - artifact| = {max_abs:.3e} (rel {max_rel:.3e})");
-    assert!(max_rel < 2e-3, "host/artifact logits diverge: abs {max_abs} rel {max_rel}");
-
-    // Argmax agreement at every position (what eval actually consumes).
-    for (bi, l) in logits_host.iter().enumerate().take(2) {
-        for pos in [0usize, t / 2, t - 1] {
-            let host_row = l.row(pos);
-            let art_row = &logits_art[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
-            let am_h = argmax(host_row);
-            let am_a = argmax(art_row);
-            assert_eq!(am_h, am_a, "argmax differs at batch {bi} pos {pos}");
+            let exec_row = &logits_exec[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
+            assert_eq!(host_row, exec_row, "batch {bi} pos {pos} diverged");
         }
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
+/// With artifacts present: host vs the AOT `lm_forward` XLA graph.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use std::path::{Path, PathBuf};
+
+    use permllm::eval::{eval_perplexity, eval_perplexity_exec};
+    use permllm::model::ParamStore;
+    use permllm::runtime::Engine;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m")
+    }
+
+    #[test]
+    fn host_forward_matches_lm_forward_artifact() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        let cfg = engine.manifest().config.clone();
+        let batch_size = engine.manifest().batch;
+
+        let ps: ParamStore = synth_trained_params(&cfg, 77);
+        let corpus = Corpus::build(CorpusKind::C4Like, 1);
+        let mut rng = Pcg32::seeded(5);
+        let batch = sample_batch(&corpus, &mut rng, batch_size, cfg.seq_len);
+
+        // Artifact path through the ExecBackend trait.
+        let mut inputs: Vec<TensorValue> = Vec::new();
+        for name in cfg.param_names() {
+            inputs.push(
+                TensorValue::f32(cfg.param_shape(&name), ps.get(&name).data().to_vec())
+                    .unwrap(),
+            );
+        }
+        inputs.push(
+            TensorValue::i32(vec![batch_size, cfg.seq_len], batch_to_i32(&batch)).unwrap(),
+        );
+        let outs = engine.run("lm_forward", &inputs).unwrap();
+        let logits_art = outs[0].as_f32().unwrap(); // [B, T, V]
+
+        // Host path.
+        let logits_host = permllm::model::lm_forward(&ps, &batch);
+
+        let (t, v) = (cfg.seq_len, cfg.vocab);
+        let mut max_abs = 0.0f32;
+        let mut max_rel = 0.0f32;
+        for (bi, l) in logits_host.iter().enumerate() {
+            for pos in 0..t {
+                let host_row = l.row(pos);
+                let art_row = &logits_art[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
+                for (h, a) in host_row.iter().zip(art_row) {
+                    let d = (h - a).abs();
+                    max_abs = max_abs.max(d);
+                    max_rel = max_rel.max(d / h.abs().max(1.0));
+                }
+            }
+        }
+        eprintln!("max |host - artifact| = {max_abs:.3e} (rel {max_rel:.3e})");
+        assert!(max_rel < 2e-3, "host/artifact logits diverge: abs {max_abs} rel {max_rel}");
+
+        // Argmax agreement at sampled positions (what eval consumes).
+        for (bi, l) in logits_host.iter().enumerate().take(2) {
+            for pos in [0usize, t / 2, t - 1] {
+                let host_row = l.row(pos);
+                let art_row = &logits_art[bi * t * v + pos * v..bi * t * v + (pos + 1) * v];
+                assert_eq!(argmax(host_row), argmax(art_row), "argmax differs at {bi}/{pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_perplexity_matches_host() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        let cfg = engine.manifest().config.clone();
+        let batch = engine.manifest().batch;
+        let ps = synth_trained_params(&cfg, 9);
+        let corpus = Corpus::build(CorpusKind::WikitextLike, 3);
+        let host = eval_perplexity(&ps, &corpus, 42, batch, cfg.seq_len);
+        let art = eval_perplexity_exec(&mut engine, &ps, &corpus, 42, batch, cfg.seq_len)
+            .unwrap();
+        assert!((host - art).abs() / host < 0.02, "{host} vs {art}");
+    }
+
+    fn argmax(xs: &[f32]) -> usize {
+        xs.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
 }

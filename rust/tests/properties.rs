@@ -1,0 +1,180 @@
+//! Property tests for the core invariants (seeded, offline, no
+//! artifacts):
+//!
+//! * every [`NmMask`] group retains exactly `keep` of `m` entries;
+//! * `Compressed::compress -> to_dense` equals `mask ⊙ w` bit-exactly;
+//! * Sinkhorn output is doubly stochastic (rows and columns sum to ~1)
+//!   for random temperatures;
+//! * Hungarian assignment matches brute-force enumeration on all tested
+//!   <= 6x6 random cost matrices;
+//! * the native `ExecBackend` serves `sinkhorn_soft_*` identically to the
+//!   host tape at random shapes.
+//!
+//! All cases derive from `testkit::case_rng` (PCG32), so any failure
+//! message pins the exact replay seed.
+
+use permllm::lcp::{assign_max, SinkhornTape};
+use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine, TensorValue};
+use permllm::sparsity::{Compressed, NmConfig, NmMask};
+use permllm::tensor::Mat;
+use permllm::util::testkit::{assert_close, check_n};
+
+#[test]
+fn prop_nm_mask_group_counts_exact() {
+    check_n("nm-mask-group-counts", 48, |rng| {
+        let cfgs = [
+            NmConfig::PAT_2_4,
+            NmConfig::PAT_4_8,
+            NmConfig { m: 4, keep: 1 },
+            NmConfig { m: 4, keep: 3 },
+            NmConfig { m: 8, keep: 2 },
+        ];
+        let cfg = cfgs[rng.below_usize(cfgs.len())];
+        let rows = 1 + rng.below_usize(10);
+        let groups = 1 + rng.below_usize(10);
+        let cols = groups * cfg.m;
+        let s = Mat::randn(rows, cols, 1.0, rng);
+        let mask = NmMask::from_scores(&s, cfg);
+        // Count ones in every group explicitly (not via mask.verify, so
+        // this test stays meaningful if verify() ever changes).
+        for r in 0..rows {
+            for g in 0..groups {
+                let ones =
+                    (0..cfg.m).filter(|&k| mask.get(r, g * cfg.m + k)).count();
+                if ones != cfg.keep {
+                    return Err(format!(
+                        "row {r} group {g}: kept {ones}, want {} (cfg {cfg:?})",
+                        cfg.keep
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compress_to_dense_bit_exact() {
+    check_n("compress-bit-exact", 48, |rng| {
+        let cfg = if rng.below(2) == 0 { NmConfig::PAT_2_4 } else { NmConfig::PAT_4_8 };
+        let c_out = 1 + rng.below_usize(8);
+        let c_in = cfg.m * (1 + rng.below_usize(8));
+        let w = Mat::randn(c_out, c_in, 1.0, rng);
+        let mask = NmMask::from_scores(&w.map(f32::abs), cfg);
+        let comp = Compressed::compress(&w, &mask);
+        let dense = comp.to_dense();
+        let want = mask.apply(&w);
+        // Bit-exact: compression stores the retained f32s verbatim.
+        if dense.data() != want.data() {
+            return Err("compress -> to_dense differs from mask ⊙ w".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sinkhorn_is_doubly_stochastic() {
+    check_n("sinkhorn-doubly-stochastic", 32, |rng| {
+        let b = 4 + rng.below_usize(13); // 4..=16
+        let tau = rng.range_f32(0.3, 2.0);
+        let iters = 40;
+        let w_p = Mat::randn(b, b, 1.0, rng);
+        let p = SinkhornTape::forward(&w_p, tau, iters).output().clone();
+        for r in 0..b {
+            let rs: f32 = p.row(r).iter().sum();
+            if (rs - 1.0).abs() > 5e-3 {
+                return Err(format!("row {r} sums to {rs} (b={b}, tau={tau})"));
+            }
+        }
+        for c in 0..b {
+            let cs: f32 = p.col(c).iter().sum();
+            if (cs - 1.0).abs() > 5e-3 {
+                return Err(format!("col {c} sums to {cs} (b={b}, tau={tau})"));
+            }
+        }
+        if p.data().iter().any(|&v| v < 0.0 || !v.is_finite()) {
+            return Err("negative or non-finite entry".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hungarian_matches_brute_force_up_to_6() {
+    fn brute_force_max(gain: &Mat) -> f64 {
+        fn rec(k: usize, perm: &mut Vec<usize>, gain: &Mat, best: &mut f64) {
+            if k == 1 {
+                let sc: f64 =
+                    perm.iter().enumerate().map(|(i, &j)| gain[(i, j)] as f64).sum();
+                if sc > *best {
+                    *best = sc;
+                }
+                return;
+            }
+            for i in 0..k {
+                rec(k - 1, perm, gain, best);
+                if k % 2 == 0 {
+                    perm.swap(i, k - 1);
+                } else {
+                    perm.swap(0, k - 1);
+                }
+            }
+        }
+        let n = gain.rows();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut best = f64::NEG_INFINITY;
+        rec(n, &mut perm, gain, &mut best);
+        best
+    }
+
+    check_n("hungarian-vs-brute-force", 40, |rng| {
+        let n = 2 + rng.below_usize(5); // 2..=6
+        let gain = Mat::randn(n, n, 1.0, rng);
+        let assign = assign_max(&gain);
+        let mut seen = vec![false; n];
+        for &j in &assign {
+            if j >= n || seen[j] {
+                return Err("assignment is not a permutation".into());
+            }
+            seen[j] = true;
+        }
+        let got: f64 = assign.iter().enumerate().map(|(i, &j)| gain[(i, j)] as f64).sum();
+        let want = brute_force_max(&gain);
+        if (got - want).abs() > 1e-9 {
+            return Err(format!("n={n}: got {got}, optimum {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_native_sinkhorn_artifact_matches_host_tape() {
+    check_n("native-sinkhorn-artifact", 16, |rng| {
+        let n_b = 1 + rng.below_usize(4);
+        let b = 4 + rng.below_usize(9); // 4..=12
+        let iters = rng.below_usize(7);
+        let tau = rng.range_f32(0.4, 1.5);
+        let blocks: Vec<Mat> = (0..n_b).map(|_| Mat::randn(b, b, 0.6, rng)).collect();
+        let mut flat = Vec::with_capacity(n_b * b * b);
+        for blk in &blocks {
+            flat.extend_from_slice(blk.data());
+        }
+        let mut engine =
+            NativeEngine::new(NativeCfg { sinkhorn_iters: iters, ..NativeCfg::default() });
+        let outs = engine
+            .run(
+                &format!("sinkhorn_soft_{n_b}x{b}"),
+                &[
+                    TensorValue::f32(vec![n_b, b, b], flat).map_err(|e| e.to_string())?,
+                    TensorValue::scalar(tau),
+                ],
+            )
+            .map_err(|e| format!("native sinkhorn failed: {e:#}"))?;
+        let got = outs[0].as_f32().map_err(|e| e.to_string())?;
+        let mut want = Vec::with_capacity(n_b * b * b);
+        for blk in &blocks {
+            want.extend_from_slice(SinkhornTape::forward(blk, tau, iters).output().data());
+        }
+        assert_close(got, &want, 1e-6)
+    });
+}

@@ -1,9 +1,10 @@
 //! Failure-injection tests: malformed inputs must produce errors, not
-//! panics or silent misbehaviour.
+//! panics or silent misbehaviour.  Everything here runs offline; the one
+//! PJRT-engine case is feature-gated with the engine itself.
 
 use std::path::{Path, PathBuf};
 
-use permllm::runtime::{Engine, Manifest};
+use permllm::runtime::{ExecBackend, Manifest, NativeEngine, TensorValue};
 use permllm::sparsity::NmConfig;
 use permllm::util::json::Json;
 
@@ -35,32 +36,96 @@ fn manifest_missing_sections_is_an_error() {
 }
 
 #[test]
-fn engine_rejects_wrong_input_arity_and_shape() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
-    let mut engine = Engine::load_lazy(&dir).unwrap();
+fn native_engine_rejects_unknown_artifacts() {
+    let mut engine = NativeEngine::default();
+    let err = engine.run("nonexistent", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown artifact"), "{err:#}");
+    // Malformed shape suffixes are errors too, not panics.
+    assert!(engine.run("sinkhorn_soft_", &[]).is_err());
+    assert!(engine.run("lcp_grad_0x0", &[]).is_err());
+    assert!(engine.run("sparse_fwd_axb", &[]).is_err());
+}
+
+#[test]
+fn native_engine_rejects_wrong_arity_and_shape() {
+    let mut engine = NativeEngine::default();
     // Wrong arity.
-    let err = match engine.run("lm_forward", &[]) {
-        Err(e) => e,
-        Ok(_) => panic!("accepted empty inputs"),
-    };
+    let err = engine.run("sinkhorn_soft_2x4", &[]).unwrap_err();
     assert!(format!("{err:#}").contains("inputs"), "{err:#}");
-    // Unknown artifact.
-    assert!(engine.run("nonexistent", &[]).is_err());
-    // Wrong element count on the first input.
-    let spec = engine.manifest().artifact("lm_forward").unwrap().clone();
-    let mut bad: Vec<xla::Literal> = Vec::new();
-    for _ in 0..spec.inputs.len() {
-        bad.push(xla::Literal::vec1(&[0.0f32]));
-    }
-    let err = match engine.run("lm_forward", &bad) {
-        Err(e) => e,
-        Ok(_) => panic!("accepted wrong shapes"),
-    };
+    // Wrong element count.
+    let bad = [
+        TensorValue::f32(vec![5], vec![0.0; 5]).unwrap(),
+        TensorValue::scalar(1.0),
+    ];
+    let err = engine.run("sinkhorn_soft_2x4", &bad).unwrap_err();
     assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    // Wrong dtype (i32 where f32 expected).
+    let bad_dtype = [
+        TensorValue::i32(vec![2, 4, 4], vec![0; 32]).unwrap(),
+        TensorValue::scalar(1.0),
+    ];
+    assert!(engine.run("sinkhorn_soft_2x4", &bad_dtype).is_err());
+}
+
+#[test]
+fn native_engine_lm_forward_requires_model() {
+    let mut engine = NativeEngine::default();
+    assert!(!engine.supports("lm_forward"));
+    let err = engine.run("lm_forward", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("model"), "{err:#}");
+}
+
+#[test]
+fn native_engine_sparse_fwd_rejects_bad_indices() {
+    use permllm::sparsity::{Compressed, NmMask};
+    use permllm::tensor::Mat;
+    use permllm::util::rng::Pcg32;
+
+    let mut rng = Pcg32::seeded(1);
+    let (c_out, c_in, t) = (4usize, 8usize, 3usize);
+    let w = Mat::randn(c_out, c_in, 1.0, &mut rng);
+    let mask = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+    let comp = Compressed::compress(&w, &mask);
+    let x = Mat::randn(t, c_in, 1.0, &mut rng);
+    let vals = TensorValue::f32(vec![c_out, comp.k()], comp.vals().to_vec()).unwrap();
+    let idx: Vec<i32> = comp.idx().iter().map(|&v| v as i32).collect();
+
+    let mut engine = NativeEngine::default();
+    let name = format!("sparse_fwd_{c_out}x{c_in}");
+
+    // Out-of-range permutation index.
+    let bad_src = TensorValue::i32(vec![c_in], vec![99; c_in]).unwrap();
+    let inputs = [
+        vals.clone(),
+        TensorValue::i32(vec![c_out, comp.k()], idx.clone()).unwrap(),
+        TensorValue::from_mat(&x),
+        bad_src,
+    ];
+    assert!(engine.run(&name, &inputs).is_err());
+
+    // In-range but duplicated permutation indices (not a permutation).
+    let mut dup: Vec<i32> = (0..c_in as i32).collect();
+    dup[1] = 0;
+    let inputs = [
+        vals.clone(),
+        TensorValue::i32(vec![c_out, comp.k()], idx.clone()).unwrap(),
+        TensorValue::from_mat(&x),
+        TensorValue::i32(vec![c_in], dup).unwrap(),
+    ];
+    let err = engine.run(&name, &inputs).unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+
+    // Negative column metadata.
+    let mut neg = idx.clone();
+    neg[0] = -1;
+    let src: Vec<i32> = (0..c_in as i32).collect();
+    let inputs = [
+        vals,
+        TensorValue::i32(vec![c_out, comp.k()], neg).unwrap(),
+        TensorValue::from_mat(&x),
+        TensorValue::i32(vec![c_in], src).unwrap(),
+    ];
+    assert!(engine.run(&name, &inputs).is_err());
 }
 
 #[test]
@@ -93,4 +158,39 @@ fn param_store_load_rejects_corrupt_files() {
     assert!(permllm::model::ParamStore::load(&p).is_err());
     std::fs::write(&p, b"PL").unwrap(); // truncated magic
     assert!(permllm::model::ParamStore::load(&p).is_err());
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use permllm::runtime::Engine;
+    use std::path::Path;
+
+    #[test]
+    fn engine_rejects_wrong_input_arity_and_shape() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny-m");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let mut engine = Engine::load_lazy(&dir).unwrap();
+        // Wrong arity.
+        let err = match engine.run_literals("lm_forward", &[]) {
+            Err(e) => e,
+            Ok(_) => panic!("accepted empty inputs"),
+        };
+        assert!(format!("{err:#}").contains("inputs"), "{err:#}");
+        // Unknown artifact.
+        assert!(engine.run_literals("nonexistent", &[]).is_err());
+        // Wrong element count on the first input.
+        let spec = engine.manifest().artifact("lm_forward").unwrap().clone();
+        let mut bad: Vec<xla::Literal> = Vec::new();
+        for _ in 0..spec.inputs.len() {
+            bad.push(xla::Literal::vec1(&[0.0f32]));
+        }
+        let err = match engine.run_literals("lm_forward", &bad) {
+            Err(e) => e,
+            Ok(_) => panic!("accepted wrong shapes"),
+        };
+        assert!(format!("{err:#}").contains("elements"), "{err:#}");
+    }
 }

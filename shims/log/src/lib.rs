@@ -1,0 +1,142 @@
+//! Offline shim of the `log` facade.
+//!
+//! Provides the five logging macros plus level filtering, with a built-in
+//! stderr backend (timestamped with seconds since first log).  The
+//! `permllm::util::logging::init` wrapper selects the level from the
+//! `PERMLLM_LOG` env var.  Source-compatible with the call sites in this
+//! workspace, not a general replacement for the real crate.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Severity of a log record (most to least severe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Maximum level that will be emitted (`Off` silences everything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Info as usize);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Whether a record at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Backend for the macros: filter, then print one line to stderr.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {args}", level.label());
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::__private_log($crate::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::__private_log($crate::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::__private_log($crate::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::__private_log($crate::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::__private_log($crate::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test so the global level is not mutated concurrently.
+    #[test]
+    fn filtering_and_macros() {
+        set_max_level(LevelFilter::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(LevelFilter::Trace);
+        assert!(enabled(Level::Trace));
+        set_max_level(LevelFilter::Off);
+        assert!(!enabled(Level::Error));
+
+        set_max_level(LevelFilter::Info);
+        let x = 41;
+        info!("answer-ish {x}");
+        warn!("{} {}", "two", "args");
+        error!("plain");
+        debug!("filtered out by default {x}");
+        trace!("also filtered {x}");
+    }
+}

@@ -1,0 +1,224 @@
+//! Typed offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla` crate links the PJRT C API (xla_extension) and cannot be
+//! fetched or built in the offline environment, so the `pjrt` cargo
+//! feature of `permllm` compiles against this stub instead: host-side
+//! [`Literal`] operations work for real (they are plain buffers), while
+//! anything that would need the PJRT runtime — building a client, parsing
+//! HLO, compiling, executing — returns a clear [`XlaError`] at *runtime*.
+//!
+//! This keeps `--features pjrt` type-checking (and its call sites honest)
+//! everywhere, and lets an environment that has the real xla_extension
+//! swap this path dependency for the genuine crate with no source change.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (Display + std::error::Error).
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl XlaError {
+    fn stub(what: &str) -> XlaError {
+        XlaError(format!(
+            "xla stub: {what} requires the real PJRT runtime (xla_extension); \
+             replace the `shims/xla` path dependency with the real `xla` crate"
+        ))
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types a [`Literal`] can hold (public because it appears in
+/// the [`NativeType`] conversion signatures; not part of the real API).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Sealed-ish conversion trait for supported element types.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Buf;
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Buf {
+        Buf::F32(data)
+    }
+
+    fn unwrap(buf: &Buf) -> Option<Vec<f32>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            Buf::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Buf {
+        Buf::I32(data)
+    }
+
+    fn unwrap(buf: &Buf) -> Option<Vec<i32>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            Buf::F32(_) => None,
+        }
+    }
+}
+
+/// A host tensor: flat buffer + dims.  Fully functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    buf: Buf,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], buf: T::wrap(data.to_vec()) }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.buf.len() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.buf.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), buf: self.buf.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf).ok_or_else(|| XlaError("to_vec: element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal.  Stub literals are never tuples (they
+    /// would come out of an execution, which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::stub("decomposing an execution result tuple"))
+    }
+}
+
+/// Parsed HLO module handle (opaque; unconstructible in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::stub("parsing HLO text"))
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::stub("fetching a device buffer"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::stub("executing a computation"))
+    }
+}
+
+/// PJRT client handle.  [`PjRtClient::cpu`] fails in the stub, so no
+/// client (and nothing downstream of one) can ever exist.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::stub("creating a CPU PJRT client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::stub("compiling a computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals_work() {
+        let l = Literal::vec1(&[7i32, 8]).reshape(&[2, 1]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_with_guidance() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

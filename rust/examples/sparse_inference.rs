@@ -1,107 +1,129 @@
-//! Sparse inference hot path: the `sparse_fwd` artifact (channel permute
-//! + compressed 2:4 SpMM) serving batched layer requests through the
-//! `ExecBackend` trait.
+//! Sparse serving hot path: prune a model, compress **every** linear to
+//! the Sparse-Tensor-Core layout once, and serve batched requests through
+//! the `serve` subsystem — micro-batched, routed through the
+//! `ExecBackend` trait, and pipelined across decoder layers.
 //!
-//! Prunes one layer with PermLLM, compresses it to the
-//! Sparse-Tensor-Core layout, then serves batches of activations —
-//! verifying numerics against the host dense path and reporting
-//! latency/throughput, serving-paper style.  Uses the native engine by
-//! default; with `--features pjrt` and built artifacts it serves the same
-//! requests from the AOT Pallas kernels instead.
+//! Reports per-layer and end-to-end tokens/s for a single-threaded
+//! baseline and for the parallel + pipelined configuration, then verifies
+//! the sparse outputs against the host dense-masked forward (and the two
+//! configurations against each other — the tiled kernel is bit-exact at
+//! any thread count).
 //!
 //! ```bash
 //! cargo run --release --example sparse_inference
+//! PERMLLM_BENCH_FAST=1 cargo run --release --example sparse_inference  # CI-sized
 //! ```
 
-use permllm::bench::trained_or_synth;
+use permllm::bench::{fast_mode, trained_or_synth};
 use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::lcp::LcpCfg;
-use permllm::model::{LinearKind, LinearRef};
 use permllm::pruning::Metric;
-use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine, TensorValue};
-use permllm::sparsity::Compressed;
+use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
+use permllm::serve::{BatcherCfg, Request, ServeCfg, ServeReport, Server, SparseModel};
 use permllm::tensor::Mat;
 use permllm::util::pool::default_threads;
 use permllm::util::rng::Pcg32;
 
+fn print_report(label: &str, report: &ServeReport) {
+    println!(
+        "[{label}] {} micro-batches, {} tokens in {:.4}s -> {:.0} tokens/s",
+        report.n_batches,
+        report.total_tokens,
+        report.total_seconds,
+        report.tokens_per_s()
+    );
+    for s in &report.stage_stats {
+        println!(
+            "[{label}]   layer {:>2}: {:>10.0} tokens/s (busy {:.4}s)",
+            s.layer,
+            s.tokens_per_s(),
+            s.seconds
+        );
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     permllm::util::logging::init();
 
-    // Prune one layer with PermLLM.
-    let (ps, prov) = trained_or_synth("tiny-m");
+    // Prune + compress once.  Fast mode (CI) uses the small model and a
+    // lighter workload; the full run uses tiny-m.
+    let (model_name, n_requests, rows) =
+        if fast_mode() { ("tiny-s", 12usize, 32usize) } else { ("tiny-m", 32, 128) };
+    let (ps, prov) = trained_or_synth(model_name);
     let calib = Corpus::build(CorpusKind::C4Like, 2024);
     let cfg = PipelineCfg {
-        lcp: LcpCfg { steps: 20, lr: 0.05, ..Default::default() },
+        lcp: LcpCfg { steps: if fast_mode() { 8 } else { 20 }, lr: 0.05, ..Default::default() },
         ..Default::default()
     };
     let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
-    let lin = LinearRef { layer: 0, kind: LinearKind::WGate };
-    let res = &pruned.layers[&lin];
-    let (c_out, c_in) = res.weight.shape();
-    println!("layer {} ({prov}): [{c_out} x {c_in}], 2:4-compressed", lin.param_name());
+    let sm = SparseModel::from_pruned(&pruned)?;
+    println!(
+        "{model_name} ({prov}): {} linears 2:4-compressed, {} MLP stages, storage {:.3}x dense",
+        ps.cfg().prunable_linears().len(),
+        sm.n_stages(),
+        sm.storage_bytes() as f64 / sm.dense_bytes() as f64
+    );
 
-    // Compress to the Sparse-Tensor-Core layout.
-    let comp = Compressed::compress(&res.weight, &res.mask);
-    let name = format!("sparse_fwd_{c_out}x{c_in}");
-    #[cfg_attr(not(feature = "pjrt"), allow(unused_mut))]
-    let mut rows = 128usize;
+    // The request workload (identical for every configuration).
+    let width = sm.width();
+    let make_requests = || {
+        let mut rng = Pcg32::seeded(5);
+        (0..n_requests)
+            .map(|id| Request { id: id as u64, x: Mat::randn(rows, width, 1.0, &mut rng) })
+            .collect::<Vec<Request>>()
+    };
+    let requests = make_requests();
+    let n_stages = sm.n_stages();
+    let server = Server::new(
+        sm,
+        ServeCfg { batcher: BatcherCfg { max_tokens: rows * 4, max_requests: 8 } },
+    );
+    println!(
+        "workload: {n_requests} requests x {rows} tokens, micro-batch budget {} tokens",
+        rows * 4
+    );
 
-    // Backend selection: native always works; PJRT serves the same name
-    // from the AOT Pallas kernels when artifacts are present.
-    let mut engine: Box<dyn ExecBackend> =
-        Box::new(NativeEngine::new(NativeCfg { threads: default_threads(), ..NativeCfg::default() }));
-    #[cfg(feature = "pjrt")]
-    {
-        let dir = std::path::Path::new("artifacts/tiny-m");
-        if dir.join("manifest.json").exists() {
-            match permllm::runtime::Engine::load_lazy(dir) {
-                Ok(e) => {
-                    if let Some(spec) = e.manifest().artifact(&name) {
-                        if let Some(x) = spec.inputs.iter().find(|i| i.name == "x") {
-                            rows = x.shape[0];
-                        }
-                        engine = Box::new(e);
-                    } else {
-                        eprintln!("artifacts lack {name}; using the native backend");
-                    }
-                }
-                Err(err) => eprintln!("pjrt engine unavailable ({err:#}); using native"),
-            }
-        }
+    // Baseline: one backend, one worker thread, no pipelining.
+    let mut engine1 = NativeEngine::new(NativeCfg { threads: 1, ..NativeCfg::default() });
+    let seq = server.run_sequential(make_requests(), &mut engine1)?;
+    print_report("threads=1 sequential", &seq);
+
+    // Parallel + pipelined: one backend per decoder layer.  Stages run
+    // concurrently, so the visible cores are divided across them rather
+    // than oversubscribed with n_stages x cores workers.
+    let cores = default_threads();
+    let threads = (cores / n_stages).max(1);
+    let engines: Vec<Box<dyn ExecBackend + Send>> = (0..n_stages)
+        .map(|_| {
+            Box::new(NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() }))
+                as Box<dyn ExecBackend + Send>
+        })
+        .collect();
+    let par = server.run_pipelined(make_requests(), engines)?;
+    print_report(&format!("threads/stage={threads} pipelined"), &par);
+    println!(
+        "speedup: {:.2}x end-to-end ({cores} core(s) across {n_stages} pipelined stages)",
+        par.tokens_per_s() / seq.tokens_per_s().max(1e-12)
+    );
+
+    // Determinism: the output-row-tiled kernel is bit-exact at any thread
+    // count, so both configurations must agree exactly.
+    for ((id_s, y_s), (_, y_p)) in seq.outputs.iter().zip(&par.outputs) {
+        anyhow::ensure!(y_s.data() == y_p.data(), "request {id_s}: configurations diverged");
     }
-    println!("serving {name} via the '{}' backend, {rows} tokens/request", engine.backend_name());
+    println!("threads=1 and threads={threads} outputs are bit-identical: OK");
 
-    // Static layer tensors, converted once.
-    let k = comp.k();
-    let vals = TensorValue::f32(vec![c_out, k], comp.vals().to_vec())?;
-    let idx = TensorValue::i32(vec![c_out, k], comp.idx().iter().map(|&v| v as i32).collect())?;
-    let src = TensorValue::i32(vec![c_in], res.src_of.iter().map(|&v| v as i32).collect())?;
-
-    // Serve batches.
-    let mut rng = Pcg32::seeded(5);
-    let n_requests = 32;
-    let mut total_s = 0.0f64;
+    // Parity: sparse serving vs the host dense-masked forward.
     let mut max_err = 0.0f32;
-    for _ in 0..n_requests {
-        let x = Mat::randn(rows, c_in, 1.0, &mut rng);
-        let inputs = [vals.clone(), idx.clone(), TensorValue::from_mat(&x), src.clone()];
-        let t0 = std::time::Instant::now();
-        let outs = engine.run(&name, &inputs)?;
-        total_s += t0.elapsed().as_secs_f64();
-        // Host reference: permute activations, dense matmul on the masked weight.
-        let want = x.permute_cols(&res.src_of).matmul_bt(&res.weight);
-        for (a, b) in outs[0].as_f32()?.iter().zip(want.data()) {
+    for ((_, got), req) in par.outputs.iter().zip(&requests) {
+        let want = server.model().dense_forward(&req.x);
+        for (a, b) in got.data().iter().zip(want.data()) {
             max_err = max_err.max((a - b).abs());
         }
     }
-    let per_req_ms = total_s / n_requests as f64 * 1e3;
-    let tok_per_s = (rows * n_requests) as f64 / total_s;
-    println!(
-        "{n_requests} requests x {rows} tokens: {per_req_ms:.2} ms/request, {tok_per_s:.0} tokens/s"
-    );
-    println!("max |backend - host| = {max_err:.2e}");
+    println!("max |sparse - dense-masked| = {max_err:.2e}");
     anyhow::ensure!(max_err < 1e-3, "numeric mismatch");
-    println!("sparse_fwd backend matches the host sparse path: OK");
+    println!("sparse serving matches the dense-masked reference: OK");
     Ok(())
 }

@@ -22,8 +22,29 @@ pub fn trained_or_synth(name: &str) -> (ParamStore, &'static str) {
 }
 
 /// Fast-mode scaling for bench workloads (`PERMLLM_BENCH_FAST=1`).
+///
+/// Off-values are honoured: `PERMLLM_BENCH_FAST=0` (or `false`/`off`/
+/// `no`/empty) disables fast mode instead of silently enabling it the
+/// way a bare `is_ok()` check used to.
 pub fn fast_mode() -> bool {
-    std::env::var("PERMLLM_BENCH_FAST").is_ok()
+    fast_mode_value(std::env::var("PERMLLM_BENCH_FAST").ok().as_deref())
+}
+
+/// Pure interpretation of the `PERMLLM_BENCH_FAST` value (testable
+/// without mutating the process environment, which would race with
+/// parallel tests).
+fn fast_mode_value(v: Option<&str>) -> bool {
+    match v {
+        None => false,
+        Some(raw) => {
+            let t = raw.trim();
+            !(t.is_empty()
+                || t == "0"
+                || t.eq_ignore_ascii_case("false")
+                || t.eq_ignore_ascii_case("off")
+                || t.eq_ignore_ascii_case("no"))
+        }
+    }
 }
 
 /// Scale an iteration/step count down in fast mode.
@@ -32,5 +53,25 @@ pub fn scaled(n: usize) -> usize {
         (n / 4).max(1)
     } else {
         n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fast_mode_value;
+
+    #[test]
+    fn unset_and_off_values_disable_fast_mode() {
+        let off = [None, Some(""), Some("0"), Some("false"), Some("FALSE"), Some("off"), Some("No")];
+        for v in off.into_iter().chain([Some(" 0 ")]) {
+            assert!(!fast_mode_value(v), "{v:?} should disable fast mode");
+        }
+    }
+
+    #[test]
+    fn on_values_enable_fast_mode() {
+        for v in ["1", "true", "yes", "on", "anything-else"] {
+            assert!(fast_mode_value(Some(v)), "{v:?} should enable fast mode");
+        }
     }
 }

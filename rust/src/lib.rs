@@ -54,6 +54,15 @@
 //! assert!(pruned.mask.verify());
 //! ```
 //!
+//! ## Serving
+//!
+//! [`serve`] turns the sparse hot path into a subsystem: a
+//! [`serve::SparseModel`] caches every pruned linear in compressed form,
+//! a micro-batcher coalesces the request queue, and
+//! [`serve::Server`] runs decoder-layer stages either sequentially or
+//! pipelined across per-stage backends (`permllm serve`, or the
+//! `sparse_inference` example for the benchmark loop).
+//!
 //! See `examples/` (`quickstart`, `prune_llm`, `end_to_end`,
 //! `sparse_inference`, `ablation_lcp`) and the README for the full tour.
 
@@ -67,6 +76,7 @@ pub mod model;
 pub mod pruning;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

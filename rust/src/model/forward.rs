@@ -40,7 +40,9 @@ impl Captured {
     }
 }
 
-fn rmsnorm(x: &Mat, g: &Mat, eps: f32) -> Mat {
+/// RMSNorm with gain `g: [1, d]`.  Shared with the serving subsystem's
+/// dense reference path (`crate::serve`) so the two cannot drift.
+pub(crate) fn rmsnorm(x: &Mat, g: &Mat, eps: f32) -> Mat {
     let (t, d) = x.shape();
     let mut out = Mat::zeros(t, d);
     for r in 0..t {
@@ -51,6 +53,18 @@ fn rmsnorm(x: &Mat, g: &Mat, eps: f32) -> Mat {
         for c in 0..d {
             orow[c] = row[c] * inv * g[(0, c)];
         }
+    }
+    out
+}
+
+/// SwiGLU gate: `silu(gate) ⊙ up`, elementwise.  Shared with the serving
+/// subsystem's dense reference path so the two cannot drift.
+pub(crate) fn swiglu(gate: &Mat, up: &Mat) -> Mat {
+    assert_eq!(gate.shape(), up.shape());
+    let mut out = Mat::zeros(gate.rows(), gate.cols());
+    for (o, (&g, &u)) in out.data_mut().iter_mut().zip(gate.data().iter().zip(up.data())) {
+        let silu = g / (1.0 + (-g).exp());
+        *o = silu * u;
     }
     out
 }
@@ -159,16 +173,7 @@ fn forward_seq(
         }
         let gate = m.matmul_bt(ps.get(&name("w_gate")));
         let up = m.matmul_bt(ps.get(&name("w_up")));
-        let mut hmid = Mat::zeros(t, cfg.ffn);
-        for r in 0..t {
-            let g = gate.row(r);
-            let u = up.row(r);
-            let out = hmid.row_mut(r);
-            for c in 0..cfg.ffn {
-                let silu = g[c] / (1.0 + (-g[c]).exp());
-                out[c] = silu * u[c];
-            }
-        }
+        let hmid = swiglu(&gate, &up);
         if let Some(c) = cap.as_deref_mut() {
             c.push(LinearRef { layer: l, kind: LinearKind::WDown }, hmid.clone());
         }

@@ -95,6 +95,18 @@ impl TensorValue {
         let (r, c) = (shape[0], shape[1]);
         Ok(Mat::from_vec(r, c, self.as_f32()?.to_vec()))
     }
+
+    /// Consume a rank-2 f32 tensor into a host matrix without copying the
+    /// buffer (the serving hot path turns every artifact output into a
+    /// `Mat` — see [`crate::serve`]).
+    pub fn into_mat(self) -> Result<Mat> {
+        let shape = self.shape().to_vec();
+        anyhow::ensure!(shape.len() == 2, "expected rank-2 tensor, got shape {shape:?}");
+        match self {
+            TensorValue::F32 { data, .. } => Ok(Mat::from_vec(shape[0], shape[1], data)),
+            TensorValue::I32 { .. } => Err(anyhow!("expected f32 tensor, got i32")),
+        }
+    }
 }
 
 /// An executor of named artifacts (see the module docs for the contract).
@@ -260,5 +272,13 @@ mod tests {
     fn to_mat_rejects_wrong_rank() {
         let v = TensorValue::f32(vec![8], vec![0.0; 8]).unwrap();
         assert!(v.to_mat().is_err());
+    }
+
+    #[test]
+    fn into_mat_moves_rank_two_f32() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(TensorValue::from_mat(&m).into_mat().unwrap(), m);
+        assert!(TensorValue::f32(vec![4], vec![0.0; 4]).unwrap().into_mat().is_err());
+        assert!(TensorValue::i32(vec![2, 2], vec![0; 4]).unwrap().into_mat().is_err());
     }
 }

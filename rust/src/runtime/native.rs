@@ -197,32 +197,10 @@ impl NativeEngine {
         let x = inputs[2].to_mat()?;
         let xp = x.permute_cols(&src);
 
-        // Row-tiled sparse matmul over the worker pool.
-        let t = xp.rows();
-        let n_chunks = self.cfg.threads.max(1).min(t.max(1));
-        let y = if n_chunks <= 1 {
-            comp.matmul_xt(&xp)
-        } else {
-            let per = t.div_ceil(n_chunks);
-            let tiles = parallel_map(n_chunks, self.cfg.threads, |ci| {
-                let lo = ci * per;
-                let hi = ((ci + 1) * per).min(t);
-                let mut sub = Mat::zeros(hi - lo, c_in);
-                for (r, src_row) in (lo..hi).enumerate() {
-                    sub.row_mut(r).copy_from_slice(xp.row(src_row));
-                }
-                comp.matmul_xt(&sub)
-            });
-            let mut out = Mat::zeros(t, c_out);
-            let mut r0 = 0;
-            for tile in tiles {
-                for r in 0..tile.rows() {
-                    out.row_mut(r0 + r).copy_from_slice(tile.row(r));
-                }
-                r0 += tile.rows();
-            }
-            out
-        };
+        // Output-row-tiled sparse matmul over the worker pool — the tiling
+        // (and its bit-exactness vs sequential) lives in `Compressed`, so
+        // the serve subsystem and this artifact share one kernel.
+        let y = comp.matmul_xt_threads(&xp, self.cfg.threads);
         let (yr, yc) = y.shape();
         Ok(vec![TensorValue::f32(vec![yr, yc], y.into_vec())?])
     }

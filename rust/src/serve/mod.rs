@@ -1,0 +1,41 @@
+//! Batched multi-layer sparse serving — the paper's Table 3 hot path
+//! turned into a subsystem.
+//!
+//! The pruning pipeline produces per-linear N:M weights; this module
+//! serves them:
+//!
+//! * [`SparseModel`] compresses **every** prunable linear of a
+//!   [`crate::coordinator::PrunedModel`] to the Sparse-Tensor-Core layout
+//!   exactly once (values + u8 group metadata + permutation, converted to
+//!   artifact tensors at build time) and runs the decoder layers' SwiGLU
+//!   MLP sublayers end-to-end on the sparse path, each
+//!   `sparse_fwd_{c_out}x{c_in}` execution routed through the
+//!   [`crate::runtime::ExecBackend`] trait — the same serving loop works
+//!   on the pure-Rust [`crate::runtime::NativeEngine`] and any
+//!   shape-polymorphic PJRT backend (fixed-shape AOT artifacts are
+//!   rejected up front; see [`Server`]).
+//! * [`MicroBatcher`] coalesces the FIFO request queue into
+//!   token-budgeted micro-batches; [`ReorderBuffer`] keeps completions in
+//!   submission order.
+//! * [`Server`] drives the whole thing, either sequentially
+//!   ([`Server::run_sequential`], any backend) or with **cross-layer
+//!   pipelining** ([`Server::run_pipelined`]): one backend per decoder
+//!   layer connected by channels ([`crate::util::pool::pipeline_map`]),
+//!   so layer `L` of batch `i` overlaps layer `L+1` of batch `i-1` while
+//!   `Compressed::matmul_xt_threads` tiles each individual matmul across
+//!   worker threads.
+//!
+//! Numerics: the sparse path matches the host dense-masked reference
+//! ([`SparseModel::dense_forward`]) within 1e-3, and the pipelined and
+//! sequential modes are bit-identical (same kernels, same tiling).
+//!
+//! Entry points: the `permllm serve` CLI subcommand and the
+//! `sparse_inference` example (per-layer + end-to-end tokens/s).
+
+mod batcher;
+mod model;
+mod server;
+
+pub use batcher::{BatcherCfg, MicroBatch, MicroBatcher, ReorderBuffer, Request};
+pub use model::{SparseLayer, SparseModel};
+pub use server::{ServeCfg, ServeReport, Server, StageStats};

@@ -1,0 +1,340 @@
+//! Multi-layer sparse model: every prunable linear of a pruned model
+//! compressed to the N:M serving layout once, cached, and served through
+//! the [`ExecBackend`] artifact interface.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::PrunedModel;
+use crate::model::{rmsnorm, swiglu, LinearKind, LinearRef, ModelConfig};
+use crate::runtime::{ExecBackend, TensorValue};
+use crate::sparsity::{Compressed, NmConfig};
+use crate::tensor::Mat;
+
+/// One compressed linear, ready to serve: the `sparse_fwd` artifact name
+/// plus its static inputs (vals / idx / src) converted exactly once at
+/// build time, so per-request work is only the activation conversion.
+#[derive(Debug, Clone)]
+pub struct SparseLayer {
+    pub lin: LinearRef,
+    pub artifact: String,
+    nm: NmConfig,
+    c_out: usize,
+    c_in: usize,
+    /// Compressed-format footprint (f32 values + u8 group offsets),
+    /// recorded at build time — the transient `Compressed` itself is not
+    /// retained, so resident memory is just the artifact tensors below.
+    storage_bytes: usize,
+    /// Cached artifact inputs.
+    vals: TensorValue,
+    idx: TensorValue,
+    src: TensorValue,
+    /// Channel permutation (`src_of`) kept on the host side for the
+    /// dense verification path; the dense weight itself is materialized
+    /// on demand so serving memory stays at the compressed footprint.
+    src_of: Vec<usize>,
+}
+
+impl SparseLayer {
+    fn build(lin: LinearRef, res: &crate::pruning::PruneResult) -> Result<SparseLayer> {
+        let comp = Compressed::compress(&res.weight, &res.mask);
+        let (c_out, c_in) = comp.shape();
+        let k = comp.k();
+        let vals = TensorValue::f32(vec![c_out, k], comp.vals().to_vec())?;
+        let idx =
+            TensorValue::i32(vec![c_out, k], comp.idx().iter().map(|&v| v as i32).collect())?;
+        anyhow::ensure!(
+            res.src_of.len() == c_in,
+            "layer {}: src_of has {} entries, expected {c_in}",
+            lin.param_name(),
+            res.src_of.len()
+        );
+        let src = TensorValue::i32(vec![c_in], res.src_of.iter().map(|&v| v as i32).collect())?;
+        Ok(SparseLayer {
+            lin,
+            artifact: format!("sparse_fwd_{c_out}x{c_in}"),
+            nm: comp.cfg(),
+            c_out,
+            c_in,
+            storage_bytes: comp.storage_bytes(),
+            vals,
+            idx,
+            src,
+            src_of: res.src_of.clone(),
+        })
+    }
+
+    /// `(C_out, C_in)` of the underlying weight.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.c_out, self.c_in)
+    }
+
+    /// Compressed storage footprint of this layer.
+    pub fn storage_bytes(&self) -> usize {
+        self.storage_bytes
+    }
+
+    /// `y = x W_sparse^T` through the backend's `sparse_fwd` artifact
+    /// (the artifact permutes `x` by `src` internally). `x` is
+    /// `[T, C_in]` in ORIGINAL channel order.
+    pub fn forward(&self, engine: &mut dyn ExecBackend, x: &Mat) -> Result<Mat> {
+        let inputs =
+            [self.vals.clone(), self.idx.clone(), TensorValue::from_mat(x), self.src.clone()];
+        let mut outs = engine.run(&self.artifact, &inputs)?;
+        anyhow::ensure!(
+            outs.len() == 1,
+            "artifact {} returned {} outputs, expected 1",
+            self.artifact,
+            outs.len()
+        );
+        outs.pop().expect("len checked").into_mat()
+    }
+
+    /// Host dense reference of [`SparseLayer::forward`]: permute the
+    /// activations, dense matmul on the masked weight.  Materializes the
+    /// dense weight per call from the cached artifact tensors — this is
+    /// the *verification* path; keeping a permanent dense copy would make
+    /// the compressed serving footprint a lie.
+    pub fn forward_dense(&self, x: &Mat) -> Mat {
+        let vals = self.vals.as_f32().expect("vals dtype").to_vec();
+        let idx: Vec<u32> =
+            self.idx.as_i32().expect("idx dtype").iter().map(|&v| v as u32).collect();
+        let comp = Compressed::from_parts(self.nm, self.c_out, self.c_in, vals, idx)
+            .expect("layer was built from a valid compressed weight");
+        x.permute_cols(&self.src_of).matmul_bt(&comp.to_dense())
+    }
+}
+
+/// All compressed linears of a pruned model plus the host glue (norms,
+/// SwiGLU) needed to run the decoder layers' MLP sublayers end-to-end on
+/// the sparse path.
+///
+/// The serving pipeline treats each decoder layer's MLP sublayer
+/// (`x + W_down(silu(W_gate(xn)) ⊙ W_up(xn))`, `xn = rmsnorm(x)`) as one
+/// pipeline stage: three `sparse_fwd` executions per stage, `[T, d]` in
+/// and `[T, d]` out, so stages chain across decoder layers.  Attention
+/// sublayers keep their compressed weights cached here too (served via
+/// [`SparseModel::linear`]), but their softmax/RoPE glue stays on the
+/// host path for now — see ROADMAP.
+pub struct SparseModel {
+    cfg: ModelConfig,
+    nm: NmConfig,
+    layers: HashMap<LinearRef, SparseLayer>,
+    /// Per-decoder-layer MLP norm gain `[1, d]`.
+    mlp_norms: Vec<Mat>,
+    norm_eps: f32,
+}
+
+impl SparseModel {
+    /// Compress every pruned linear of `pruned` once.  Fails on a Dense
+    /// (unpruned) model or when any prunable linear lacks a prune result.
+    pub fn from_pruned(pruned: &PrunedModel) -> Result<SparseModel> {
+        let cfg = pruned.params.cfg().clone();
+        let some = pruned
+            .layers
+            .values()
+            .next()
+            .ok_or_else(|| anyhow!("model has no pruned layers to serve (Dense method?)"))?;
+        let nm = some.mask.cfg();
+        let mut layers = HashMap::new();
+        for lin in cfg.prunable_linears() {
+            let res = pruned
+                .layers
+                .get(&lin)
+                .ok_or_else(|| anyhow!("no prune result for {}", lin.param_name()))?;
+            anyhow::ensure!(
+                res.mask.cfg() == nm,
+                "mixed N:M patterns: {} is {:?}, expected {nm:?}",
+                lin.param_name(),
+                res.mask.cfg()
+            );
+            layers.insert(lin, SparseLayer::build(lin, res)?);
+        }
+        let mlp_norms = (0..cfg.n_layers)
+            .map(|l| pruned.params.get(&format!("layers.{l}.mlp_norm")).clone())
+            .collect();
+        let norm_eps = cfg.norm_eps;
+        Ok(SparseModel { cfg, nm, layers, mlp_norms, norm_eps })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn nm(&self) -> NmConfig {
+        self.nm
+    }
+
+    /// Serving pipeline depth (one stage per decoder layer).
+    pub fn n_stages(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    /// Activation width at every stage boundary.
+    pub fn width(&self) -> usize {
+        self.cfg.dim
+    }
+
+    /// A cached compressed linear.
+    pub fn linear(&self, lin: LinearRef) -> &SparseLayer {
+        &self.layers[&lin]
+    }
+
+    /// Total compressed storage across every cached linear.
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.values().map(SparseLayer::storage_bytes).sum()
+    }
+
+    /// Dense f32 storage the same linears would occupy.
+    pub fn dense_bytes(&self) -> usize {
+        self.layers
+            .values()
+            .map(|l| {
+                let (o, i) = l.shape();
+                o * i * 4
+            })
+            .sum()
+    }
+
+    /// One pipeline stage on the sparse path: decoder layer `layer`'s MLP
+    /// sublayer, `x: [T, d]` -> `[T, d]`.
+    pub fn mlp_stage(&self, engine: &mut dyn ExecBackend, layer: usize, x: &Mat) -> Result<Mat> {
+        let xn = rmsnorm(x, &self.mlp_norms[layer], self.norm_eps);
+        let gate = self.layers[&LinearRef { layer, kind: LinearKind::WGate }].forward(engine, &xn)?;
+        let up = self.layers[&LinearRef { layer, kind: LinearKind::WUp }].forward(engine, &xn)?;
+        let h = swiglu(&gate, &up);
+        let down = self.layers[&LinearRef { layer, kind: LinearKind::WDown }].forward(engine, &h)?;
+        Ok(x.add(&down))
+    }
+
+    /// Sparse forward through every decoder layer's MLP stage in order.
+    pub fn forward(&self, engine: &mut dyn ExecBackend, x: &Mat) -> Result<Mat> {
+        let mut cur = x.clone();
+        for layer in 0..self.n_stages() {
+            cur = self.mlp_stage(engine, layer, &cur)?;
+        }
+        Ok(cur)
+    }
+
+    /// Host dense-masked reference of [`SparseModel::mlp_stage`] — same
+    /// math, folded dense weights, no backend.
+    pub fn dense_stage(&self, layer: usize, x: &Mat) -> Mat {
+        let xn = rmsnorm(x, &self.mlp_norms[layer], self.norm_eps);
+        let gate = self.layers[&LinearRef { layer, kind: LinearKind::WGate }].forward_dense(&xn);
+        let up = self.layers[&LinearRef { layer, kind: LinearKind::WUp }].forward_dense(&xn);
+        let h = swiglu(&gate, &up);
+        let down = self.layers[&LinearRef { layer, kind: LinearKind::WDown }].forward_dense(&h);
+        x.add(&down)
+    }
+
+    /// Host dense-masked reference of [`SparseModel::forward`].
+    pub fn dense_forward(&self, x: &Mat) -> Mat {
+        let mut cur = x.clone();
+        for layer in 0..self.n_stages() {
+            cur = self.dense_stage(layer, &cur);
+        }
+        cur
+    }
+
+    /// Every artifact name this model serves through — for checking a
+    /// backend's coverage up front.
+    pub fn required_artifacts(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.layers.values().map(|l| l.artifact.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::coordinator::{prune_model, PipelineCfg, PruneMethod};
+    use crate::data::{Corpus, CorpusKind};
+    use crate::lcp::LcpCfg;
+    use crate::model::synth_trained_params;
+    use crate::pruning::Metric;
+    use crate::runtime::{NativeCfg, NativeEngine};
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    pub(crate) fn tiny_sparse_model() -> SparseModel {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 11);
+        let corpus = Corpus::build(CorpusKind::C4Like, 5);
+        let pc = PipelineCfg {
+            calib_seqs: 2,
+            calib_len: 32,
+            calib_rows: 32,
+            lcp: LcpCfg { block: 16, steps: 6, lr: 0.1, ..Default::default() },
+            ..Default::default()
+        };
+        let pruned = prune_model(&ps, &corpus, PruneMethod::OneShot(Metric::Wanda), &pc);
+        SparseModel::from_pruned(&pruned).unwrap()
+    }
+
+    #[test]
+    fn compresses_every_prunable_linear() {
+        let sm = tiny_sparse_model();
+        assert_eq!(sm.layers.len(), sm.cfg().prunable_linears().len());
+        // 2:4 layers: values alone are half the dense bytes; metadata adds
+        // 1/8 more => strictly between 0.5x and 0.65x dense.
+        assert!(sm.storage_bytes() > sm.dense_bytes() / 2);
+        assert!(sm.storage_bytes() <= sm.dense_bytes() * 65 / 100);
+        assert_eq!(sm.n_stages(), sm.cfg().n_layers);
+    }
+
+    #[test]
+    fn dense_model_is_rejected() {
+        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+        let ps = synth_trained_params(&cfg, 11);
+        let corpus = Corpus::build(CorpusKind::C4Like, 5);
+        let pruned =
+            prune_model(&ps, &corpus, PruneMethod::Dense, &PipelineCfg::default());
+        assert!(SparseModel::from_pruned(&pruned).is_err());
+    }
+
+    #[test]
+    fn layer_forward_matches_dense_reference() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let mut rng = Pcg32::seeded(3);
+        for lin in sm.cfg().prunable_linears() {
+            let layer = sm.linear(lin);
+            let (_, c_in) = layer.shape();
+            let x = Mat::randn(5, c_in, 1.0, &mut rng);
+            let got = layer.forward(&mut engine, &x).unwrap();
+            let want = layer.forward_dense(&x);
+            assert_close(got.data(), want.data(), 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_end_to_end_forward_matches_dense_masked_forward() {
+        crate::util::testkit::check_n("serve-parity", 6, |rng| {
+            let sm = tiny_sparse_model();
+            let threads = 1 + rng.below_usize(3);
+            let mut engine = NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() });
+            let t = 1 + rng.below_usize(6);
+            let x = Mat::randn(t, sm.width(), 1.0, rng);
+            let got = sm.forward(&mut engine, &x).map_err(|e| format!("{e:#}"))?;
+            let want = sm.dense_forward(&x);
+            assert_close(got.data(), want.data(), 1e-3)
+                .map_err(|e| format!("threads={threads} t={t}: {e}"))
+        });
+    }
+
+    #[test]
+    fn required_artifacts_are_supported_by_native() {
+        let sm = tiny_sparse_model();
+        let engine = NativeEngine::default();
+        for name in sm.required_artifacts() {
+            assert!(
+                crate::runtime::ExecBackend::supports(&engine, &name),
+                "native backend lacks {name}"
+            );
+        }
+    }
+}

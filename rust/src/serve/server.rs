@@ -1,0 +1,403 @@
+//! The serving loop: micro-batch the request queue, run batches through
+//! the decoder-layer stages, and hand per-request outputs back in
+//! submission order.
+//!
+//! Two execution modes, same math:
+//!
+//! * [`Server::run_sequential`] — one [`ExecBackend`], stages executed in
+//!   order per batch.  Works with any backend, including non-`Send` ones
+//!   (the PJRT engine) — though backends with a *fixed* AOT activation
+//!   shape are rejected up front; see `check_backend`.
+//! * [`Server::run_pipelined`] — one backend *per stage*; batches flow
+//!   through a channel-connected stage chain
+//!   ([`crate::util::pool::pipeline_map`]) so stage `L` of batch `i`
+//!   overlaps stage `L+1` of batch `i-1`, on top of the per-stage
+//!   output-row-tile parallelism inside `Compressed::matmul_xt_threads`.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatcherCfg, MicroBatch, MicroBatcher, ReorderBuffer, Request};
+use super::model::SparseModel;
+use crate::runtime::ExecBackend;
+use crate::tensor::Mat;
+use crate::util::pool::pipeline_map;
+
+/// Serving configuration (micro-batcher limits).
+#[derive(Debug, Clone, Default)]
+pub struct ServeCfg {
+    pub batcher: BatcherCfg,
+}
+
+/// Wall-clock + token accounting for one pipeline stage (decoder layer).
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub layer: usize,
+    /// Summed busy seconds across every batch that passed this stage.
+    pub seconds: f64,
+    /// Tokens processed by this stage.
+    pub tokens: usize,
+}
+
+impl StageStats {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.tokens as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Result of serving a request set to completion.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Per-request outputs in submission order.
+    pub outputs: Vec<(u64, Mat)>,
+    /// Per-decoder-layer busy time.
+    pub stage_stats: Vec<StageStats>,
+    /// End-to-end wall-clock of the whole run.
+    pub total_seconds: f64,
+    /// Total tokens served (summed over requests).
+    pub total_tokens: usize,
+    /// Micro-batches formed by the batcher.
+    pub n_batches: usize,
+}
+
+impl ServeReport {
+    /// End-to-end serving throughput.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.total_tokens as f64 / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A batch mid-flight: activations plus per-stage timing breadcrumbs.
+struct BatchWork {
+    batch: MicroBatch,
+    x: Mat,
+    stage_s: Vec<f64>,
+    err: Option<String>,
+}
+
+/// Multi-layer sparse serving front-end over a [`SparseModel`].
+pub struct Server {
+    model: SparseModel,
+    cfg: ServeCfg,
+}
+
+impl Server {
+    pub fn new(model: SparseModel, cfg: ServeCfg) -> Server {
+        Server { model, cfg }
+    }
+
+    pub fn model(&self) -> &SparseModel {
+        &self.model
+    }
+
+    /// Queue + coalesce `requests` into micro-batches (submission order).
+    fn coalesce(&self, requests: Vec<Request>) -> Result<Vec<MicroBatch>> {
+        anyhow::ensure!(!requests.is_empty(), "no requests to serve");
+        let mut batcher = MicroBatcher::new(self.model.width(), self.cfg.batcher.clone());
+        for req in requests {
+            batcher.push(req)?;
+        }
+        Ok(batcher.drain())
+    }
+
+    /// Check `engine` serves every artifact the model needs, up front.
+    ///
+    /// Backends that bake the activation shape into the artifact (the
+    /// PJRT engine's AOT manifest does) are rejected here rather than
+    /// mid-run: the micro-batcher produces variable-length token batches
+    /// (e.g. a smaller tail batch), which a fixed `[T, C_in]` input
+    /// cannot accept.  Pad-to-shape batching is a ROADMAP item.
+    fn check_backend(&self, engine: &dyn ExecBackend) -> Result<()> {
+        for name in self.model.required_artifacts() {
+            anyhow::ensure!(
+                engine.supports(&name),
+                "backend '{}' does not serve artifact '{name}'",
+                engine.backend_name()
+            );
+            if let Some(shape) = engine.input_shape(&name, "x") {
+                anyhow::bail!(
+                    "backend '{}' fixes the activation shape of '{name}' to {shape:?}; \
+                     serving needs shape-polymorphic artifacts (pad-to-shape micro-batching \
+                     is on the ROADMAP)",
+                    engine.backend_name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve `requests` on a single backend, stages in order per batch.
+    pub fn run_sequential(
+        &self,
+        requests: Vec<Request>,
+        engine: &mut dyn ExecBackend,
+    ) -> Result<ServeReport> {
+        self.check_backend(engine)?;
+        let batches = self.coalesce(requests)?;
+        let n_stages = self.model.n_stages();
+        let t0 = Instant::now();
+        let mut works: Vec<BatchWork> = Vec::with_capacity(batches.len());
+        for mut batch in batches {
+            // Move the stacked activations into the work item (no copy);
+            // `finish` puts the final-stage output back into the batch.
+            let x = std::mem::replace(&mut batch.x, Mat::zeros(0, 0));
+            let stage_s = Vec::with_capacity(n_stages);
+            let mut work = BatchWork { x, batch, stage_s, err: None };
+            for layer in 0..n_stages {
+                let s0 = Instant::now();
+                match self.model.mlp_stage(engine, layer, &work.x) {
+                    Ok(y) => work.x = y,
+                    Err(e) => {
+                        work.err = Some(format!("{e:#}"));
+                        break;
+                    }
+                }
+                work.stage_s.push(s0.elapsed().as_secs_f64());
+            }
+            works.push(work);
+        }
+        self.finish(works, t0.elapsed().as_secs_f64())
+    }
+
+    /// Serve `requests` with cross-layer pipelining: one backend per
+    /// stage (engines beyond `n_stages` are unused; fewer is an error —
+    /// fall back to [`Server::run_sequential`] with a single backend).
+    pub fn run_pipelined(
+        &self,
+        requests: Vec<Request>,
+        engines: Vec<Box<dyn ExecBackend + Send>>,
+    ) -> Result<ServeReport> {
+        let n_stages = self.model.n_stages();
+        anyhow::ensure!(
+            engines.len() >= n_stages,
+            "pipelined serving needs one backend per stage: got {}, need {n_stages}",
+            engines.len()
+        );
+        for engine in &engines {
+            self.check_backend(engine.as_ref())?;
+        }
+        let batches = self.coalesce(requests)?;
+        let t0 = Instant::now();
+        let model = &self.model;
+        let stages: Vec<_> = engines
+            .into_iter()
+            .take(n_stages)
+            .enumerate()
+            .map(|(layer, mut engine)| {
+                move |mut work: BatchWork| {
+                    if work.err.is_none() {
+                        let s0 = Instant::now();
+                        match model.mlp_stage(engine.as_mut(), layer, &work.x) {
+                            Ok(y) => {
+                                work.x = y;
+                                work.stage_s.push(s0.elapsed().as_secs_f64());
+                            }
+                            Err(e) => work.err = Some(format!("{e:#}")),
+                        }
+                    }
+                    work
+                }
+            })
+            .collect();
+        let works_in: Vec<BatchWork> = batches
+            .into_iter()
+            .map(|mut batch| {
+                let x = std::mem::replace(&mut batch.x, Mat::zeros(0, 0));
+                BatchWork { x, batch, stage_s: Vec::with_capacity(n_stages), err: None }
+            })
+            .collect();
+        let works = pipeline_map(works_in, stages);
+        self.finish(works, t0.elapsed().as_secs_f64())
+    }
+
+    /// Aggregate stats, reorder to submission order, split per request.
+    fn finish(&self, works: Vec<BatchWork>, total_seconds: f64) -> Result<ServeReport> {
+        let n_stages = self.model.n_stages();
+        let n_batches = works.len();
+        let mut stage_stats: Vec<StageStats> = (0..n_stages)
+            .map(|layer| StageStats { layer, seconds: 0.0, tokens: 0 })
+            .collect();
+        // Completions can land out of submission order (out-of-order
+        // engines); the reorder buffer restores queue order by `seq`.
+        let mut reorder = ReorderBuffer::new();
+        let mut ordered: Vec<MicroBatch> = Vec::with_capacity(n_batches);
+        let mut total_tokens = 0usize;
+        for work in works {
+            if let Some(err) = work.err {
+                return Err(anyhow!("batch {} failed: {err}", work.batch.seq));
+            }
+            // Restore the batch's activations (now the final-stage output)
+            // before reading its token count — the run loop moved them out.
+            let mut batch = work.batch;
+            batch.x = work.x;
+            let tokens = batch.tokens();
+            total_tokens += tokens;
+            for (layer, s) in work.stage_s.iter().enumerate() {
+                stage_stats[layer].seconds += s;
+                stage_stats[layer].tokens += tokens;
+            }
+            for (_, b) in reorder.push(batch.seq, batch) {
+                ordered.push(b);
+            }
+        }
+        anyhow::ensure!(reorder.is_empty(), "serving lost a batch (seq gap)");
+        let mut outputs = Vec::new();
+        for done in &ordered {
+            // `x` now holds the final-stage output; spans still index it.
+            outputs.extend(done.split(&done.x));
+        }
+        Ok(ServeReport { outputs, stage_stats, total_seconds, total_tokens, n_batches })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{NativeCfg, NativeEngine};
+    use crate::serve::model::tests::tiny_sparse_model;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn requests(n: usize, rows: usize, width: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|id| Request { id: id as u64, x: Mat::randn(rows, width, 1.0, &mut rng) })
+            .collect()
+    }
+
+    fn native(threads: usize) -> NativeEngine {
+        NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() })
+    }
+
+    #[test]
+    fn sequential_serving_matches_dense_reference_per_request() {
+        let sm = tiny_sparse_model();
+        let width = sm.width();
+        let server = Server::new(sm, ServeCfg::default());
+        let reqs = requests(6, 7, width, 42);
+        let mut engine = native(1);
+        let report = server.run_sequential(reqs.clone(), &mut engine).unwrap();
+        assert_eq!(report.outputs.len(), reqs.len());
+        assert_eq!(report.total_tokens, 6 * 7);
+        for ((id, got), req) in report.outputs.iter().zip(&reqs) {
+            assert_eq!(*id, req.id, "outputs out of submission order");
+            let want = server.model().dense_forward(&req.x);
+            assert_close(got.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_serving_is_identical_to_sequential() {
+        let sm = tiny_sparse_model();
+        let width = sm.width();
+        let n_stages = sm.n_stages();
+        let server = Server::new(
+            sm,
+            ServeCfg { batcher: BatcherCfg { max_tokens: 16, max_requests: 4 } },
+        );
+        let reqs = requests(9, 5, width, 7);
+        let mut engine = native(2);
+        let seq = server.run_sequential(reqs.clone(), &mut engine).unwrap();
+        let engines: Vec<Box<dyn ExecBackend + Send>> =
+            (0..n_stages).map(|_| Box::new(native(2)) as Box<dyn ExecBackend + Send>).collect();
+        let par = server.run_pipelined(reqs, engines).unwrap();
+        assert_eq!(seq.outputs.len(), par.outputs.len());
+        assert_eq!(seq.n_batches, par.n_batches);
+        for ((id_s, y_s), (id_p, y_p)) in seq.outputs.iter().zip(&par.outputs) {
+            assert_eq!(id_s, id_p);
+            // Same kernels, same tiling => bit-identical across modes.
+            assert_eq!(y_s.data(), y_p.data(), "request {id_s} diverged");
+        }
+        for s in &par.stage_stats {
+            assert_eq!(s.tokens, par.total_tokens, "stage {} token accounting", s.layer);
+        }
+    }
+
+    #[test]
+    fn pipelined_requires_enough_engines() {
+        let sm = tiny_sparse_model();
+        let width = sm.width();
+        let server = Server::new(sm, ServeCfg::default());
+        let engines: Vec<Box<dyn ExecBackend + Send>> =
+            vec![Box::new(native(1)) as Box<dyn ExecBackend + Send>];
+        assert!(server.run_pipelined(requests(2, 3, width, 1), engines).is_err());
+    }
+
+    #[test]
+    fn empty_request_set_is_rejected() {
+        let sm = tiny_sparse_model();
+        let server = Server::new(sm, ServeCfg::default());
+        let mut engine = native(1);
+        assert!(server.run_sequential(vec![], &mut engine).is_err());
+    }
+
+    #[test]
+    fn backend_coverage_is_checked_up_front() {
+        let sm = tiny_sparse_model();
+        let server = Server::new(sm, ServeCfg::default());
+        // An engine whose N:M pattern disagrees with the model still
+        // `supports` the names, but a backend lacking the artifacts is
+        // rejected before any work runs.
+        struct NoArtifacts;
+        impl ExecBackend for NoArtifacts {
+            fn backend_name(&self) -> &'static str {
+                "none"
+            }
+            fn supports(&self, _artifact: &str) -> bool {
+                false
+            }
+            fn run(
+                &mut self,
+                _artifact: &str,
+                _inputs: &[crate::runtime::TensorValue],
+            ) -> Result<Vec<crate::runtime::TensorValue>> {
+                Err(anyhow!("unreachable"))
+            }
+        }
+        let width = server.model().width();
+        let mut engine = NoArtifacts;
+        let err = server.run_sequential(requests(1, 2, width, 3), &mut engine).unwrap_err();
+        assert!(format!("{err:#}").contains("does not serve"), "{err:#}");
+    }
+
+    #[test]
+    fn fixed_shape_backends_are_rejected_up_front() {
+        // An AOT backend that bakes the activation shape in (the PJRT
+        // manifest does) cannot accept the batcher's variable-length
+        // batches; the server must say so before any work runs.
+        struct FixedShape;
+        impl ExecBackend for FixedShape {
+            fn backend_name(&self) -> &'static str {
+                "fixed"
+            }
+            fn supports(&self, _artifact: &str) -> bool {
+                true
+            }
+            fn run(
+                &mut self,
+                _artifact: &str,
+                _inputs: &[crate::runtime::TensorValue],
+            ) -> Result<Vec<crate::runtime::TensorValue>> {
+                Err(anyhow!("unreachable"))
+            }
+            fn input_shape(&self, _artifact: &str, input: &str) -> Option<Vec<usize>> {
+                (input == "x").then(|| vec![128, 64])
+            }
+        }
+        let sm = tiny_sparse_model();
+        let width = sm.width();
+        let server = Server::new(sm, ServeCfg::default());
+        let mut engine = FixedShape;
+        let err = server.run_sequential(requests(1, 2, width, 3), &mut engine).unwrap_err();
+        assert!(format!("{err:#}").contains("fixes the activation shape"), "{err:#}");
+    }
+}

@@ -2,6 +2,7 @@
 
 use super::{NmConfig, NmMask};
 use crate::tensor::Mat;
+use crate::util::pool::parallel_map;
 
 /// An N:M-sparse weight in compressed form: retained values plus column
 /// metadata, `K = C_in / m * keep` entries per output row.
@@ -10,6 +11,12 @@ use crate::tensor::Mat;
 /// — the mechanism behind the paper's Table 3 speedups. Layout matches
 /// `ref.nm_compress_ref` / the `nm_spmm` Pallas kernel: within each group
 /// retained entries appear in ascending column order.
+///
+/// Metadata is stored as one `u8` *within-group column offset* per
+/// retained entry (the analogue of NVIDIA's 2-bit sparse-tensor-core
+/// metadata; groups are at most M wide, so a byte always suffices).  The
+/// group of entry `e` in a row is implicit — `e / keep` — so the absolute
+/// column is `(e / keep) * m + offset`.
 #[derive(Debug, Clone)]
 pub struct Compressed {
     cfg: NmConfig,
@@ -17,8 +24,8 @@ pub struct Compressed {
     c_in: usize,
     /// `[C_out, K]` retained values, row-major.
     vals: Vec<f32>,
-    /// `[C_out, K]` absolute column indices, row-major.
-    idx: Vec<u32>,
+    /// `[C_out, K]` within-group column offsets (`0..m`), row-major.
+    meta: Vec<u8>,
 }
 
 impl Compressed {
@@ -27,25 +34,33 @@ impl Compressed {
         let (c_out, c_in) = w.shape();
         assert_eq!(mask.shape(), (c_out, c_in));
         let cfg = mask.cfg();
+        assert!(cfg.m <= 256, "group width {} does not fit u8 metadata", cfg.m);
         let k = c_in / cfg.m * cfg.keep;
         let mut vals = Vec::with_capacity(c_out * k);
-        let mut idx = Vec::with_capacity(c_out * k);
+        let mut meta = Vec::with_capacity(c_out * k);
         for r in 0..c_out {
             let row = w.row(r);
             for c in 0..c_in {
                 if mask.get(r, c) {
                     vals.push(row[c]);
-                    idx.push(c as u32);
+                    meta.push((c % cfg.m) as u8);
                 }
             }
             debug_assert_eq!(vals.len(), (r + 1) * k, "mask not N:M at row {r}");
         }
-        Compressed { cfg, c_out, c_in, vals, idx }
+        Compressed { cfg, c_out, c_in, vals, meta }
     }
 
     /// Rebuild compressed storage from raw buffers (the `sparse_fwd`
-    /// artifact's input layout).  Validates entry counts and column-index
-    /// bounds; the per-group structure is whatever the producer encoded.
+    /// artifact's input layout, with absolute column indices).
+    ///
+    /// Validates the full group structure, not just counts and bounds:
+    /// entry `e` of a row must land in group `e / keep` (which forces
+    /// exactly `keep` retained columns per M-wide group) and indices must
+    /// be strictly ascending within each group — the invariants
+    /// [`Compressed::to_dense`] and [`Compressed::matmul_xt`] rely on.
+    /// Duplicate, out-of-group, or descending indices are rejected with an
+    /// error naming the offending row/entry.
     pub fn from_parts(
         cfg: NmConfig,
         c_out: usize,
@@ -54,6 +69,7 @@ impl Compressed {
         idx: Vec<u32>,
     ) -> anyhow::Result<Compressed> {
         anyhow::ensure!(cfg.m > 0 && cfg.keep <= cfg.m, "bad N:M config {cfg:?}");
+        anyhow::ensure!(cfg.m <= 256, "group width {} does not fit u8 metadata", cfg.m);
         anyhow::ensure!(c_in % cfg.m == 0, "C_in {c_in} not divisible by M {}", cfg.m);
         let k = c_in / cfg.m * cfg.keep;
         anyhow::ensure!(
@@ -63,11 +79,34 @@ impl Compressed {
             idx.len(),
             c_out * k
         );
-        anyhow::ensure!(
-            idx.iter().all(|&c| (c as usize) < c_in),
-            "column index out of range (C_in {c_in})"
-        );
-        Ok(Compressed { cfg, c_out, c_in, vals, idx })
+        let mut meta = Vec::with_capacity(idx.len());
+        for r in 0..c_out {
+            for e in 0..k {
+                let c = idx[r * k + e] as usize;
+                anyhow::ensure!(
+                    c < c_in,
+                    "row {r} entry {e}: column index {c} out of range (C_in {c_in})"
+                );
+                let group = e / cfg.keep.max(1);
+                anyhow::ensure!(
+                    c / cfg.m == group,
+                    "row {r} entry {e}: column {c} belongs to group {}, expected group {group} \
+                     (every M-wide group must retain exactly keep={} columns)",
+                    c / cfg.m,
+                    cfg.keep
+                );
+                if e % cfg.keep.max(1) > 0 {
+                    let prev = idx[r * k + e - 1] as usize;
+                    anyhow::ensure!(
+                        c > prev,
+                        "row {r} entry {e}: column {c} not strictly ascending after {prev} \
+                         within group {group}"
+                    );
+                }
+                meta.push((c % cfg.m) as u8);
+            }
+        }
+        Ok(Compressed { cfg, c_out, c_in, vals, meta })
     }
 
     pub fn cfg(&self) -> NmConfig {
@@ -88,24 +127,39 @@ impl Compressed {
         &self.vals
     }
 
-    /// Column metadata `[C_out, K]`.
-    pub fn idx(&self) -> &[u32] {
-        &self.idx
+    /// Raw `[C_out, K]` within-group column offsets (the stored metadata).
+    pub fn meta(&self) -> &[u8] {
+        &self.meta
     }
 
-    /// Bytes of storage (values f32 + metadata; the paper's 2-bit NVIDIA
-    /// metadata becomes u8 here because groups are small).
+    /// Column metadata `[C_out, K]` as absolute column indices (the
+    /// `sparse_fwd` artifact's input layout), reconstructed from the
+    /// per-group offsets.
+    pub fn idx(&self) -> Vec<u32> {
+        let k = self.k();
+        let (m, keep) = (self.cfg.m, self.cfg.keep.max(1));
+        self.meta
+            .iter()
+            .enumerate()
+            .map(|(e, &off)| (((e % k) / keep) * m + off as usize) as u32)
+            .collect()
+    }
+
+    /// Bytes of storage: f32 values plus one metadata byte per entry (the
+    /// per-group u8 offsets actually stored — the paper's 2-bit NVIDIA
+    /// metadata rounded up to a byte).
     pub fn storage_bytes(&self) -> usize {
-        self.vals.len() * 4 + self.idx.len()
+        self.vals.len() * 4 + self.meta.len()
     }
 
     /// Decompress to a dense matrix (zeros at pruned positions).
     pub fn to_dense(&self) -> Mat {
         let k = self.k();
+        let (m, keep) = (self.cfg.m, self.cfg.keep.max(1));
         let mut out = Mat::zeros(self.c_out, self.c_in);
         for r in 0..self.c_out {
             for e in 0..k {
-                let c = self.idx[r * k + e] as usize;
+                let c = (e / keep) * m + self.meta[r * k + e] as usize;
                 out[(r, c)] = self.vals[r * k + e];
             }
         }
@@ -117,38 +171,80 @@ impl Compressed {
     /// Each output element is a K-length gather-dot instead of a C_in-length
     /// dense dot — exactly the 2x work reduction of 2:4 sparsity.
     ///
-    /// Loop order is output-row-major (§Perf iteration 1): the compressed
-    /// row (vals + idx, ~1.5 KB) is loaded once and streamed against every
-    /// activation row, instead of re-streaming the whole compressed matrix
-    /// (hundreds of KB) per activation row.  The T dimension is tiled so
-    /// the touched activation rows stay L2-resident.
+    /// Sequential entry point; equals [`Compressed::matmul_xt_threads`]
+    /// with one worker bit-for-bit.
     pub fn matmul_xt(&self, x: &Mat) -> Mat {
+        self.matmul_xt_threads(x, 1)
+    }
+
+    /// [`Compressed::matmul_xt`] parallelized across output-row tiles of
+    /// the compressed weight: each worker computes a contiguous band of
+    /// output channels over the whole activation batch, so a single
+    /// request's latency shrinks with cores (not just batch throughput).
+    ///
+    /// Every output element runs the identical per-group accumulation
+    /// regardless of the tile split, so the result is bit-identical to the
+    /// sequential path for any `threads` (pinned by
+    /// `parallel_matmul_is_bit_identical`).
+    pub fn matmul_xt_threads(&self, x: &Mat, threads: usize) -> Mat {
         assert_eq!(x.cols(), self.c_in);
         let t = x.rows();
-        let k = self.k();
+        let n_tiles = threads.max(1).min(self.c_out.max(1));
+        if n_tiles <= 1 {
+            return self.matmul_range(x, 0, self.c_out);
+        }
+        let per = self.c_out.div_ceil(n_tiles);
+        let tiles = parallel_map(n_tiles, n_tiles, |ti| {
+            let o0 = (ti * per).min(self.c_out);
+            let o1 = ((ti + 1) * per).min(self.c_out);
+            (o0, self.matmul_range(x, o0, o1))
+        });
         let mut out = Mat::zeros(t, self.c_out);
+        for (o0, tile) in tiles {
+            let width = tile.cols();
+            for r in 0..t {
+                out.row_mut(r)[o0..o0 + width].copy_from_slice(tile.row(r));
+            }
+        }
+        out
+    }
+
+    /// The sequential kernel for output channels `[o0, o1)`, returning a
+    /// `[T, o1-o0]` band.
+    ///
+    /// Loop order is output-row-major (§Perf iteration 1): the compressed
+    /// row (vals + meta, ~1.5 KB) is loaded once and streamed against every
+    /// activation row, instead of re-streaming the whole compressed matrix
+    /// (hundreds of KB) per activation row.  The T dimension is tiled so
+    /// the touched activation rows stay L2-resident.  Accumulation is
+    /// per-group (`keep` products each), one fixed order per output element.
+    fn matmul_range(&self, x: &Mat, o0: usize, o1: usize) -> Mat {
+        let t = x.rows();
+        let k = self.k();
+        let (m, keep) = (self.cfg.m, self.cfg.keep.max(1));
+        let width = o1 - o0;
+        let mut out = Mat::zeros(t, width);
         const T_TILE: usize = 64;
-        let out_cols = self.c_out;
         for t0 in (0..t).step_by(T_TILE) {
             let t1 = (t0 + T_TILE).min(t);
-            for o in 0..self.c_out {
+            for o in o0..o1 {
                 let vals = &self.vals[o * k..(o + 1) * k];
-                let idx = &self.idx[o * k..(o + 1) * k];
+                let meta = &self.meta[o * k..(o + 1) * k];
                 for ti in t0..t1 {
                     let xrow = x.row(ti);
-                    // 2:4 / 4:8 rows have even K; unroll by 2.
-                    let mut acc0 = 0.0f32;
-                    let mut acc1 = 0.0f32;
+                    let mut acc = 0.0f32;
                     let mut e = 0;
-                    while e + 1 < k {
-                        acc0 += vals[e] * xrow[idx[e] as usize];
-                        acc1 += vals[e + 1] * xrow[idx[e + 1] as usize];
-                        e += 2;
+                    let mut base = 0;
+                    while e < k {
+                        let mut group_acc = 0.0f32;
+                        for j in 0..keep {
+                            group_acc += vals[e + j] * xrow[base + meta[e + j] as usize];
+                        }
+                        acc += group_acc;
+                        e += keep;
+                        base += m;
                     }
-                    if e < k {
-                        acc0 += vals[e] * xrow[idx[e] as usize];
-                    }
-                    out.data_mut()[ti * out_cols + o] = acc0 + acc1;
+                    out.data_mut()[ti * width + o - o0] = acc;
                 }
             }
         }
@@ -201,14 +297,39 @@ mod tests {
     }
 
     #[test]
+    fn prop_parallel_matmul_is_bit_identical() {
+        testkit::check("spmm-parallel-determinism", |rng| {
+            let cfg = if rng.below(2) == 0 { NmConfig::PAT_2_4 } else { NmConfig::PAT_4_8 };
+            let c_out = 1 + rng.below_usize(12);
+            let c_in = cfg.m * (1 + rng.below_usize(6));
+            let t = 1 + rng.below_usize(8);
+            let (w, m) = sample(rng, c_out, c_in, cfg);
+            let x = Mat::randn(t, c_in, 1.0, rng);
+            let comp = Compressed::compress(&w, &m);
+            let seq = comp.matmul_xt(&x);
+            for threads in [2usize, 3, 8, 64] {
+                let par = comp.matmul_xt_threads(&x, threads);
+                if par.data() != seq.data() {
+                    return Err(format!(
+                        "threads={threads} diverged from sequential ({c_out}x{c_in}, t={t})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn storage_is_half_plus_metadata_for_2_4() {
         let mut rng = Pcg32::seeded(1);
         let (w, m) = sample(&mut rng, 8, 64, NmConfig::PAT_2_4);
         let comp = Compressed::compress(&w, &m);
         let dense_bytes = 8 * 64 * 4;
         assert_eq!(comp.vals().len(), 8 * 32);
-        // values: exactly half the dense bytes; metadata adds 1 byte/entry
-        // (u8 here vs NVIDIA's 2-bit) => 0.625x dense total.
+        assert_eq!(comp.meta().len(), 8 * 32);
+        // values: exactly half the dense bytes; metadata is genuinely one
+        // u8 per-group offset per entry => 0.625x dense total, exactly.
+        assert_eq!(comp.storage_bytes(), 8 * 32 * 4 + 8 * 32);
         assert!(comp.storage_bytes() <= dense_bytes * 65 / 100);
     }
 
@@ -222,17 +343,49 @@ mod tests {
             4,
             16,
             comp.vals().to_vec(),
-            comp.idx().to_vec(),
+            comp.idx(),
         )
         .unwrap();
         assert_eq!(back.to_dense().data(), comp.to_dense().data());
         // Wrong entry count and out-of-range indices are rejected.
         assert!(Compressed::from_parts(comp.cfg(), 4, 16, vec![0.0; 3], vec![0; 3]).is_err());
-        let mut bad_idx = comp.idx().to_vec();
+        let mut bad_idx = comp.idx();
         bad_idx[0] = 999;
         assert!(
             Compressed::from_parts(comp.cfg(), 4, 16, comp.vals().to_vec(), bad_idx).is_err()
         );
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_group_structure() {
+        let mut rng = Pcg32::seeded(6);
+        let (w, m) = sample(&mut rng, 2, 8, NmConfig::PAT_2_4);
+        let comp = Compressed::compress(&w, &m);
+        let good = comp.idx();
+
+        // Duplicate column within a group (in-bounds, right group).
+        let mut dup = good.clone();
+        dup[1] = dup[0];
+        let err = Compressed::from_parts(comp.cfg(), 2, 8, comp.vals().to_vec(), dup)
+            .expect_err("duplicate index must be rejected");
+        assert!(format!("{err:#}").contains("ascending"), "{err:#}");
+
+        // Descending order within a group.
+        let mut desc = good.clone();
+        desc.swap(0, 1);
+        let err = Compressed::from_parts(comp.cfg(), 2, 8, comp.vals().to_vec(), desc)
+            .expect_err("descending indices must be rejected");
+        assert!(format!("{err:#}").contains("ascending"), "{err:#}");
+
+        // Entry stolen from the wrong group: 3 columns in group 0, 1 in
+        // group 1 — counts are fine, structure is not.
+        let mut wrong_group = good;
+        // Entry slots 2..4 belong to group 1 (columns 4..8); point slot 2
+        // back into group 0.
+        wrong_group[2] = 0;
+        let err = Compressed::from_parts(comp.cfg(), 2, 8, comp.vals().to_vec(), wrong_group)
+            .expect_err("wrong-group index must be rejected");
+        assert!(format!("{err:#}").contains("group"), "{err:#}");
     }
 
     #[test]
@@ -241,9 +394,10 @@ mod tests {
         let (w, m) = sample(&mut rng, 4, 16, NmConfig::PAT_2_4);
         let comp = Compressed::compress(&w, &m);
         let k = comp.k();
+        let idx = comp.idx();
         for r in 0..4 {
-            let idx = &comp.idx()[r * k..(r + 1) * k];
-            for pair in idx.chunks(2) {
+            let row = &idx[r * k..(r + 1) * k];
+            for pair in row.chunks(2) {
                 assert!(pair[0] < pair[1]);
             }
         }

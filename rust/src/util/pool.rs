@@ -7,7 +7,7 @@
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 /// Number of worker threads to use by default (`PERMLLM_THREADS` override).
 pub fn default_threads() -> usize {
@@ -72,6 +72,83 @@ where
         }
     }
     out
+}
+
+/// Run every input through a chain of stages with *cross-stage
+/// pipelining*: each stage runs on its own worker thread connected to its
+/// neighbours by channels, so stage `s` processes item `i` while stage
+/// `s+1` is still busy with item `i-1` — the wavefront schedule behind
+/// the serving subsystem's cross-layer overlap ([`crate::serve`]).
+///
+/// Each stage is an `FnMut` that *owns* its captured state (e.g. an
+/// execution backend) for the whole run, so no locking happens on the hot
+/// path.  Outputs come back in input order — channels are FIFO and the
+/// chain is linear.
+///
+/// A panicking stage tears the pipeline down (upstream sends fail,
+/// downstream channels close) and the original panic payload is re-raised
+/// on the caller's thread, mirroring [`parallel_map`]'s contract.
+pub fn pipeline_map<T, S>(inputs: Vec<T>, stages: Vec<S>) -> Vec<T>
+where
+    T: Send,
+    S: FnMut(T) -> T + Send,
+{
+    let mut stages = stages;
+    if stages.is_empty() {
+        return inputs;
+    }
+    if stages.len() == 1 || inputs.len() <= 1 {
+        // Nothing to overlap: run each item through the chain in place.
+        let mut out = Vec::with_capacity(inputs.len());
+        for mut item in inputs {
+            for stage in stages.iter_mut() {
+                item = stage(item);
+            }
+            out.push(item);
+        }
+        return out;
+    }
+    let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let collected = std::thread::scope(|scope| {
+        let (head_tx, mut prev_rx) = mpsc::channel::<T>();
+        for mut stage in stages {
+            let (tx, rx) = mpsc::channel::<T>();
+            let rx_in = prev_rx;
+            prev_rx = rx;
+            let slot = &panic_slot;
+            scope.spawn(move || {
+                for item in rx_in {
+                    match catch_unwind(AssertUnwindSafe(|| stage(item))) {
+                        Ok(out) => {
+                            if tx.send(out).is_err() {
+                                break; // downstream died; stop early
+                            }
+                        }
+                        Err(payload) => {
+                            let mut guard = slot.lock().unwrap();
+                            if guard.is_none() {
+                                *guard = Some(payload);
+                            }
+                            break; // drops rx_in/tx, tearing the chain down
+                        }
+                    }
+                }
+            });
+        }
+        // Feed from the caller's thread; a send error means the first
+        // stage already died, which the panic slot will explain.
+        for item in inputs {
+            if head_tx.send(item).is_err() {
+                break;
+            }
+        }
+        drop(head_tx);
+        prev_rx.into_iter().collect::<Vec<T>>()
+    });
+    if let Some(payload) = panic_slot.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
+    collected
 }
 
 #[cfg(test)]
@@ -143,5 +220,71 @@ mod tests {
         let payload = res.expect_err("sequential path should have panicked");
         let msg = payload.downcast_ref::<&str>().expect("static panic payload");
         assert!(msg.contains("sequential boom"));
+    }
+
+    #[test]
+    fn pipeline_chains_stages_in_input_order() {
+        type Stage = Box<dyn FnMut(i64) -> i64 + Send>;
+        let stages: Vec<Stage> =
+            vec![Box::new(|v| v + 1), Box::new(|v| v * 10), Box::new(|v| v - 3)];
+        let out = pipeline_map((0..20).collect(), stages);
+        assert_eq!(out, (0..20).map(|v| (v + 1) * 10 - 3).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn pipeline_stages_keep_private_mutable_state() {
+        // Each stage owns a counter; every item passes through every stage
+        // exactly once and items stay ordered.
+        type Stage = Box<dyn FnMut(Vec<u32>) -> Vec<u32> + Send>;
+        let stages: Vec<Stage> = (0..3)
+            .map(|s| {
+                let mut seen = 0u32;
+                Box::new(move |mut item: Vec<u32>| {
+                    item.push(s * 100 + seen);
+                    seen += 1;
+                    item
+                }) as Stage
+            })
+            .collect();
+        let out = pipeline_map((0..5).map(|i| vec![i]).collect(), stages);
+        for (i, item) in out.iter().enumerate() {
+            let i = i as u32;
+            assert_eq!(item, &vec![i, i, 100 + i, 200 + i]);
+        }
+    }
+
+    #[test]
+    fn pipeline_empty_stages_and_inputs() {
+        let stages: Vec<fn(usize) -> usize> = vec![];
+        assert_eq!(pipeline_map(vec![1, 2, 3], stages), vec![1, 2, 3]);
+        let out: Vec<usize> = pipeline_map(vec![], vec![|v: usize| v + 1]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pipeline_single_item_runs_whole_chain() {
+        let stages: Vec<fn(usize) -> usize> = vec![|v| v * 2, |v| v + 1];
+        let out = pipeline_map(vec![7usize], stages);
+        assert_eq!(out, vec![15]);
+    }
+
+    #[test]
+    fn pipeline_panic_payload_propagates() {
+        type Stage = Box<dyn FnMut(usize) -> usize + Send>;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let stages: Vec<Stage> = vec![
+                Box::new(|v| v + 1),
+                Box::new(|v| {
+                    if v == 3 {
+                        panic!("stage 1 choked on {v}");
+                    }
+                    v
+                }),
+            ];
+            pipeline_map((0..8).collect::<Vec<usize>>(), stages)
+        }));
+        let payload = res.expect_err("pipeline should have panicked");
+        let msg = payload.downcast_ref::<String>().expect("formatted panic payload");
+        assert!(msg.contains("stage 1 choked on 3"), "payload lost: {msg}");
     }
 }

@@ -1,18 +1,34 @@
 //! Sparse serving hot path: prune a model, compress **every** linear to
 //! the Sparse-Tensor-Core layout once, and serve batched requests through
 //! the `serve` subsystem — micro-batched, routed through the
-//! `ExecBackend` trait, and pipelined across decoder layers.
+//! `ExecBackend` trait (weights bound backend-resident), and pipelined
+//! across decoder layers.
 //!
-//! Reports per-layer and end-to-end tokens/s for a single-threaded
-//! baseline and for the parallel + pipelined configuration, then verifies
-//! the sparse outputs against the host dense-masked forward (and the two
-//! configurations against each other — the tiled kernel is bit-exact at
-//! any thread count).
+//! Benchmarks three serving configurations over the same workload and a
+//! dense baseline:
+//!
+//! * **dense baseline** — the decompressed dense-masked model
+//!   (`serve::DenseModel`), plain matmuls, single thread: what serving
+//!   would cost without the compressed N:M path;
+//! * **MLP-only sparse** — decoder MLP sublayers through `sparse_fwd`,
+//!   pipelined (the original serving mode);
+//! * **full-decoder sparse** — attention (q/k/v/o + RoPE/causal-softmax
+//!   glue) *and* MLP through `sparse_fwd`, sequential (threads=1) and
+//!   pipelined.
+//!
+//! Verifies full-decoder parity against the host dense-masked forward
+//! (<1e-3), bit-determinism across thread counts, and **gates** on the
+//! full-decoder sparse throughput staying above the dense baseline
+//! (`PERMLLM_BENCH_GATE` overrides the required ratio, default 1.0) —
+//! the CI `bench-smoke` job runs this in fast mode and uploads the
+//! `--json` summary as the bench trajectory artifact.
 //!
 //! ```bash
 //! cargo run --release --example sparse_inference
-//! PERMLLM_BENCH_FAST=1 cargo run --release --example sparse_inference  # CI-sized
+//! PERMLLM_BENCH_FAST=1 cargo run --release --example sparse_inference -- --json bench_out.json
 //! ```
+
+use std::time::Instant;
 
 use permllm::bench::{fast_mode, trained_or_synth};
 use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
@@ -20,8 +36,12 @@ use permllm::data::{Corpus, CorpusKind};
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
-use permllm::serve::{BatcherCfg, Request, ServeCfg, ServeReport, Server, SparseModel};
+use permllm::serve::{
+    BatcherCfg, DenseModel, Request, ServeCfg, ServePath, ServeReport, Server, SparseModel,
+};
 use permllm::tensor::Mat;
+use permllm::util::cli::Cli;
+use permllm::util::json::{self, Json};
 use permllm::util::pool::default_threads;
 use permllm::util::rng::Pcg32;
 
@@ -43,8 +63,24 @@ fn print_report(label: &str, report: &ServeReport) {
     }
 }
 
+fn engines(n: usize, threads: usize) -> Vec<Box<dyn ExecBackend + Send>> {
+    (0..n)
+        .map(|_| {
+            Box::new(NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() }))
+                as Box<dyn ExecBackend + Send>
+        })
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
     permllm::util::logging::init();
+    let p = Cli::new(
+        "sparse_inference",
+        "benchmark sparse full-decoder serving vs MLP-only and the dense baseline",
+    )
+    .opt("json", "", "write a machine-readable summary (the CI bench artifact) to this path")
+    .parse()
+    .map_err(anyhow::Error::msg)?;
 
     // Prune + compress once.  Fast mode (CI) uses the small model and a
     // lighter workload; the full run uses tiny-m.
@@ -59,14 +95,18 @@ fn main() -> anyhow::Result<()> {
     let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
     let sm = SparseModel::from_pruned(&pruned)?;
     println!(
-        "{model_name} ({prov}): {} linears 2:4-compressed, {} MLP stages, storage {:.3}x dense",
+        "{model_name} ({prov}): {} linears 2:4-compressed, {} decoder stages, storage {:.3}x dense",
         ps.cfg().prunable_linears().len(),
         sm.n_stages(),
         sm.storage_bytes() as f64 / sm.dense_bytes() as f64
     );
 
+    // Decompress once for the dense baseline (never part of serving).
+    let dense = DenseModel::from_sparse(&sm);
+
     // The request workload (identical for every configuration).
     let width = sm.width();
+    let n_stages = sm.n_stages();
     let make_requests = || {
         let mut rng = Pcg32::seeded(5);
         (0..n_requests)
@@ -74,56 +114,122 @@ fn main() -> anyhow::Result<()> {
             .collect::<Vec<Request>>()
     };
     let requests = make_requests();
-    let n_stages = sm.n_stages();
-    let server = Server::new(
+    let mut server = Server::new(
         sm,
-        ServeCfg { batcher: BatcherCfg { max_tokens: rows * 4, max_requests: 8 } },
+        ServeCfg {
+            batcher: BatcherCfg { max_tokens: rows * 4, max_requests: 8 },
+            path: ServePath::FullDecoder,
+            ..ServeCfg::default()
+        },
     );
     println!(
         "workload: {n_requests} requests x {rows} tokens, micro-batch budget {} tokens",
         rows * 4
     );
 
-    // Baseline: one backend, one worker thread, no pipelining.
-    let mut engine1 = NativeEngine::new(NativeCfg { threads: 1, ..NativeCfg::default() });
-    let seq = server.run_sequential(make_requests(), &mut engine1)?;
-    print_report("threads=1 sequential", &seq);
+    // Dense full-decoder baseline: plain matmuls, single thread — the
+    // cost of serving without the compressed N:M path.
+    let t0 = Instant::now();
+    for req in &requests {
+        std::hint::black_box(dense.forward(&req.x, &[(0, req.x.rows())], ServePath::FullDecoder));
+    }
+    let dense_s = t0.elapsed().as_secs_f64();
+    let total_tokens = (n_requests * rows) as f64;
+    let dense_tps = total_tokens / dense_s.max(1e-12);
+    println!(
+        "[dense full-decoder baseline] {total_tokens} tokens in {dense_s:.4}s \
+         -> {dense_tps:.0} tokens/s"
+    );
 
-    // Parallel + pipelined: one backend per decoder layer.  Stages run
-    // concurrently, so the visible cores are divided across them rather
-    // than oversubscribed with n_stages x cores workers.
     let cores = default_threads();
     let threads = (cores / n_stages).max(1);
-    let engines: Vec<Box<dyn ExecBackend + Send>> = (0..n_stages)
-        .map(|_| {
-            Box::new(NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() }))
-                as Box<dyn ExecBackend + Send>
-        })
-        .collect();
-    let par = server.run_pipelined(make_requests(), engines)?;
-    print_report(&format!("threads/stage={threads} pipelined"), &par);
+
+    // MLP-only sparse (the original serving mode), pipelined.
+    server.cfg_mut().path = ServePath::MlpOnly;
+    let mlp = server.run_pipelined(make_requests(), engines(n_stages, threads))?;
+    print_report("mlp-only pipelined", &mlp);
+
+    // Full decoder, sequential single-thread baseline.
+    server.cfg_mut().path = ServePath::FullDecoder;
+    let mut engine1 = NativeEngine::new(NativeCfg { threads: 1, ..NativeCfg::default() });
+    let seq = server.run_sequential(make_requests(), &mut engine1)?;
+    print_report("full-decoder threads=1 sequential", &seq);
+
+    // Full decoder, parallel + pipelined: one backend per decoder layer.
+    // Stages run concurrently, so the visible cores are divided across
+    // them rather than oversubscribed with n_stages x cores workers.
+    let par = server.run_pipelined(make_requests(), engines(n_stages, threads))?;
+    print_report(&format!("full-decoder threads/stage={threads} pipelined"), &par);
     println!(
-        "speedup: {:.2}x end-to-end ({cores} core(s) across {n_stages} pipelined stages)",
+        "speedup: {:.2}x vs dense, {:.2}x vs threads=1 ({cores} core(s) across {n_stages} stages)",
+        par.tokens_per_s() / dense_tps.max(1e-12),
         par.tokens_per_s() / seq.tokens_per_s().max(1e-12)
     );
 
     // Determinism: the output-row-tiled kernel is bit-exact at any thread
-    // count, so both configurations must agree exactly.
+    // count, so both full-decoder configurations must agree exactly.
     for ((id_s, y_s), (_, y_p)) in seq.outputs.iter().zip(&par.outputs) {
         anyhow::ensure!(y_s.data() == y_p.data(), "request {id_s}: configurations diverged");
     }
     println!("threads=1 and threads={threads} outputs are bit-identical: OK");
 
-    // Parity: sparse serving vs the host dense-masked forward.
+    // Parity: full-decoder sparse serving (attention + MLP through
+    // sparse_fwd) vs the host dense-masked forward.
     let mut max_err = 0.0f32;
     for ((_, got), req) in par.outputs.iter().zip(&requests) {
-        let want = server.model().dense_forward(&req.x);
+        let want = server.model().dense_forward(
+            &req.x,
+            &[(0, req.x.rows())],
+            ServePath::FullDecoder,
+        );
         for (a, b) in got.data().iter().zip(want.data()) {
             max_err = max_err.max((a - b).abs());
         }
     }
-    println!("max |sparse - dense-masked| = {max_err:.2e}");
+    println!("max |sparse full-decoder - dense-masked| = {max_err:.2e}");
+
+    // The CI bench gate: full-decoder sparse serving must not regress
+    // below the dense baseline.
+    let gate: f64 = std::env::var("PERMLLM_BENCH_GATE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+
+    let summary = json::obj(vec![
+        ("model", json::s(model_name)),
+        ("provenance", json::s(prov)),
+        ("fast_mode", Json::Bool(fast_mode())),
+        ("requests", json::num(n_requests as f64)),
+        ("rows_per_request", json::num(rows as f64)),
+        ("stages", json::num(n_stages as f64)),
+        ("threads_per_stage", json::num(threads as f64)),
+        ("dense_tokens_per_s", json::num(dense_tps)),
+        ("sparse_mlp_only_tokens_per_s", json::num(mlp.tokens_per_s())),
+        ("sparse_full_decoder_seq_tokens_per_s", json::num(seq.tokens_per_s())),
+        ("sparse_full_decoder_tokens_per_s", json::num(par.tokens_per_s())),
+        ("speedup_vs_dense", json::num(par.tokens_per_s() / dense_tps.max(1e-12))),
+        ("max_abs_err", json::num(max_err as f64)),
+        ("gate_ratio", json::num(gate)),
+    ]);
+    let json_path = p.get("json");
+    if !json_path.is_empty() {
+        // Written before the gate so CI uploads the numbers even when the
+        // gate trips.
+        std::fs::write(json_path, summary.to_string() + "\n")?;
+        println!("wrote bench summary to {json_path}");
+    }
+
     anyhow::ensure!(max_err < 1e-3, "numeric mismatch");
-    println!("sparse serving matches the dense-masked reference: OK");
+    println!("sparse full-decoder serving matches the dense-masked reference: OK");
+    anyhow::ensure!(
+        par.tokens_per_s() >= dense_tps * gate,
+        "bench gate: sparse full-decoder throughput {:.0} tokens/s fell below {gate:.2}x the \
+         dense baseline ({dense_tps:.0} tokens/s)",
+        par.tokens_per_s()
+    );
+    println!(
+        "bench gate: sparse full-decoder >= {gate:.2}x dense: OK ({:.0} vs {dense_tps:.0} tok/s)",
+        par.tokens_per_s()
+    );
     Ok(())
 }

@@ -1,12 +1,13 @@
 //! Evaluation harness: perplexity + zero-shot tasks.
 //!
-//! * Perplexity re-exports the host forward's [`model::perplexity`] over a
+//! * Perplexity re-exports the host forward's [`crate::model::perplexity`] over a
 //!   held-out sample of a corpus (Table 1 / Table 8 metric), or — via
 //!   [`eval_perplexity_exec`] — runs the same metric through any
 //!   [`ExecBackend`]'s `lm_forward` artifact (native by default, PJRT
 //!   with `--features pjrt`), which is what makes pruned-model evaluation
 //!   backend-agnostic.
-//! * [`zeroshot`] builds five synthetic classification tasks mirroring the
+//! * The zero-shot suite ([`zeroshot_suite`]) builds five synthetic
+//!   classification tasks mirroring the
 //!   paper's HellaSwag / ARC-E / ARC-C / OBQA / RTE suite (Table 2): each
 //!   task asks the model to rank a true corpus continuation above
 //!   distractors by total log-likelihood, with task-specific difficulty

@@ -22,7 +22,7 @@
 //! * **default (offline)** — [`runtime::NativeEngine`], pure Rust, no
 //!   external dependencies or artifacts.  `cargo build && cargo test`
 //!   work on a clean machine with no network.
-//! * **`--features pjrt`** — [`runtime::Engine`] loads the AOT artifacts
+//! * **`--features pjrt`** — `runtime::Engine` loads the AOT artifacts
 //!   (`make artifacts`) and executes them once-compiled via PJRT.  The
 //!   workspace ships a typed `xla` stub so this feature type-checks
 //!   offline; executing real artifacts requires swapping in the genuine

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   prune     prune a model with a chosen method and report perplexity
-//!   serve     prune, compress, and serve the sparse MLP path (batched,
+//!   serve     prune, compress, and serve the sparse path (batched or
+//!             streaming, MLP-only or full decoder with --sparse-attn,
 //!             optionally pipelined across decoder layers)
 //!   eval      evaluate a saved model (perplexity + zero-shot suite)
 //!   train     pretrain the tiny LM via the AOT train_step artifact (pjrt)
@@ -10,6 +11,7 @@
 //!   backends  list the execution backends compiled into this binary
 
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -20,7 +22,7 @@ use permllm::lcp::LcpCfg;
 use permllm::model::{synth_trained_params, ModelConfig, ParamStore};
 use permllm::pruning::Metric;
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
-use permllm::serve::{BatcherCfg, Request, ServeCfg, Server, SparseModel};
+use permllm::serve::{BatcherCfg, Request, ServeCfg, ServePath, Server, SparseModel};
 use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
 use permllm::util::cli::Cli;
@@ -43,6 +45,7 @@ fn main() {
                 "usage: permllm <prune|serve|eval|train|info|backends> [options]\n\
                  \n  permllm prune --model tiny-s --method permllm-wanda --sparsity 2:4\
                  \n  permllm serve --model tiny-s --requests 32 --tokens 64\
+                 \n  permllm serve --model tiny-s --sparse-attn --stream\
                  \n  permllm eval  --params models/tiny-m.bin --backend native\
                  \n  permllm train --artifacts artifacts --steps 300 --out models/tiny-m.bin\
                  \n  permllm info  --artifacts artifacts\n\
@@ -157,7 +160,7 @@ fn cmd_prune(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let p = Cli::new(
         "permllm serve",
-        "prune + compress a model, then serve batched requests on the sparse MLP path",
+        "prune + compress a model, then serve batched requests on the sparse path",
     )
     .opt("model", "tiny-s", "model config (tiny-s|tiny-m|tiny-l)")
     .opt("params", "", "path to a trained .bin (default: synthetic weights)")
@@ -172,6 +175,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("threads", "0", "matmul worker threads per backend (0 = all cores)")
     .opt("seed", "7", "request activation seed")
     .flag("sequential", "disable cross-layer pipelining (single backend)")
+    .flag("sparse-attn", "full decoder: serve attention (q/k/v/o + RoPE/softmax glue) sparsely too")
+    .flag("stream", "long-lived streaming loop: requests enqueue while batches are in flight")
+    .opt("stream-clients", "4", "streaming: concurrent submitting threads")
+    .opt("linger-ms", "2", "streaming: micro-batch linger (ms) before dispatching a partial batch")
     .parse_from(args)
     .map_err(|e| anyhow!(e))?;
 
@@ -212,12 +219,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let n_requests = p.get_usize("requests");
     let tokens = p.get_usize("tokens");
-    let mut rng = Pcg32::seeded(p.get_u64("seed"));
-    let requests: Vec<Request> = (0..n_requests)
-        .map(|id| Request { id: id as u64, x: Mat::randn(tokens, sm.width(), 1.0, &mut rng) })
-        .collect();
-    let originals = requests.clone();
-
+    let path =
+        if p.get_bool("sparse-attn") { ServePath::FullDecoder } else { ServePath::MlpOnly };
     let server = Server::new(
         sm,
         ServeCfg {
@@ -225,11 +228,28 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 max_tokens: p.get_usize("batch-tokens"),
                 max_requests: p.get_usize("batch-requests"),
             },
+            path,
+            linger: Duration::from_millis(p.get_u64("linger-ms")),
         },
     );
+    println!("serving path: {}", path.name());
     let native = |threads: usize| {
         NativeEngine::new(NativeCfg { nm, threads, ..NativeCfg::default() })
     };
+
+    if p.get_bool("stream") {
+        return run_serve_streaming(&p, &server, threads, n_stages, &native);
+    }
+
+    let mut rng = Pcg32::seeded(p.get_u64("seed"));
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|id| Request {
+            id: id as u64,
+            x: Mat::randn(tokens, server.model().width(), 1.0, &mut rng),
+        })
+        .collect();
+    let originals = requests.clone();
+
     let (mode, report) = if p.get_bool("sequential") {
         let mut engine = native(threads);
         ("sequential", server.run_sequential(requests, &mut engine)?)
@@ -258,7 +278,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut max_err = 0.0f32;
     for ((id, got), req) in report.outputs.iter().zip(&originals) {
         anyhow::ensure!(*id == req.id, "output order mismatch: {id} vs {}", req.id);
-        let want = server.model().dense_forward(&req.x);
+        let want = server.model().dense_forward(&req.x, &[(0, req.x.rows())], path);
         for (a, b) in got.data().iter().zip(want.data()) {
             max_err = max_err.max((a - b).abs());
         }
@@ -266,6 +286,92 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     println!("max |sparse - dense| = {max_err:.2e}");
     anyhow::ensure!(max_err < 1e-3, "serving output diverged from the dense reference");
     println!("sparse serving matches the dense-masked reference: OK");
+    Ok(())
+}
+
+/// `permllm serve --stream`: drive the long-lived streaming loop with a
+/// few concurrent client threads, verify per-request parity, and report
+/// the loop's throughput.
+fn run_serve_streaming(
+    p: &permllm::util::cli::Parsed,
+    server: &Server,
+    threads: usize,
+    n_stages: usize,
+    native: &dyn Fn(usize) -> NativeEngine,
+) -> Result<()> {
+    let n_clients = p.get_usize("stream-clients").max(1);
+    let n_requests = p.get_usize("requests");
+    let tokens = p.get_usize("tokens");
+    let seed = p.get_u64("seed");
+    let path = server.cfg().path;
+    let width = server.model().width();
+    let engines: Vec<Box<dyn ExecBackend + Send>> = if p.get_bool("sequential") {
+        vec![Box::new(native(threads)) as Box<dyn ExecBackend + Send>]
+    } else {
+        (0..n_stages).map(|_| Box::new(native(threads)) as Box<dyn ExecBackend + Send>).collect()
+    };
+    // Client threads only submit and wait inside the timed loop; the
+    // dense-reference verification (which re-materializes weights per
+    // call) runs afterwards so it neither inflates the reported wall
+    // clock nor steals CPU from the serving threads.
+    let (outputs, report) = server.run_streaming(engines, |client| {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for c in 0..n_clients {
+                let count = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+                handles.push(s.spawn(move || {
+                    let mut rng = Pcg32::seeded(seed ^ (c as u64).wrapping_mul(0x9e37_79b9));
+                    let mut in_flight = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        let x = Mat::randn(tokens, width, 1.0, &mut rng);
+                        let ticket = client.submit(x.clone()).expect("submit");
+                        in_flight.push((ticket, x));
+                    }
+                    in_flight
+                        .into_iter()
+                        .map(|(ticket, x)| (ticket.wait().expect("request served"), x))
+                        .collect::<Vec<(Mat, Mat)>>()
+                }));
+            }
+            let mut outputs = Vec::new();
+            for h in handles {
+                outputs.extend(h.join().expect("client thread"));
+            }
+            outputs
+        })
+    })?;
+    println!(
+        "streamed {} requests from {n_clients} client thread(s) as {} micro-batches \
+         ({} failed)",
+        outputs.len(),
+        report.n_batches,
+        report.n_failed
+    );
+    for s in &report.stage_stats {
+        println!(
+            "  layer {:>2}: {:>10.0} tokens/s (busy {:.4}s)",
+            s.layer,
+            s.tokens_per_s(),
+            s.seconds
+        );
+    }
+    println!(
+        "end-to-end: {:.4}s -> {:.0} tokens/s ({} tokens)",
+        report.total_seconds,
+        report.tokens_per_s(),
+        report.total_tokens
+    );
+    let mut max_err = 0.0f32;
+    for (y, x) in &outputs {
+        let want = server.model().dense_forward(x, &[(0, x.rows())], path);
+        for (a, b) in y.data().iter().zip(want.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    println!("max |sparse - dense| = {max_err:.2e}");
+    anyhow::ensure!(report.n_failed == 0, "{} requests failed", report.n_failed);
+    anyhow::ensure!(max_err < 1e-3, "streamed output diverged from the dense reference");
+    println!("streamed sparse serving matches the dense-masked reference: OK");
     Ok(())
 }
 

@@ -69,8 +69,11 @@ pub(crate) fn swiglu(gate: &Mat, up: &Mat) -> Mat {
     out
 }
 
-/// Split-half RoPE applied in place to `[T, H*hd]` laid out head-major.
-fn rope(x: &mut Mat, n_heads: usize, theta: f32) {
+/// Split-half RoPE applied in place to `[T, H*hd]` laid out head-major;
+/// row `r` is sequence position `r`.  Shared with the serving subsystem's
+/// attention path (`crate::serve`) so the reference forward and the
+/// sparse serving path cannot drift.
+pub(crate) fn rope(x: &mut Mat, n_heads: usize, theta: f32) {
     let (t, d) = x.shape();
     let hd = d / n_heads;
     let half = hd / 2;
@@ -91,6 +94,52 @@ fn rope(x: &mut Mat, n_heads: usize, theta: f32) {
     }
 }
 
+/// Per-head causal softmax attention over ONE sequence: `q`/`k`/`v` are
+/// `[T, H*hd]` head-major with RoPE already applied to `q`/`k`; returns
+/// the `[T, H*hd]` attention mix (the input of `W_o`).  Scale is
+/// `1/sqrt(hd)`.  Shared with the serving subsystem's attention path
+/// (`crate::serve`) so the reference forward and the sparse serving path
+/// cannot drift.
+pub(crate) fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat {
+    let (t, d) = q.shape();
+    assert_eq!(k.shape(), (t, d), "q/k shape mismatch");
+    assert_eq!(v.shape(), (t, d), "q/v shape mismatch");
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = Mat::zeros(t, d);
+    let mut att = vec![0.0f32; t];
+    for head in 0..n_heads {
+        let base = head * hd;
+        for qi in 0..t {
+            let qrow = &q.row(qi)[base..base + hd];
+            let mut mx = f32::NEG_INFINITY;
+            for ki in 0..=qi {
+                let krow = &k.row(ki)[base..base + hd];
+                let mut dot = 0.0f32;
+                for e in 0..hd {
+                    dot += qrow[e] * krow[e];
+                }
+                att[ki] = dot * scale;
+                mx = mx.max(att[ki]);
+            }
+            let mut z = 0.0f32;
+            for ki in 0..=qi {
+                att[ki] = (att[ki] - mx).exp();
+                z += att[ki];
+            }
+            let orow = o.row_mut(qi);
+            for ki in 0..=qi {
+                let w = att[ki] / z;
+                let vrow = &v.row(ki)[base..base + hd];
+                for e in 0..hd {
+                    orow[base + e] += w * vrow[e];
+                }
+            }
+        }
+    }
+    o
+}
+
 /// Forward one sequence with optional activation capture.
 /// `tokens`: token ids; returns logits `[T, vocab]`.
 fn forward_seq(
@@ -100,7 +149,7 @@ fn forward_seq(
     capture: Option<&mut Captured>,
 ) -> Mat {
     let t = tokens.len();
-    let (d, h, hd) = (cfg.dim, cfg.n_heads, cfg.head_dim());
+    let (d, h) = (cfg.dim, cfg.n_heads);
     let mut cap = capture;
 
     // Embedding lookup.
@@ -125,39 +174,7 @@ fn forward_seq(
         rope(&mut q, h, cfg.rope_theta);
         rope(&mut k, h, cfg.rope_theta);
 
-        // Causal attention per head.
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut o = Mat::zeros(t, d);
-        let mut att = vec![0.0f32; t];
-        for head in 0..h {
-            let base = head * hd;
-            for qi in 0..t {
-                let qrow = &q.row(qi)[base..base + hd];
-                let mut mx = f32::NEG_INFINITY;
-                for ki in 0..=qi {
-                    let krow = &k.row(ki)[base..base + hd];
-                    let mut dot = 0.0f32;
-                    for e in 0..hd {
-                        dot += qrow[e] * krow[e];
-                    }
-                    att[ki] = dot * scale;
-                    mx = mx.max(att[ki]);
-                }
-                let mut z = 0.0f32;
-                for ki in 0..=qi {
-                    att[ki] = (att[ki] - mx).exp();
-                    z += att[ki];
-                }
-                let orow = o.row_mut(qi);
-                for ki in 0..=qi {
-                    let w = att[ki] / z;
-                    let vrow = &v.row(ki)[base..base + hd];
-                    for e in 0..hd {
-                        orow[base + e] += w * vrow[e];
-                    }
-                }
-            }
-        }
+        let o = causal_attention(&q, &k, &v, h);
         if let Some(c) = cap.as_deref_mut() {
             c.push(LinearRef { layer: l, kind: LinearKind::Wo }, o.clone());
         }
@@ -281,6 +298,20 @@ mod tests {
         let ppl = perplexity(&ps, &batch);
         // Random init => close to uniform over 256 tokens.
         assert!(ppl > cfg.vocab as f64 * 0.3 && ppl < cfg.vocab as f64 * 3.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn causal_attention_first_row_is_its_own_value() {
+        // Position 0 attends only to itself, so its output is exactly v[0]
+        // for every head — a direct invariant of the shared attention glue.
+        let mut rng = Pcg32::seeded(8);
+        let (t, heads, d) = (5usize, 2usize, 8usize);
+        let q = Mat::randn(t, d, 1.0, &mut rng);
+        let k = Mat::randn(t, d, 1.0, &mut rng);
+        let v = Mat::randn(t, d, 1.0, &mut rng);
+        let o = causal_attention(&q, &k, &v, heads);
+        crate::util::testkit::assert_close(o.row(0), v.row(0), 1e-6).unwrap();
+        assert!(o.data().iter().all(|x| x.is_finite()));
     }
 
     #[test]

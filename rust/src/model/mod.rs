@@ -15,6 +15,6 @@ mod synth;
 
 pub use config::{LinearKind, LinearRef, ModelConfig};
 pub use forward::{forward_captured, lm_forward, lm_loss, perplexity, Captured};
-pub(crate) use forward::{rmsnorm, swiglu};
+pub(crate) use forward::{causal_attention, rmsnorm, rope, swiglu};
 pub use params::ParamStore;
 pub use synth::synth_trained_params;

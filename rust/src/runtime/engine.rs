@@ -12,12 +12,21 @@ use super::convert::value_to_literal;
 use super::exec::{ExecBackend, TensorValue};
 use super::manifest::Manifest;
 
+/// Statics of a bound artifact, converted to literals exactly once.
+struct BoundStatics {
+    artifact: String,
+    /// Input-name -> pre-converted literal.
+    literals: Vec<(String, xla::Literal)>,
+}
+
 /// Owns the PJRT client and every compiled artifact executable.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     dir: PathBuf,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Resident artifact statics, keyed by the caller's bind key.
+    bound: HashMap<String, BoundStatics>,
 }
 
 impl Engine {
@@ -41,7 +50,13 @@ impl Engine {
             client.device_count(),
             manifest.artifacts.len()
         );
-        Ok(Engine { client, manifest, dir: dir.to_path_buf(), executables: HashMap::new() })
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            executables: HashMap::new(),
+            bound: HashMap::new(),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -113,6 +128,28 @@ impl Engine {
         );
         Ok(outs)
     }
+
+    /// Convert artifact output literals back to host tensors per the
+    /// manifest spec (shared by `run` and `run_bound`).
+    fn literals_to_values(
+        &self,
+        artifact: &str,
+        outs: &[xla::Literal],
+    ) -> Result<Vec<TensorValue>> {
+        // Callers run run_literals first, which validates output arity.
+        let spec = self.manifest.artifact(artifact).unwrap();
+        let mut values = Vec::with_capacity(outs.len());
+        for (lit, io) in outs.iter().zip(&spec.outputs) {
+            anyhow::ensure!(
+                io.dtype == "f32",
+                "artifact {artifact}: output '{}' has unsupported dtype {}",
+                io.name,
+                io.dtype
+            );
+            values.push(TensorValue::f32(io.shape.clone(), lit.to_vec::<f32>()?)?);
+        }
+        Ok(values)
+    }
 }
 
 impl ExecBackend for Engine {
@@ -133,19 +170,90 @@ impl ExecBackend for Engine {
         let lits: Vec<xla::Literal> =
             inputs.iter().map(value_to_literal).collect::<Result<_>>()?;
         let outs = self.run_literals(artifact, &lits)?;
-        // run_literals validated output arity against the spec.
-        let spec = self.manifest.artifact(artifact).unwrap().clone();
-        let mut values = Vec::with_capacity(outs.len());
-        for (lit, io) in outs.iter().zip(&spec.outputs) {
+        self.literals_to_values(artifact, &outs)
+    }
+
+    fn bind(&mut self, key: &str, artifact: &str, statics: &[(&str, &TensorValue)]) -> Result<()> {
+        let spec = self
+            .manifest
+            .artifact(artifact)
+            .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?;
+        // Every static must name a manifest input and match its declared
+        // shape/dtype — a mismatch fails here, not mid-serving inside the
+        // first execute.  The host->literal conversion (the per-call cost
+        // this API removes) also happens here, exactly once.  NOTE: the
+        // cached literal is still cloned per `run_bound` call because
+        // `run_literals` consumes a `&[Literal]`; holding device buffers
+        // instead is the remaining step (see ROADMAP).
+        let mut literals = Vec::with_capacity(statics.len());
+        for &(name, value) in statics {
+            let io = spec
+                .inputs
+                .iter()
+                .find(|io| io.name == name)
+                .ok_or_else(|| anyhow!("artifact {artifact}: bind names unknown input '{name}'"))?;
             anyhow::ensure!(
-                io.dtype == "f32",
-                "artifact {artifact}: output '{}' has unsupported dtype {}",
-                io.name,
+                value.element_count() == io.elements(),
+                "artifact {artifact}: static '{name}' has {} elements, expected {:?}",
+                value.element_count(),
+                io.shape
+            );
+            let dtype_ok = match value {
+                TensorValue::F32 { .. } => io.dtype == "f32",
+                TensorValue::I32 { .. } => io.dtype == "i32",
+            };
+            anyhow::ensure!(
+                dtype_ok,
+                "artifact {artifact}: static '{name}' dtype does not match manifest '{}'",
                 io.dtype
             );
-            values.push(TensorValue::f32(io.shape.clone(), lit.to_vec::<f32>()?)?);
+            literals.push((name.to_string(), value_to_literal(value)?));
         }
-        Ok(values)
+        let artifact = artifact.to_string();
+        self.bound.insert(key.to_string(), BoundStatics { artifact, literals });
+        Ok(())
+    }
+
+    fn run_bound(&mut self, key: &str, dynamics: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let bound = self
+            .bound
+            .get(key)
+            .ok_or_else(|| anyhow!("pjrt backend: no bound artifact under key '{key}'"))?;
+        let artifact = bound.artifact.clone();
+        let spec = self.manifest.artifact(&artifact).unwrap();
+        // Assemble the full input list in manifest order: statics from the
+        // resident literals, dynamics consumed left to right.
+        let mut lits = Vec::with_capacity(spec.inputs.len());
+        let mut dyn_iter = dynamics.iter();
+        for io in &spec.inputs {
+            match bound.literals.iter().find(|(name, _)| *name == io.name) {
+                Some((_, lit)) => lits.push(lit.clone()),
+                None => {
+                    let v = dyn_iter.next().ok_or_else(|| {
+                        anyhow!(
+                            "bound artifact '{key}' ({artifact}): missing dynamic input '{}'",
+                            io.name
+                        )
+                    })?;
+                    lits.push(value_to_literal(v)?);
+                }
+            }
+        }
+        anyhow::ensure!(
+            dyn_iter.next().is_none(),
+            "bound artifact '{key}' ({artifact}): too many dynamic inputs (got {})",
+            dynamics.len()
+        );
+        let outs = self.run_literals(&artifact, &lits)?;
+        self.literals_to_values(&artifact, &outs)
+    }
+
+    fn supports_bind(&self) -> bool {
+        true
+    }
+
+    fn is_bound(&self, key: &str) -> bool {
+        self.bound.contains_key(key)
     }
 }
 

@@ -7,15 +7,20 @@
 //! |-----------------------------|------------------------------------------|--------------------|
 //! | `sinkhorn_soft_{n}x{b}`     | `w_p [n,b,b]`, `tau [1]`                 | `p_soft [n,b,b]`   |
 //! | `lcp_grad_{c_out}x{c_in}`   | `w`, `s`, `x`, `y`, `w_p`, `p_hard`, `tau` | `loss [1]`, `grads` |
-//! | `sparse_fwd_{c_out}x{c_in}` | `vals`, `idx`, `x`, `src`                | `y [t,c_out]`      |
+//! | `sparse_fwd_{c_out}x{c_in}` | `vals`, `idx`, `x`, `src_of`             | `y [t,c_out]`      |
 //! | `lm_forward`                | params (canonical order), `tokens [b,t]` | `logits [b,t,v]`   |
 //!
 //! [`ExecBackend`] abstracts who serves them:
 //! * [`super::NativeEngine`] — pure Rust, always available, dispatches to
 //!   the host implementations (`lcp::SinkhornTape`, `lcp::HostBackend`,
 //!   `sparsity::Compressed`, `model::lm_forward`);
-//! * [`super::Engine`] (`--features pjrt`) — compiles and executes the AOT
+//! * `super::Engine` (`--features pjrt`) — compiles and executes the AOT
 //!   HLO artifacts on the PJRT CPU client.
+//!
+//! Backends may additionally hold *static* artifact inputs (weights and
+//! their metadata) resident via [`ExecBackend::bind`], so the serving hot
+//! path ([`crate::serve`]) only moves activations across the boundary —
+//! see the `bind`/`run_bound` contract below.
 //!
 //! [`ExecLcpBackend`] adapts any `ExecBackend` to the LCP trainer's
 //! [`LcpBackend`] interface, which is how the pipeline runs learnable
@@ -127,6 +132,49 @@ pub trait ExecBackend {
     /// Lets adapters fail fast at construction instead of mid-run.
     fn input_shape(&self, _artifact: &str, _input: &str) -> Option<Vec<usize>> {
         None
+    }
+
+    /// Hold the *static* inputs of `artifact` (weights/metadata that do
+    /// not change across requests) resident under a caller-chosen `key`,
+    /// so subsequent [`ExecBackend::run_bound`] calls only pass the
+    /// dynamic per-request inputs across the boundary.
+    ///
+    /// `statics` are named with the artifact's input names; the backend
+    /// validates and converts them exactly once at bind time (the native
+    /// engine builds the [`crate::sparsity::Compressed`] weight here and
+    /// never re-runs `from_parts` validation on the hot path).  Keys are
+    /// caller-scoped: distinct weights sharing one artifact shape (e.g.
+    /// `wq`/`wk` of the same decoder layer) bind under distinct keys.
+    /// Re-binding an existing key replaces it.
+    ///
+    /// Backends without resident-weight support keep the default, which
+    /// errors; probe with [`ExecBackend::supports_bind`] and fall back to
+    /// [`ExecBackend::run`] with the full input list.
+    fn bind(&mut self, key: &str, artifact: &str, statics: &[(&str, &TensorValue)]) -> Result<()> {
+        let _ = (key, statics);
+        Err(anyhow!(
+            "backend '{}' cannot hold artifact '{artifact}' resident (no bind support)",
+            self.backend_name()
+        ))
+    }
+
+    /// Execute a bound artifact: `dynamics` are the non-static inputs in
+    /// artifact order (for `sparse_fwd_*`, just the activation `x`).
+    fn run_bound(&mut self, key: &str, dynamics: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let _ = dynamics;
+        Err(anyhow!("backend '{}' has no bound artifact under key '{key}'", self.backend_name()))
+    }
+
+    /// Whether this backend implements [`ExecBackend::bind`] /
+    /// [`ExecBackend::run_bound`].
+    fn supports_bind(&self) -> bool {
+        false
+    }
+
+    /// Whether `key` currently holds a bound artifact.
+    fn is_bound(&self, key: &str) -> bool {
+        let _ = key;
+        false
     }
 }
 

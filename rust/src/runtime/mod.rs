@@ -6,7 +6,7 @@
 //! * [`NativeEngine`] — pure Rust, the default and the only backend
 //!   compiled without extra features.  Always available (CI, offline),
 //!   dispatches to the host implementations of the same math.
-//! * [`Engine`] (`--features pjrt`) — loads AOT HLO-text artifacts
+//! * `Engine` (`--features pjrt`) — loads AOT HLO-text artifacts
 //!   (`make artifacts` emits `artifacts/*.hlo.txt` + `manifest.json`),
 //!   compiles each once on the PJRT CPU client, and executes them with
 //!   host tensors.  HLO *text* is the interchange format (xla_extension

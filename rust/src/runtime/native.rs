@@ -16,6 +16,14 @@
 //! `--features pjrt` swaps in the XLA-compiled artifacts behind the same
 //! [`ExecBackend`] trait, and `tests/lcp_cross_check.rs` pins the two
 //! together when artifacts are present.
+//!
+//! `sparse_fwd_*` additionally supports the resident-weight
+//! [`ExecBackend::bind`] path: the compressed weight and its permutation
+//! are validated and built exactly once at bind time, so per-request
+//! `run_bound` calls move only the activation across the boundary (the
+//! serving subsystem's hot path — see [`crate::serve`]).
+
+use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
@@ -46,20 +54,31 @@ impl Default for NativeCfg {
     }
 }
 
+/// A bound (backend-resident) artifact: statics validated and converted
+/// exactly once at [`ExecBackend::bind`] time.
+#[derive(Debug, Clone)]
+enum Bound {
+    /// `sparse_fwd_*`: the compressed N:M weight (`from_parts` validation
+    /// already paid) plus its checked channel permutation.
+    SparseFwd { comp: Compressed, src: Vec<usize> },
+}
+
 /// The pure-Rust [`ExecBackend`].
 #[derive(Debug, Clone, Default)]
 pub struct NativeEngine {
     cfg: NativeCfg,
+    /// Resident artifacts, keyed by the caller's bind key.
+    bound: HashMap<String, Bound>,
 }
 
 impl NativeEngine {
     pub fn new(cfg: NativeCfg) -> NativeEngine {
-        NativeEngine { cfg }
+        NativeEngine { cfg, bound: HashMap::new() }
     }
 
     /// Default config plus a model for `lm_forward`.
     pub fn with_model(model: ModelConfig) -> NativeEngine {
-        NativeEngine { cfg: NativeCfg { model: Some(model), ..NativeCfg::default() } }
+        NativeEngine::new(NativeCfg { model: Some(model), ..NativeCfg::default() })
     }
 
     pub fn cfg(&self) -> &NativeCfg {
@@ -174,26 +193,10 @@ impl NativeEngine {
             xshape.len() == 2 && xshape[1] == c_in,
             "artifact {name}: input 'x' has shape {xshape:?}, expected [T, {c_in}]"
         );
-        check_shape(name, "src", &inputs[3], &[c_in])?;
+        check_shape(name, "src_of", &inputs[3], &[c_in])?;
 
-        let idx: Vec<u32> = inputs[1]
-            .as_i32()?
-            .iter()
-            .map(|&v| {
-                u32::try_from(v)
-                    .map_err(|_| anyhow!("artifact {name}: negative column index {v}"))
-            })
-            .collect::<Result<_>>()?;
-        let comp = Compressed::from_parts(nm, c_out, c_in, inputs[0].as_f32()?.to_vec(), idx)?;
-        let src: Vec<usize> = inputs[3].as_i32()?.iter().map(|&v| v as usize).collect();
-        // Must be a true permutation: in-range AND no duplicates, else the
-        // gather silently duplicates/drops channels.
-        let mut seen = vec![false; c_in];
-        for &i in &src {
-            anyhow::ensure!(i < c_in, "artifact {name}: permutation index {i} out of range");
-            anyhow::ensure!(!seen[i], "artifact {name}: duplicate permutation index {i}");
-            seen[i] = true;
-        }
+        let comp = build_compressed(name, nm, c_out, c_in, &inputs[0], &inputs[1])?;
+        let src = check_permutation(name, &inputs[3], c_in)?;
         let x = inputs[2].to_mat()?;
         let xp = x.permute_cols(&src);
 
@@ -300,6 +303,104 @@ impl ExecBackend for NativeEngine {
             Err(anyhow!("native backend: unknown artifact '{artifact}'"))
         }
     }
+
+    fn bind(&mut self, key: &str, artifact: &str, statics: &[(&str, &TensorValue)]) -> Result<()> {
+        let Some(dims) = artifact.strip_prefix("sparse_fwd_") else {
+            return Err(anyhow!(
+                "native backend: only sparse_fwd_* artifacts support binding, got '{artifact}'"
+            ));
+        };
+        let (c_out, c_in) = parse_dims(dims)
+            .ok_or_else(|| anyhow!("artifact '{artifact}': malformed shape suffix '{dims}'"))?;
+        let nm = self.cfg.nm;
+        anyhow::ensure!(
+            c_in % nm.m == 0,
+            "artifact {artifact}: C_in {c_in} not divisible by M {}",
+            nm.m
+        );
+        let k = c_in / nm.m * nm.keep;
+        anyhow::ensure!(
+            statics.len() == 3,
+            "artifact {artifact}: bind expects 3 statics (vals, idx, src_of), got {}",
+            statics.len()
+        );
+        let find = |want: &str| {
+            statics
+                .iter()
+                .find(|(name, _)| *name == want)
+                .map(|&(_, v)| v)
+                .ok_or_else(|| anyhow!("artifact {artifact}: bind missing static input '{want}'"))
+        };
+        let (vals, idx, src) = (find("vals")?, find("idx")?, find("src_of")?);
+        check_shape(artifact, "vals", vals, &[c_out, k])?;
+        check_shape(artifact, "idx", idx, &[c_out, k])?;
+        check_shape(artifact, "src_of", src, &[c_in])?;
+        let comp = build_compressed(artifact, nm, c_out, c_in, vals, idx)?;
+        let src = check_permutation(artifact, src, c_in)?;
+        self.bound.insert(key.to_string(), Bound::SparseFwd { comp, src });
+        Ok(())
+    }
+
+    fn run_bound(&mut self, key: &str, dynamics: &[TensorValue]) -> Result<Vec<TensorValue>> {
+        let Some(Bound::SparseFwd { comp, src }) = self.bound.get(key) else {
+            return Err(anyhow!("native backend: no bound artifact under key '{key}'"));
+        };
+        anyhow::ensure!(
+            dynamics.len() == 1,
+            "bound sparse_fwd '{key}': got {} dynamic inputs, expected 1 (x)",
+            dynamics.len()
+        );
+        let (_, c_in) = comp.shape();
+        let xshape = dynamics[0].shape();
+        anyhow::ensure!(
+            xshape.len() == 2 && xshape[1] == c_in,
+            "bound sparse_fwd '{key}': input 'x' has shape {xshape:?}, expected [T, {c_in}]"
+        );
+        let x = dynamics[0].to_mat()?;
+        let y = comp.matmul_xt_threads(&x.permute_cols(src), self.cfg.threads);
+        let (yr, yc) = y.shape();
+        Ok(vec![TensorValue::f32(vec![yr, yc], y.into_vec())?])
+    }
+
+    fn supports_bind(&self) -> bool {
+        true
+    }
+
+    fn is_bound(&self, key: &str) -> bool {
+        self.bound.contains_key(key)
+    }
+}
+
+/// Validate `vals`/`idx` against the N:M layout and build the compressed
+/// weight (shared by the per-call `sparse_fwd` path and `bind`).
+fn build_compressed(
+    name: &str,
+    nm: NmConfig,
+    c_out: usize,
+    c_in: usize,
+    vals: &TensorValue,
+    idx: &TensorValue,
+) -> Result<Compressed> {
+    let mut cols = Vec::with_capacity(idx.element_count());
+    for &v in idx.as_i32()? {
+        let c = u32::try_from(v)
+            .map_err(|_| anyhow!("artifact {name}: negative column index {v}"))?;
+        cols.push(c);
+    }
+    Compressed::from_parts(nm, c_out, c_in, vals.as_f32()?.to_vec(), cols)
+}
+
+/// Validate that `src` is a true permutation of `0..c_in`: in-range AND
+/// no duplicates, else the gather silently duplicates/drops channels.
+fn check_permutation(name: &str, src: &TensorValue, c_in: usize) -> Result<Vec<usize>> {
+    let src: Vec<usize> = src.as_i32()?.iter().map(|&v| v as usize).collect();
+    let mut seen = vec![false; c_in];
+    for &i in &src {
+        anyhow::ensure!(i < c_in, "artifact {name}: permutation index {i} out of range");
+        anyhow::ensure!(!seen[i], "artifact {name}: duplicate permutation index {i}");
+        seen[i] = true;
+    }
+    Ok(src)
 }
 
 /// Parse an `"{A}x{B}"` artifact-name suffix.
@@ -473,6 +574,49 @@ mod tests {
             let want = x.permute_cols(&src).matmul_bt(&mask.apply(&w));
             assert_close(outs[0].as_f32().unwrap(), want.data(), 1e-5).unwrap();
         }
+    }
+
+    #[test]
+    fn bound_sparse_fwd_matches_per_call_run() {
+        let mut rng = Pcg32::seeded(17);
+        let (c_out, c_in, t) = (6usize, 16usize, 7usize);
+        let w = Mat::randn(c_out, c_in, 1.0, &mut rng);
+        let mask = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let comp = Compressed::compress(&w, &mask);
+        let x = Mat::randn(t, c_in, 1.0, &mut rng);
+        let src = rng.permutation(c_in);
+
+        let idx: Vec<i32> = comp.idx().iter().map(|&v| v as i32).collect();
+        let vals = TensorValue::f32(vec![c_out, comp.k()], comp.vals().to_vec()).unwrap();
+        let idx = TensorValue::i32(vec![c_out, comp.k()], idx).unwrap();
+        let src_v =
+            TensorValue::i32(vec![c_in], src.iter().map(|&v| v as i32).collect()).unwrap();
+        let x_v = TensorValue::from_mat(&x);
+        let name = format!("sparse_fwd_{c_out}x{c_in}");
+
+        let mut engine = NativeEngine::default();
+        assert!(engine.supports_bind());
+        assert!(!engine.is_bound("layers.0.wq"));
+        engine
+            .bind("layers.0.wq", &name, &[("vals", &vals), ("idx", &idx), ("src_of", &src_v)])
+            .unwrap();
+        assert!(engine.is_bound("layers.0.wq"));
+
+        // Bound execution is bit-identical to the per-call path.
+        let bound = engine.run_bound("layers.0.wq", std::slice::from_ref(&x_v)).unwrap();
+        let full = engine
+            .run(&name, &[vals.clone(), idx.clone(), x_v.clone(), src_v.clone()])
+            .unwrap();
+        assert_eq!(bound, full);
+
+        // Unknown keys, non-sparse_fwd artifacts, and bad statics error.
+        assert!(engine.run_bound("nope", std::slice::from_ref(&x_v)).is_err());
+        assert!(engine.bind("k", "sinkhorn_soft_2x4", &[]).is_err());
+        assert!(engine
+            .bind("k", &name, &[("vals", &vals), ("idx", &idx), ("src_of", &vals)])
+            .is_err());
+        // Wrong dynamic arity.
+        assert!(engine.run_bound("layers.0.wq", &[x_v.clone(), x_v]).is_err());
     }
 
     #[test]

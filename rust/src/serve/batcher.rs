@@ -45,6 +45,14 @@ impl MicroBatch {
         self.ids.len()
     }
 
+    /// Row span `[lo, hi)` of each member request inside `x`, in stacking
+    /// order.  Spans tile `[0, tokens)` contiguously — the serving path's
+    /// attention glue treats each span as an independent sequence (RoPE
+    /// positions restart, causal softmax never crosses a span boundary).
+    pub fn spans(&self) -> &[(usize, usize)] {
+        &self.spans
+    }
+
     /// Split a `[total_tokens, c_out]` batch output back into per-request
     /// outputs, in stacking order.
     pub fn split(&self, y: &Mat) -> Vec<(u64, Mat)> {

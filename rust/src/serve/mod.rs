@@ -7,35 +7,53 @@
 //! * [`SparseModel`] compresses **every** prunable linear of a
 //!   [`crate::coordinator::PrunedModel`] to the Sparse-Tensor-Core layout
 //!   exactly once (values + u8 group metadata + permutation, converted to
-//!   artifact tensors at build time) and runs the decoder layers' SwiGLU
-//!   MLP sublayers end-to-end on the sparse path, each
-//!   `sparse_fwd_{c_out}x{c_in}` execution routed through the
-//!   [`crate::runtime::ExecBackend`] trait — the same serving loop works
-//!   on the pure-Rust [`crate::runtime::NativeEngine`] and any
-//!   shape-polymorphic PJRT backend (fixed-shape AOT artifacts are
-//!   rejected up front; see [`Server`]).
+//!   artifact tensors at build time) and runs decoder-layer stages
+//!   end-to-end on the sparse path.  The [`ServePath`] picks the stage
+//!   shape: the full decoder layer (attention q/k/v/o through
+//!   `sparse_fwd_{c_out}x{c_in}` with RoPE + causal-softmax host glue
+//!   shared with the reference forward, then the SwiGLU MLP) or the MLP
+//!   sublayer alone (the original mode, kept as the comparison point).
+//!   Every `sparse_fwd` execution routes through the
+//!   [`crate::runtime::ExecBackend`] trait; on backends with
+//!   resident-weight support ([`crate::runtime::ExecBackend::bind`]) the
+//!   static weight tensors are bound once per backend and only
+//!   activations cross the per-request call boundary.
 //! * [`MicroBatcher`] coalesces the FIFO request queue into
 //!   token-budgeted micro-batches; [`ReorderBuffer`] keeps completions in
-//!   submission order.
-//! * [`Server`] drives the whole thing, either sequentially
+//!   submission order.  Attention is *span-local*: each coalesced
+//!   request keeps its own RoPE positions and causal mask, so outputs
+//!   are identical whether a request is served alone or batched.
+//! * [`Server`] drives batch runs either sequentially
 //!   ([`Server::run_sequential`], any backend) or with **cross-layer
 //!   pipelining** ([`Server::run_pipelined`]): one backend per decoder
 //!   layer connected by channels ([`crate::util::pool::pipeline_map`]),
 //!   so layer `L` of batch `i` overlaps layer `L+1` of batch `i-1` while
 //!   `Compressed::matmul_xt_threads` tiles each individual matmul across
 //!   worker threads.
+//! * [`Server::run_streaming`] keeps the loop *alive*: clients enqueue
+//!   requests ([`StreamClient::submit`] -> [`Ticket`]) while batches are
+//!   in flight, the micro-batcher thread wakes on arrival or after a
+//!   linger timeout, and shutdown drains every enqueued request through
+//!   the pipeline stages before returning a [`StreamReport`].
+//! * [`DenseModel`] materializes the dense-masked weights once — the
+//!   benchmark baseline the CI bench gate compares sparse serving
+//!   against, never part of the serving path itself.
 //!
 //! Numerics: the sparse path matches the host dense-masked reference
-//! ([`SparseModel::dense_forward`]) within 1e-3, and the pipelined and
-//! sequential modes are bit-identical (same kernels, same tiling).
+//! ([`SparseModel::dense_forward`]) within 1e-3 at 2:4 and 4:8, and the
+//! pipelined, sequential, and streaming modes are bit-identical (same
+//! kernels, same tiling).
 //!
-//! Entry points: the `permllm serve` CLI subcommand and the
-//! `sparse_inference` example (per-layer + end-to-end tokens/s).
+//! Entry points: the `permllm serve` CLI subcommand (`--sparse-attn`,
+//! `--stream`) and the `sparse_inference` example (per-layer + end-to-end
+//! tokens/s, `--json` for the machine-readable bench summary).
 
 mod batcher;
 mod model;
 mod server;
+mod stream;
 
 pub use batcher::{BatcherCfg, MicroBatch, MicroBatcher, ReorderBuffer, Request};
-pub use model::{SparseLayer, SparseModel};
+pub use model::{DenseModel, ServePath, SparseLayer, SparseModel};
 pub use server::{ServeCfg, ServeReport, Server, StageStats};
+pub use stream::{StreamClient, StreamReport, Ticket};

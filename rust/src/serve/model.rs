@@ -1,24 +1,68 @@
 //! Multi-layer sparse model: every prunable linear of a pruned model
 //! compressed to the N:M serving layout once, cached, and served through
-//! the [`ExecBackend`] artifact interface.
+//! the [`ExecBackend`] artifact interface — attention and MLP sublayers
+//! both.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::PrunedModel;
-use crate::model::{rmsnorm, swiglu, LinearKind, LinearRef, ModelConfig};
+use crate::model::{causal_attention, rmsnorm, rope, swiglu, LinearKind, LinearRef, ModelConfig};
 use crate::runtime::{ExecBackend, TensorValue};
 use crate::sparsity::{Compressed, NmConfig};
 use crate::tensor::Mat;
 
+/// Which sublayers of each decoder layer run on the sparse path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServePath {
+    /// SwiGLU MLP sublayers only: attention is skipped entirely and each
+    /// stage is `x + W_down(silu(W_gate(xn)) ⊙ W_up(xn))` — the original
+    /// serving mode, kept as the comparison point.
+    #[default]
+    MlpOnly,
+    /// The full decoder layer: the attention sublayer (q/k/v/o
+    /// projections via `sparse_fwd`, RoPE + causal-softmax host glue,
+    /// per request span) followed by the MLP sublayer.
+    FullDecoder,
+}
+
+impl ServePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServePath::MlpOnly => "mlp-only",
+            ServePath::FullDecoder => "full-decoder",
+        }
+    }
+
+    /// Whether `kind` is served on this path.
+    fn uses(&self, kind: LinearKind) -> bool {
+        match self {
+            ServePath::MlpOnly => {
+                matches!(kind, LinearKind::WGate | LinearKind::WUp | LinearKind::WDown)
+            }
+            ServePath::FullDecoder => true,
+        }
+    }
+}
+
 /// One compressed linear, ready to serve: the `sparse_fwd` artifact name
 /// plus its static inputs (vals / idx / src) converted exactly once at
 /// build time, so per-request work is only the activation conversion.
+///
+/// On backends with resident-weight support ([`ExecBackend::bind`]) the
+/// statics are bound once per backend under [`SparseLayer::bind_key`] and
+/// never cross the call boundary again; other backends fall back to the
+/// full per-call input list.
 #[derive(Debug, Clone)]
 pub struct SparseLayer {
     pub lin: LinearRef,
     pub artifact: String,
+    /// Bind key: the artifact name scoped by the owning model instance
+    /// and parameter, so same-shape linears (`wq`/`wk`/...) and layers
+    /// of *different* [`SparseModel`]s stay distinct per backend.
+    bind_key: String,
     nm: NmConfig,
     c_out: usize,
     c_in: usize,
@@ -36,8 +80,17 @@ pub struct SparseLayer {
     src_of: Vec<usize>,
 }
 
+/// Process-unique id per [`SparseModel`] instance, folded into bind keys
+/// so a backend shared across two models (e.g. after a re-prune) can
+/// never serve the first model's resident weights for the second.
+static MODEL_IDS: AtomicU64 = AtomicU64::new(0);
+
 impl SparseLayer {
-    fn build(lin: LinearRef, res: &crate::pruning::PruneResult) -> Result<SparseLayer> {
+    fn build(
+        instance: u64,
+        lin: LinearRef,
+        res: &crate::pruning::PruneResult,
+    ) -> Result<SparseLayer> {
         let comp = Compressed::compress(&res.weight, &res.mask);
         let (c_out, c_in) = comp.shape();
         let k = comp.k();
@@ -51,9 +104,12 @@ impl SparseLayer {
             res.src_of.len()
         );
         let src = TensorValue::i32(vec![c_in], res.src_of.iter().map(|&v| v as i32).collect())?;
+        let artifact = format!("sparse_fwd_{c_out}x{c_in}");
+        let bind_key = format!("{artifact}@m{instance}.{}", lin.param_name());
         Ok(SparseLayer {
             lin,
-            artifact: format!("sparse_fwd_{c_out}x{c_in}"),
+            artifact,
+            bind_key,
             nm: comp.cfg(),
             c_out,
             c_in,
@@ -75,13 +131,36 @@ impl SparseLayer {
         self.storage_bytes
     }
 
+    /// The key this layer's statics bind under on resident-weight
+    /// backends (artifact name scoped by model instance + parameter
+    /// name, e.g. `sparse_fwd_64x64@m0.layers.0.wq`).
+    pub fn bind_key(&self) -> &str {
+        &self.bind_key
+    }
+
     /// `y = x W_sparse^T` through the backend's `sparse_fwd` artifact
     /// (the artifact permutes `x` by `src` internally). `x` is
     /// `[T, C_in]` in ORIGINAL channel order.
+    ///
+    /// Backends with [`ExecBackend::supports_bind`] get the static
+    /// tensors bound on first use; afterwards only the activation crosses
+    /// the call boundary.  Other backends receive the full input list
+    /// every call.
     pub fn forward(&self, engine: &mut dyn ExecBackend, x: &Mat) -> Result<Mat> {
-        let inputs =
-            [self.vals.clone(), self.idx.clone(), TensorValue::from_mat(x), self.src.clone()];
-        let mut outs = engine.run(&self.artifact, &inputs)?;
+        let mut outs = if engine.supports_bind() {
+            if !engine.is_bound(&self.bind_key) {
+                engine.bind(
+                    &self.bind_key,
+                    &self.artifact,
+                    &[("vals", &self.vals), ("idx", &self.idx), ("src_of", &self.src)],
+                )?;
+            }
+            engine.run_bound(&self.bind_key, &[TensorValue::from_mat(x)])?
+        } else {
+            let inputs =
+                [self.vals.clone(), self.idx.clone(), TensorValue::from_mat(x), self.src.clone()];
+            engine.run(&self.artifact, &inputs)?
+        };
         anyhow::ensure!(
             outs.len() == 1,
             "artifact {} returned {} outputs, expected 1",
@@ -91,36 +170,153 @@ impl SparseLayer {
         outs.pop().expect("len checked").into_mat()
     }
 
+    /// The masked weight in *storage* (permuted) channel order, rebuilt
+    /// from the cached artifact tensors.
+    fn stored_dense(&self) -> Mat {
+        let vals = self.vals.as_f32().expect("vals dtype").to_vec();
+        let idx: Vec<u32> =
+            self.idx.as_i32().expect("idx dtype").iter().map(|&v| v as u32).collect();
+        Compressed::from_parts(self.nm, self.c_out, self.c_in, vals, idx)
+            .expect("layer was built from a valid compressed weight")
+            .to_dense()
+    }
+
     /// Host dense reference of [`SparseLayer::forward`]: permute the
     /// activations, dense matmul on the masked weight.  Materializes the
     /// dense weight per call from the cached artifact tensors — this is
     /// the *verification* path; keeping a permanent dense copy would make
     /// the compressed serving footprint a lie.
     pub fn forward_dense(&self, x: &Mat) -> Mat {
-        let vals = self.vals.as_f32().expect("vals dtype").to_vec();
-        let idx: Vec<u32> =
-            self.idx.as_i32().expect("idx dtype").iter().map(|&v| v as u32).collect();
-        let comp = Compressed::from_parts(self.nm, self.c_out, self.c_in, vals, idx)
-            .expect("layer was built from a valid compressed weight");
-        x.permute_cols(&self.src_of).matmul_bt(&comp.to_dense())
+        x.permute_cols(&self.src_of).matmul_bt(&self.stored_dense())
+    }
+
+    /// The masked dense weight in ORIGINAL channel order (permutation
+    /// folded back in), materialized on demand.  [`DenseModel`] caches
+    /// these once for the benchmark baseline; serving itself never does.
+    pub fn dense_weight(&self) -> Mat {
+        let stored = self.stored_dense();
+        let mut out = Mat::zeros(self.c_out, self.c_in);
+        for r in 0..self.c_out {
+            let srow = stored.row(r);
+            let orow = out.row_mut(r);
+            for (j, &oc) in self.src_of.iter().enumerate() {
+                orow[oc] = srow[j];
+            }
+        }
+        out
     }
 }
 
+/// Spans must tile `[0, rows)` contiguously: the attention glue treats
+/// each span as one independent sequence, and a row outside every span
+/// would silently skip attention.
+fn check_seqs(seqs: &[(usize, usize)], rows: usize) -> Result<()> {
+    let mut at = 0usize;
+    for &(lo, hi) in seqs {
+        anyhow::ensure!(
+            lo == at && lo < hi,
+            "sequence spans must tile the batch contiguously: got {seqs:?} for {rows} rows"
+        );
+        at = hi;
+    }
+    anyhow::ensure!(at == rows, "sequence spans cover {at} of {rows} rows: {seqs:?}");
+    Ok(())
+}
+
+/// The dense decoder-stage math for one layer, parameterized by how a
+/// linear is applied — the single copy shared by
+/// [`SparseModel::dense_stage`] and [`DenseModel::stage`] so the two
+/// dense references cannot drift from each other.
+struct DenseStage<'a> {
+    n_heads: usize,
+    rope_theta: f32,
+    attn_norm: &'a Mat,
+    mlp_norm: &'a Mat,
+    eps: f32,
+}
+
+impl DenseStage<'_> {
+    fn run(
+        &self,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        path: ServePath,
+        apply: &dyn Fn(LinearKind, &Mat) -> Mat,
+    ) -> Mat {
+        let x = match path {
+            ServePath::MlpOnly => x.clone(),
+            ServePath::FullDecoder => {
+                check_seqs(seqs, x.rows()).expect("bad sequence spans");
+                let xn = rmsnorm(x, self.attn_norm, self.eps);
+                let q = apply(LinearKind::Wq, &xn);
+                let k = apply(LinearKind::Wk, &xn);
+                let v = apply(LinearKind::Wv, &xn);
+                let o = attend_spans(&q, &k, &v, self.n_heads, self.rope_theta, seqs);
+                let att = apply(LinearKind::Wo, &o);
+                x.add(&att)
+            }
+        };
+        let xn = rmsnorm(&x, self.mlp_norm, self.eps);
+        let gate = apply(LinearKind::WGate, &xn);
+        let up = apply(LinearKind::WUp, &xn);
+        let h = swiglu(&gate, &up);
+        let down = apply(LinearKind::WDown, &h);
+        x.add(&down)
+    }
+}
+
+/// RoPE + causal softmax applied independently to each request span of a
+/// stacked micro-batch: positions restart at every span start and
+/// attention never crosses a span boundary, so a request's attention
+/// output is identical whether it is served alone or coalesced.
+/// `q`/`k`/`v` are `[T, d]`; returns the `[T, d]` mix (the `W_o` input).
+fn attend_spans(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    n_heads: usize,
+    theta: f32,
+    seqs: &[(usize, usize)],
+) -> Mat {
+    let mut o = Mat::zeros(q.rows(), q.cols());
+    for &(lo, hi) in seqs {
+        let mut qs = q.row_block(lo, hi);
+        let mut ks = k.row_block(lo, hi);
+        let vs = v.row_block(lo, hi);
+        rope(&mut qs, n_heads, theta);
+        rope(&mut ks, n_heads, theta);
+        let os = causal_attention(&qs, &ks, &vs, n_heads);
+        for (r, dst) in (lo..hi).enumerate() {
+            o.row_mut(dst).copy_from_slice(os.row(r));
+        }
+    }
+    o
+}
+
 /// All compressed linears of a pruned model plus the host glue (norms,
-/// SwiGLU) needed to run the decoder layers' MLP sublayers end-to-end on
-/// the sparse path.
+/// RoPE, causal softmax, SwiGLU) needed to run the decoder layers
+/// end-to-end on the sparse path.
 ///
-/// The serving pipeline treats each decoder layer's MLP sublayer
-/// (`x + W_down(silu(W_gate(xn)) ⊙ W_up(xn))`, `xn = rmsnorm(x)`) as one
-/// pipeline stage: three `sparse_fwd` executions per stage, `[T, d]` in
-/// and `[T, d]` out, so stages chain across decoder layers.  Attention
-/// sublayers keep their compressed weights cached here too (served via
-/// [`SparseModel::linear`]), but their softmax/RoPE glue stays on the
-/// host path for now — see ROADMAP.
+/// The serving pipeline treats each decoder layer as one pipeline stage,
+/// `[T, d]` in and `[T, d]` out, so stages chain across decoder layers.
+/// What a stage computes depends on the [`ServePath`]:
+///
+/// * [`ServePath::MlpOnly`] — the SwiGLU MLP sublayer only (three
+///   `sparse_fwd` executions per stage);
+/// * [`ServePath::FullDecoder`] — the attention sublayer (q/k/v/o through
+///   `sparse_fwd`, RoPE + causal softmax applied per request span on the
+///   host) followed by the MLP sublayer (seven `sparse_fwd` executions
+///   per stage).
+///
+/// The attention host glue is shared with the reference forward
+/// (`crate::model`) so the serving path and the host transformer cannot
+/// drift.
 pub struct SparseModel {
     cfg: ModelConfig,
     nm: NmConfig,
     layers: HashMap<LinearRef, SparseLayer>,
+    /// Per-decoder-layer attention norm gain `[1, d]`.
+    attn_norms: Vec<Mat>,
     /// Per-decoder-layer MLP norm gain `[1, d]`.
     mlp_norms: Vec<Mat>,
     norm_eps: f32,
@@ -137,6 +333,7 @@ impl SparseModel {
             .next()
             .ok_or_else(|| anyhow!("model has no pruned layers to serve (Dense method?)"))?;
         let nm = some.mask.cfg();
+        let instance = MODEL_IDS.fetch_add(1, Ordering::Relaxed);
         let mut layers = HashMap::new();
         for lin in cfg.prunable_linears() {
             let res = pruned
@@ -149,13 +346,16 @@ impl SparseModel {
                 lin.param_name(),
                 res.mask.cfg()
             );
-            layers.insert(lin, SparseLayer::build(lin, res)?);
+            layers.insert(lin, SparseLayer::build(instance, lin, res)?);
         }
+        let attn_norms = (0..cfg.n_layers)
+            .map(|l| pruned.params.get(&format!("layers.{l}.attn_norm")).clone())
+            .collect();
         let mlp_norms = (0..cfg.n_layers)
             .map(|l| pruned.params.get(&format!("layers.{l}.mlp_norm")).clone())
             .collect();
         let norm_eps = cfg.norm_eps;
-        Ok(SparseModel { cfg, nm, layers, mlp_norms, norm_eps })
+        Ok(SparseModel { cfg, nm, layers, attn_norms, mlp_norms, norm_eps })
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -197,54 +397,193 @@ impl SparseModel {
             .sum()
     }
 
-    /// One pipeline stage on the sparse path: decoder layer `layer`'s MLP
-    /// sublayer, `x: [T, d]` -> `[T, d]`.
+    fn layer(&self, layer: usize, kind: LinearKind) -> &SparseLayer {
+        &self.layers[&LinearRef { layer, kind }]
+    }
+
+    /// Decoder layer `layer`'s attention sublayer on the sparse path:
+    /// `x + W_o(attend(rope(W_q xn), rope(W_k xn), W_v xn))`, with RoPE +
+    /// causal softmax applied per request span (`seqs`).
+    pub fn attn_stage(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+    ) -> Result<Mat> {
+        check_seqs(seqs, x.rows())?;
+        let xn = rmsnorm(x, &self.attn_norms[layer], self.norm_eps);
+        let q = self.layer(layer, LinearKind::Wq).forward(engine, &xn)?;
+        let k = self.layer(layer, LinearKind::Wk).forward(engine, &xn)?;
+        let v = self.layer(layer, LinearKind::Wv).forward(engine, &xn)?;
+        let o = attend_spans(&q, &k, &v, self.cfg.n_heads, self.cfg.rope_theta, seqs);
+        let att = self.layer(layer, LinearKind::Wo).forward(engine, &o)?;
+        Ok(x.add(&att))
+    }
+
+    /// Decoder layer `layer`'s MLP sublayer on the sparse path:
+    /// `x + W_down(silu(W_gate(xn)) ⊙ W_up(xn))`, `xn = rmsnorm(x)`.
     pub fn mlp_stage(&self, engine: &mut dyn ExecBackend, layer: usize, x: &Mat) -> Result<Mat> {
         let xn = rmsnorm(x, &self.mlp_norms[layer], self.norm_eps);
-        let gate = self.layers[&LinearRef { layer, kind: LinearKind::WGate }].forward(engine, &xn)?;
-        let up = self.layers[&LinearRef { layer, kind: LinearKind::WUp }].forward(engine, &xn)?;
+        let gate = self.layer(layer, LinearKind::WGate).forward(engine, &xn)?;
+        let up = self.layer(layer, LinearKind::WUp).forward(engine, &xn)?;
         let h = swiglu(&gate, &up);
-        let down = self.layers[&LinearRef { layer, kind: LinearKind::WDown }].forward(engine, &h)?;
+        let down = self.layer(layer, LinearKind::WDown).forward(engine, &h)?;
         Ok(x.add(&down))
     }
 
-    /// Sparse forward through every decoder layer's MLP stage in order.
-    pub fn forward(&self, engine: &mut dyn ExecBackend, x: &Mat) -> Result<Mat> {
+    /// One pipeline stage (decoder layer `layer`) on the sparse path,
+    /// `x: [T, d]` -> `[T, d]`.
+    pub fn stage(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        path: ServePath,
+    ) -> Result<Mat> {
+        match path {
+            ServePath::MlpOnly => self.mlp_stage(engine, layer, x),
+            ServePath::FullDecoder => {
+                let a = self.attn_stage(engine, layer, x, seqs)?;
+                self.mlp_stage(engine, layer, &a)
+            }
+        }
+    }
+
+    /// Sparse forward through every decoder-layer stage in order.
+    pub fn forward(
+        &self,
+        engine: &mut dyn ExecBackend,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        path: ServePath,
+    ) -> Result<Mat> {
         let mut cur = x.clone();
         for layer in 0..self.n_stages() {
-            cur = self.mlp_stage(engine, layer, &cur)?;
+            cur = self.stage(engine, layer, &cur, seqs, path)?;
         }
         Ok(cur)
     }
 
-    /// Host dense-masked reference of [`SparseModel::mlp_stage`] — same
-    /// math, folded dense weights, no backend.
-    pub fn dense_stage(&self, layer: usize, x: &Mat) -> Mat {
-        let xn = rmsnorm(x, &self.mlp_norms[layer], self.norm_eps);
-        let gate = self.layers[&LinearRef { layer, kind: LinearKind::WGate }].forward_dense(&xn);
-        let up = self.layers[&LinearRef { layer, kind: LinearKind::WUp }].forward_dense(&xn);
-        let h = swiglu(&gate, &up);
-        let down = self.layers[&LinearRef { layer, kind: LinearKind::WDown }].forward_dense(&h);
-        x.add(&down)
+    /// Host dense-masked reference of [`SparseModel::stage`] — same math
+    /// and same host glue, per-call-materialized dense weights, no
+    /// backend.
+    pub fn dense_stage(
+        &self,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        path: ServePath,
+    ) -> Mat {
+        DenseStage {
+            n_heads: self.cfg.n_heads,
+            rope_theta: self.cfg.rope_theta,
+            attn_norm: &self.attn_norms[layer],
+            mlp_norm: &self.mlp_norms[layer],
+            eps: self.norm_eps,
+        }
+        .run(x, seqs, path, &|kind, x| self.layer(layer, kind).forward_dense(x))
     }
 
     /// Host dense-masked reference of [`SparseModel::forward`].
-    pub fn dense_forward(&self, x: &Mat) -> Mat {
+    pub fn dense_forward(&self, x: &Mat, seqs: &[(usize, usize)], path: ServePath) -> Mat {
         let mut cur = x.clone();
         for layer in 0..self.n_stages() {
-            cur = self.dense_stage(layer, &cur);
+            cur = self.dense_stage(layer, &cur, seqs, path);
         }
         cur
     }
 
-    /// Every artifact name this model serves through — for checking a
-    /// backend's coverage up front.
-    pub fn required_artifacts(&self) -> Vec<String> {
-        let mut names: Vec<String> =
-            self.layers.values().map(|l| l.artifact.clone()).collect();
+    /// Every artifact name this model serves through on `path` — for
+    /// checking a backend's coverage up front.
+    pub fn required_artifacts(&self, path: ServePath) -> Vec<String> {
+        let mut names = Vec::new();
+        for layer in self.layers.values() {
+            if path.uses(layer.lin.kind) {
+                names.push(layer.artifact.clone());
+            }
+        }
         names.sort();
         names.dedup();
         names
+    }
+
+    /// The parameters served through artifact `name` (for error messages
+    /// that point at the offending layers, not just the artifact).
+    pub fn artifact_users(&self, name: &str) -> String {
+        let mut users = Vec::new();
+        for layer in self.layers.values() {
+            if layer.artifact == name {
+                users.push(layer.lin.param_name());
+            }
+        }
+        users.sort();
+        users.join(", ")
+    }
+}
+
+/// Fully materialized dense-masked model: every pruned linear
+/// decompressed once to a dense `[C_out, C_in]` weight in ORIGINAL
+/// channel order, driven by the same host glue as the sparse path.
+///
+/// This is the *benchmark baseline* (what serving would cost without the
+/// compressed N:M path) and a fast parity reference; per-request serving
+/// never materializes it.  [`SparseLayer::forward_dense`] remains the
+/// memory-honest verification path.
+pub struct DenseModel {
+    cfg: ModelConfig,
+    weights: HashMap<LinearRef, Mat>,
+    attn_norms: Vec<Mat>,
+    mlp_norms: Vec<Mat>,
+    norm_eps: f32,
+}
+
+impl DenseModel {
+    /// Decompress every cached linear of `sm` once.
+    pub fn from_sparse(sm: &SparseModel) -> DenseModel {
+        let weights = sm.layers.iter().map(|(&lin, l)| (lin, l.dense_weight())).collect();
+        DenseModel {
+            cfg: sm.cfg.clone(),
+            weights,
+            attn_norms: sm.attn_norms.clone(),
+            mlp_norms: sm.mlp_norms.clone(),
+            norm_eps: sm.norm_eps,
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    pub fn width(&self) -> usize {
+        self.cfg.dim
+    }
+
+    fn weight(&self, layer: usize, kind: LinearKind) -> &Mat {
+        &self.weights[&LinearRef { layer, kind }]
+    }
+
+    /// One decoder-layer stage on plain dense matmuls (same glue as the
+    /// sparse path).
+    pub fn stage(&self, layer: usize, x: &Mat, seqs: &[(usize, usize)], path: ServePath) -> Mat {
+        DenseStage {
+            n_heads: self.cfg.n_heads,
+            rope_theta: self.cfg.rope_theta,
+            attn_norm: &self.attn_norms[layer],
+            mlp_norm: &self.mlp_norms[layer],
+            eps: self.norm_eps,
+        }
+        .run(x, seqs, path, &|kind, x| x.matmul_bt(self.weight(layer, kind)))
+    }
+
+    /// Dense forward through every decoder-layer stage in order.
+    pub fn forward(&self, x: &Mat, seqs: &[(usize, usize)], path: ServePath) -> Mat {
+        let mut cur = x.clone();
+        for layer in 0..self.n_stages() {
+            cur = self.stage(layer, &cur, seqs, path);
+        }
+        cur
     }
 }
 
@@ -260,19 +599,29 @@ pub(crate) mod tests {
     use crate::util::rng::Pcg32;
     use crate::util::testkit::assert_close;
 
-    pub(crate) fn tiny_sparse_model() -> SparseModel {
+    pub(crate) fn sparse_model_with(nm: NmConfig) -> SparseModel {
         let cfg = ModelConfig::by_name("tiny-s").unwrap();
         let ps = synth_trained_params(&cfg, 11);
         let corpus = Corpus::build(CorpusKind::C4Like, 5);
         let pc = PipelineCfg {
+            nm,
             calib_seqs: 2,
             calib_len: 32,
             calib_rows: 32,
-            lcp: LcpCfg { block: 16, steps: 6, lr: 0.1, ..Default::default() },
+            lcp: LcpCfg { block: 16, steps: 6, lr: 0.1, nm, ..Default::default() },
             ..Default::default()
         };
         let pruned = prune_model(&ps, &corpus, PruneMethod::OneShot(Metric::Wanda), &pc);
         SparseModel::from_pruned(&pruned).unwrap()
+    }
+
+    pub(crate) fn tiny_sparse_model() -> SparseModel {
+        sparse_model_with(NmConfig::PAT_2_4)
+    }
+
+    /// The whole batch as one sequence span.
+    pub(crate) fn whole(x: &Mat) -> Vec<(usize, usize)> {
+        vec![(0, x.rows())]
     }
 
     #[test]
@@ -308,6 +657,41 @@ pub(crate) mod tests {
             let got = layer.forward(&mut engine, &x).unwrap();
             let want = layer.forward_dense(&x);
             assert_close(got.data(), want.data(), 1e-4).unwrap();
+            // The statics were bound on first use: the layer is resident
+            // on the backend under its scoped key.
+            assert!(engine.is_bound(layer.bind_key()), "{}", layer.bind_key());
+        }
+    }
+
+    #[test]
+    fn bind_keys_are_unique_per_model_instance() {
+        // A backend shared across two models (e.g. after a re-prune) must
+        // never serve the first model's resident weights for the second.
+        let a = tiny_sparse_model();
+        let b = tiny_sparse_model();
+        let lin = a.cfg().prunable_linears()[0];
+        assert_ne!(a.linear(lin).bind_key(), b.linear(lin).bind_key());
+        let mut engine = NativeEngine::default();
+        let mut rng = Pcg32::seeded(1);
+        let x = Mat::randn(2, a.linear(lin).shape().1, 1.0, &mut rng);
+        a.linear(lin).forward(&mut engine, &x).unwrap();
+        b.linear(lin).forward(&mut engine, &x).unwrap();
+        assert!(engine.is_bound(a.linear(lin).bind_key()));
+        assert!(engine.is_bound(b.linear(lin).bind_key()));
+    }
+
+    #[test]
+    fn dense_weight_folds_the_permutation_back() {
+        let sm = tiny_sparse_model();
+        let mut rng = Pcg32::seeded(12);
+        for lin in sm.cfg().prunable_linears() {
+            let layer = sm.linear(lin);
+            let (_, c_in) = layer.shape();
+            let x = Mat::randn(3, c_in, 1.0, &mut rng);
+            // x @ W_orig^T must equal the permute-then-stored-matmul path.
+            let via_orig = x.matmul_bt(&layer.dense_weight());
+            let via_perm = layer.forward_dense(&x);
+            assert_close(via_orig.data(), via_perm.data(), 1e-4).unwrap();
         }
     }
 
@@ -319,22 +703,93 @@ pub(crate) mod tests {
             let mut engine = NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() });
             let t = 1 + rng.below_usize(6);
             let x = Mat::randn(t, sm.width(), 1.0, rng);
-            let got = sm.forward(&mut engine, &x).map_err(|e| format!("{e:#}"))?;
-            let want = sm.dense_forward(&x);
+            let got = sm
+                .forward(&mut engine, &x, &whole(&x), ServePath::MlpOnly)
+                .map_err(|e| format!("{e:#}"))?;
+            let want = sm.dense_forward(&x, &whole(&x), ServePath::MlpOnly);
             assert_close(got.data(), want.data(), 1e-3)
                 .map_err(|e| format!("threads={threads} t={t}: {e}"))
         });
     }
 
     #[test]
-    fn required_artifacts_are_supported_by_native() {
+    fn full_decoder_parity_at_2_4_and_4_8() {
+        // Tentpole acceptance: attention + MLP through sparse_fwd match
+        // the dense-masked reference within 1e-3, at both N:M patterns,
+        // including multi-span (coalesced-batch) attention.
+        for nm in [NmConfig::PAT_2_4, NmConfig::PAT_4_8] {
+            let sm = sparse_model_with(nm);
+            let mut engine = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            let mut rng = Pcg32::seeded(9);
+            let x = Mat::randn(9, sm.width(), 1.0, &mut rng);
+            let seqs = [(0usize, 4usize), (4, 9)];
+            let got = sm.forward(&mut engine, &x, &seqs, ServePath::FullDecoder).unwrap();
+            let want = sm.dense_forward(&x, &seqs, ServePath::FullDecoder);
+            assert_close(got.data(), want.data(), 1e-3)
+                .unwrap_or_else(|e| panic!("{}: {e}", nm.name()));
+            // The materialized DenseModel baseline agrees too.
+            let dm = DenseModel::from_sparse(&sm);
+            let base = dm.forward(&x, &seqs, ServePath::FullDecoder);
+            assert_close(got.data(), base.data(), 1e-3)
+                .unwrap_or_else(|e| panic!("{} dense baseline: {e}", nm.name()));
+        }
+    }
+
+    #[test]
+    fn attention_is_span_local() {
+        // Two requests coalesced into one batch attend independently: the
+        // second span's output must equal serving it alone.
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let mut rng = Pcg32::seeded(21);
+        let a = Mat::randn(3, sm.width(), 1.0, &mut rng);
+        let b = Mat::randn(4, sm.width(), 1.0, &mut rng);
+        let mut stacked = Mat::zeros(7, sm.width());
+        for r in 0..3 {
+            stacked.row_mut(r).copy_from_slice(a.row(r));
+        }
+        for r in 0..4 {
+            stacked.row_mut(3 + r).copy_from_slice(b.row(r));
+        }
+        let batched = sm
+            .forward(&mut engine, &stacked, &[(0, 3), (3, 7)], ServePath::FullDecoder)
+            .unwrap();
+        let alone = sm.forward(&mut engine, &b, &whole(&b), ServePath::FullDecoder).unwrap();
+        // Same kernels on the same rows => bit-identical.
+        assert_eq!(&batched.data()[3 * sm.width()..], alone.data());
+    }
+
+    #[test]
+    fn bad_sequence_spans_are_rejected() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let x = Mat::zeros(4, sm.width());
+        for seqs in [vec![], vec![(0, 3)], vec![(1, 4)], vec![(0, 2), (3, 4)]] {
+            assert!(
+                sm.forward(&mut engine, &x, &seqs, ServePath::FullDecoder).is_err(),
+                "{seqs:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn required_artifacts_follow_the_serve_path() {
         let sm = tiny_sparse_model();
         let engine = NativeEngine::default();
-        for name in sm.required_artifacts() {
+        let full = sm.required_artifacts(ServePath::FullDecoder);
+        let mlp = sm.required_artifacts(ServePath::MlpOnly);
+        // tiny-s: q/k/v/o are dxd — an artifact shape the MLP sublayers
+        // never use.
+        assert!(mlp.len() < full.len());
+        for name in &mlp {
+            assert!(full.contains(name), "{name} on the MLP path but not the full path");
+        }
+        for name in full {
             assert!(
                 crate::runtime::ExecBackend::supports(&engine, &name),
                 "native backend lacks {name}"
             );
+            assert!(!sm.artifact_users(&name).is_empty());
         }
     }
 }

@@ -1,8 +1,9 @@
-//! The serving loop: micro-batch the request queue, run batches through
-//! the decoder-layer stages, and hand per-request outputs back in
+//! The batch serving front-end: micro-batch the request queue, run
+//! batches through the decoder-layer stages ([`SparseModel::stage`] on
+//! the configured [`ServePath`]), and hand per-request outputs back in
 //! submission order.
 //!
-//! Two execution modes, same math:
+//! Two batch execution modes, same math:
 //!
 //! * [`Server::run_sequential`] — one [`ExecBackend`], stages executed in
 //!   order per batch.  Works with any backend, including non-`Send` ones
@@ -13,21 +14,42 @@
 //!   ([`crate::util::pool::pipeline_map`]) so stage `L` of batch `i`
 //!   overlaps stage `L+1` of batch `i-1`, on top of the per-stage
 //!   output-row-tile parallelism inside `Compressed::matmul_xt_threads`.
+//!
+//! The long-lived streaming mode ([`Server::run_streaming`]) lives in
+//! `super::stream`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::{BatcherCfg, MicroBatch, MicroBatcher, ReorderBuffer, Request};
-use super::model::SparseModel;
+use super::model::{ServePath, SparseModel};
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
 use crate::util::pool::pipeline_map;
 
-/// Serving configuration (micro-batcher limits).
-#[derive(Debug, Clone, Default)]
+/// Serving configuration.
+#[derive(Debug, Clone)]
 pub struct ServeCfg {
+    /// Micro-batcher limits.
     pub batcher: BatcherCfg,
+    /// Which sublayers run on the sparse path (attention + MLP or MLP
+    /// only).
+    pub path: ServePath,
+    /// Streaming only ([`Server::run_streaming`]): how long the
+    /// micro-batcher waits for more requests before dispatching a
+    /// partial batch.
+    pub linger: Duration,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            batcher: BatcherCfg::default(),
+            path: ServePath::default(),
+            linger: Duration::from_millis(2),
+        }
+    }
 }
 
 /// Wall-clock + token accounting for one pipeline stage (decoder layer).
@@ -99,6 +121,16 @@ impl Server {
         &self.model
     }
 
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
+    /// Mutable serving configuration (e.g. to switch the [`ServePath`]
+    /// between runs of the same compressed model).
+    pub fn cfg_mut(&mut self) -> &mut ServeCfg {
+        &mut self.cfg
+    }
+
     /// Queue + coalesce `requests` into micro-batches (submission order).
     fn coalesce(&self, requests: Vec<Request>) -> Result<Vec<MicroBatch>> {
         anyhow::ensure!(!requests.is_empty(), "no requests to serve");
@@ -109,26 +141,34 @@ impl Server {
         Ok(batcher.drain())
     }
 
-    /// Check `engine` serves every artifact the model needs, up front.
+    /// Check `engine` serves every artifact the active [`ServePath`]
+    /// needs, up front.
     ///
-    /// Backends that bake the activation shape into the artifact (the
-    /// PJRT engine's AOT manifest does) are rejected here rather than
-    /// mid-run: the micro-batcher produces variable-length token batches
-    /// (e.g. a smaller tail batch), which a fixed `[T, C_in]` input
-    /// cannot accept.  Pad-to-shape batching is a ROADMAP item.
-    fn check_backend(&self, engine: &dyn ExecBackend) -> Result<()> {
-        for name in self.model.required_artifacts() {
+    /// The activation-shape check is skipped for backends that report
+    /// *dynamic* shapes (`input_shape` returns `None` — the native
+    /// engine, or any shape-polymorphic PJRT build).  A backend that
+    /// bakes a fixed `[T, C_in]` into an artifact (the PJRT AOT manifest
+    /// does) is rejected here rather than mid-run, with the offending
+    /// artifact, its baked shape, and the layers routed through it all
+    /// named: the micro-batcher produces variable-length token batches
+    /// (e.g. a smaller tail batch), which a fixed shape cannot accept.
+    /// Pad-to-shape micro-batching is the ROADMAP item that will lift
+    /// this.
+    pub(super) fn check_backend(&self, engine: &dyn ExecBackend) -> Result<()> {
+        for name in self.model.required_artifacts(self.cfg.path) {
             anyhow::ensure!(
                 engine.supports(&name),
-                "backend '{}' does not serve artifact '{name}'",
-                engine.backend_name()
+                "backend '{}' does not serve artifact '{name}' (needed by {})",
+                engine.backend_name(),
+                self.model.artifact_users(&name)
             );
             if let Some(shape) = engine.input_shape(&name, "x") {
                 anyhow::bail!(
-                    "backend '{}' fixes the activation shape of '{name}' to {shape:?}; \
-                     serving needs shape-polymorphic artifacts (pad-to-shape micro-batching \
-                     is on the ROADMAP)",
-                    engine.backend_name()
+                    "backend '{}' fixes the activation shape of artifact '{name}' \
+                     (serving {}) to {shape:?}; serving needs shape-polymorphic \
+                     artifacts — pad-to-shape micro-batching is on the ROADMAP",
+                    engine.backend_name(),
+                    self.model.artifact_users(&name)
                 );
             }
         }
@@ -144,6 +184,7 @@ impl Server {
         self.check_backend(engine)?;
         let batches = self.coalesce(requests)?;
         let n_stages = self.model.n_stages();
+        let path = self.cfg.path;
         let t0 = Instant::now();
         let mut works: Vec<BatchWork> = Vec::with_capacity(batches.len());
         for mut batch in batches {
@@ -154,7 +195,7 @@ impl Server {
             let mut work = BatchWork { x, batch, stage_s, err: None };
             for layer in 0..n_stages {
                 let s0 = Instant::now();
-                match self.model.mlp_stage(engine, layer, &work.x) {
+                match self.model.stage(engine, layer, &work.x, work.batch.spans(), path) {
                     Ok(y) => work.x = y,
                     Err(e) => {
                         work.err = Some(format!("{e:#}"));
@@ -188,6 +229,7 @@ impl Server {
         let batches = self.coalesce(requests)?;
         let t0 = Instant::now();
         let model = &self.model;
+        let path = self.cfg.path;
         let stages: Vec<_> = engines
             .into_iter()
             .take(n_stages)
@@ -196,7 +238,8 @@ impl Server {
                 move |mut work: BatchWork| {
                     if work.err.is_none() {
                         let s0 = Instant::now();
-                        match model.mlp_stage(engine.as_mut(), layer, &work.x) {
+                        match model.stage(engine.as_mut(), layer, &work.x, work.batch.spans(), path)
+                        {
                             Ok(y) => {
                                 work.x = y;
                                 work.stage_s.push(s0.elapsed().as_secs_f64());
@@ -263,7 +306,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::runtime::{NativeCfg, NativeEngine};
-    use crate::serve::model::tests::tiny_sparse_model;
+    use crate::serve::model::tests::{tiny_sparse_model, whole};
     use crate::util::rng::Pcg32;
     use crate::util::testkit::assert_close;
 
@@ -290,7 +333,40 @@ mod tests {
         assert_eq!(report.total_tokens, 6 * 7);
         for ((id, got), req) in report.outputs.iter().zip(&reqs) {
             assert_eq!(*id, req.id, "outputs out of submission order");
-            let want = server.model().dense_forward(&req.x);
+            let want = server.model().dense_forward(&req.x, &whole(&req.x), ServePath::MlpOnly);
+            assert_close(got.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn full_decoder_serving_matches_dense_reference_per_request() {
+        // Attention is span-local, so a coalesced request's output equals
+        // its stand-alone dense reference even when batches mix requests
+        // of different lengths.
+        let sm = tiny_sparse_model();
+        let width = sm.width();
+        let server = Server::new(
+            sm,
+            ServeCfg {
+                batcher: BatcherCfg { max_tokens: 12, max_requests: 3 },
+                path: ServePath::FullDecoder,
+                ..ServeCfg::default()
+            },
+        );
+        let mut rng = Pcg32::seeded(17);
+        let reqs: Vec<Request> = (0..5)
+            .map(|id| Request {
+                id,
+                x: Mat::randn(2 + (id as usize % 4), width, 1.0, &mut rng),
+            })
+            .collect();
+        let mut engine = native(2);
+        let report = server.run_sequential(reqs.clone(), &mut engine).unwrap();
+        assert_eq!(report.outputs.len(), reqs.len());
+        for ((id, got), req) in report.outputs.iter().zip(&reqs) {
+            assert_eq!(*id, req.id);
+            let want =
+                server.model().dense_forward(&req.x, &whole(&req.x), ServePath::FullDecoder);
             assert_close(got.data(), want.data(), 1e-3).unwrap();
         }
     }
@@ -302,7 +378,11 @@ mod tests {
         let n_stages = sm.n_stages();
         let server = Server::new(
             sm,
-            ServeCfg { batcher: BatcherCfg { max_tokens: 16, max_requests: 4 } },
+            ServeCfg {
+                batcher: BatcherCfg { max_tokens: 16, max_requests: 4 },
+                path: ServePath::FullDecoder,
+                ..ServeCfg::default()
+            },
         );
         let reqs = requests(9, 5, width, 7);
         let mut engine = native(2);

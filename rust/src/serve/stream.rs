@@ -1,0 +1,556 @@
+//! Long-lived streaming serving loop.
+//!
+//! [`Server::run_sequential`]/[`Server::run_pipelined`] drain a fixed
+//! request set to completion; this module keeps the server *alive*:
+//! clients enqueue requests while batches are already in flight, the
+//! micro-batcher thread wakes on arrival (condvar) or after a linger
+//! timeout and dispatches token-budgeted batches into the decoder-layer
+//! stage chain, and a collector thread hands every request its own rows
+//! back through a per-request reply channel.
+//!
+//! Shutdown is a drain, not a drop: when the client closure returns (or
+//! unwinds), the queue closes, everything already enqueued still flows
+//! through every pipeline stage, and the worker threads join before
+//! [`Server::run_streaming`] returns its [`StreamReport`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{MicroBatcher, Request};
+use super::server::{Server, StageStats};
+use crate::runtime::ExecBackend;
+use crate::tensor::Mat;
+
+/// Outcome of one streamed request.
+type Reply = std::result::Result<Mat, String>;
+
+/// A claim on one in-flight request's output.  Waiting tickets in the
+/// order they were issued gives each client per-submission-order
+/// completion, regardless of how requests were coalesced or interleaved
+/// with other clients.
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl Ticket {
+    /// Block until the serving loop finishes this request.  Tickets stay
+    /// valid across shutdown: anything enqueued before the loop closed is
+    /// still served and its output buffered here.
+    pub fn wait(self) -> Result<Mat> {
+        match self.rx.recv() {
+            Ok(Ok(y)) => Ok(y),
+            Ok(Err(e)) => Err(anyhow!("request {}: {e}", self.id)),
+            Err(_) => Err(anyhow!("request {}: serving loop dropped the reply", self.id)),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+struct PendingReq {
+    req: Request,
+    reply: mpsc::Sender<Reply>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    pending: Vec<PendingReq>,
+    closed: bool,
+}
+
+/// The shared request queue between clients and the batcher thread.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    arrived: Condvar,
+}
+
+impl SharedQueue {
+    fn close(&self) {
+        // Robust against a client thread having panicked mid-submit: a
+        // poisoned queue still closes so the worker threads drain.
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
+        self.arrived.notify_all();
+    }
+}
+
+/// Closes the queue even if the client closure unwinds, so the worker
+/// threads never deadlock waiting for requests that will not come.
+struct CloseGuard<'q>(&'q SharedQueue);
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Handle clients use to enqueue requests while the loop is live.  It is
+/// `Copy` — hand one to every submitting thread (e.g. via
+/// `std::thread::scope` inside the client closure).
+#[derive(Clone, Copy)]
+pub struct StreamClient<'q> {
+    queue: &'q SharedQueue,
+    next_id: &'q AtomicU64,
+    width: usize,
+}
+
+impl StreamClient<'_> {
+    /// Activation width every request must match.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Enqueue `[tokens, width]` activations; returns a [`Ticket`] for
+    /// the output.  Wakes the micro-batcher immediately — requests
+    /// coalesce with whatever else is pending when the batch forms.
+    pub fn submit(&self, x: Mat) -> Result<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        anyhow::ensure!(
+            x.cols() == self.width,
+            "request {id}: width {} != serving width {}",
+            x.cols(),
+            self.width
+        );
+        anyhow::ensure!(x.rows() > 0, "request {id}: empty activation batch");
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            anyhow::ensure!(!st.closed, "request {id}: serving loop is shutting down");
+            st.pending.push(PendingReq { req: Request { id, x }, reply: tx });
+        }
+        self.queue.arrived.notify_one();
+        Ok(Ticket { id, rx })
+    }
+}
+
+/// A micro-batch mid-flight through the streaming stage chain.
+struct StreamWork {
+    batch: super::batcher::MicroBatch,
+    x: Mat,
+    /// Reply senders parallel to `batch.ids`.
+    replies: Vec<mpsc::Sender<Reply>>,
+    stage_s: Vec<f64>,
+    err: Option<String>,
+}
+
+/// Wall-clock + token accounting for one streaming run.
+#[derive(Debug)]
+pub struct StreamReport {
+    /// Per-decoder-layer busy time.
+    pub stage_stats: Vec<StageStats>,
+    /// From loop start to full drain.
+    pub total_seconds: f64,
+    /// Tokens served (summed over completed batches).
+    pub total_tokens: usize,
+    /// Micro-batches dispatched.
+    pub n_batches: usize,
+    /// Requests served (including failed ones).
+    pub n_requests: usize,
+    /// Requests whose batch failed mid-pipeline (the error was forwarded
+    /// to their tickets).
+    pub n_failed: usize,
+}
+
+impl StreamReport {
+    /// End-to-end streaming throughput.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.total_tokens as f64 / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Server {
+    /// Run the long-lived streaming loop for the duration of `client_fn`.
+    ///
+    /// `engines` selects the execution mode: exactly one backend runs
+    /// every decoder-layer stage on a single execution thread; one
+    /// backend *per stage* (`>= n_stages`) builds the channel-connected
+    /// pipelined chain, so stage `L` of batch `i` overlaps stage `L+1`
+    /// of batch `i-1` while new requests are still arriving.  Either
+    /// way backends move to worker threads, so they must be `Send` —
+    /// non-`Send` backends are batch-mode-only.
+    ///
+    /// `client_fn` receives a [`StreamClient`] (`Copy` — share it across
+    /// submitting threads) and may submit requests at any point; batches
+    /// form concurrently, woken by arrival or after the configured
+    /// [`super::ServeCfg::linger`].  When `client_fn` returns, the queue
+    /// closes, every enqueued request drains through the pipeline
+    /// stages, the workers join, and the closure's result is returned
+    /// next to the loop's [`StreamReport`].
+    pub fn run_streaming<R>(
+        &self,
+        engines: Vec<Box<dyn ExecBackend + Send>>,
+        client_fn: impl FnOnce(StreamClient<'_>) -> R,
+    ) -> Result<(R, StreamReport)> {
+        let n_stages = self.model().n_stages();
+        anyhow::ensure!(!engines.is_empty(), "streaming needs at least one backend");
+        anyhow::ensure!(
+            engines.len() == 1 || engines.len() >= n_stages,
+            "streaming runs with 1 backend (all stages on one thread) or one per stage: \
+             got {}, need 1 or >= {n_stages}",
+            engines.len()
+        );
+        for engine in &engines {
+            self.check_backend(engine.as_ref())?;
+        }
+        let model = self.model();
+        let path = self.cfg().path;
+        let linger = self.cfg().linger;
+        let batcher_cfg = self.cfg().batcher.clone();
+        let queue =
+            SharedQueue { state: Mutex::new(QueueState::default()), arrived: Condvar::new() };
+        let next_id = AtomicU64::new(0);
+        let t0 = Instant::now();
+
+        let (result, tally) = std::thread::scope(|scope| {
+            // ---- stage chain: batcher -> [stage threads] -> collector ----
+            let (batch_tx, mut prev_rx) = mpsc::channel::<StreamWork>();
+            if engines.len() == 1 {
+                let mut engine = engines.into_iter().next().expect("len checked");
+                let (tx, rx) = mpsc::channel::<StreamWork>();
+                let rx_in = std::mem::replace(&mut prev_rx, rx);
+                scope.spawn(move || {
+                    for mut work in rx_in {
+                        for layer in 0..n_stages {
+                            if work.err.is_some() {
+                                break;
+                            }
+                            let s0 = Instant::now();
+                            let spans = work.batch.spans();
+                            match model.stage(engine.as_mut(), layer, &work.x, spans, path) {
+                                Ok(y) => {
+                                    work.x = y;
+                                    work.stage_s.push(s0.elapsed().as_secs_f64());
+                                }
+                                Err(e) => work.err = Some(format!("{e:#}")),
+                            }
+                        }
+                        if tx.send(work).is_err() {
+                            break;
+                        }
+                    }
+                });
+            } else {
+                for (layer, mut engine) in engines.into_iter().take(n_stages).enumerate() {
+                    let (tx, rx) = mpsc::channel::<StreamWork>();
+                    let rx_in = std::mem::replace(&mut prev_rx, rx);
+                    scope.spawn(move || {
+                        for mut work in rx_in {
+                            if work.err.is_none() {
+                                let s0 = Instant::now();
+                                match model.stage(
+                                    engine.as_mut(),
+                                    layer,
+                                    &work.x,
+                                    work.batch.spans(),
+                                    path,
+                                ) {
+                                    Ok(y) => {
+                                        work.x = y;
+                                        work.stage_s.push(s0.elapsed().as_secs_f64());
+                                    }
+                                    Err(e) => work.err = Some(format!("{e:#}")),
+                                }
+                            }
+                            if tx.send(work).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+            }
+
+            // ---- collector: split batch outputs, reply per request ----
+            let collector = scope.spawn(move || {
+                let done_rx = prev_rx;
+                let mut stage_stats: Vec<StageStats> = (0..n_stages)
+                    .map(|layer| StageStats { layer, seconds: 0.0, tokens: 0 })
+                    .collect();
+                let (mut total_tokens, mut n_batches) = (0usize, 0usize);
+                let (mut n_requests, mut n_failed) = (0usize, 0usize);
+                for work in done_rx {
+                    let StreamWork { mut batch, x, replies, stage_s, err } = work;
+                    // The batcher moved the activations out; restore the
+                    // final-stage output so `tokens`/`split` see it.
+                    batch.x = x;
+                    n_batches += 1;
+                    n_requests += batch.n_requests();
+                    let tokens = batch.tokens();
+                    for (layer, s) in stage_s.iter().enumerate() {
+                        stage_stats[layer].seconds += s;
+                        stage_stats[layer].tokens += tokens;
+                    }
+                    if let Some(e) = err {
+                        n_failed += batch.n_requests();
+                        for reply in &replies {
+                            // A dropped ticket is fine; ignore send errors.
+                            let _ = reply.send(Err(e.clone()));
+                        }
+                        continue;
+                    }
+                    total_tokens += tokens;
+                    for ((_, y), reply) in batch.split(&batch.x).into_iter().zip(&replies) {
+                        let _ = reply.send(Ok(y));
+                    }
+                }
+                (stage_stats, total_tokens, n_batches, n_requests, n_failed)
+            });
+
+            // ---- batcher thread: condvar-woken micro-batching ----
+            scope.spawn(|| {
+                let tx = batch_tx;
+                let mut mb = MicroBatcher::new(model.width(), batcher_cfg.clone());
+                let mut replies: HashMap<u64, mpsc::Sender<Reply>> = HashMap::new();
+                loop {
+                    let drained: Vec<PendingReq> = {
+                        let mut st = queue.state.lock().unwrap();
+                        while st.pending.is_empty() && !st.closed {
+                            st = queue.arrived.wait(st).unwrap();
+                        }
+                        if st.pending.is_empty() && st.closed {
+                            break;
+                        }
+                        // Linger: give the batch a chance to fill before
+                        // dispatching a partial one — cut short by the
+                        // token budget, the request cap, or shutdown.
+                        let deadline = Instant::now() + linger;
+                        loop {
+                            let tokens: usize =
+                                st.pending.iter().map(|p| p.req.x.rows()).sum();
+                            if st.closed
+                                || tokens >= batcher_cfg.max_tokens
+                                || st.pending.len() >= batcher_cfg.max_requests
+                            {
+                                break;
+                            }
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let (guard, _) =
+                                queue.arrived.wait_timeout(st, deadline - now).unwrap();
+                            st = guard;
+                        }
+                        st.pending.drain(..).collect()
+                    };
+                    for p in drained {
+                        replies.insert(p.req.id, p.reply);
+                        mb.push(p.req).expect("client validated width/rows at submit");
+                    }
+                    while let Some(mut batch) = mb.next_batch() {
+                        let batch_replies: Vec<_> = batch
+                            .ids
+                            .iter()
+                            .map(|id| replies.remove(id).expect("one reply per request"))
+                            .collect();
+                        let x = std::mem::replace(&mut batch.x, Mat::zeros(0, 0));
+                        let work = StreamWork {
+                            batch,
+                            x,
+                            replies: batch_replies,
+                            stage_s: Vec::with_capacity(n_stages),
+                            err: None,
+                        };
+                        if tx.send(work).is_err() {
+                            return; // stage chain died; nothing to do
+                        }
+                    }
+                }
+                // Dropping `tx` here lets the stage chain and collector
+                // run dry and exit.
+            });
+
+            // ---- client closure on the caller's thread ----
+            let close = CloseGuard(&queue);
+            let result = client_fn(StreamClient {
+                queue: &queue,
+                next_id: &next_id,
+                width: model.width(),
+            });
+            drop(close); // close + notify so the batcher drains and exits
+            let tally = collector.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            (result, tally)
+        });
+
+        let (stage_stats, total_tokens, n_batches, n_requests, n_failed) = tally;
+        Ok((
+            result,
+            StreamReport {
+                stage_stats,
+                total_seconds: t0.elapsed().as_secs_f64(),
+                total_tokens,
+                n_batches,
+                n_requests,
+                n_failed,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::runtime::{NativeCfg, NativeEngine};
+    use crate::serve::batcher::BatcherCfg;
+    use crate::serve::model::tests::{tiny_sparse_model, whole};
+    use crate::serve::{ServeCfg, ServePath};
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::assert_close;
+
+    fn engines(n: usize, threads: usize) -> Vec<Box<dyn ExecBackend + Send>> {
+        (0..n)
+            .map(|_| {
+                Box::new(NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() }))
+                    as Box<dyn ExecBackend + Send>
+            })
+            .collect()
+    }
+
+    fn streaming_server(path: ServePath) -> Server {
+        Server::new(
+            tiny_sparse_model(),
+            ServeCfg {
+                batcher: BatcherCfg { max_tokens: 16, max_requests: 4 },
+                path,
+                linger: Duration::from_millis(1),
+            },
+        )
+    }
+
+    #[test]
+    fn concurrent_clients_complete_in_submission_order() {
+        let server = streaming_server(ServePath::FullDecoder);
+        let srv = &server;
+        let n_stages = server.model().n_stages();
+        let width = server.model().width();
+        let ((), report) = server
+            .run_streaming(engines(n_stages, 1), |client| {
+                std::thread::scope(|s| {
+                    for t in 0..3u64 {
+                        s.spawn(move || {
+                            let mut rng = Pcg32::seeded(100 + t);
+                            let mut in_flight = Vec::new();
+                            for i in 0..4usize {
+                                let rows = 1 + (t as usize + i) % 5;
+                                let x = Mat::randn(rows, width, 1.0, &mut rng);
+                                let ticket = client.submit(x.clone()).unwrap();
+                                in_flight.push((ticket, x));
+                            }
+                            // Tickets were issued in this client's
+                            // submission order (ids strictly increase).
+                            let ids: Vec<u64> =
+                                in_flight.iter().map(|(t, _)| t.id()).collect();
+                            assert!(
+                                ids.windows(2).all(|w| w[0] < w[1]),
+                                "per-client ids not monotonic: {ids:?}"
+                            );
+                            for (ticket, x) in in_flight {
+                                let y = ticket.wait().unwrap();
+                                assert_eq!(y.shape(), x.shape());
+                                // Parity against the per-request dense
+                                // reference proves no cross-request mixup.
+                                // (A swapped reply would be wildly off.)
+                                let want = srv.model().dense_forward(
+                                    &x,
+                                    &whole(&x),
+                                    ServePath::FullDecoder,
+                                );
+                                assert_close(y.data(), want.data(), 1e-3).unwrap();
+                            }
+                        });
+                    }
+                });
+            })
+            .unwrap();
+        assert_eq!(report.n_requests, 12);
+        assert_eq!(report.n_failed, 0);
+        assert!(report.n_batches >= 1 && report.n_batches <= 12);
+        let rows_total: usize =
+            (0..3usize).flat_map(|t| (0..4).map(move |i| 1 + (t + i) % 5)).sum();
+        assert_eq!(report.total_tokens, rows_total);
+        for s in &report.stage_stats {
+            assert_eq!(s.tokens, report.total_tokens, "stage {} token accounting", s.layer);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_batches() {
+        // The client closure returns while requests are still queued /
+        // in flight; every ticket must still be honoured after the loop
+        // exits, through every pipeline stage.
+        let server = streaming_server(ServePath::FullDecoder);
+        let n_stages = server.model().n_stages();
+        let width = server.model().width();
+        let (submitted, report) = server
+            .run_streaming(engines(n_stages, 1), |client| {
+                let mut rng = Pcg32::seeded(7);
+                (0..7)
+                    .map(|_| {
+                        let x = Mat::randn(3, width, 1.0, &mut rng);
+                        (client.submit(x.clone()).unwrap(), x)
+                    })
+                    .collect::<Vec<_>>()
+                // Return immediately: nothing waited on yet.
+            })
+            .unwrap();
+        assert_eq!(report.n_requests, 7);
+        assert_eq!(report.n_failed, 0);
+        assert_eq!(report.total_tokens, 21);
+        for (ticket, x) in submitted {
+            let y = ticket.wait().unwrap();
+            let want = server.model().dense_forward(&x, &whole(&x), ServePath::FullDecoder);
+            assert_close(y.data(), want.data(), 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn single_backend_streaming_works_and_matches_pipelined() {
+        let server = streaming_server(ServePath::FullDecoder);
+        let n_stages = server.model().n_stages();
+        let width = server.model().width();
+        let run = |engs: Vec<Box<dyn ExecBackend + Send>>| {
+            server
+                .run_streaming(engs, |client| {
+                    let mut rng = Pcg32::seeded(11);
+                    (0..5)
+                        .map(|_| client.submit(Mat::randn(4, width, 1.0, &mut rng)).unwrap())
+                        .collect::<Vec<_>>()
+                })
+                .unwrap()
+        };
+        let (tickets_seq, _) = run(engines(1, 1));
+        let (tickets_pipe, _) = run(engines(n_stages, 1));
+        for (a, b) in tickets_seq.into_iter().zip(tickets_pipe) {
+            // Same kernels, same tiling => bit-identical across modes.
+            assert_eq!(a.wait().unwrap().data(), b.wait().unwrap().data());
+        }
+    }
+
+    #[test]
+    fn streaming_rejects_bad_submissions_and_engine_counts() {
+        let server = streaming_server(ServePath::MlpOnly);
+        let width = server.model().width();
+        // An empty engine set is rejected up front.
+        assert!(server.run_streaming(engines(0, 1), |_| ()).is_err());
+        let ((), report) = server
+            .run_streaming(engines(1, 1), |client| {
+                // Wrong width and empty requests are rejected at submit.
+                assert!(client.submit(Mat::zeros(2, width + 1)).is_err());
+                assert!(client.submit(Mat::zeros(0, width)).is_err());
+                client.submit(Mat::zeros(1, width)).unwrap().wait().unwrap();
+            })
+            .unwrap();
+        assert_eq!(report.n_requests, 1);
+    }
+}

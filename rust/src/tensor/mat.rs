@@ -79,6 +79,14 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Copy of rows `[lo, hi)` as a new `[hi-lo, cols]` matrix (the
+    /// serving path's per-request span extraction — see `crate::serve`).
+    pub fn row_block(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows, "row block [{lo}, {hi}) out of range");
+        let data = self.data[lo * self.cols..hi * self.cols].to_vec();
+        Mat { rows: hi - lo, cols: self.cols, data }
+    }
+
     /// Copy of column `c`.
     pub fn col(&self, c: usize) -> Vec<f32> {
         (0..self.rows).map(|r| self[(r, c)]).collect()
@@ -314,6 +322,15 @@ mod tests {
         let a = m(2, 2, &[1., 2., 3., 4.]);
         let b = m(2, 2, &[5., 6., 7., 8.]);
         assert_eq!(a.matmul(&b).data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn row_block_copies_the_span() {
+        let a = m(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let b = a.row_block(1, 3);
+        assert_eq!(b.shape(), (2, 2));
+        assert_eq!(b.data(), &[3., 4., 5., 6.]);
+        assert_eq!(a.row_block(1, 1).shape(), (0, 2));
     }
 
     #[test]

@@ -61,7 +61,11 @@
 //! a micro-batcher coalesces the request queue, and
 //! [`serve::Server`] runs decoder-layer stages either sequentially or
 //! pipelined across per-stage backends (`permllm serve`, or the
-//! `sparse_inference` example for the benchmark loop).
+//! `sparse_inference` example for the benchmark loop).  Token
+//! generation runs through the KV-cached decode loop
+//! ([`serve::Server::run_decode_streaming`], `permllm serve --decode`):
+//! per-request [`serve::KvCache`]s, continuous batching of mixed
+//! prefill + decode steps, and greedy token streaming per ticket.
 //!
 //! See `examples/` (`quickstart`, `prune_llm`, `end_to_end`,
 //! `sparse_inference`, `ablation_lcp`) and the README for the full tour.

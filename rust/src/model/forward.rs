@@ -7,6 +7,7 @@
 use std::collections::HashMap;
 
 use super::config::{LinearKind, LinearRef, ModelConfig};
+use super::kv::KvCache;
 use super::params::ParamStore;
 use crate::tensor::Mat;
 
@@ -74,6 +75,14 @@ pub(crate) fn swiglu(gate: &Mat, up: &Mat) -> Mat {
 /// attention path (`crate::serve`) so the reference forward and the
 /// sparse serving path cannot drift.
 pub(crate) fn rope(x: &mut Mat, n_heads: usize, theta: f32) {
+    rope_at(x, n_heads, theta, 0);
+}
+
+/// [`rope`] with a position offset: row `r` is sequence position
+/// `pos0 + r`.  The incremental decode path rotates the new rows of a
+/// partially-cached sequence with exactly the angles the full-sequence
+/// forward would use, so cached and re-computed keys are bit-identical.
+pub(crate) fn rope_at(x: &mut Mat, n_heads: usize, theta: f32, pos0: usize) {
     let (t, d) = x.shape();
     let hd = d / n_heads;
     let half = hd / 2;
@@ -83,7 +92,7 @@ pub(crate) fn rope(x: &mut Mat, n_heads: usize, theta: f32) {
             let base = h * hd;
             for i in 0..half {
                 let freq = theta.powf(-(i as f32) * 2.0 / hd as f32);
-                let ang = p as f32 * freq;
+                let ang = (pos0 + p) as f32 * freq;
                 let (sin, cos) = ang.sin_cos();
                 let a = row[base + i];
                 let b = row[base + half + i];
@@ -104,17 +113,41 @@ pub(crate) fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat
     let (t, d) = q.shape();
     assert_eq!(k.shape(), (t, d), "q/k shape mismatch");
     assert_eq!(v.shape(), (t, d), "q/v shape mismatch");
+    causal_attention_offset(q, k.data(), v.data(), n_heads, 0)
+}
+
+/// [`causal_attention`] generalized to a partially-cached sequence: `q`
+/// holds only the `T_new` *new* rows (already rotated at their absolute
+/// positions `offset..offset+T_new`), while `k`/`v` hold the full
+/// `offset + T_new` rows (cache plus new) as flat row-major
+/// `[(offset+T_new) * d]` slices — borrowed straight from the KV cache,
+/// so the decode hot path copies nothing.  Query row `i` attends over
+/// key rows `0..=offset+i` — with `offset == 0` this is exactly the
+/// full-sequence loop, term order and all, so the two paths are
+/// bit-identical where they overlap.
+pub(crate) fn causal_attention_offset(
+    q: &Mat,
+    k: &[f32],
+    v: &[f32],
+    n_heads: usize,
+    offset: usize,
+) -> Mat {
+    let (t_new, d) = q.shape();
+    let t_all = offset + t_new;
+    assert_eq!(k.len(), t_all * d, "q/k shape mismatch");
+    assert_eq!(v.len(), t_all * d, "q/v shape mismatch");
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut o = Mat::zeros(t, d);
-    let mut att = vec![0.0f32; t];
+    let mut o = Mat::zeros(t_new, d);
+    let mut att = vec![0.0f32; t_all];
     for head in 0..n_heads {
         let base = head * hd;
-        for qi in 0..t {
+        for qi in 0..t_new {
+            let qabs = offset + qi;
             let qrow = &q.row(qi)[base..base + hd];
             let mut mx = f32::NEG_INFINITY;
-            for ki in 0..=qi {
-                let krow = &k.row(ki)[base..base + hd];
+            for ki in 0..=qabs {
+                let krow = &k[ki * d + base..ki * d + base + hd];
                 let mut dot = 0.0f32;
                 for e in 0..hd {
                     dot += qrow[e] * krow[e];
@@ -123,14 +156,14 @@ pub(crate) fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat
                 mx = mx.max(att[ki]);
             }
             let mut z = 0.0f32;
-            for ki in 0..=qi {
+            for ki in 0..=qabs {
                 att[ki] = (att[ki] - mx).exp();
                 z += att[ki];
             }
             let orow = o.row_mut(qi);
-            for ki in 0..=qi {
+            for ki in 0..=qabs {
                 let w = att[ki] / z;
-                let vrow = &v.row(ki)[base..base + hd];
+                let vrow = &v[ki * d + base..ki * d + base + hd];
                 for e in 0..hd {
                     orow[base + e] += w * vrow[e];
                 }
@@ -138,6 +171,33 @@ pub(crate) fn causal_attention(q: &Mat, k: &Mat, v: &Mat, n_heads: usize) -> Mat
         }
     }
     o
+}
+
+/// KV-cached attention for the new rows of one sequence at one layer:
+/// rotate `q`/`k` at positions `cache.pos(layer)..`, append the rotated
+/// keys and the values to the cache, and attend the new queries over the
+/// whole cached sequence.  This is the single attention body shared by
+/// the host incremental forward ([`lm_forward_step`]) and the serving
+/// subsystem's prefill/decode paths (`crate::serve`), so the reference
+/// and the sparse path cannot drift.
+///
+/// With an empty cache this computes exactly `causal_attention(rope(q),
+/// rope(k), v)` — prefill is just the `offset == 0` case.
+pub(crate) fn cached_attention(
+    mut q: Mat,
+    mut k: Mat,
+    v: Mat,
+    n_heads: usize,
+    theta: f32,
+    cache: &mut KvCache,
+    layer: usize,
+) -> Mat {
+    let offset = cache.pos(layer);
+    rope_at(&mut q, n_heads, theta, offset);
+    rope_at(&mut k, n_heads, theta, offset);
+    cache.append(layer, &k, &v);
+    let (k_all, v_all) = cache.slices(layer);
+    causal_attention_offset(&q, k_all, v_all, n_heads, offset)
 }
 
 /// Forward one sequence with optional activation capture.
@@ -205,6 +265,46 @@ fn forward_seq(
 /// Logits for a batch of sequences: returns one `[T, vocab]` per sequence.
 pub fn lm_forward(ps: &ParamStore, batch: &[Vec<u8>]) -> Vec<Mat> {
     batch.iter().map(|seq| forward_seq(ps.cfg(), ps, seq, None)).collect()
+}
+
+/// Incremental (KV-cached) forward of one sequence: process only the
+/// `tokens` appended since the last call, re-using `cache` for every
+/// earlier position, and return the `[t_new, vocab]` logits of the new
+/// rows.  The reference decode loop — feeding a sequence token by token
+/// produces, row for row, the same logits as [`lm_forward`] on the full
+/// sequence (`tests::incremental_forward_matches_full_recompute` pins
+/// this), which is the parity bar the serving subsystem's KV-cached
+/// decode path (`crate::serve`) is held to.
+///
+/// `cache` must have been created with this model's layer count and
+/// width ([`KvCache::new`]) and only ever fed by this function for this
+/// sequence.
+pub fn lm_forward_step(ps: &ParamStore, cache: &mut KvCache, tokens: &[u8]) -> Mat {
+    let cfg = ps.cfg();
+    assert_eq!(cache.n_layers(), cfg.n_layers, "cache layer count != model");
+    assert_eq!(cache.dim(), cfg.dim, "cache width != model");
+    let (t, d, h) = (tokens.len(), cfg.dim, cfg.n_heads);
+    let embed = ps.get("tok_embed");
+    let mut x = Mat::zeros(t, d);
+    for (r, &tok) in tokens.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(embed.row(tok as usize));
+    }
+    for l in 0..cfg.n_layers {
+        let name = |s: &str| format!("layers.{l}.{s}");
+        let a = rmsnorm(&x, ps.get(&name("attn_norm")), cfg.norm_eps);
+        let q = a.matmul_bt(ps.get(&name("wq")));
+        let k = a.matmul_bt(ps.get(&name("wk")));
+        let v = a.matmul_bt(ps.get(&name("wv")));
+        let o = cached_attention(q, k, v, h, cfg.rope_theta, cache, l);
+        x = x.add(&o.matmul_bt(ps.get(&name("wo"))));
+        let m = rmsnorm(&x, ps.get(&name("mlp_norm")), cfg.norm_eps);
+        let gate = m.matmul_bt(ps.get(&name("w_gate")));
+        let up = m.matmul_bt(ps.get(&name("w_up")));
+        let hmid = swiglu(&gate, &up);
+        x = x.add(&hmid.matmul_bt(ps.get(&name("w_down"))));
+    }
+    let xn = rmsnorm(&x, ps.get("final_norm"), cfg.norm_eps);
+    xn.matmul_bt(ps.get("lm_head"))
 }
 
 /// Forward with calibration capture over a batch.
@@ -312,6 +412,70 @@ mod tests {
         let o = causal_attention(&q, &k, &v, heads);
         crate::util::testkit::assert_close(o.row(0), v.row(0), 1e-6).unwrap();
         assert!(o.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn incremental_forward_matches_full_recompute() {
+        // Prefill a prompt, then feed one token at a time: every new row's
+        // logits must match the full-sequence forward bit-for-bit in spirit
+        // (same ops in the same order; tolerance only guards libm).
+        let (cfg, ps) = tiny();
+        let mut rng = Pcg32::seeded(9);
+        let s = seq(&mut rng, 12);
+        let full = &lm_forward(&ps, &[s.clone()])[0];
+        let mut cache = KvCache::new(cfg.n_layers, cfg.dim);
+        let prefill = lm_forward_step(&ps, &mut cache, &s[..5]);
+        assert_eq!(prefill.shape(), (5, cfg.vocab));
+        for pos in 0..5 {
+            crate::util::testkit::assert_close(prefill.row(pos), full.row(pos), 1e-5)
+                .unwrap_or_else(|e| panic!("prefill row {pos}: {e}"));
+        }
+        assert_eq!(cache.len(), 5);
+        for pos in 5..12 {
+            let step = lm_forward_step(&ps, &mut cache, &s[pos..pos + 1]);
+            assert_eq!(step.shape(), (1, cfg.vocab));
+            crate::util::testkit::assert_close(step.row(0), full.row(pos), 1e-5)
+                .unwrap_or_else(|e| panic!("decode row {pos}: {e}"));
+        }
+        assert_eq!(cache.len(), 12);
+        // Memory accounting: K + V, every layer, every position.
+        assert_eq!(cache.bytes(), 2 * cfg.n_layers * 12 * cfg.dim * 4);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_whole_prefill() {
+        // Prefilling in two chunks is the same computation as one chunk —
+        // the cache offset carries the RoPE positions across the split.
+        let (cfg, ps) = tiny();
+        let mut rng = Pcg32::seeded(10);
+        let s = seq(&mut rng, 9);
+        let mut whole = KvCache::new(cfg.n_layers, cfg.dim);
+        let all = lm_forward_step(&ps, &mut whole, &s);
+        let mut chunked = KvCache::new(cfg.n_layers, cfg.dim);
+        let head = lm_forward_step(&ps, &mut chunked, &s[..4]);
+        let tail = lm_forward_step(&ps, &mut chunked, &s[4..]);
+        for pos in 0..4 {
+            assert_eq!(head.row(pos), all.row(pos), "chunk A row {pos}");
+        }
+        for pos in 4..9 {
+            assert_eq!(tail.row(pos - 4), all.row(pos), "chunk B row {pos}");
+        }
+    }
+
+    #[test]
+    fn rope_at_offsets_match_full_rotation() {
+        // Rotating rows [3..7) of a sequence at offset 3 equals rows
+        // [3..7) of rotating the whole sequence.
+        let mut rng = Pcg32::seeded(11);
+        let (heads, d) = (2usize, 8usize);
+        let full0 = Mat::randn(7, d, 1.0, &mut rng);
+        let mut full = full0.clone();
+        rope(&mut full, heads, 10000.0);
+        let mut tail = full0.row_block(3, 7);
+        rope_at(&mut tail, heads, 10000.0, 3);
+        for r in 0..4 {
+            assert_eq!(tail.row(r), full.row(3 + r), "row {r}");
+        }
     }
 
     #[test]

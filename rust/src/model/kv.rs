@@ -1,0 +1,144 @@
+//! Per-sequence key/value cache for incremental (KV-cached) decoding.
+//!
+//! Autoregressive decode re-uses the attention keys and values of every
+//! already-processed position instead of re-running the full sequence:
+//! each forward step appends the *rotated* keys (RoPE already applied at
+//! the row's absolute position) and the values for the new rows, and the
+//! next step's queries attend over the whole cache.  One [`KvCache`]
+//! holds one sequence's K/V for **every** decoder layer, so a request
+//! carries a single cache object through the serving pipeline
+//! (`crate::serve`) or the host reference forward
+//! ([`crate::model::lm_forward_step`]).
+
+use crate::tensor::Mat;
+
+/// Cached K/V rows for one sequence, all decoder layers.
+///
+/// Keys are stored **post-RoPE**: row `p` of layer `l`'s key buffer was
+/// rotated at absolute position `p` when it was appended, so appending is
+/// the only write the cache ever needs — no re-rotation on later steps.
+/// Between forward passes every layer holds the same number of positions;
+/// mid-pass (e.g. inside a pipelined stage chain) layers advance
+/// independently, which is why the position offset is per layer
+/// ([`KvCache::pos`]).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    dim: usize,
+    /// Per-layer rotated keys, `pos(layer) * dim` values each.
+    k: Vec<Vec<f32>>,
+    /// Per-layer values, `pos(layer) * dim` values each.
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    /// Empty cache for a model with `n_layers` decoder layers of
+    /// activation width `dim`.
+    pub fn new(n_layers: usize, dim: usize) -> KvCache {
+        KvCache { dim, k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers] }
+    }
+
+    /// Decoder layers this cache covers.
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Activation width (`n_heads * head_dim`).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Positions cached at `layer` — the RoPE offset of the next row
+    /// appended to that layer.
+    pub fn pos(&self, layer: usize) -> usize {
+        self.k[layer].len() / self.dim
+    }
+
+    /// Sequence length cached so far (positions at layer 0; all layers
+    /// agree between forward passes).
+    pub fn len(&self) -> usize {
+        if self.k.is_empty() {
+            0
+        } else {
+            self.pos(0)
+        }
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident cache footprint in bytes (f32 K + V across every layer)
+    /// — the decode-time analogue of `SparseModel::storage_bytes` for
+    /// memory accounting.
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(|b| b.len() * 4).sum()
+    }
+
+    /// Append `[t_new, dim]` rotated keys and values for `layer`.
+    pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        assert_eq!(k_rows.cols(), self.dim, "key width != cache dim");
+        assert_eq!(v_rows.cols(), self.dim, "value width != cache dim");
+        assert_eq!(k_rows.rows(), v_rows.rows(), "k/v row count mismatch");
+        self.k[layer].extend_from_slice(k_rows.data());
+        self.v[layer].extend_from_slice(v_rows.data());
+    }
+
+    /// Borrow the full cached K and V of `layer` as flat row-major
+    /// `[pos * dim]` slices — the attention hot path reads these in
+    /// place; nothing is copied per decode step.
+    pub fn slices(&self, layer: usize) -> (&[f32], &[f32]) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// The full cached `([pos, dim]` K, `[pos, dim]` V)` of `layer` as
+    /// host matrices (copies — for inspection/tests; the serving path
+    /// uses [`KvCache::slices`]).
+    pub fn mats(&self, layer: usize) -> (Mat, Mat) {
+        let rows = self.pos(layer);
+        (
+            Mat::from_vec(rows, self.dim, self.k[layer].clone()),
+            Mat::from_vec(rows, self.dim, self.v[layer].clone()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn append_grows_positions_and_bytes() {
+        let mut rng = Pcg32::seeded(3);
+        let mut cache = KvCache::new(2, 4);
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+        let k = Mat::randn(3, 4, 1.0, &mut rng);
+        let v = Mat::randn(3, 4, 1.0, &mut rng);
+        cache.append(0, &k, &v);
+        assert_eq!(cache.pos(0), 3);
+        assert_eq!(cache.pos(1), 0, "layers advance independently");
+        assert_eq!(cache.len(), 3);
+        cache.append(1, &k, &v);
+        // 2 layers x (K + V) x 3 rows x 4 cols x 4 bytes.
+        assert_eq!(cache.bytes(), 2 * 2 * 3 * 4 * 4);
+        let (km, vm) = cache.mats(0);
+        assert_eq!(km.data(), k.data());
+        assert_eq!(vm.data(), v.data());
+        // A second append concatenates below the first.
+        let k2 = Mat::randn(1, 4, 1.0, &mut rng);
+        let v2 = Mat::randn(1, 4, 1.0, &mut rng);
+        cache.append(0, &k2, &v2);
+        let (km, _) = cache.mats(0);
+        assert_eq!(km.rows(), 4);
+        assert_eq!(&km.data()[3 * 4..], k2.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "key width != cache dim")]
+    fn wrong_width_is_rejected() {
+        let mut cache = KvCache::new(1, 4);
+        cache.append(0, &Mat::zeros(1, 5), &Mat::zeros(1, 5));
+    }
+}

@@ -95,7 +95,19 @@ impl Engine {
     /// surface as errors, not crashes inside XLA.
     pub fn run_literals(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.ensure_compiled(name)?;
-        let spec = self.manifest.artifact(name).unwrap();
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.exec_refs(name, &refs)
+    }
+
+    /// Execute an already-compiled artifact from *borrowed* literals —
+    /// the zero-copy core under [`Engine::run_literals`] and
+    /// [`ExecBackend::run_bound`]: resident statics are passed by
+    /// reference, never cloned per call.
+    fn exec_refs(&self, name: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
         anyhow::ensure!(
             inputs.len() == spec.inputs.len(),
             "artifact {name}: got {} inputs, manifest expects {}",
@@ -111,9 +123,12 @@ impl Engine {
                 io.shape
             );
         }
-        let exe = self.executables.get(name).unwrap();
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not compiled"))?;
         let result = exe
-            .execute::<xla::Literal>(inputs)
+            .execute::<&xla::Literal>(inputs)
             .with_context(|| format!("executing {name}"))?;
         let lit = result[0][0]
             .to_literal_sync()
@@ -181,10 +196,9 @@ impl ExecBackend for Engine {
         // Every static must name a manifest input and match its declared
         // shape/dtype — a mismatch fails here, not mid-serving inside the
         // first execute.  The host->literal conversion (the per-call cost
-        // this API removes) also happens here, exactly once.  NOTE: the
-        // cached literal is still cloned per `run_bound` call because
-        // `run_literals` consumes a `&[Literal]`; holding device buffers
-        // instead is the remaining step (see ROADMAP).
+        // this API removes) also happens here, exactly once; `run_bound`
+        // then passes the resident literals by reference (`exec_refs`),
+        // so bound statics are zero-copy per request.
         let mut literals = Vec::with_capacity(statics.len());
         for &(name, value) in statics {
             let io = spec
@@ -215,27 +229,37 @@ impl ExecBackend for Engine {
     }
 
     fn run_bound(&mut self, key: &str, dynamics: &[TensorValue]) -> Result<Vec<TensorValue>> {
-        let bound = self
+        let artifact = self
             .bound
             .get(key)
-            .ok_or_else(|| anyhow!("pjrt backend: no bound artifact under key '{key}'"))?;
-        let artifact = bound.artifact.clone();
+            .ok_or_else(|| anyhow!("pjrt backend: no bound artifact under key '{key}'"))?
+            .artifact
+            .clone();
+        // Compile first (the only step needing `&mut self`), then borrow
+        // the resident statics for the zero-copy call.
+        self.ensure_compiled(&artifact)?;
+        // Convert the dynamic inputs up front so the assembled list can
+        // be all references.
+        let dyn_lits: Vec<xla::Literal> =
+            dynamics.iter().map(value_to_literal).collect::<Result<_>>()?;
+        let bound = self.bound.get(key).expect("checked above");
         let spec = self.manifest.artifact(&artifact).unwrap();
         // Assemble the full input list in manifest order: statics from the
-        // resident literals, dynamics consumed left to right.
-        let mut lits = Vec::with_capacity(spec.inputs.len());
-        let mut dyn_iter = dynamics.iter();
+        // resident literals (by reference — never cloned per request),
+        // dynamics consumed left to right.
+        let mut lits: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
+        let mut dyn_iter = dyn_lits.iter();
         for io in &spec.inputs {
             match bound.literals.iter().find(|(name, _)| *name == io.name) {
-                Some((_, lit)) => lits.push(lit.clone()),
+                Some((_, lit)) => lits.push(lit),
                 None => {
-                    let v = dyn_iter.next().ok_or_else(|| {
+                    let lit = dyn_iter.next().ok_or_else(|| {
                         anyhow!(
                             "bound artifact '{key}' ({artifact}): missing dynamic input '{}'",
                             io.name
                         )
                     })?;
-                    lits.push(value_to_literal(v)?);
+                    lits.push(lit);
                 }
             }
         }
@@ -244,7 +268,7 @@ impl ExecBackend for Engine {
             "bound artifact '{key}' ({artifact}): too many dynamic inputs (got {})",
             dynamics.len()
         );
-        let outs = self.run_literals(&artifact, &lits)?;
+        let outs = self.exec_refs(&artifact, &lits)?;
         self.literals_to_values(&artifact, &outs)
     }
 

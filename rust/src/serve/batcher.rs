@@ -1,10 +1,20 @@
-//! Request queue + micro-batcher for the serving subsystem.
+//! Request queue + micro-batchers for the serving subsystem.
 //!
 //! Requests carry per-request activation rows; the [`MicroBatcher`]
 //! coalesces them (FIFO) into token-budgeted micro-batches that amortize
 //! the per-artifact dispatch cost, and the [`ReorderBuffer`] re-emits
 //! completed batches in submission order even when the execution engine
 //! finishes them out of order.
+//!
+//! The [`ContinuousBatcher`] is the decode-pool generalization: its pool
+//! holds *steps* rather than whole requests — a new request's prefill
+//! (all prompt rows at once) and an in-flight request's next decode
+//! token (one row) are both [`StepItem`]s, coalesced FIFO into mixed
+//! prefill + decode [`StepBatch`]es under the same [`BatcherCfg`]
+//! budgets.  In-flight requests *rejoin* the pool after every generated
+//! token, which is what makes the batching continuous: a long generation
+//! never blocks the admission of new prompts, and new prompts never
+//! stall token cadence for running requests beyond one step.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -194,6 +204,163 @@ impl<T> ReorderBuffer<T> {
     }
 }
 
+/// One schedulable step of a generation request: the activation rows to
+/// run next (the whole prompt for a prefill, one token row for a decode
+/// step) plus an opaque payload the serving loop threads through the
+/// stage chain (its generation state and KV cache).
+#[derive(Debug)]
+pub struct StepItem<T> {
+    pub id: u64,
+    /// `[rows, width]` activations for this step.
+    pub x: Mat,
+    /// True for a new request's prompt pass, false for a decode step.
+    pub is_prefill: bool,
+    pub payload: T,
+}
+
+/// A coalesced decode-pool batch: member steps stacked row-wise, mixed
+/// prefill + decode, each span attending through its own member's cache.
+#[derive(Debug)]
+pub struct StepBatch<T> {
+    /// Dispatch sequence number (0, 1, 2, ... in drain order).
+    pub seq: u64,
+    /// Member request ids, in stacking order.
+    pub ids: Vec<u64>,
+    /// Row span `[lo, hi)` of each member inside `x` (tile `[0, tokens)`
+    /// contiguously; each span holds only that member's *new* rows).
+    spans: Vec<(usize, usize)>,
+    /// Per-member prefill flag, parallel to `ids`.
+    pub prefill: Vec<bool>,
+    /// `[total_tokens, width]` stacked activations.
+    pub x: Mat,
+    /// Per-member payloads, parallel to `ids`.
+    pub payloads: Vec<T>,
+}
+
+impl<T> StepBatch<T> {
+    /// Tokens (rows) in this step batch.
+    pub fn tokens(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Number of coalesced member steps.
+    pub fn n_requests(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Row span `[lo, hi)` of each member inside `x`, in stacking order.
+    pub fn spans(&self) -> &[(usize, usize)] {
+        &self.spans
+    }
+
+    /// Prompt rows in this batch (prefill spans).
+    pub fn prefill_tokens(&self) -> usize {
+        self.span_tokens(true)
+    }
+
+    /// Decode rows in this batch (one per decoding member).
+    pub fn decode_tokens(&self) -> usize {
+        self.span_tokens(false)
+    }
+
+    fn span_tokens(&self, prefill: bool) -> usize {
+        self.spans
+            .iter()
+            .zip(&self.prefill)
+            .filter(|&(_, &p)| p == prefill)
+            .map(|(&(lo, hi), _)| hi - lo)
+            .sum()
+    }
+}
+
+/// FIFO decode pool that drains into token-budgeted [`StepBatch`]es —
+/// the continuous-batching scheduler.  Prefill steps of newly admitted
+/// requests and decode steps of rejoining in-flight requests share one
+/// pool in arrival order, so a batch naturally mixes the two under the
+/// existing [`BatcherCfg`] budgets (a prefill costs its prompt length
+/// against `max_tokens`, a decode step costs 1).
+#[derive(Debug)]
+pub struct ContinuousBatcher<T> {
+    cfg: BatcherCfg,
+    width: usize,
+    pool: VecDeque<StepItem<T>>,
+    next_seq: u64,
+}
+
+impl<T> ContinuousBatcher<T> {
+    pub fn new(width: usize, cfg: BatcherCfg) -> ContinuousBatcher<T> {
+        ContinuousBatcher { cfg, width, pool: VecDeque::new(), next_seq: 0 }
+    }
+
+    /// Enqueue a step (validates the activation width; decode steps must
+    /// be exactly one row).
+    pub fn push(&mut self, item: StepItem<T>) -> Result<()> {
+        anyhow::ensure!(
+            item.x.cols() == self.width,
+            "request {}: width {} != serving width {}",
+            item.id,
+            item.x.cols(),
+            self.width
+        );
+        anyhow::ensure!(item.x.rows() > 0, "request {}: empty step", item.id);
+        anyhow::ensure!(
+            item.is_prefill || item.x.rows() == 1,
+            "request {}: decode step has {} rows, expected 1",
+            item.id,
+            item.x.rows()
+        );
+        self.pool.push_back(item);
+        Ok(())
+    }
+
+    /// Steps waiting in the pool.
+    pub fn pending(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Tokens (rows) waiting in the pool.
+    pub fn pending_tokens(&self) -> usize {
+        self.pool.iter().map(|i| i.x.rows()).sum()
+    }
+
+    /// Coalesce the next step batch (FIFO, greedy up to the caps), or
+    /// `None` when the pool is empty.  A single over-budget prefill still
+    /// forms its own batch — big prompts are admitted, not starved.
+    pub fn next_batch(&mut self) -> Option<StepBatch<T>> {
+        let first = self.pool.pop_front()?;
+        let mut members = vec![first];
+        let mut tokens = members[0].x.rows();
+        while members.len() < self.cfg.max_requests {
+            let Some(next) = self.pool.front() else { break };
+            if tokens + next.x.rows() > self.cfg.max_tokens {
+                break;
+            }
+            tokens += next.x.rows();
+            members.push(self.pool.pop_front().expect("front() was Some"));
+        }
+        let mut x = Mat::zeros(tokens, self.width);
+        let mut ids = Vec::with_capacity(members.len());
+        let mut spans = Vec::with_capacity(members.len());
+        let mut prefill = Vec::with_capacity(members.len());
+        let mut payloads = Vec::with_capacity(members.len());
+        let mut lo = 0;
+        for item in members {
+            let hi = lo + item.x.rows();
+            for r in 0..item.x.rows() {
+                x.row_mut(lo + r).copy_from_slice(item.x.row(r));
+            }
+            ids.push(item.id);
+            spans.push((lo, hi));
+            prefill.push(item.is_prefill);
+            payloads.push(item.payload);
+            lo = hi;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Some(StepBatch { seq, ids, spans, prefill, x, payloads })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,6 +436,91 @@ mod tests {
         for ((id, part), orig) in parts.iter().zip(&reqs) {
             assert_eq!(*id, orig.id);
             assert_eq!(part.data(), orig.x.data());
+        }
+    }
+
+    fn step(id: u64, rows: usize, prefill: bool, rng: &mut Pcg32) -> StepItem<&'static str> {
+        StepItem { id, x: Mat::randn(rows, 4, 1.0, rng), is_prefill: prefill, payload: "p" }
+    }
+
+    #[test]
+    fn continuous_batcher_mixes_prefill_and_decode_under_budgets() {
+        let mut rng = Pcg32::seeded(6);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg { max_tokens: 6, max_requests: 4 });
+        // Arrival order: decode(1), prefill(4), decode(1), decode(1),
+        // prefill(5), decode(1).
+        cb.push(step(0, 1, false, &mut rng)).unwrap();
+        cb.push(step(1, 4, true, &mut rng)).unwrap();
+        cb.push(step(2, 1, false, &mut rng)).unwrap();
+        cb.push(step(3, 1, false, &mut rng)).unwrap();
+        cb.push(step(4, 5, true, &mut rng)).unwrap();
+        cb.push(step(5, 1, false, &mut rng)).unwrap();
+        assert_eq!(cb.pending(), 6);
+        assert_eq!(cb.pending_tokens(), 13);
+        // Batch 0: 1+4+1 = 6 tokens (budget hit; next decode would be 7).
+        let b0 = cb.next_batch().unwrap();
+        assert_eq!(b0.ids, vec![0, 1, 2]);
+        assert_eq!(b0.prefill, vec![false, true, false]);
+        assert_eq!(b0.spans(), &[(0, 1), (1, 5), (5, 6)]);
+        assert_eq!(b0.decode_tokens(), 2);
+        assert_eq!(b0.prefill_tokens(), 4);
+        // Batch 1: decode(1) + prefill(5) exactly hit the budget.
+        let b1 = cb.next_batch().unwrap();
+        assert_eq!(b1.ids, vec![3, 4]);
+        assert_eq!(b1.tokens(), 6);
+        // Batch 2: the trailing decode step alone.
+        let b2 = cb.next_batch().unwrap();
+        assert_eq!(b2.ids, vec![5]);
+        assert_eq!((b0.seq, b1.seq, b2.seq), (0, 1, 2));
+        assert!(cb.next_batch().is_none());
+    }
+
+    #[test]
+    fn continuous_batcher_admits_oversized_prefill_alone() {
+        let mut rng = Pcg32::seeded(7);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg { max_tokens: 4, max_requests: 8 });
+        cb.push(step(9, 11, true, &mut rng)).unwrap();
+        cb.push(step(10, 1, false, &mut rng)).unwrap();
+        let b = cb.next_batch().unwrap();
+        assert_eq!(b.ids, vec![9]);
+        assert_eq!(b.tokens(), 11);
+        assert_eq!(cb.next_batch().unwrap().ids, vec![10]);
+    }
+
+    #[test]
+    fn continuous_batcher_validates_steps() {
+        let mut rng = Pcg32::seeded(8);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg::default());
+        // Wrong width.
+        assert!(cb
+            .push(StepItem { id: 0, x: Mat::zeros(1, 3), is_prefill: false, payload: "p" })
+            .is_err());
+        // Empty step.
+        assert!(cb
+            .push(StepItem { id: 1, x: Mat::zeros(0, 4), is_prefill: true, payload: "p" })
+            .is_err());
+        // Multi-row decode step.
+        assert!(cb.push(step(2, 3, false, &mut rng)).is_err());
+        assert_eq!(cb.pending(), 0);
+    }
+
+    #[test]
+    fn step_batch_payloads_and_rows_stay_aligned() {
+        let mut rng = Pcg32::seeded(9);
+        let mut cb: ContinuousBatcher<u64> =
+            ContinuousBatcher::new(4, BatcherCfg { max_tokens: 100, max_requests: 8 });
+        let items: Vec<(u64, usize, bool)> = vec![(10, 3, true), (11, 1, false), (12, 2, true)];
+        let mut rows = Vec::new();
+        for &(id, r, pre) in &items {
+            let x = Mat::randn(r, 4, 1.0, &mut rng);
+            rows.push(x.clone());
+            cb.push(StepItem { id, x, is_prefill: pre, payload: id * 100 }).unwrap();
+        }
+        let b = cb.next_batch().unwrap();
+        assert_eq!(b.payloads, vec![1000, 1100, 1200]);
+        for ((&(lo, hi), x), &(_, r, _)) in b.spans().iter().zip(&rows).zip(&items) {
+            assert_eq!(hi - lo, r);
+            assert_eq!(&b.x.data()[lo * 4..hi * 4], x.data());
         }
     }
 

@@ -1,0 +1,797 @@
+//! KV-cached autoregressive decode with continuous batching — token
+//! generation as a long-lived serving loop.
+//!
+//! [`Server::run_streaming`] serves one forward pass per request; this
+//! module serves *generations*: a client submits a prompt
+//! ([`DecodeClient::submit`] with a [`GenRequest`]) and its
+//! [`GenTicket`] yields tokens as they are produced (greedy argmax over
+//! the LM head), ending after `max_new_tokens` or at the request's EOS
+//! token.
+//!
+//! The loop is a continuous batcher over *steps*, not requests:
+//!
+//! 1. the **scheduler** thread drains newly admitted prompts (prefill
+//!    steps, all prompt rows at once, fresh [`KvCache`]) and rejoining
+//!    in-flight requests (decode steps, one token row, warm cache) from
+//!    one FIFO pool into mixed [`super::StepBatch`]es under the
+//!    [`super::BatcherCfg`] budgets;
+//! 2. the **stage chain** (one backend for all layers, or one per
+//!    decoder layer, exactly like the forward streaming loop) runs each
+//!    step batch through [`super::SparseModel::stage_cached`] — every
+//!    span attends through its own request's cache at its own positions,
+//!    so batching never changes a request's numbers;
+//! 3. the **collector** computes each member's next token from the LM
+//!    head, streams it to the ticket, and either completes the request
+//!    or pushes it back into the pool for its next decode step — the
+//!    rejoin that makes the batching continuous.
+//!
+//! Backpressure ([`super::ServeCfg::queue_depth`] /
+//! [`super::ServeCfg::request_timeout`]) and shutdown semantics match
+//! the forward loop: closing admissions drains every in-flight
+//! generation to its stop condition before the loop returns.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{ContinuousBatcher, StepItem};
+use super::model::greedy_token;
+use super::server::{Server, StageStats};
+use super::stream::{CloseGuard, HasClosed, ServeError, SharedQueue};
+use crate::model::KvCache;
+use crate::runtime::ExecBackend;
+use crate::tensor::Mat;
+
+/// One generation request: prompt token ids plus stop conditions.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    /// Stop after this many generated tokens (>= 1).
+    pub max_new_tokens: usize,
+    /// Optional end-of-sequence token: generation stops when it is
+    /// produced (the EOS token itself is still streamed).
+    pub eos: Option<u32>,
+}
+
+/// What the loop streams to a ticket.
+#[derive(Debug)]
+enum GenEvent {
+    Token(u32),
+    Done,
+}
+
+type GenReply = std::result::Result<GenEvent, ServeError>;
+
+/// A claim on one in-flight generation's token stream.
+pub struct GenTicket {
+    id: u64,
+    rx: mpsc::Receiver<GenReply>,
+    finished: bool,
+}
+
+impl GenTicket {
+    /// Block for the next generated token; `None` once the generation
+    /// has ended (max-new-tokens, EOS, or a prior error).  Errors are
+    /// terminal — after `Some(Err(_))` the stream is over.
+    pub fn next_token(&mut self) -> Option<std::result::Result<u32, ServeError>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(Ok(GenEvent::Token(t))) => Some(Ok(t)),
+            Ok(Ok(GenEvent::Done)) => {
+                self.finished = true;
+                None
+            }
+            Ok(Err(e)) => {
+                self.finished = true;
+                Some(Err(e))
+            }
+            Err(_) => {
+                self.finished = true;
+                Some(Err(ServeError::Dropped))
+            }
+        }
+    }
+
+    /// Block until the generation ends and return every generated token.
+    /// On an error mid-generation the error is returned and any tokens
+    /// already streamed are discarded — iterate [`GenTicket::next_token`]
+    /// instead to keep confirmed partial output across a failure.
+    pub fn wait(mut self) -> std::result::Result<Vec<u32>, ServeError> {
+        let mut out = Vec::new();
+        while let Some(tok) = self.next_token() {
+            out.push(tok?);
+        }
+        Ok(out)
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// A generation admitted but not yet prefilled.
+struct PendingGen {
+    id: u64,
+    prompt: Vec<u32>,
+    max_new_tokens: usize,
+    eos: Option<u32>,
+    reply: mpsc::Sender<GenReply>,
+    enqueued: Instant,
+}
+
+/// The per-request generation state machine, moved through the stage
+/// chain with its batch and back into the pool on rejoin.
+struct GenState {
+    id: u64,
+    reply: mpsc::Sender<GenReply>,
+    max_new_tokens: usize,
+    eos: Option<u32>,
+    n_generated: usize,
+}
+
+/// An in-flight request re-entering the pool for its next decode step.
+struct Rejoin {
+    state: GenState,
+    cache: KvCache,
+    /// The token just generated — the next step's input row.
+    token: u32,
+}
+
+#[derive(Default)]
+struct GenQueueState {
+    pending: Vec<PendingGen>,
+    rejoin: Vec<Rejoin>,
+    closed: bool,
+}
+
+impl HasClosed for GenQueueState {
+    fn set_closed(&mut self) {
+        self.closed = true;
+    }
+}
+
+/// Handle clients use to submit generations while the decode loop is
+/// live (`Copy` — share it across submitting threads).
+#[derive(Clone, Copy)]
+pub struct DecodeClient<'q> {
+    queue: &'q SharedQueue<GenQueueState>,
+    next_id: &'q AtomicU64,
+    vocab: usize,
+    queue_depth: usize,
+    max_new_cap: usize,
+}
+
+impl DecodeClient<'_> {
+    /// Submit a generation; returns a [`GenTicket`] streaming its
+    /// tokens.  Fails fast with the typed reason:
+    /// [`ServeError::Invalid`] for a malformed request,
+    /// [`ServeError::QueueFull`] when `queue_depth` generations are
+    /// already in flight, [`ServeError::ShuttingDown`] after the loop
+    /// closed.
+    pub fn submit(&self, req: GenRequest) -> std::result::Result<GenTicket, ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if req.prompt.is_empty() {
+            return Err(ServeError::Invalid(format!("request {id}: empty prompt")));
+        }
+        if let Some(&bad) = req.prompt.iter().find(|&&t| t as usize >= self.vocab) {
+            return Err(ServeError::Invalid(format!(
+                "request {id}: prompt token {bad} outside vocab {}",
+                self.vocab
+            )));
+        }
+        if req.max_new_tokens == 0 {
+            return Err(ServeError::Invalid(format!("request {id}: max_new_tokens must be >= 1")));
+        }
+        if self.max_new_cap > 0 && req.max_new_tokens > self.max_new_cap {
+            return Err(ServeError::Invalid(format!(
+                "request {id}: max_new_tokens {} exceeds the serving cap {}",
+                req.max_new_tokens, self.max_new_cap
+            )));
+        }
+        self.queue.admit(self.queue_depth)?;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            if st.closed {
+                // Drop the state lock first: `unadmit` -> `release`
+                // re-takes it to publish the wakeup.
+                drop(st);
+                self.queue.unadmit();
+                return Err(ServeError::ShuttingDown);
+            }
+            st.pending.push(PendingGen {
+                id,
+                prompt: req.prompt,
+                max_new_tokens: req.max_new_tokens,
+                eos: req.eos,
+                reply: tx,
+                enqueued: Instant::now(),
+            });
+        }
+        self.queue.arrived.notify_one();
+        Ok(GenTicket { id, rx, finished: false })
+    }
+}
+
+/// A step batch mid-flight through the decode stage chain.
+struct DecodeWork {
+    x: Mat,
+    spans: Vec<(usize, usize)>,
+    prefill: Vec<bool>,
+    states: Vec<GenState>,
+    caches: Vec<KvCache>,
+    stage_s: Vec<f64>,
+    err: Option<String>,
+}
+
+/// What the collector thread tallies while the loop runs.
+struct Tally {
+    stage_stats: Vec<StageStats>,
+    prefill_tokens: usize,
+    decode_tokens: usize,
+    generated_tokens: usize,
+    n_steps: usize,
+    n_completed: usize,
+    n_abandoned: usize,
+    n_failed: usize,
+}
+
+/// Wall-clock + token accounting for one decode-streaming run.
+#[derive(Debug)]
+pub struct DecodeReport {
+    /// Per-decoder-layer busy time (prefill + decode rows combined).
+    pub stage_stats: Vec<StageStats>,
+    /// From loop start to full drain.
+    pub total_seconds: f64,
+    /// Prompt rows processed through the stages (prefill spans).
+    pub prefill_tokens: usize,
+    /// Decode-step rows processed (one per generated token after the
+    /// first; the first comes out of the prefill pass).
+    pub decode_tokens: usize,
+    /// Tokens streamed to tickets.
+    pub generated_tokens: usize,
+    /// Step batches dispatched.
+    pub n_steps: usize,
+    /// Generations admitted into the loop.
+    pub n_requests: usize,
+    /// Generations that ran to their stop condition (max-new-tokens or
+    /// EOS).
+    pub n_completed: usize,
+    /// Generations cut short because their ticket was dropped (nobody
+    /// left to stream to) — not completions, not failures.
+    pub n_abandoned: usize,
+    /// Generations whose batch failed mid-pipeline.
+    pub n_failed: usize,
+    /// Generations expired before prefill ([`ServeError::TimedOut`]).
+    pub n_timed_out: usize,
+    /// Submissions refused at admission ([`ServeError::QueueFull`]).
+    pub n_rejected: usize,
+}
+
+impl DecodeReport {
+    /// End-to-end throughput over every processed row (prefill +
+    /// decode).
+    pub fn tokens_per_s(&self) -> f64 {
+        let tokens = (self.prefill_tokens + self.decode_tokens) as f64;
+        if self.total_seconds > 0.0 {
+            tokens / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+
+    /// Generated-token throughput (the decode-side number users feel).
+    pub fn generated_per_s(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.generated_tokens as f64 / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Server {
+    /// Run the KV-cached decode loop for the duration of `client_fn`.
+    ///
+    /// `engines` picks the execution mode exactly like
+    /// [`Server::run_streaming`]: one backend runs every decoder layer
+    /// on one execution thread, `>= n_stages` backends build the
+    /// channel-connected per-layer chain.  `client_fn` receives a
+    /// [`DecodeClient`] and may submit generations at any point; when it
+    /// returns, admissions close and every in-flight generation drains
+    /// to its stop condition before the loop returns its
+    /// [`DecodeReport`].
+    pub fn run_decode_streaming<R>(
+        &self,
+        engines: Vec<Box<dyn ExecBackend + Send>>,
+        client_fn: impl FnOnce(DecodeClient<'_>) -> R,
+    ) -> Result<(R, DecodeReport)> {
+        let n_stages = self.model().n_stages();
+        anyhow::ensure!(!engines.is_empty(), "decode streaming needs at least one backend");
+        anyhow::ensure!(
+            engines.len() == 1 || engines.len() >= n_stages,
+            "decode streaming runs with 1 backend (all stages on one thread) or one per \
+             stage: got {}, need 1 or >= {n_stages}",
+            engines.len()
+        );
+        for engine in &engines {
+            self.check_backend(engine.as_ref())?;
+        }
+        let model = self.model();
+        let path = self.cfg().path;
+        let linger = self.cfg().linger;
+        let timeout = self.cfg().request_timeout;
+        let queue_depth = self.cfg().queue_depth;
+        let max_new_cap = self.cfg().max_new_tokens_cap;
+        let batcher_cfg = self.cfg().batcher.clone();
+        let queue: SharedQueue<GenQueueState> = SharedQueue::new();
+        let next_id = AtomicU64::new(0);
+        let t0 = Instant::now();
+
+        let (result, tally) = std::thread::scope(|scope| {
+            // ---- stage chain: scheduler -> [stage threads] -> collector ----
+            let (step_tx, mut prev_rx) = mpsc::channel::<DecodeWork>();
+            if engines.len() == 1 {
+                let mut engine = engines.into_iter().next().expect("len checked");
+                let (tx, rx) = mpsc::channel::<DecodeWork>();
+                let rx_in = std::mem::replace(&mut prev_rx, rx);
+                scope.spawn(move || {
+                    for mut work in rx_in {
+                        for layer in 0..n_stages {
+                            if work.err.is_some() {
+                                break;
+                            }
+                            let s0 = Instant::now();
+                            match model.stage_cached(
+                                engine.as_mut(),
+                                layer,
+                                &work.x,
+                                &work.spans,
+                                &mut work.caches,
+                                path,
+                            ) {
+                                Ok(y) => {
+                                    work.x = y;
+                                    work.stage_s.push(s0.elapsed().as_secs_f64());
+                                }
+                                Err(e) => work.err = Some(format!("{e:#}")),
+                            }
+                        }
+                        if tx.send(work).is_err() {
+                            break;
+                        }
+                    }
+                });
+            } else {
+                for (layer, mut engine) in engines.into_iter().take(n_stages).enumerate() {
+                    let (tx, rx) = mpsc::channel::<DecodeWork>();
+                    let rx_in = std::mem::replace(&mut prev_rx, rx);
+                    scope.spawn(move || {
+                        for mut work in rx_in {
+                            if work.err.is_none() {
+                                let s0 = Instant::now();
+                                match model.stage_cached(
+                                    engine.as_mut(),
+                                    layer,
+                                    &work.x,
+                                    &work.spans,
+                                    &mut work.caches,
+                                    path,
+                                ) {
+                                    Ok(y) => {
+                                        work.x = y;
+                                        work.stage_s.push(s0.elapsed().as_secs_f64());
+                                    }
+                                    Err(e) => work.err = Some(format!("{e:#}")),
+                                }
+                            }
+                            if tx.send(work).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+            }
+
+            // ---- collector: next token per member, complete or rejoin ----
+            let queue_ref = &queue;
+            let collector = scope.spawn(move || {
+                let done_rx = prev_rx;
+                let stage_stats: Vec<StageStats> = (0..n_stages)
+                    .map(|layer| StageStats { layer, seconds: 0.0, tokens: 0 })
+                    .collect();
+                let mut tally = Tally {
+                    stage_stats,
+                    prefill_tokens: 0,
+                    decode_tokens: 0,
+                    generated_tokens: 0,
+                    n_steps: 0,
+                    n_completed: 0,
+                    n_abandoned: 0,
+                    n_failed: 0,
+                };
+                for work in done_rx {
+                    let DecodeWork { x, spans, prefill, states, caches, stage_s, err } = work;
+                    tally.n_steps += 1;
+                    let tokens = x.rows();
+                    for (layer, s) in stage_s.iter().enumerate() {
+                        tally.stage_stats[layer].seconds += s;
+                        tally.stage_stats[layer].tokens += tokens;
+                    }
+                    if let Some(e) = err {
+                        for state in states {
+                            let _ = state.reply.send(Err(ServeError::Stage(e.clone())));
+                            tally.n_failed += 1;
+                            queue_ref.release();
+                        }
+                        continue;
+                    }
+                    let span_iter = spans.iter().zip(&prefill);
+                    for ((&(lo, hi), &is_prefill), (mut state, cache)) in
+                        span_iter.zip(states.into_iter().zip(caches))
+                    {
+                        if is_prefill {
+                            tally.prefill_tokens += hi - lo;
+                        } else {
+                            tally.decode_tokens += hi - lo;
+                        }
+                        // Greedy argmax over the LM head of the span's
+                        // last hidden row — the next token.
+                        let last = x.row_block(hi - 1, hi);
+                        let tok = greedy_token(model.logits(&last).row(0));
+                        state.n_generated += 1;
+                        let stop = state.n_generated >= state.max_new_tokens
+                            || state.eos == Some(tok);
+                        // A dropped ticket ends its generation early —
+                        // no point decoding for nobody.
+                        let delivered = state.reply.send(Ok(GenEvent::Token(tok))).is_ok();
+                        if delivered {
+                            tally.generated_tokens += 1;
+                        }
+                        if stop || !delivered {
+                            let _ = state.reply.send(Ok(GenEvent::Done));
+                            if stop {
+                                tally.n_completed += 1;
+                            } else {
+                                tally.n_abandoned += 1;
+                            }
+                            queue_ref.release();
+                        } else {
+                            let mut st = queue_ref.state.lock().unwrap();
+                            st.rejoin.push(Rejoin { state, cache, token: tok });
+                            drop(st);
+                            queue_ref.arrived.notify_all();
+                        }
+                    }
+                }
+                tally
+            });
+
+            // ---- scheduler: the continuous batcher over the step pool ----
+            scope.spawn(|| {
+                let tx = step_tx;
+                let mut cb: ContinuousBatcher<(GenState, KvCache)> =
+                    ContinuousBatcher::new(model.width(), batcher_cfg.clone());
+                'outer: loop {
+                    let (news, rejoins): (Vec<PendingGen>, Vec<Rejoin>) = {
+                        let mut st = queue.state.lock().unwrap();
+                        loop {
+                            if !st.pending.is_empty() || !st.rejoin.is_empty() {
+                                break;
+                            }
+                            // Exit only when nothing is pending, nothing
+                            // can rejoin (no generation in flight), and
+                            // admissions are closed.
+                            if st.closed && queue.in_flight.load(Ordering::Acquire) == 0 {
+                                break 'outer;
+                            }
+                            st = queue.arrived.wait(st).unwrap();
+                        }
+                        // Linger: let the step batch fill — cut short by
+                        // the budgets or shutdown.
+                        let deadline = Instant::now() + linger;
+                        loop {
+                            let tokens: usize = st.rejoin.len()
+                                + st.pending.iter().map(|p| p.prompt.len()).sum::<usize>();
+                            let members = st.pending.len() + st.rejoin.len();
+                            if st.closed
+                                || tokens >= batcher_cfg.max_tokens
+                                || members >= batcher_cfg.max_requests
+                            {
+                                break;
+                            }
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let (guard, _) =
+                                queue.arrived.wait_timeout(st, deadline - now).unwrap();
+                            st = guard;
+                        }
+                        (st.pending.drain(..).collect(), st.rejoin.drain(..).collect())
+                    };
+                    for p in news {
+                        if let Some(e) = queue.stale(p.enqueued, timeout) {
+                            let _ = p.reply.send(Err(e));
+                            continue;
+                        }
+                        let x = model.embed(&p.prompt).expect("prompt validated at submit");
+                        let state = GenState {
+                            id: p.id,
+                            reply: p.reply,
+                            max_new_tokens: p.max_new_tokens,
+                            eos: p.eos,
+                            n_generated: 0,
+                        };
+                        cb.push(StepItem {
+                            id: p.id,
+                            x,
+                            is_prefill: true,
+                            payload: (state, model.new_cache()),
+                        })
+                        .expect("prefill step validated at submit");
+                    }
+                    for r in rejoins {
+                        let x = model.embed(&[r.token]).expect("generated token is in-vocab");
+                        cb.push(StepItem {
+                            id: r.state.id,
+                            x,
+                            is_prefill: false,
+                            payload: (r.state, r.cache),
+                        })
+                        .expect("decode step is one row");
+                    }
+                    while let Some(batch) = cb.next_batch() {
+                        let spans = batch.spans().to_vec();
+                        let (states, caches): (Vec<GenState>, Vec<KvCache>) =
+                            batch.payloads.into_iter().unzip();
+                        let work = DecodeWork {
+                            x: batch.x,
+                            spans,
+                            prefill: batch.prefill,
+                            states,
+                            caches,
+                            stage_s: Vec::with_capacity(n_stages),
+                            err: None,
+                        };
+                        if tx.send(work).is_err() {
+                            return; // stage chain died; nothing to do
+                        }
+                    }
+                }
+                // Dropping `tx` lets the stage chain and collector drain.
+            });
+
+            // ---- client closure on the caller's thread ----
+            let close = CloseGuard(&queue);
+            let result = client_fn(DecodeClient {
+                queue: &queue,
+                next_id: &next_id,
+                vocab: model.cfg().vocab,
+                queue_depth,
+                max_new_cap,
+            });
+            drop(close);
+            let tally = collector.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            (result, tally)
+        });
+
+        Ok((
+            result,
+            DecodeReport {
+                stage_stats: tally.stage_stats,
+                total_seconds: t0.elapsed().as_secs_f64(),
+                prefill_tokens: tally.prefill_tokens,
+                decode_tokens: tally.decode_tokens,
+                generated_tokens: tally.generated_tokens,
+                n_steps: tally.n_steps,
+                n_requests: queue.admitted.load(Ordering::Relaxed),
+                n_completed: tally.n_completed,
+                n_abandoned: tally.n_abandoned,
+                n_failed: tally.n_failed,
+                n_timed_out: queue.timed_out.load(Ordering::Relaxed),
+                n_rejected: queue.rejected.load(Ordering::Relaxed),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::runtime::{NativeCfg, NativeEngine};
+    use crate::serve::batcher::BatcherCfg;
+    use crate::serve::model::tests::tiny_sparse_model;
+    use crate::serve::{ServeCfg, ServePath};
+
+    fn engines(n: usize, threads: usize) -> Vec<Box<dyn ExecBackend + Send>> {
+        (0..n)
+            .map(|_| {
+                Box::new(NativeEngine::new(NativeCfg { threads, ..NativeCfg::default() }))
+                    as Box<dyn ExecBackend + Send>
+            })
+            .collect()
+    }
+
+    fn decode_server(path: ServePath) -> Server {
+        Server::new(
+            tiny_sparse_model(),
+            ServeCfg {
+                batcher: BatcherCfg { max_tokens: 12, max_requests: 4 },
+                path,
+                linger: Duration::from_millis(1),
+                ..ServeCfg::default()
+            },
+        )
+    }
+
+    fn gen_req(prompt: Vec<u32>, max_new: usize) -> GenRequest {
+        GenRequest { prompt, max_new_tokens: max_new, eos: None }
+    }
+
+    #[test]
+    fn concurrent_clients_with_staggered_max_new_tokens_match_reference() {
+        // Satellite acceptance: several client threads stream generations
+        // with different lengths concurrently; every ticket's tokens must
+        // equal the single-request KV-cached reference (`SparseModel::
+        // generate` — same kernels, so batching and interleaving must not
+        // change a single token).
+        let server = decode_server(ServePath::FullDecoder);
+        let n_stages = server.model().n_stages();
+        let (outputs, report) = server
+            .run_decode_streaming(engines(n_stages, 1), |client| {
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for t in 0..3u64 {
+                        handles.push(s.spawn(move || {
+                            let mut done = Vec::new();
+                            for i in 0..3usize {
+                                let prompt: Vec<u32> =
+                                    (0..2 + (t as usize + i) % 3)
+                                        .map(|j| ((t as usize * 41 + i * 17 + j * 7) % 256) as u32)
+                                        .collect();
+                                let max_new = 1 + (t as usize + i) % 4; // staggered
+                                let ticket =
+                                    client.submit(gen_req(prompt.clone(), max_new)).unwrap();
+                                let toks = ticket.wait().unwrap();
+                                assert_eq!(toks.len(), max_new, "no EOS set => full length");
+                                done.push((prompt, max_new, toks));
+                            }
+                            done
+                        }));
+                    }
+                    handles.into_iter().flat_map(|h| h.join().unwrap()).collect::<Vec<_>>()
+                })
+            })
+            .unwrap();
+        assert_eq!(outputs.len(), 9);
+        assert_eq!(report.n_requests, 9);
+        assert_eq!(report.n_completed, 9);
+        assert_eq!(report.n_failed, 0);
+        let total_prompt: usize = outputs.iter().map(|(p, _, _)| p.len()).sum();
+        let total_new: usize = outputs.iter().map(|(_, _, t)| t.len()).sum();
+        assert_eq!(report.prefill_tokens, total_prompt);
+        assert_eq!(report.generated_tokens, total_new);
+        // Each generated token after a request's first came from one
+        // 1-row decode step.
+        assert_eq!(report.decode_tokens, total_new - outputs.len());
+        // Reference: the sequential KV-cached generator on a fresh
+        // backend — bit-identical kernels => identical tokens.
+        let mut engine = NativeEngine::default();
+        for (prompt, max_new, toks) in &outputs {
+            let want = server
+                .model()
+                .generate(&mut engine, prompt, *max_new, None, ServePath::FullDecoder)
+                .unwrap();
+            assert_eq!(toks, &want, "prompt {prompt:?} diverged from the reference");
+        }
+    }
+
+    #[test]
+    fn tokens_stream_incrementally_and_eos_stops() {
+        let server = decode_server(ServePath::FullDecoder);
+        // Find the reference continuation first, then use its second
+        // token as EOS: the stream must end right after producing it.
+        let prompt: Vec<u32> = vec![9, 81, 3];
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &prompt, 5, None, ServePath::FullDecoder)
+            .unwrap();
+        let eos = want[1];
+        let cut = want.iter().position(|&t| t == eos).unwrap();
+        let ((), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                let mut ticket = client
+                    .submit(GenRequest {
+                        prompt: prompt.clone(),
+                        max_new_tokens: 5,
+                        eos: Some(eos),
+                    })
+                    .unwrap();
+                let mut got = Vec::new();
+                while let Some(tok) = ticket.next_token() {
+                    got.push(tok.unwrap());
+                }
+                assert_eq!(got, want[..=cut].to_vec());
+                // The stream stays ended.
+                assert!(ticket.next_token().is_none());
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.generated_tokens, cut + 1);
+    }
+
+    #[test]
+    fn decode_works_on_the_mlp_only_path_too() {
+        let server = decode_server(ServePath::MlpOnly);
+        let (toks, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                client.submit(gen_req(vec![1, 2, 3, 4], 3)).unwrap().wait().unwrap()
+            })
+            .unwrap();
+        assert_eq!(toks.len(), 3);
+        assert_eq!(report.n_completed, 1);
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &[1, 2, 3, 4], 3, None, ServePath::MlpOnly)
+            .unwrap();
+        assert_eq!(toks, want);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_generations() {
+        // The client closure returns immediately after submitting; every
+        // generation still runs to its stop condition.
+        let server = decode_server(ServePath::FullDecoder);
+        let n_stages = server.model().n_stages();
+        let (tickets, report) = server
+            .run_decode_streaming(engines(n_stages, 1), |client| {
+                (0..5u32)
+                    .map(|i| client.submit(gen_req(vec![i, i + 40, i + 90], 4)).unwrap())
+                    .collect::<Vec<_>>()
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 5);
+        for ticket in tickets {
+            assert_eq!(ticket.wait().unwrap().len(), 4);
+        }
+    }
+
+    #[test]
+    fn invalid_generations_are_rejected_typed() {
+        let mut server = decode_server(ServePath::MlpOnly);
+        server.cfg_mut().max_new_tokens_cap = 8;
+        let ((), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                assert!(matches!(
+                    client.submit(gen_req(vec![], 3)),
+                    Err(ServeError::Invalid(_))
+                ));
+                assert!(matches!(
+                    client.submit(gen_req(vec![1, 999], 3)),
+                    Err(ServeError::Invalid(_))
+                ));
+                assert!(matches!(
+                    client.submit(gen_req(vec![1], 0)),
+                    Err(ServeError::Invalid(_))
+                ));
+                assert!(matches!(
+                    client.submit(gen_req(vec![1], 9)),
+                    Err(ServeError::Invalid(_))
+                ));
+                // A valid one still flows.
+                assert_eq!(client.submit(gen_req(vec![1], 2)).unwrap().wait().unwrap().len(), 2);
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.n_failed, 0);
+    }
+}

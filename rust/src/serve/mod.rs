@@ -35,25 +35,51 @@
 //!   in flight, the micro-batcher thread wakes on arrival or after a
 //!   linger timeout, and shutdown drains every enqueued request through
 //!   the pipeline stages before returning a [`StreamReport`].
+//!   Backpressure is built in: [`ServeCfg::queue_depth`] caps the
+//!   in-flight count (submit fails fast with [`ServeError::QueueFull`])
+//!   and [`ServeCfg::request_timeout`] expires stale queue entries with
+//!   [`ServeError::TimedOut`] through the ticket.
+//! * [`Server::run_decode_streaming`] is the *generation* loop: clients
+//!   submit prompts ([`DecodeClient::submit`] with a [`GenRequest`]) and
+//!   their [`GenTicket`]s stream greedy tokens as they are produced.
+//!   Each request carries a per-request [`KvCache`]; prefill writes K/V
+//!   into it and every subsequent step runs one token of incremental
+//!   attention at the right RoPE offsets
+//!   ([`SparseModel::stage_cached`]).  The [`ContinuousBatcher`]
+//!   coalesces mixed prefill + decode steps under the same token/request
+//!   budgets, and in-flight requests rejoin the decode pool after every
+//!   token — continuous batching, not drain-and-refill.
 //! * [`DenseModel`] materializes the dense-masked weights once — the
 //!   benchmark baseline the CI bench gate compares sparse serving
-//!   against, never part of the serving path itself.
+//!   against, never part of the serving path itself.  It shares the
+//!   KV-cached glue, so the bench compares prefill and decode throughput
+//!   like for like.
 //!
 //! Numerics: the sparse path matches the host dense-masked reference
-//! ([`SparseModel::dense_forward`]) within 1e-3 at 2:4 and 4:8, and the
+//! ([`SparseModel::dense_forward`]) within 1e-3 at 2:4 and 4:8, the
 //! pipelined, sequential, and streaming modes are bit-identical (same
-//! kernels, same tiling).
+//! kernels, same tiling), and incremental decode matches full-sequence
+//! re-forward (the decode-parity tests pin this on both serve paths at
+//! both patterns).
 //!
 //! Entry points: the `permllm serve` CLI subcommand (`--sparse-attn`,
-//! `--stream`) and the `sparse_inference` example (per-layer + end-to-end
-//! tokens/s, `--json` for the machine-readable bench summary).
+//! `--stream`, `--decode`) and the `sparse_inference` example (per-layer
+//! + end-to-end tokens/s, prefill vs decode tokens/s, `--json` for the
+//! machine-readable bench summary).
 
 mod batcher;
+mod decode;
 mod model;
 mod server;
 mod stream;
 
-pub use batcher::{BatcherCfg, MicroBatch, MicroBatcher, ReorderBuffer, Request};
-pub use model::{DenseModel, ServePath, SparseLayer, SparseModel};
+pub use batcher::{
+    BatcherCfg, ContinuousBatcher, MicroBatch, MicroBatcher, ReorderBuffer, Request, StepBatch,
+    StepItem,
+};
+pub use decode::{DecodeClient, DecodeReport, GenRequest, GenTicket};
+pub use model::{greedy_token, DenseModel, ServePath, SparseLayer, SparseModel};
 pub use server::{ServeCfg, ServeReport, Server, StageStats};
-pub use stream::{StreamClient, StreamReport, Ticket};
+pub use stream::{ServeError, StreamClient, StreamReport, Ticket};
+
+pub use crate::model::KvCache;

@@ -9,7 +9,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::PrunedModel;
-use crate::model::{causal_attention, rmsnorm, rope, swiglu, LinearKind, LinearRef, ModelConfig};
+use crate::model::{
+    cached_attention, causal_attention, rmsnorm, rope, swiglu, KvCache, LinearKind, LinearRef,
+    ModelConfig,
+};
 use crate::runtime::{ExecBackend, TensorValue};
 use crate::sparsity::{Compressed, NmConfig};
 use crate::tensor::Mat;
@@ -223,6 +226,87 @@ fn check_seqs(seqs: &[(usize, usize)], rows: usize) -> Result<()> {
     Ok(())
 }
 
+/// One [`KvCache`] per span, in span order — the prefill/decode stage
+/// signature.  Prefill and decode are the *same* cached-attention call:
+/// a span whose cache is empty is a prefill (RoPE starts at 0), a span
+/// with cached positions is an incremental step (the new rows attend
+/// over the cache at the right offsets).  A mixed batch simply mixes the
+/// two kinds of span.
+fn check_caches(seqs: &[(usize, usize)], caches: &[KvCache], n_layers: usize) -> Result<()> {
+    anyhow::ensure!(
+        caches.len() == seqs.len(),
+        "got {} KV caches for {} sequence spans",
+        caches.len(),
+        seqs.len()
+    );
+    for (i, c) in caches.iter().enumerate() {
+        anyhow::ensure!(
+            c.n_layers() == n_layers,
+            "span {i}: KV cache covers {} layers, model has {n_layers}",
+            c.n_layers()
+        );
+    }
+    Ok(())
+}
+
+/// KV-cached [`attend_spans`]: each span's rows are the *new* tokens of
+/// its request; the span's queries/keys are rotated at the absolute
+/// positions recorded in its cache, the rotated K and the V are appended
+/// to the cache, and the new queries attend over the whole cached
+/// sequence.  The per-span body is [`cached_attention`] — shared with
+/// the host reference forward so the serving path cannot drift from it.
+fn attend_spans_cached(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    (n_heads, theta): (usize, f32),
+    seqs: &[(usize, usize)],
+    caches: &mut [KvCache],
+    layer: usize,
+) -> Mat {
+    let mut o = Mat::zeros(q.rows(), q.cols());
+    for (cache, &(lo, hi)) in caches.iter_mut().zip(seqs) {
+        let qs = q.row_block(lo, hi);
+        let ks = k.row_block(lo, hi);
+        let vs = v.row_block(lo, hi);
+        let os = cached_attention(qs, ks, vs, n_heads, theta, cache, layer);
+        for (r, dst) in (lo..hi).enumerate() {
+            o.row_mut(dst).copy_from_slice(os.row(r));
+        }
+    }
+    o
+}
+
+/// Token-id -> `[T, d]` embedding rows with vocab validation — the one
+/// copy behind [`SparseModel::embed`] and [`DenseModel::embed`].
+fn embed_rows(tok_embed: &Mat, vocab: usize, tokens: &[u32]) -> Result<Mat> {
+    anyhow::ensure!(!tokens.is_empty(), "cannot embed an empty token sequence");
+    let mut x = Mat::zeros(tokens.len(), tok_embed.cols());
+    for (r, &tok) in tokens.iter().enumerate() {
+        anyhow::ensure!((tok as usize) < vocab, "token {tok} outside vocab {vocab}");
+        x.row_mut(r).copy_from_slice(tok_embed.row(tok as usize));
+    }
+    Ok(x)
+}
+
+/// Final RMSNorm + dense LM-head matmul — the one copy behind
+/// [`SparseModel::logits`] and [`DenseModel::logits`].
+fn head_logits(h: &Mat, final_norm: &Mat, eps: f32, lm_head: &Mat) -> Mat {
+    rmsnorm(h, final_norm, eps).matmul_bt(lm_head)
+}
+
+/// Greedy decoding: index of the largest logit (ties break to the lowest
+/// index, deterministically).
+pub fn greedy_token(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate().skip(1) {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
 /// The dense decoder-stage math for one layer, parameterized by how a
 /// linear is applied — the single copy shared by
 /// [`SparseModel::dense_stage`] and [`DenseModel::stage`] so the two
@@ -252,6 +336,48 @@ impl DenseStage<'_> {
                 let k = apply(LinearKind::Wk, &xn);
                 let v = apply(LinearKind::Wv, &xn);
                 let o = attend_spans(&q, &k, &v, self.n_heads, self.rope_theta, seqs);
+                let att = apply(LinearKind::Wo, &o);
+                x.add(&att)
+            }
+        };
+        let xn = rmsnorm(&x, self.mlp_norm, self.eps);
+        let gate = apply(LinearKind::WGate, &xn);
+        let up = apply(LinearKind::WUp, &xn);
+        let h = swiglu(&gate, &up);
+        let down = apply(LinearKind::WDown, &h);
+        x.add(&down)
+    }
+
+    /// KV-cached counterpart of [`DenseStage::run`]: spans hold only the
+    /// new tokens, attention goes through each span's cache at `layer`.
+    /// On [`ServePath::MlpOnly`] the caches are untouched (the stage is
+    /// position-independent).
+    fn run_cached(
+        &self,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+        path: ServePath,
+        apply: &dyn Fn(LinearKind, &Mat) -> Mat,
+    ) -> Mat {
+        let x = match path {
+            ServePath::MlpOnly => x.clone(),
+            ServePath::FullDecoder => {
+                check_seqs(seqs, x.rows()).expect("bad sequence spans");
+                let xn = rmsnorm(x, self.attn_norm, self.eps);
+                let q = apply(LinearKind::Wq, &xn);
+                let k = apply(LinearKind::Wk, &xn);
+                let v = apply(LinearKind::Wv, &xn);
+                let o = attend_spans_cached(
+                    &q,
+                    &k,
+                    &v,
+                    (self.n_heads, self.rope_theta),
+                    seqs,
+                    caches,
+                    layer,
+                );
                 let att = apply(LinearKind::Wo, &o);
                 x.add(&att)
             }
@@ -320,6 +446,14 @@ pub struct SparseModel {
     /// Per-decoder-layer MLP norm gain `[1, d]`.
     mlp_norms: Vec<Mat>,
     norm_eps: f32,
+    /// Token embedding `[vocab, d]` — dense (embeddings and the head are
+    /// never pruned, paper §5.1); the decode path's token -> activation
+    /// entry point.
+    tok_embed: Mat,
+    /// Final RMSNorm gain `[1, d]`.
+    final_norm: Mat,
+    /// LM head `[vocab, d]` — dense; the decode path's logits exit point.
+    lm_head: Mat,
 }
 
 impl SparseModel {
@@ -355,7 +489,20 @@ impl SparseModel {
             .map(|l| pruned.params.get(&format!("layers.{l}.mlp_norm")).clone())
             .collect();
         let norm_eps = cfg.norm_eps;
-        Ok(SparseModel { cfg, nm, layers, attn_norms, mlp_norms, norm_eps })
+        let tok_embed = pruned.params.get("tok_embed").clone();
+        let final_norm = pruned.params.get("final_norm").clone();
+        let lm_head = pruned.params.get("lm_head").clone();
+        Ok(SparseModel {
+            cfg,
+            nm,
+            layers,
+            attn_norms,
+            mlp_norms,
+            norm_eps,
+            tok_embed,
+            final_norm,
+            lm_head,
+        })
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -466,6 +613,137 @@ impl SparseModel {
         Ok(cur)
     }
 
+    /// An empty per-request KV cache sized for this model — one per
+    /// request, carried through every [`SparseModel::stage_cached`] call
+    /// of that request's lifetime.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.dim)
+    }
+
+    /// Decoder layer `layer`'s attention sublayer on the **KV-cached**
+    /// sparse path: each span's rows are the request's *new* tokens
+    /// (whole prompt at prefill, one token per decode step), rotated at
+    /// the absolute positions its cache records and attending over the
+    /// whole cached sequence.  An empty cache makes this exactly the
+    /// prefill of [`SparseModel::attn_stage`] — prefill and decode are
+    /// one code path, not two.
+    pub fn attn_stage_cached(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+    ) -> Result<Mat> {
+        check_seqs(seqs, x.rows())?;
+        check_caches(seqs, caches, self.cfg.n_layers)?;
+        let xn = rmsnorm(x, &self.attn_norms[layer], self.norm_eps);
+        let q = self.layer(layer, LinearKind::Wq).forward(engine, &xn)?;
+        let k = self.layer(layer, LinearKind::Wk).forward(engine, &xn)?;
+        let v = self.layer(layer, LinearKind::Wv).forward(engine, &xn)?;
+        let o = attend_spans_cached(
+            &q,
+            &k,
+            &v,
+            (self.cfg.n_heads, self.cfg.rope_theta),
+            seqs,
+            caches,
+            layer,
+        );
+        let att = self.layer(layer, LinearKind::Wo).forward(engine, &o)?;
+        Ok(x.add(&att))
+    }
+
+    /// One KV-cached pipeline stage: [`SparseModel::attn_stage_cached`]
+    /// followed by the (position-independent) MLP sublayer.  On
+    /// [`ServePath::MlpOnly`] the caches are validated but untouched —
+    /// the stage has no attention state.
+    pub fn stage_cached(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+        path: ServePath,
+    ) -> Result<Mat> {
+        match path {
+            ServePath::MlpOnly => {
+                check_caches(seqs, caches, self.cfg.n_layers)?;
+                self.mlp_stage(engine, layer, x)
+            }
+            ServePath::FullDecoder => {
+                let a = self.attn_stage_cached(engine, layer, x, seqs, caches)?;
+                self.mlp_stage(engine, layer, &a)
+            }
+        }
+    }
+
+    /// KV-cached sparse forward through every decoder-layer stage: the
+    /// incremental counterpart of [`SparseModel::forward`].  Feeding a
+    /// sequence in chunks (prefill, then token-by-token decode) produces
+    /// the same outputs as re-forwarding the whole sequence — the
+    /// decode-parity tests pin this at 2:4 and 4:8 on both serve paths.
+    pub fn forward_cached(
+        &self,
+        engine: &mut dyn ExecBackend,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+        path: ServePath,
+    ) -> Result<Mat> {
+        let mut cur = x.clone();
+        for layer in 0..self.n_stages() {
+            cur = self.stage_cached(engine, layer, &cur, seqs, caches, path)?;
+        }
+        Ok(cur)
+    }
+
+    /// Embed token ids into `[T, d]` activation rows (the decode path's
+    /// entry point; embeddings are dense — never pruned).
+    pub fn embed(&self, tokens: &[u32]) -> Result<Mat> {
+        embed_rows(&self.tok_embed, self.cfg.vocab, tokens)
+    }
+
+    /// LM-head logits `[T, vocab]` for decoder-stack outputs `h: [T, d]`
+    /// (final RMSNorm + dense head matmul — the decode path's exit
+    /// point).
+    pub fn logits(&self, h: &Mat) -> Mat {
+        head_logits(h, &self.final_norm, self.norm_eps, &self.lm_head)
+    }
+
+    /// Greedy KV-cached generation: prefill `prompt` once, then decode
+    /// one token per step through [`SparseModel::forward_cached`],
+    /// stopping after `max_new_tokens` or at `eos` (which is included in
+    /// the output when hit).  This is the single-request reference the
+    /// continuous-batching decode loop (`Server::run_decode_streaming`)
+    /// is bit-compared against: same kernels, same per-span attention,
+    /// so batching must not change a request's tokens.
+    pub fn generate(
+        &self,
+        engine: &mut dyn ExecBackend,
+        prompt: &[u32],
+        max_new_tokens: usize,
+        eos: Option<u32>,
+        path: ServePath,
+    ) -> Result<Vec<u32>> {
+        anyhow::ensure!(max_new_tokens > 0, "max_new_tokens must be >= 1");
+        let mut caches = vec![self.new_cache()];
+        let mut x = self.embed(prompt)?;
+        let mut out = Vec::with_capacity(max_new_tokens);
+        loop {
+            let rows = x.rows();
+            let h = self.forward_cached(engine, &x, &[(0, rows)], &mut caches, path)?;
+            let last = h.row_block(rows - 1, rows);
+            let tok = greedy_token(self.logits(&last).row(0));
+            out.push(tok);
+            if out.len() >= max_new_tokens || eos == Some(tok) {
+                return Ok(out);
+            }
+            x = self.embed(&[tok])?;
+        }
+    }
+
     /// Host dense-masked reference of [`SparseModel::stage`] — same math
     /// and same host glue, per-call-materialized dense weights, no
     /// backend.
@@ -537,6 +815,9 @@ pub struct DenseModel {
     attn_norms: Vec<Mat>,
     mlp_norms: Vec<Mat>,
     norm_eps: f32,
+    tok_embed: Mat,
+    final_norm: Mat,
+    lm_head: Mat,
 }
 
 impl DenseModel {
@@ -549,6 +830,9 @@ impl DenseModel {
             attn_norms: sm.attn_norms.clone(),
             mlp_norms: sm.mlp_norms.clone(),
             norm_eps: sm.norm_eps,
+            tok_embed: sm.tok_embed.clone(),
+            final_norm: sm.final_norm.clone(),
+            lm_head: sm.lm_head.clone(),
         }
     }
 
@@ -585,6 +869,60 @@ impl DenseModel {
         }
         cur
     }
+
+    /// An empty per-request KV cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.dim)
+    }
+
+    /// KV-cached decoder-layer stage on plain dense matmuls — the decode
+    /// baseline the bench gate compares the sparse decode path against
+    /// (same cached-attention glue, dense weights).
+    pub fn stage_cached(
+        &self,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+        path: ServePath,
+    ) -> Mat {
+        check_caches(seqs, caches, self.cfg.n_layers).expect("bad KV caches");
+        DenseStage {
+            n_heads: self.cfg.n_heads,
+            rope_theta: self.cfg.rope_theta,
+            attn_norm: &self.attn_norms[layer],
+            mlp_norm: &self.mlp_norms[layer],
+            eps: self.norm_eps,
+        }
+        .run_cached(layer, x, seqs, caches, path, &|kind, x| {
+            x.matmul_bt(self.weight(layer, kind))
+        })
+    }
+
+    /// KV-cached dense forward through every decoder-layer stage.
+    pub fn forward_cached(
+        &self,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvCache],
+        path: ServePath,
+    ) -> Mat {
+        let mut cur = x.clone();
+        for layer in 0..self.n_stages() {
+            cur = self.stage_cached(layer, &cur, seqs, caches, path);
+        }
+        cur
+    }
+
+    /// Embed token ids into `[T, d]` activation rows.
+    pub fn embed(&self, tokens: &[u32]) -> Result<Mat> {
+        embed_rows(&self.tok_embed, self.cfg.vocab, tokens)
+    }
+
+    /// LM-head logits `[T, vocab]` for decoder-stack outputs `h: [T, d]`.
+    pub fn logits(&self, h: &Mat) -> Mat {
+        head_logits(h, &self.final_norm, self.norm_eps, &self.lm_head)
+    }
 }
 
 #[cfg(test)]
@@ -599,8 +937,8 @@ pub(crate) mod tests {
     use crate::util::rng::Pcg32;
     use crate::util::testkit::assert_close;
 
-    pub(crate) fn sparse_model_with(nm: NmConfig) -> SparseModel {
-        let cfg = ModelConfig::by_name("tiny-s").unwrap();
+    pub(crate) fn sparse_model_named(name: &str, nm: NmConfig) -> SparseModel {
+        let cfg = ModelConfig::by_name(name).unwrap();
         let ps = synth_trained_params(&cfg, 11);
         let corpus = Corpus::build(CorpusKind::C4Like, 5);
         let pc = PipelineCfg {
@@ -613,6 +951,10 @@ pub(crate) mod tests {
         };
         let pruned = prune_model(&ps, &corpus, PruneMethod::OneShot(Metric::Wanda), &pc);
         SparseModel::from_pruned(&pruned).unwrap()
+    }
+
+    pub(crate) fn sparse_model_with(nm: NmConfig) -> SparseModel {
+        sparse_model_named("tiny-s", nm)
     }
 
     pub(crate) fn tiny_sparse_model() -> SparseModel {
@@ -733,6 +1075,186 @@ pub(crate) mod tests {
             assert_close(got.data(), base.data(), 1e-3)
                 .unwrap_or_else(|e| panic!("{} dense baseline: {e}", nm.name()));
         }
+    }
+
+    #[test]
+    fn decode_parity_tiny_l_at_2_4_and_4_8() {
+        // Satellite acceptance: incremental (KV-cached) decode is
+        // bit-close to re-forwarding the full sequence, on the tiny-l
+        // config, at both N:M patterns, on both serve paths.  Prefill a
+        // prompt, then decode token rows one at a time; after each step
+        // the incremental output row must match the corresponding row of
+        // a full-sequence forward over everything fed so far.
+        for nm in [NmConfig::PAT_2_4, NmConfig::PAT_4_8] {
+            let sm = sparse_model_named("tiny-l", nm);
+            let mut engine = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            let mut rng = Pcg32::seeded(31);
+            for path in [ServePath::MlpOnly, ServePath::FullDecoder] {
+                let toks: Vec<u32> =
+                    (0..9).map(|_| rng.below(sm.cfg().vocab as u32)).collect();
+                let prompt = 5usize;
+                let mut caches = vec![sm.new_cache()];
+                let x = sm.embed(&toks[..prompt]).unwrap();
+                let inc = sm
+                    .forward_cached(&mut engine, &x, &[(0, prompt)], &mut caches, path)
+                    .unwrap();
+                let full =
+                    sm.forward(&mut engine, &x, &[(0, prompt)], path).unwrap();
+                assert_close(inc.data(), full.data(), 1e-4)
+                    .unwrap_or_else(|e| panic!("{} {} prefill: {e}", nm.name(), path.name()));
+                for t in prompt..toks.len() {
+                    let xt = sm.embed(&toks[t..t + 1]).unwrap();
+                    let step = sm
+                        .forward_cached(&mut engine, &xt, &[(0, 1)], &mut caches, path)
+                        .unwrap();
+                    // Full re-forward over everything fed so far.
+                    let xall = sm.embed(&toks[..t + 1]).unwrap();
+                    let fall =
+                        sm.forward(&mut engine, &xall, &[(0, t + 1)], path).unwrap();
+                    assert_close(step.row(0), fall.row(t), 1e-4).unwrap_or_else(|e| {
+                        panic!("{} {} decode step {t}: {e}", nm.name(), path.name())
+                    });
+                }
+                if path == ServePath::FullDecoder {
+                    assert_eq!(caches[0].len(), toks.len());
+                    assert_eq!(
+                        caches[0].bytes(),
+                        2 * sm.cfg().n_layers * toks.len() * sm.width() * 4
+                    );
+                } else {
+                    assert!(caches[0].is_empty(), "MLP-only must not touch the cache");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_prefill_decode_batch_is_request_local() {
+        // One batch coalescing a prefill span (fresh cache) with a decode
+        // span (warm cache) must give each request exactly what it would
+        // get served alone — the continuous batcher's correctness core.
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let mut rng = Pcg32::seeded(33);
+        let ta: Vec<u32> = (0..4).map(|_| rng.below(256)).collect();
+        let tb: Vec<u32> = (0..3).map(|_| rng.below(256)).collect();
+
+        // Request A alone: prefill 3, decode 1.
+        let mut ca = vec![sm.new_cache()];
+        let xa = sm.embed(&ta[..3]).unwrap();
+        sm.forward_cached(&mut engine, &xa, &[(0, 3)], &mut ca, ServePath::FullDecoder)
+            .unwrap();
+        let xa1 = sm.embed(&ta[3..]).unwrap();
+        let alone = sm
+            .forward_cached(&mut engine, &xa1, &[(0, 1)], &mut ca, ServePath::FullDecoder)
+            .unwrap();
+
+        // Same decode step for A, coalesced with B's prefill: A's decode
+        // row first (1 row, warm cache), then B's prefill span (3 rows,
+        // fresh cache).
+        let mut ca2 = vec![sm.new_cache()];
+        sm.forward_cached(&mut engine, &xa, &[(0, 3)], &mut ca2, ServePath::FullDecoder)
+            .unwrap();
+        let xb = sm.embed(&tb).unwrap();
+        let mut stacked = Mat::zeros(4, sm.width());
+        stacked.row_mut(0).copy_from_slice(xa1.row(0));
+        for r in 0..3 {
+            stacked.row_mut(1 + r).copy_from_slice(xb.row(r));
+        }
+        let mut caches = vec![ca2.pop().unwrap(), sm.new_cache()];
+        let mixed = sm
+            .forward_cached(
+                &mut engine,
+                &stacked,
+                &[(0, 1), (1, 4)],
+                &mut caches,
+                ServePath::FullDecoder,
+            )
+            .unwrap();
+        // Same kernels on the same rows => bit-identical.
+        assert_eq!(&mixed.data()[..sm.width()], alone.data());
+        // B's span equals B served alone (prefill).
+        let mut cb = vec![sm.new_cache()];
+        let b_alone = sm
+            .forward_cached(&mut engine, &xb, &[(0, 3)], &mut cb, ServePath::FullDecoder)
+            .unwrap();
+        assert_eq!(&mixed.data()[sm.width()..], b_alone.data());
+    }
+
+    #[test]
+    fn generate_greedy_matches_full_recompute_and_stops() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let prompt: Vec<u32> = vec![5, 250, 17, 99];
+        let got =
+            sm.generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder).unwrap();
+        assert_eq!(got.len(), 6);
+        // Reference: greedy loop that re-forwards the whole sequence per
+        // step (no KV cache) — same kernels, so argmax must agree.
+        let mut toks = prompt.clone();
+        let mut want = Vec::new();
+        for _ in 0..6 {
+            let x = sm.embed(&toks).unwrap();
+            let h = sm
+                .forward(&mut engine, &x, &[(0, x.rows())], ServePath::FullDecoder)
+                .unwrap();
+            let last = h.row_block(h.rows() - 1, h.rows());
+            let tok = greedy_token(sm.logits(&last).row(0));
+            want.push(tok);
+            toks.push(tok);
+        }
+        assert_eq!(got, want);
+        // EOS cuts generation short and is included in the output.
+        let eos = got[1];
+        let stopped = sm
+            .generate(&mut engine, &prompt, 6, Some(eos), ServePath::FullDecoder)
+            .unwrap();
+        let cut = got.iter().position(|&t| t == eos).expect("eos came from got");
+        assert_eq!(stopped, got[..=cut].to_vec());
+        // Degenerate arguments are rejected.
+        assert!(sm.generate(&mut engine, &prompt, 0, None, ServePath::FullDecoder).is_err());
+        assert!(sm.embed(&[]).is_err());
+        assert!(sm.embed(&[sm.cfg().vocab as u32]).is_err());
+    }
+
+    #[test]
+    fn cache_mismatches_are_rejected() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let x = Mat::zeros(2, sm.width());
+        // Wrong cache count.
+        let mut none: Vec<KvCache> = vec![];
+        assert!(sm
+            .forward_cached(&mut engine, &x, &[(0, 2)], &mut none, ServePath::FullDecoder)
+            .is_err());
+        // Wrong layer count.
+        let mut bad = vec![KvCache::new(sm.cfg().n_layers + 1, sm.width())];
+        assert!(sm
+            .forward_cached(&mut engine, &x, &[(0, 2)], &mut bad, ServePath::FullDecoder)
+            .is_err());
+    }
+
+    #[test]
+    fn dense_model_cached_decode_matches_sparse_reference_shape() {
+        // The dense baseline decodes through the same cached glue: its
+        // incremental output equals its own full re-forward.
+        let sm = tiny_sparse_model();
+        let dm = DenseModel::from_sparse(&sm);
+        let toks: Vec<u32> = vec![1, 2, 3, 4, 5, 6];
+        let x = dm.embed(&toks[..4]).unwrap();
+        let mut caches = vec![dm.new_cache()];
+        let pre = dm.forward_cached(&x, &[(0, 4)], &mut caches, ServePath::FullDecoder);
+        let full = dm.forward(&x, &[(0, 4)], ServePath::FullDecoder);
+        assert_close(pre.data(), full.data(), 1e-5).unwrap();
+        for t in 4..6 {
+            let xt = dm.embed(&toks[t..t + 1]).unwrap();
+            let step = dm.forward_cached(&xt, &[(0, 1)], &mut caches, ServePath::FullDecoder);
+            let xall = dm.embed(&toks[..t + 1]).unwrap();
+            let fall = dm.forward(&xall, &[(0, t + 1)], ServePath::FullDecoder);
+            assert_close(step.row(0), fall.row(t), 1e-5)
+                .unwrap_or_else(|e| panic!("dense decode step {t}: {e}"));
+        }
+        assert_eq!(dm.logits(&x).shape(), (4, 256));
     }
 
     #[test]

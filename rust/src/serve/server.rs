@@ -40,6 +40,20 @@ pub struct ServeCfg {
     /// micro-batcher waits for more requests before dispatching a
     /// partial batch.
     pub linger: Duration,
+    /// Streaming/decode backpressure: maximum requests in flight
+    /// (submitted but not yet replied to) before `submit` fails fast
+    /// with [`super::ServeError::QueueFull`].  0 = unbounded (the
+    /// pre-backpressure behavior).
+    pub queue_depth: usize,
+    /// Streaming/decode backpressure: a request that sits undispatched
+    /// longer than this expires with [`super::ServeError::TimedOut`]
+    /// through its ticket (checked when the batcher drains the queue).
+    /// Zero disables the timeout.
+    pub request_timeout: Duration,
+    /// Decode only ([`Server::run_decode_streaming`]): hard cap on
+    /// `max_new_tokens` a single generation request may ask for.  0 =
+    /// uncapped.
+    pub max_new_tokens_cap: usize,
 }
 
 impl Default for ServeCfg {
@@ -48,6 +62,9 @@ impl Default for ServeCfg {
             batcher: BatcherCfg::default(),
             path: ServePath::default(),
             linger: Duration::from_millis(2),
+            queue_depth: 0,
+            request_timeout: Duration::ZERO,
+            max_new_tokens_cap: 0,
         }
     }
 }

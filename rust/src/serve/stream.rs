@@ -12,21 +12,72 @@
 //! unwinds), the queue closes, everything already enqueued still flows
 //! through every pipeline stage, and the worker threads join before
 //! [`Server::run_streaming`] returns its [`StreamReport`].
+//!
+//! Backpressure: [`super::ServeCfg::queue_depth`] caps the in-flight
+//! request count (submit fails fast with [`ServeError::QueueFull`]
+//! instead of letting a stalled client grow the queue without bound),
+//! and [`super::ServeCfg::request_timeout`] expires requests that sit
+//! undispatched too long ([`ServeError::TimedOut`] through
+//! [`Ticket::wait`]).  Every failure mode a ticket can observe is a
+//! typed [`ServeError`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use super::batcher::{MicroBatcher, Request};
 use super::server::{Server, StageStats};
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
 
+/// Typed failure of a streamed request — what a [`Ticket`] (or a decode
+/// ticket, `super::GenTicket`) can observe, and what `submit` returns
+/// when admission is refused.  Implements `std::error::Error`, so `?`
+/// into `anyhow::Result` keeps working at call sites that don't match on
+/// the variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at submit: malformed request (wrong width, empty, token
+    /// outside the vocabulary, ...).
+    Invalid(String),
+    /// Rejected at submit: `queue_depth` requests are already in flight.
+    QueueFull { depth: usize },
+    /// Admitted but expired before dispatch: sat in the queue longer
+    /// than `request_timeout`.
+    TimedOut { waited_ms: u64 },
+    /// Rejected at submit: the serving loop is shutting down.
+    ShuttingDown,
+    /// A pipeline stage failed while this request's batch was in flight.
+    Stage(String),
+    /// The serving loop dropped the reply channel (a worker panicked).
+    Dropped,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::QueueFull { depth } => {
+                write!(f, "queue full: {depth} requests already in flight")
+            }
+            ServeError::TimedOut { waited_ms } => {
+                write!(f, "timed out after {waited_ms}ms in the queue")
+            }
+            ServeError::ShuttingDown => write!(f, "serving loop is shutting down"),
+            ServeError::Stage(msg) => write!(f, "pipeline stage failed: {msg}"),
+            ServeError::Dropped => write!(f, "serving loop dropped the reply"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Outcome of one streamed request.
-type Reply = std::result::Result<Mat, String>;
+type Reply = std::result::Result<Mat, ServeError>;
 
 /// A claim on one in-flight request's output.  Waiting tickets in the
 /// order they were issued gives each client per-submission-order
@@ -40,12 +91,12 @@ pub struct Ticket {
 impl Ticket {
     /// Block until the serving loop finishes this request.  Tickets stay
     /// valid across shutdown: anything enqueued before the loop closed is
-    /// still served and its output buffered here.
-    pub fn wait(self) -> Result<Mat> {
+    /// still served and its output buffered here.  Failures are typed —
+    /// see [`ServeError`].
+    pub fn wait(self) -> std::result::Result<Mat, ServeError> {
         match self.rx.recv() {
-            Ok(Ok(y)) => Ok(y),
-            Ok(Err(e)) => Err(anyhow!("request {}: {e}", self.id)),
-            Err(_) => Err(anyhow!("request {}: serving loop dropped the reply", self.id)),
+            Ok(reply) => reply,
+            Err(_) => Err(ServeError::Dropped),
         }
     }
 
@@ -57,6 +108,7 @@ impl Ticket {
 struct PendingReq {
     req: Request,
     reply: mpsc::Sender<Reply>,
+    enqueued: Instant,
 }
 
 #[derive(Default)]
@@ -65,26 +117,129 @@ struct QueueState {
     closed: bool,
 }
 
-/// The shared request queue between clients and the batcher thread.
-struct SharedQueue {
-    state: Mutex<QueueState>,
-    arrived: Condvar,
+impl HasClosed for QueueState {
+    fn set_closed(&mut self) {
+        self.closed = true;
+    }
 }
 
-impl SharedQueue {
-    fn close(&self) {
+/// Loop-specific queue states that carry a shutdown flag (the forward
+/// loop's [`QueueState`], the decode loop's pool state in
+/// `super::decode`).
+pub(super) trait HasClosed {
+    fn set_closed(&mut self);
+}
+
+/// The shared request queue between clients and a batcher/scheduler
+/// thread, generic over the loop-specific state `S` so the forward
+/// streaming loop and the decode loop share one admission-control and
+/// backpressure implementation.
+pub(super) struct SharedQueue<S> {
+    pub(super) state: Mutex<S>,
+    pub(super) arrived: Condvar,
+    /// Requests admitted but not yet replied to (pending + batched + in
+    /// the stage chain) — the quantity `queue_depth` caps.
+    pub(super) in_flight: AtomicUsize,
+    /// Requests ever admitted (monotonic).
+    pub(super) admitted: AtomicUsize,
+    /// Requests expired before dispatch (`request_timeout`).
+    pub(super) timed_out: AtomicUsize,
+    /// Submissions refused at admission (queue full).
+    pub(super) rejected: AtomicUsize,
+}
+
+impl<S: Default> SharedQueue<S> {
+    pub(super) fn new() -> SharedQueue<S> {
+        SharedQueue {
+            state: Mutex::new(S::default()),
+            arrived: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            timed_out: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl<S: Default> Default for SharedQueue<S> {
+    fn default() -> Self {
+        SharedQueue::new()
+    }
+}
+
+impl<S: HasClosed> SharedQueue<S> {
+    pub(super) fn close(&self) {
         // Robust against a client thread having panicked mid-submit: a
         // poisoned queue still closes so the worker threads drain.
-        self.state.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).set_closed();
         self.arrived.notify_all();
+    }
+}
+
+impl<S> SharedQueue<S> {
+    /// Admission control shared by the forward and decode loops: reserve
+    /// an in-flight slot or refuse with the typed reason.  The reserve is
+    /// a single atomic update — concurrent submits cannot both slip under
+    /// the cap.
+    pub(super) fn admit(&self, queue_depth: usize) -> std::result::Result<(), ServeError> {
+        let reserved = self.in_flight.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+            if queue_depth > 0 && n >= queue_depth {
+                None
+            } else {
+                Some(n + 1)
+            }
+        });
+        if reserved.is_err() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::QueueFull { depth: queue_depth });
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release an in-flight slot (request replied to or expired).
+    pub(super) fn release(&self) {
+        if self.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Dropped to zero: the decode scheduler's exit predicate
+            // (`closed && in_flight == 0`) may now hold, and it reads
+            // `in_flight` outside the state mutex — take the mutex
+            // before notifying so a scheduler between checking its
+            // predicate and parking on the condvar (it holds the lock
+            // for that whole window) cannot miss this wakeup.  Releases
+            // that don't reach zero never wake anyone, so the forward
+            // loop's per-request completions stay lock-free here.
+            let _st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            self.arrived.notify_all();
+        }
+    }
+
+    /// Roll back an [`SharedQueue::admit`] that never enqueued (the
+    /// submit lost the race with shutdown).
+    pub(super) fn unadmit(&self) {
+        self.admitted.fetch_sub(1, Ordering::Relaxed);
+        self.release();
+    }
+
+    /// If a request enqueued at `enqueued` has outlived `timeout` (zero
+    /// disables), release its slot, count it, and hand back the typed
+    /// error for the caller to deliver on its reply channel.  Shared by
+    /// the forward and decode batcher threads.
+    pub(super) fn stale(&self, enqueued: Instant, timeout: Duration) -> Option<ServeError> {
+        let waited = enqueued.elapsed();
+        if timeout.is_zero() || waited <= timeout {
+            return None;
+        }
+        self.timed_out.fetch_add(1, Ordering::Relaxed);
+        self.release();
+        Some(ServeError::TimedOut { waited_ms: waited.as_millis() as u64 })
     }
 }
 
 /// Closes the queue even if the client closure unwinds, so the worker
 /// threads never deadlock waiting for requests that will not come.
-struct CloseGuard<'q>(&'q SharedQueue);
+pub(super) struct CloseGuard<'q, S: HasClosed>(pub(super) &'q SharedQueue<S>);
 
-impl Drop for CloseGuard<'_> {
+impl<S: HasClosed> Drop for CloseGuard<'_, S> {
     fn drop(&mut self) {
         self.0.close();
     }
@@ -95,9 +250,10 @@ impl Drop for CloseGuard<'_> {
 /// `std::thread::scope` inside the client closure).
 #[derive(Clone, Copy)]
 pub struct StreamClient<'q> {
-    queue: &'q SharedQueue,
+    queue: &'q SharedQueue<QueueState>,
     next_id: &'q AtomicU64,
     width: usize,
+    queue_depth: usize,
 }
 
 impl StreamClient<'_> {
@@ -109,20 +265,36 @@ impl StreamClient<'_> {
     /// Enqueue `[tokens, width]` activations; returns a [`Ticket`] for
     /// the output.  Wakes the micro-batcher immediately — requests
     /// coalesce with whatever else is pending when the batch forms.
-    pub fn submit(&self, x: Mat) -> Result<Ticket> {
+    /// Fails fast with [`ServeError::QueueFull`] when
+    /// [`super::ServeCfg::queue_depth`] requests are already in flight.
+    pub fn submit(&self, x: Mat) -> std::result::Result<Ticket, ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        anyhow::ensure!(
-            x.cols() == self.width,
-            "request {id}: width {} != serving width {}",
-            x.cols(),
-            self.width
-        );
-        anyhow::ensure!(x.rows() > 0, "request {id}: empty activation batch");
+        if x.cols() != self.width {
+            return Err(ServeError::Invalid(format!(
+                "request {id}: width {} != serving width {}",
+                x.cols(),
+                self.width
+            )));
+        }
+        if x.rows() == 0 {
+            return Err(ServeError::Invalid(format!("request {id}: empty activation batch")));
+        }
+        self.queue.admit(self.queue_depth)?;
         let (tx, rx) = mpsc::channel();
         {
             let mut st = self.queue.state.lock().unwrap();
-            anyhow::ensure!(!st.closed, "request {id}: serving loop is shutting down");
-            st.pending.push(PendingReq { req: Request { id, x }, reply: tx });
+            if st.closed {
+                // Drop the state lock first: `unadmit` -> `release`
+                // re-takes it to publish the wakeup.
+                drop(st);
+                self.queue.unadmit();
+                return Err(ServeError::ShuttingDown);
+            }
+            st.pending.push(PendingReq {
+                req: Request { id, x },
+                reply: tx,
+                enqueued: Instant::now(),
+            });
         }
         self.queue.arrived.notify_one();
         Ok(Ticket { id, rx })
@@ -155,6 +327,10 @@ pub struct StreamReport {
     /// Requests whose batch failed mid-pipeline (the error was forwarded
     /// to their tickets).
     pub n_failed: usize,
+    /// Requests that expired in the queue ([`ServeError::TimedOut`]).
+    pub n_timed_out: usize,
+    /// Submissions refused at admission ([`ServeError::QueueFull`]).
+    pub n_rejected: usize,
 }
 
 impl StreamReport {
@@ -205,9 +381,10 @@ impl Server {
         let model = self.model();
         let path = self.cfg().path;
         let linger = self.cfg().linger;
+        let timeout = self.cfg().request_timeout;
+        let queue_depth = self.cfg().queue_depth;
         let batcher_cfg = self.cfg().batcher.clone();
-        let queue =
-            SharedQueue { state: Mutex::new(QueueState::default()), arrived: Condvar::new() };
+        let queue: SharedQueue<QueueState> = SharedQueue::new();
         let next_id = AtomicU64::new(0);
         let t0 = Instant::now();
 
@@ -270,6 +447,7 @@ impl Server {
             }
 
             // ---- collector: split batch outputs, reply per request ----
+            let queue_ref = &queue;
             let collector = scope.spawn(move || {
                 let done_rx = prev_rx;
                 let mut stage_stats: Vec<StageStats> = (0..n_stages)
@@ -293,13 +471,15 @@ impl Server {
                         n_failed += batch.n_requests();
                         for reply in &replies {
                             // A dropped ticket is fine; ignore send errors.
-                            let _ = reply.send(Err(e.clone()));
+                            let _ = reply.send(Err(ServeError::Stage(e.clone())));
+                            queue_ref.release();
                         }
                         continue;
                     }
                     total_tokens += tokens;
                     for ((_, y), reply) in batch.split(&batch.x).into_iter().zip(&replies) {
                         let _ = reply.send(Ok(y));
+                        queue_ref.release();
                     }
                 }
                 (stage_stats, total_tokens, n_batches, n_requests, n_failed)
@@ -343,6 +523,14 @@ impl Server {
                         st.pending.drain(..).collect()
                     };
                     for p in drained {
+                        // Expire requests that sat past the timeout (the
+                        // linger window is the usual way to get here) —
+                        // their tickets get the typed error instead of a
+                        // stale dispatch.
+                        if let Some(e) = queue.stale(p.enqueued, timeout) {
+                            let _ = p.reply.send(Err(e));
+                            continue;
+                        }
                         replies.insert(p.req.id, p.reply);
                         mb.push(p.req).expect("client validated width/rows at submit");
                     }
@@ -375,6 +563,7 @@ impl Server {
                 queue: &queue,
                 next_id: &next_id,
                 width: model.width(),
+                queue_depth,
             });
             drop(close); // close + notify so the batcher drains and exits
             let tally = collector.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
@@ -391,6 +580,8 @@ impl Server {
                 n_batches,
                 n_requests,
                 n_failed,
+                n_timed_out: queue.timed_out.load(Ordering::Relaxed),
+                n_rejected: queue.rejected.load(Ordering::Relaxed),
             },
         ))
     }
@@ -424,6 +615,7 @@ mod tests {
                 batcher: BatcherCfg { max_tokens: 16, max_requests: 4 },
                 path,
                 linger: Duration::from_millis(1),
+                ..ServeCfg::default()
             },
         )
     }
@@ -545,12 +737,79 @@ mod tests {
         assert!(server.run_streaming(engines(0, 1), |_| ()).is_err());
         let ((), report) = server
             .run_streaming(engines(1, 1), |client| {
-                // Wrong width and empty requests are rejected at submit.
-                assert!(client.submit(Mat::zeros(2, width + 1)).is_err());
-                assert!(client.submit(Mat::zeros(0, width)).is_err());
+                // Wrong width and empty requests are rejected at submit,
+                // with the typed reason.
+                assert!(matches!(
+                    client.submit(Mat::zeros(2, width + 1)),
+                    Err(ServeError::Invalid(_))
+                ));
+                assert!(matches!(
+                    client.submit(Mat::zeros(0, width)),
+                    Err(ServeError::Invalid(_))
+                ));
                 client.submit(Mat::zeros(1, width)).unwrap().wait().unwrap();
             })
             .unwrap();
         assert_eq!(report.n_requests, 1);
+        assert_eq!((report.n_timed_out, report.n_rejected), (0, 0));
+    }
+
+    #[test]
+    fn queue_depth_cap_rejects_with_queue_full() {
+        // queue_depth = 1 and a long linger: the first request is parked
+        // in the batch-forming window (its reply cannot arrive yet), so a
+        // second submit inside that window must be refused, typed.
+        let mut server = streaming_server(ServePath::MlpOnly);
+        server.cfg_mut().queue_depth = 1;
+        server.cfg_mut().linger = Duration::from_millis(400);
+        server.cfg_mut().batcher = BatcherCfg { max_tokens: 1 << 20, max_requests: 1 << 20 };
+        let width = server.model().width();
+        let (first, report) = server
+            .run_streaming(engines(1, 1), |client| {
+                let first = client.submit(Mat::zeros(1, width)).unwrap();
+                let err = client.submit(Mat::zeros(1, width)).unwrap_err();
+                assert_eq!(err, ServeError::QueueFull { depth: 1 });
+                first
+            })
+            .unwrap();
+        first.wait().unwrap();
+        assert_eq!(report.n_requests, 1);
+        assert_eq!(report.n_rejected, 1);
+    }
+
+    #[test]
+    fn request_timeout_expires_through_the_ticket() {
+        // Timeout far below the linger: the request sits through the
+        // batch-forming window, expires at drain, and the ticket observes
+        // the typed TimedOut instead of a result.
+        let mut server = streaming_server(ServePath::MlpOnly);
+        server.cfg_mut().request_timeout = Duration::from_millis(1);
+        server.cfg_mut().linger = Duration::from_millis(150);
+        server.cfg_mut().batcher = BatcherCfg { max_tokens: 1 << 20, max_requests: 1 << 20 };
+        let width = server.model().width();
+        let (ticket, report) = server
+            .run_streaming(engines(1, 1), |client| {
+                let t = client.submit(Mat::zeros(1, width)).unwrap();
+                // Stay alive past the linger window so the batcher ages
+                // the request out instead of the shutdown drain racing it.
+                std::thread::sleep(Duration::from_millis(200));
+                t
+            })
+            .unwrap();
+        match ticket.wait() {
+            Err(ServeError::TimedOut { waited_ms }) => assert!(waited_ms >= 1),
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert_eq!(report.n_timed_out, 1);
+        assert_eq!(report.n_requests, 0, "expired requests never reach the stages");
+    }
+
+    #[test]
+    fn serve_error_displays_and_converts_to_anyhow() {
+        let e = ServeError::QueueFull { depth: 8 };
+        assert!(e.to_string().contains("8 requests"));
+        let as_anyhow: anyhow::Error = e.into();
+        assert!(format!("{as_anyhow:#}").contains("queue full"));
+        assert!(ServeError::TimedOut { waited_ms: 5 }.to_string().contains("5ms"));
     }
 }

@@ -166,6 +166,10 @@ impl PjRtBuffer {
 pub struct PjRtLoadedExecutable {}
 
 impl PjRtLoadedExecutable {
+    /// Generic over the element so callers can pass owned literals
+    /// (`&[Literal]`) or borrowed ones (`&[&Literal]`) — the engine's
+    /// resident-weight path executes bound statics by reference, and a
+    /// real-crate swap must keep that zero-copy call shape.
     pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(XlaError::stub("executing a computation"))
     }

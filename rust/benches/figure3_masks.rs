@@ -6,11 +6,13 @@
 //! retained-position overlap statistics between the methods.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::lcp::LcpCfg;
 use permllm::model::{LinearKind, LinearRef};
 use permllm::pruning::Metric;
+use permllm::recipe::{HeuristicCpPerm, LearnedPerm, PruneRecipe};
+use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
 use permllm::util::benchkit::Table;
 
@@ -62,24 +64,25 @@ fn main() {
         ..Default::default()
     };
 
-    let methods = [
-        PruneMethod::OneShot(Metric::Wanda),
-        PruneMethod::OneShotCp(Metric::Ria),
-        PruneMethod::PermLlm(Metric::Ria),
+    let nm = NmConfig::PAT_2_4;
+    let recipes = [
+        PruneRecipe::oneshot(Metric::Wanda, nm),
+        PruneRecipe::builder(nm).metric_kind(Metric::Ria).perm(HeuristicCpPerm).build(),
+        PruneRecipe::builder(nm).metric_kind(Metric::Ria).perm(LearnedPerm::default()).build(),
     ];
     let mut masks = Vec::new();
-    for method in methods {
-        let pruned = prune_model(&ps, &calib, method, &cfg);
+    for recipe in recipes {
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
         let mask = mask_in_original_order(&pruned, lin);
-        println!("\n--- {} mask ({}), {}:{} crop 24x48 ---", method.name(), prov,
+        println!("\n--- {} mask ({}), {}:{} crop 24x48 ---", recipe.name(), prov,
                  lin.layer, "w_down");
         print!("{}", ascii_crop(&mask, 24, 48));
         save_pgm(
-            &format!("bench_results/figure3_{}.pgm", method.name().replace('+', "_")),
+            &format!("bench_results/figure3_{}.pgm", recipe.name().replace('+', "_")),
             &mask,
             128,
         );
-        masks.push((method.name(), mask));
+        masks.push((recipe.name(), mask));
     }
 
     // Overlap statistics (paper's point: retained sets genuinely differ).

@@ -3,28 +3,25 @@
 //!
 //! Paper shape to reproduce: PermLLM_X < X+CP < X for X in {Wanda, RIA};
 //! SparseGPT competitive with one-shot metrics; Dense lowest.
+//!
+//! Rows are declared as [`PruneRecipe`]s (`recipe::rows::table1`) — the
+//! labels are pinned by `table1_rows_are_recipes_with_pinned_labels` —
+//! including the ROSE-style learned-permutation + SparseGPT-update row
+//! the legacy method enum could not express.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::eval_perplexity;
 use permllm::lcp::LcpCfg;
-use permllm::pruning::Metric;
+use permllm::recipe::rows;
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
     permllm::util::logging::init();
     let models = ["tiny-s", "tiny-m", "tiny-l"];
-    let methods = [
-        PruneMethod::Dense,
-        PruneMethod::SparseGpt,
-        PruneMethod::OneShot(Metric::Wanda),
-        PruneMethod::OneShotCp(Metric::Wanda),
-        PruneMethod::PermLlm(Metric::Wanda),
-        PruneMethod::OneShot(Metric::Ria),
-        PruneMethod::OneShotCp(Metric::Ria),
-        PruneMethod::PermLlm(Metric::Ria),
-    ];
+    let recipes = rows::table1(NmConfig::PAT_2_4);
     let calib = Corpus::build(CorpusKind::C4Like, 2024);
     let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
 
@@ -38,22 +35,22 @@ fn main() {
     let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new("Table 1: Wikitext2-like perplexity, 2:4 sparsity", &hdr_refs);
 
-    let mut rows: Vec<Vec<String>> = methods.iter().map(|m| vec![m.name()]).collect();
+    let mut rows_out: Vec<Vec<String>> = recipes.iter().map(|r| vec![r.name()]).collect();
     for model in models {
         let (ps, _) = trained_or_synth(model);
         let cfg = PipelineCfg {
             lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
             ..Default::default()
         };
-        for (mi, method) in methods.iter().enumerate() {
+        for (ri, recipe) in recipes.iter().enumerate() {
             let t0 = std::time::Instant::now();
-            let pruned = prune_model(&ps, &calib, *method, &cfg);
+            let pruned = prune_with_recipe(&ps, &calib, recipe, &cfg);
             let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
-            log::info!("{model}/{}: ppl {ppl:.3} ({:.1}s)", method.name(), t0.elapsed().as_secs_f64());
-            rows[mi].push(fmt(ppl, 3));
+            log::info!("{model}/{}: ppl {ppl:.3} ({:.1}s)", recipe.name(), t0.elapsed().as_secs_f64());
+            rows_out[ri].push(fmt(ppl, 3));
         }
     }
-    for r in rows {
+    for r in rows_out {
         table.row(&r);
     }
     table.finish("table1_perplexity");

@@ -2,13 +2,18 @@
 //!
 //! Paper shape: PermLLM_Wanda achieves the highest sparse average,
 //! Wanda+CP beats Wanda, SparseGPT in between; Dense on top.
+//!
+//! Rows are [`PruneRecipe`]s (`recipe::rows::headline`); the "WeightUpd"
+//! column is derived from each recipe's update policy rather than
+//! hard-coded per row.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::{zeroshot_accuracy, zeroshot_suite};
 use permllm::lcp::LcpCfg;
-use permllm::pruning::Metric;
+use permllm::recipe::rows;
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
@@ -16,13 +21,7 @@ fn main() {
     let model = "tiny-m";
     let (ps, prov) = trained_or_synth(model);
     let calib = Corpus::build(CorpusKind::C4Like, 2024);
-    let methods = [
-        (PruneMethod::Dense, "-"),
-        (PruneMethod::SparseGpt, "yes"),
-        (PruneMethod::OneShot(Metric::Wanda), "no"),
-        (PruneMethod::OneShotCp(Metric::Wanda), "no"),
-        (PruneMethod::PermLlm(Metric::Wanda), "no"),
-    ];
+    let recipes = rows::headline(NmConfig::PAT_2_4);
     let n_items = scaled(60);
 
     let mut table = Table::new(
@@ -33,9 +32,9 @@ fn main() {
         lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
         ..Default::default()
     };
-    for (method, upd) in methods {
-        let pruned = prune_model(&ps, &calib, method, &cfg);
-        let mut row = vec![method.name(), upd.to_string()];
+    for recipe in &recipes {
+        let pruned = prune_with_recipe(&ps, &calib, recipe, &cfg);
+        let mut row = vec![recipe.name(), rows::weight_update_cell(recipe).to_string()];
         let mut mean = 0.0;
         for mut task in zeroshot_suite() {
             task.n_items = n_items;
@@ -44,7 +43,7 @@ fn main() {
             mean += acc;
         }
         row.push(fmt(mean / 5.0, 2));
-        log::info!("{}: avg {:.2}", method.name(), mean / 5.0);
+        log::info!("{}: avg {:.2}", recipe.name(), mean / 5.0);
         table.row(&row);
     }
     table.finish("table2_zeroshot");

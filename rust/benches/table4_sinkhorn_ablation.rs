@@ -2,13 +2,19 @@
 //!
 //! Paper shape: 5 iterations (a near-doubly-stochastic soft matrix) beats
 //! 0 iterations (plain exp) on the sparse model's quality.
+//!
+//! The ablation axis rides the recipe path: each row is a
+//! [`PruneRecipe`] whose [`LearnedPerm`] overrides `sinkhorn_iters`
+//! per strategy instead of mutating the pipeline config.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::{eval_perplexity, zeroshot_accuracy, zeroshot_suite};
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{LearnedPerm, PruneRecipe};
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
@@ -21,14 +27,17 @@ fn main() {
         &format!("Table 4: Sinkhorn iteration ablation, PermLLM_Wanda, tiny-m ({prov})"),
         &["# Iter", "MeanLayerErr", "ZeroShotAvg", "Wikitext2 ppl"],
     );
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
     for iters in [0usize, 5] {
-        let cfg = PipelineCfg {
-            lcp: LcpCfg { sinkhorn_iters: iters, steps: scaled(50), lr: 0.05, ..Default::default() },
-            ..Default::default()
-        };
-        let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
-        let err: f32 =
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+        let recipe = PruneRecipe::builder(NmConfig::PAT_2_4)
+            .metric_kind(Metric::Wanda)
+            .perm(LearnedPerm { sinkhorn_iters: Some(iters), ..Default::default() })
+            .build();
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
+        let err = pruned.mean_layer_error();
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
         let mut zs = 0.0;
         for mut task in zeroshot_suite() {

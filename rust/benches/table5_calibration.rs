@@ -6,17 +6,23 @@
 //! the paper's Wikitext2 row.)
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::{eval_perplexity, zeroshot_accuracy, zeroshot_suite};
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{LearnedPerm, PruneRecipe};
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
     permllm::util::logging::init();
     let (ps, prov) = trained_or_synth("tiny-m");
     let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
+    let recipe = PruneRecipe::builder(NmConfig::PAT_2_4)
+        .metric_kind(Metric::Wanda)
+        .perm(LearnedPerm::default())
+        .build();
 
     let mut table = Table::new(
         &format!("Table 5: calibration dataset ablation, PermLLM_Wanda, tiny-m ({prov})"),
@@ -28,9 +34,8 @@ fn main() {
             lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
             ..Default::default()
         };
-        let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
-        let err: f32 =
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
+        let err = pruned.mean_layer_error();
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
         let mut zs = 0.0;
         for mut task in zeroshot_suite() {

@@ -3,13 +3,19 @@
 //! Paper shape: larger blocks = larger optimization space = lower error,
 //! at superlinear runtime cost (Hungarian is O(C_in * B^2); convergence
 //! needs more iterations).
+//!
+//! The sweep runs through the trait-based recipe path (ROADMAP "block-
+//! size sweeps" item): each row is a [`PruneRecipe`] whose
+//! [`LearnedPerm`] carries the block size per strategy.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::eval_perplexity;
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{LearnedPerm, PruneRecipe};
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
@@ -22,14 +28,17 @@ fn main() {
         &format!("Table 6: LCP block size, PermLLM_Wanda, tiny-m ({prov})"),
         &["Block", "MeanLayerErr", "Wikitext2 ppl", "Prune time (s)"],
     );
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
     for block in [32usize, 64, 128] {
-        let cfg = PipelineCfg {
-            lcp: LcpCfg { block, steps: scaled(50), lr: 0.05, ..Default::default() },
-            ..Default::default()
-        };
-        let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
-        let err: f32 =
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+        let recipe = PruneRecipe::builder(NmConfig::PAT_2_4)
+            .metric_kind(Metric::Wanda)
+            .perm(LearnedPerm { block: Some(block), ..Default::default() })
+            .build();
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
+        let err = pruned.mean_layer_error();
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
         table.row(&[
             block.to_string(),

@@ -3,13 +3,19 @@
 //!
 //! Paper shape: RIA+CP < partial PermLLM < full PermLLM in quality, with
 //! partial's prune time close to the heuristic's.
+//!
+//! Each row is a [`PruneRecipe`]; the partial run carries its layer
+//! threshold in the [`LearnedPerm`] strategy itself (`from_layer`)
+//! instead of the pipeline config.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::eval_perplexity;
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{HeuristicCpPerm, LearnedPerm, PruneRecipe};
+use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
 fn main() {
@@ -19,26 +25,29 @@ fn main() {
     let calib = Corpus::build(CorpusKind::C4Like, 2024);
     let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
 
-    let runs: [(&str, PruneMethod, usize); 3] = [
-        ("RIA+CP", PruneMethod::OneShotCp(Metric::Ria), 0),
+    let nm = NmConfig::PAT_2_4;
+    let ria = || PruneRecipe::builder(nm).metric_kind(Metric::Ria);
+    let runs: [(&str, PruneRecipe); 3] = [
+        ("RIA+CP", ria().perm(HeuristicCpPerm).build()),
         // last half of the decoder layers get LCP (paper: last 6 of 32)
-        ("PermLLM_RIA (partial)", PruneMethod::PermLlm(Metric::Ria), n_layers / 2),
-        ("PermLLM_RIA (full)", PruneMethod::PermLlm(Metric::Ria), 0),
+        (
+            "PermLLM_RIA (partial)",
+            ria().perm(LearnedPerm { from_layer: Some(n_layers / 2), ..Default::default() }).build(),
+        ),
+        ("PermLLM_RIA (full)", ria().perm(LearnedPerm::default()).build()),
     ];
 
     let mut table = Table::new(
         &format!("Table 7: partial PermLLM, tiny-m ({prov})"),
         &["Method", "MeanLayerErr", "Wikitext2 ppl", "Prune time (s)"],
     );
-    for (name, method, from_layer) in runs {
-        let cfg = PipelineCfg {
-            lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
-            lcp_from_layer: from_layer,
-            ..Default::default()
-        };
-        let pruned = prune_model(&ps, &calib, method, &cfg);
-        let err: f32 =
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32;
+    let cfg = PipelineCfg {
+        lcp: LcpCfg { steps: scaled(50), lr: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+    for (name, recipe) in runs {
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
+        let err = pruned.mean_layer_error();
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
         table.row(&[name.to_string(), fmt(err as f64, 5), fmt(ppl, 3), fmt(pruned.elapsed_s, 1)]);
     }

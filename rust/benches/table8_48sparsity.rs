@@ -2,13 +2,17 @@
 //!
 //! Paper shape: same ordering as Table 1/2 under the looser 4:8 pattern,
 //! with smaller absolute degradation than 2:4 (more mask freedom).
+//!
+//! Rows are the same [`PruneRecipe`] list as Table 2
+//! (`recipe::rows::headline`), declared at 4:8 — each recipe carries its
+//! own N:M pattern.
 
 use permllm::bench::{scaled, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::eval_perplexity;
 use permllm::lcp::LcpCfg;
-use permllm::pruning::Metric;
+use permllm::recipe::rows;
 use permllm::sparsity::NmConfig;
 use permllm::util::benchkit::{fmt, Table};
 
@@ -17,33 +21,28 @@ fn main() {
     let (ps, prov) = trained_or_synth("tiny-m");
     let calib = Corpus::build(CorpusKind::C4Like, 2024);
     let evalc = Corpus::build(CorpusKind::WikitextLike, 2024);
-    let methods = [
-        (PruneMethod::Dense, "-"),
-        (PruneMethod::SparseGpt, "yes"),
-        (PruneMethod::OneShot(Metric::Wanda), "no"),
-        (PruneMethod::OneShotCp(Metric::Wanda), "no"),
-        (PruneMethod::PermLlm(Metric::Wanda), "no"),
-    ];
+    let nm = NmConfig::PAT_4_8;
+    let recipes = rows::headline(nm);
 
     let mut table = Table::new(
         &format!("Table 8: 4:8 sparsity, tiny-m ({prov})"),
         &["Method", "WeightUpd", "MeanLayerErr", "Wikitext2 ppl"],
     );
-    let nm = NmConfig::PAT_4_8;
-    for (method, upd) in methods {
+    for recipe in &recipes {
         let cfg = PipelineCfg {
             nm,
             lcp: LcpCfg { nm, steps: scaled(50), lr: 0.05, ..Default::default() },
             ..Default::default()
         };
-        let pruned = prune_model(&ps, &calib, method, &cfg);
-        let err: f32 = if pruned.layer_errors.is_empty() {
-            0.0
-        } else {
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
-        };
+        let pruned = prune_with_recipe(&ps, &calib, recipe, &cfg);
+        let err = pruned.mean_layer_error();
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
-        table.row(&[method.name(), upd.to_string(), fmt(err as f64, 5), fmt(ppl, 3)]);
+        table.row(&[
+            recipe.name(),
+            rows::weight_update_cell(recipe).to_string(),
+            fmt(err as f64, 5),
+            fmt(ppl, 3),
+        ]);
     }
     table.finish("table8_48sparsity");
 }

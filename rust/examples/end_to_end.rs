@@ -15,12 +15,14 @@
 //! ```
 
 use permllm::bench::trained_or_synth;
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::{eval_perplexity, eval_perplexity_exec};
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{HeuristicCpPerm, LearnedPerm, PruneRecipe};
 use permllm::runtime::NativeEngine;
+use permllm::sparsity::NmConfig;
 
 fn main() -> anyhow::Result<()> {
     permllm::util::logging::init();
@@ -38,23 +40,24 @@ fn main() -> anyhow::Result<()> {
         lcp: LcpCfg { steps: 30, lr: 0.05, ..Default::default() },
         ..Default::default()
     };
-    let methods = [
-        PruneMethod::Dense,
-        PruneMethod::OneShot(Metric::Wanda),
-        PruneMethod::OneShotCp(Metric::Wanda),
-        PruneMethod::PermLlm(Metric::Wanda),
+    let nm = NmConfig::PAT_2_4;
+    let recipes = [
+        PruneRecipe::dense(nm),
+        PruneRecipe::oneshot(Metric::Wanda, nm),
+        PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(HeuristicCpPerm).build(),
+        PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(LearnedPerm::default()).build(),
     ];
 
     // ---- 3. evaluate through host AND the exec backend ---------------------
     let mut engine = NativeEngine::with_model(ps.cfg().clone());
-    println!("\n{:<16} {:>14} {:>16} {:>10}", "method", "host ppl", "backend ppl", "time(s)");
-    for method in methods {
-        let pruned = prune_model(&ps, &calib, method, &cfg);
+    println!("\n{:<16} {:>14} {:>16} {:>10}", "recipe", "host ppl", "backend ppl", "time(s)");
+    for recipe in recipes {
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
         let host_ppl = eval_perplexity(&pruned.params, &evalc, 555, 8, 64);
         let exec_ppl = eval_perplexity_exec(&mut engine, &pruned.params, &evalc, 555, 8, 64)?;
         println!(
             "{:<16} {:>14.3} {:>16.3} {:>10.1}",
-            method.name(),
+            recipe.name(),
             host_ppl,
             exec_ppl,
             pruned.elapsed_s

@@ -6,11 +6,12 @@
 //! ```
 
 use permllm::bench::trained_or_synth;
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::eval_perplexity;
 use permllm::lcp::LcpCfg;
-use permllm::pruning::Metric;
+use permllm::recipe::rows;
+use permllm::sparsity::NmConfig;
 
 fn main() {
     permllm::util::logging::init();
@@ -27,25 +28,14 @@ fn main() {
         ..Default::default()
     };
 
-    let methods = [
-        PruneMethod::Dense,
-        PruneMethod::SparseGpt,
-        PruneMethod::OneShot(Metric::Wanda),
-        PruneMethod::OneShotCp(Metric::Wanda),
-        PruneMethod::PermLlm(Metric::Wanda),
-        PruneMethod::OneShot(Metric::Ria),
-        PruneMethod::OneShotCp(Metric::Ria),
-        PruneMethod::PermLlm(Metric::Ria),
-    ];
-    println!("{:<16} {:>12} {:>14} {:>10}", "method", "ppl", "mean-layer-err", "time(s)");
-    for method in methods {
-        let pruned = prune_model(&ps, &calib, method, &cfg);
+    // The Table-1 recipe rows, including the ROSE-style learned-perm +
+    // SparseGPT-update combination the legacy enum could not express.
+    let recipes = rows::table1(NmConfig::PAT_2_4);
+    println!("{:<26} {:>12} {:>14} {:>10}", "recipe", "ppl", "mean-layer-err", "time(s)");
+    for recipe in recipes {
+        let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
         let ppl = eval_perplexity(&pruned.params, &evalc, 555, 6, 64);
-        let err: f32 = if pruned.layer_errors.is_empty() {
-            0.0
-        } else {
-            pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
-        };
-        println!("{:<16} {:>12.3} {:>14.5} {:>10.1}", method.name(), ppl, err, pruned.elapsed_s);
+        let err = pruned.mean_layer_error();
+        println!("{:<26} {:>12.3} {:>14.5} {:>10.1}", recipe.name(), ppl, err, pruned.elapsed_s);
     }
 }

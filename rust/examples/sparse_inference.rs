@@ -37,11 +37,13 @@
 use std::time::Instant;
 
 use permllm::bench::{fast_mode, trained_or_synth};
-use permllm::coordinator::{prune_model, PipelineCfg, PruneMethod};
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
+use permllm::recipe::{LearnedPerm, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
+use permllm::sparsity::NmConfig;
 use permllm::serve::{
     greedy_token, BatcherCfg, DenseModel, KvCache, Request, ServeCfg, ServePath, ServeReport,
     Server, SparseModel,
@@ -151,11 +153,17 @@ fn main() -> anyhow::Result<()> {
         lcp: LcpCfg { steps: if fast_mode() { 8 } else { 20 }, lr: 0.05, ..Default::default() },
         ..Default::default()
     };
-    let pruned = prune_model(&ps, &calib, PruneMethod::PermLlm(Metric::Wanda), &cfg);
+    let recipe = PruneRecipe::builder(NmConfig::PAT_2_4)
+        .metric_kind(Metric::Wanda)
+        .perm(LearnedPerm::default())
+        .build();
+    let pruned = prune_with_recipe(&ps, &calib, &recipe, &cfg);
     let sm = SparseModel::from_pruned(&pruned)?;
     println!(
-        "{model_name} ({prov}): {} linears 2:4-compressed, {} decoder stages, storage {:.3}x dense",
+        "{model_name} ({prov}): {} linears 2:4-compressed by recipe {}, {} decoder stages, \
+         storage {:.3}x dense",
         ps.cfg().prunable_linears().len(),
+        sm.recipe_name(),
         sm.n_stages(),
         sm.storage_bytes() as f64 / sm.dense_bytes() as f64
     );
@@ -336,6 +344,10 @@ fn main() -> anyhow::Result<()> {
     let summary = json::obj(vec![
         ("model", json::s(model_name)),
         ("provenance", json::s(prov)),
+        // Which metric × permutation × update produced the weights —
+        // the bench artifact is self-describing about its recipe.
+        ("method", json::s(server.model().recipe_name())),
+        ("recipe", server.model().recipe_json().clone()),
         ("fast_mode", Json::Bool(fast_mode())),
         ("requests", json::num(n_requests as f64)),
         ("rows_per_request", json::num(rows as f64)),

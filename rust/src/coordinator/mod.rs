@@ -1,11 +1,13 @@
 //! The pruning pipeline coordinator (the "PermLLM framework" of §4-§5).
 //!
-//! Orchestrates, for a model + calibration corpus + method:
+//! Orchestrates, for a model + calibration corpus + recipe:
 //!
 //! 1. capture per-linear calibration activations (host forward);
-//! 2. prune every linear layer (fanned out over the worker pool) with the
-//!    chosen method — one-shot metric, SparseGPT, heuristic CP, or
-//!    learnable channel permutation;
+//! 2. prune every linear layer (fanned out over the worker pool) with
+//!    the composed [`crate::recipe::PruneRecipe`] — any score metric ×
+//!    permutation strategy × weight-update policy, covering one-shot
+//!    metrics, SparseGPT, heuristic CP, and the learnable channel
+//!    permutation (plus combinations of them);
 //! 3. rebuild the model with pruned weights.
 //!
 //! On permutation handling: like the paper's runtime, each linear keeps
@@ -26,8 +28,17 @@ mod propagation;
 #[cfg(feature = "pjrt")]
 mod pretrain;
 
-pub use pipeline::{prune_model, LcpExecutor, PipelineCfg, PruneMethod, PrunedModel};
+#[allow(deprecated)]
+pub use pipeline::{prune_model, PruneMethod};
+pub use pipeline::{
+    calibrate, prune_with_recipe, prune_with_recipe_calibrated, PipelineCfg, PrunedModel,
+};
 pub use propagation::fold_down_proj;
+
+// The executor selector moved into the recipe layer with the rest of
+// the composable-method machinery; re-exported here so `coordinator::
+// LcpExecutor` keeps resolving for existing callers.
+pub use crate::recipe::LcpExecutor;
 
 #[cfg(feature = "pjrt")]
 pub use pretrain::pretrain;

@@ -28,6 +28,21 @@
 //!   offline; executing real artifacts requires swapping in the genuine
 //!   `xla` bindings.  Python never runs on the request path either way.
 //!
+//! ## Pruning recipes
+//!
+//! Pruning methods are composed, not enumerated: a
+//! [`recipe::PruneRecipe`] pairs a [`recipe::ScoreMetric`]
+//! (magnitude/Wanda/RIA) with a [`recipe::PermStrategy`] (identity,
+//! heuristic CP, the learned Sinkhorn permutation, RPTQ-style range
+//! sorting) and a [`recipe::WeightUpdate`] (mask-only, or SparseGPT's
+//! OBS solver) at an N:M pattern.  Every paper-table row is a recipe
+//! ([`recipe::rows`]), recipes serialize to JSON for bench artifacts
+//! and `permllm prune --sweep`, and the three traits are open — new
+//! combinations (learned permutation *with* the OBS update, say) are
+//! one builder chain, not an enum surgery.  The legacy
+//! `coordinator::PruneMethod` enum is deprecated and lowers into
+//! recipes.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -79,6 +94,7 @@ pub mod lcp;
 pub mod model;
 pub mod pruning;
 pub mod quant;
+pub mod recipe;
 pub mod runtime;
 pub mod serve;
 pub mod sparsity;

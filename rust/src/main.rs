@@ -1,10 +1,14 @@
 //! `permllm` — CLI for the PermLLM pruning framework.
 //!
 //! Subcommands:
-//!   prune     prune a model with a chosen method and report perplexity
+//!   prune     prune a model with a composed recipe (--metric/--perm/
+//!             --update, or the legacy --method shim; --sweep runs a
+//!             JSON recipe list over the worker pool) and report
+//!             perplexity
 //!   serve     prune, compress, and serve the sparse path (batched or
 //!             streaming, MLP-only or full decoder with --sparse-attn,
-//!             KV-cached token generation with --decode,
+//!             KV-cached token generation with --decode and greedy or
+//!             seeded top-k sampling via --sampler,
 //!             optionally pipelined across decoder layers)
 //!   eval      evaluate a saved model (perplexity + zero-shot suite)
 //!   train     pretrain the tiny LM via the AOT train_step artifact (pjrt)
@@ -16,17 +20,23 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use permllm::coordinator::{prune_model, LcpExecutor, PipelineCfg, PruneMethod};
+use permllm::coordinator::{
+    calibrate, prune_with_recipe, prune_with_recipe_calibrated, LcpExecutor, PipelineCfg,
+};
 use permllm::data::{Corpus, CorpusKind};
 use permllm::eval::{eval_perplexity, eval_perplexity_exec, zeroshot_accuracy, zeroshot_suite};
 use permllm::lcp::LcpCfg;
 use permllm::model::{synth_trained_params, ModelConfig, ParamStore};
-use permllm::pruning::Metric;
+use permllm::recipe::{self, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
-use permllm::serve::{BatcherCfg, GenRequest, Request, ServeCfg, ServePath, Server, SparseModel};
+use permllm::serve::{
+    BatcherCfg, GenRequest, Request, Sampler, ServeCfg, ServePath, Server, SparseModel,
+};
 use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
-use permllm::util::cli::Cli;
+use permllm::util::cli::{Cli, Parsed};
+use permllm::util::json::{self, Json};
+use permllm::util::pool::parallel_map;
 use permllm::util::rng::Pcg32;
 
 fn main() {
@@ -44,7 +54,9 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: permllm <prune|serve|eval|train|info|backends> [options]\n\
+                 \n  permllm prune --model tiny-s --metric ria --perm learned --update none\
                  \n  permllm prune --model tiny-s --method permllm-wanda --sparsity 2:4\
+                 \n  permllm prune --model tiny-s --sweep recipes.json\
                  \n  permllm serve --model tiny-s --requests 32 --tokens 64\
                  \n  permllm serve --model tiny-s --sparse-attn --stream\
                  \n  permllm serve --model tiny-s --sparse-attn --decode --max-new 16\
@@ -69,8 +81,17 @@ fn run(r: Result<()>) -> i32 {
     }
 }
 
-fn parse_method(s: &str) -> Result<PruneMethod> {
-    Ok(match s {
+/// Valid values for the legacy `--method` shim (error messages + help).
+const METHOD_NAMES: &str =
+    "dense, sparsegpt, magnitude, wanda, ria, wanda-cp, ria-cp, permllm-wanda, permllm-ria";
+
+/// Legacy `--method` compatibility shim: lower the old closed-enum
+/// method names straight into recipes.
+#[allow(deprecated)]
+fn parse_method(s: &str, nm: NmConfig) -> Result<PruneRecipe> {
+    use permllm::coordinator::PruneMethod;
+    use permllm::pruning::Metric;
+    let method = match s {
         "dense" => PruneMethod::Dense,
         "sparsegpt" => PruneMethod::SparseGpt,
         "magnitude" => PruneMethod::OneShot(Metric::Magnitude),
@@ -80,8 +101,47 @@ fn parse_method(s: &str) -> Result<PruneMethod> {
         "ria-cp" => PruneMethod::OneShotCp(Metric::Ria),
         "permllm-wanda" => PruneMethod::PermLlm(Metric::Wanda),
         "permllm-ria" => PruneMethod::PermLlm(Metric::Ria),
-        _ => return Err(anyhow!("unknown method '{s}'")),
+        _ => {
+            return Err(anyhow!(
+                "unknown --method '{s}' (valid: {METHOD_NAMES}; or compose a recipe with \
+                 --metric/--perm/--update — see --help)"
+            ))
+        }
+    };
+    Ok(method.to_recipe(nm))
+}
+
+/// Build the recipe from the CLI flags: the legacy `--method` shim when
+/// set, otherwise the composable `--metric` / `--perm` / `--update`
+/// axes.  Every parse failure names the valid values.
+fn recipe_from_args(p: &Parsed, nm: NmConfig) -> Result<PruneRecipe> {
+    let method = p.get("method");
+    if !method.is_empty() {
+        return parse_method(method, nm);
+    }
+    if p.get("metric") == "dense" {
+        return Ok(PruneRecipe::dense(nm));
+    }
+    let metric = recipe::metric_from_kind(p.get("metric"))
+        .map_err(|e| anyhow!("--metric: {e} (or 'dense' for the unpruned baseline)"))?;
+    let perm = recipe::perm_from_kind(p.get("perm")).map_err(|e| anyhow!("--perm: {e}"))?;
+    let update =
+        recipe::update_from_kind(p.get("update")).map_err(|e| anyhow!("--update: {e}"))?;
+    Ok(PruneRecipe::from_parts(metric, perm, update, nm))
+}
+
+fn parse_nm(p: &Parsed) -> Result<NmConfig> {
+    let s = p.get("sparsity");
+    NmConfig::parse(s).ok_or_else(|| {
+        anyhow!("bad --sparsity '{s}' (expected zeros:group, e.g. 2:4 or 4:8)")
     })
+}
+
+fn parse_corpus(p: &Parsed) -> Result<Corpus> {
+    let s = p.get("corpus");
+    let kind = CorpusKind::parse(s)
+        .ok_or_else(|| anyhow!("unknown --corpus '{s}' (valid: c4, wikitext2, pile)"))?;
+    Ok(Corpus::build(kind, 2024))
 }
 
 fn load_or_synth(model: &str, params: &str) -> Result<ParamStore> {
@@ -95,10 +155,15 @@ fn load_or_synth(model: &str, params: &str) -> Result<ParamStore> {
 }
 
 fn cmd_prune(args: &[String]) -> Result<()> {
-    let p = Cli::new("permllm prune", "prune a model and report perplexity")
+    let p = Cli::new("permllm prune", "prune a model with a composed recipe and report perplexity")
         .opt("model", "tiny-s", "model config (tiny-s|tiny-m|tiny-l)")
         .opt("params", "", "path to a trained .bin (default: synthetic weights)")
-        .opt("method", "permllm-wanda", "dense|sparsegpt|magnitude|wanda|ria|wanda-cp|ria-cp|permllm-wanda|permllm-ria")
+        .opt("metric", "wanda", "score metric: magnitude|wanda|ria (or 'dense' for no pruning)")
+        .opt("perm", "learned", "permutation strategy: identity|cp|greedy-cp|learned|range-sort")
+        .opt("update", "none", "weight update: none|sparsegpt")
+        .opt("method", "", "legacy method shim (dense|sparsegpt|...|permllm-ria); overrides the recipe flags")
+        .opt("sweep", "", "run every recipe in this JSON file (an array of recipe objects)")
+        .opt("sweep-out", "", "write per-recipe sweep results (JSON) to this path")
         .opt("sparsity", "2:4", "N:M pattern (zeros:group)")
         .opt("corpus", "c4", "calibration corpus: c4|wikitext2|pile")
         .opt("block", "64", "LCP block size")
@@ -111,14 +176,11 @@ fn cmd_prune(args: &[String]) -> Result<()> {
         .map_err(|e| anyhow!(e))?;
 
     let ps = load_or_synth(p.get("model"), p.get("params"))?;
-    let method = parse_method(p.get("method"))?;
-    let nm = NmConfig::parse(p.get("sparsity")).ok_or_else(|| anyhow!("bad sparsity"))?;
-    let executor = LcpExecutor::parse(p.get("backend"))
-        .ok_or_else(|| anyhow!("unknown backend '{}'", p.get("backend")))?;
-    let corpus = Corpus::build(
-        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
-        2024,
-    );
+    let nm = parse_nm(&p)?;
+    let executor = LcpExecutor::parse(p.get("backend")).ok_or_else(|| {
+        anyhow!("unknown --backend '{}' (valid: {})", p.get("backend"), LcpExecutor::VALID)
+    })?;
+    let corpus = parse_corpus(&p)?;
     let cfg = PipelineCfg {
         nm,
         lcp: LcpCfg {
@@ -133,28 +195,96 @@ fn cmd_prune(args: &[String]) -> Result<()> {
         ..Default::default()
     };
 
+    if !p.get("sweep").is_empty() {
+        return run_recipe_sweep(&p, &ps, &corpus, &cfg);
+    }
+
+    let recipe = recipe_from_args(&p, nm)?;
     let dense_ppl = eval_perplexity(&ps, &corpus, 99, 8, 64);
     log::info!("dense perplexity: {dense_ppl:.3}");
-    let pruned = prune_model(&ps, &corpus, method, &cfg);
+    let pruned = prune_with_recipe(&ps, &corpus, &recipe, &cfg);
     let ppl = eval_perplexity(&pruned.params, &corpus, 99, 8, 64);
-    let mean_err: f32 = if pruned.layer_errors.is_empty() {
-        0.0
-    } else {
-        pruned.layer_errors.values().sum::<f32>() / pruned.layer_errors.len() as f32
-    };
+    let mean_err = pruned.mean_layer_error();
     println!(
-        "method={} sparsity={} ppl={:.3} (dense {:.3}) mean-layer-cosine-err={:.5} prune-time={:.1}s",
-        method.name(),
+        "recipe={} sparsity={} ppl={:.3} (dense {:.3}) mean-layer-cosine-err={:.5} prune-time={:.1}s",
+        recipe.name(),
         nm.name(),
         ppl,
         dense_ppl,
         mean_err,
         pruned.elapsed_s
     );
+    let recipe_json = recipe.to_json().to_string();
+    println!("recipe-json: {recipe_json}");
     let out = p.get("out");
     if !out.is_empty() {
         pruned.params.save(Path::new(out))?;
         log::info!("saved pruned model to {out}");
+    }
+    Ok(())
+}
+
+/// `permllm prune --sweep recipes.json`: run every recipe in the file
+/// over the same model + calibration corpus, fanned out across the
+/// worker pool (the per-layer fan-out inside each run shares the
+/// remaining threads), and report one result line per recipe.
+fn run_recipe_sweep(p: &Parsed, ps: &ParamStore, corpus: &Corpus, cfg: &PipelineCfg) -> Result<()> {
+    let path = p.get("sweep");
+    let txt = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read --sweep file '{path}': {e}"))?;
+    let parsed = Json::parse(&txt).map_err(|e| anyhow!("--sweep file '{path}': {e}"))?;
+    let items = parsed
+        .as_arr()
+        .ok_or_else(|| anyhow!("--sweep file '{path}' must be a JSON array of recipe objects"))?;
+    anyhow::ensure!(!items.is_empty(), "--sweep file '{path}' lists no recipes");
+    let recipes = items
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            PruneRecipe::from_json(v).map_err(|e| anyhow!("--sweep recipe #{i}: {e}"))
+        })
+        .collect::<Result<Vec<PruneRecipe>>>()?;
+
+    let dense_ppl = eval_perplexity(ps, corpus, 99, 8, 64);
+    // Capture the calibration activations once — they depend only on
+    // the model + corpus + calib settings, not the recipe.
+    let cap = calibrate(ps, corpus, cfg);
+    // Fan recipes out over the pool; each run's per-layer fan-out gets
+    // the leftover share so the sweep never oversubscribes the cores.
+    let outer = cfg.threads.clamp(1, recipes.len());
+    let inner = (cfg.threads / outer).max(1);
+    let results = parallel_map(recipes.len(), outer, |i| {
+        let mut run_cfg = cfg.clone();
+        run_cfg.threads = inner;
+        run_cfg.nm = recipes[i].nm;
+        let pruned = prune_with_recipe_calibrated(ps, &cap, &recipes[i], &run_cfg);
+        let ppl = eval_perplexity(&pruned.params, corpus, 99, 8, 64);
+        (ppl, pruned.mean_layer_error(), pruned.elapsed_s)
+    });
+
+    println!("sweep: {} recipes (dense ppl {dense_ppl:.3})", recipes.len());
+    let mut out_rows = Vec::new();
+    for (recipe, (ppl, mean_err, secs)) in recipes.iter().zip(&results) {
+        println!(
+            "  {:<28} sparsity={} ppl={:.3} mean-layer-cosine-err={:.5} prune-time={:.1}s",
+            recipe.name(),
+            recipe.nm.name(),
+            ppl,
+            mean_err,
+            secs
+        );
+        out_rows.push(json::obj(vec![
+            ("recipe", recipe.to_json()),
+            ("ppl", json::num(*ppl as f64)),
+            ("dense_ppl", json::num(dense_ppl as f64)),
+            ("mean_layer_cosine_err", json::num(*mean_err as f64)),
+            ("prune_time_s", json::num(*secs)),
+        ]));
+    }
+    let out = p.get("sweep-out");
+    if !out.is_empty() {
+        std::fs::write(out, json::arr(out_rows).to_string() + "\n")?;
+        println!("wrote sweep results to {out}");
     }
     Ok(())
 }
@@ -166,10 +296,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     )
     .opt("model", "tiny-s", "model config (tiny-s|tiny-m|tiny-l)")
     .opt("params", "", "path to a trained .bin (default: synthetic weights)")
-    .opt("method", "permllm-wanda", "pruning method (see `permllm prune --help`)")
+    .opt("metric", "wanda", "score metric: magnitude|wanda|ria")
+    .opt("perm", "learned", "permutation strategy: identity|cp|greedy-cp|learned|range-sort")
+    .opt("update", "none", "weight update: none|sparsegpt")
+    .opt("method", "", "legacy method shim (see `permllm prune --help`); overrides the recipe flags")
     .opt("sparsity", "2:4", "N:M pattern (zeros:group)")
     .opt("corpus", "c4", "calibration corpus: c4|wikitext2|pile")
-    .opt("steps", "20", "LCP optimization steps (PermLLM methods)")
+    .opt("steps", "20", "LCP optimization steps (learned-permutation recipes)")
     .opt("requests", "32", "number of requests to serve")
     .opt("tokens", "64", "tokens (activation rows) per request")
     .opt("batch-tokens", "256", "micro-batch token budget")
@@ -181,6 +314,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .flag("stream", "long-lived streaming loop: requests enqueue while batches are in flight")
     .flag("decode", "KV-cached token generation: prompts in, greedy tokens out (continuous batching)")
     .opt("max-new", "16", "decode: max tokens to generate per request (staggered across requests)")
+    .opt("sampler", "greedy", "decode token selection: greedy|top-k")
+    .opt("top-k", "8", "decode: top-k shortlist size (with --sampler top-k)")
+    .opt("temperature", "0.8", "decode: top-k softmax temperature (with --sampler top-k)")
+    .opt("sample-seed", "7", "decode: top-k sampling seed (deterministic per seed)")
     .opt("stream-clients", "4", "streaming/decode: concurrent submitting threads")
     .opt("linger-ms", "2", "streaming: micro-batch linger (ms) before dispatching a partial batch")
     .opt("queue-depth", "0", "streaming/decode: max in-flight requests before submit fails fast (0 = unbounded)")
@@ -189,25 +326,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .map_err(|e| anyhow!(e))?;
 
     let ps = load_or_synth(p.get("model"), p.get("params"))?;
-    let method = parse_method(p.get("method"))?;
-    anyhow::ensure!(method != PruneMethod::Dense, "serve needs a pruned model, not dense");
-    let nm = NmConfig::parse(p.get("sparsity")).ok_or_else(|| anyhow!("bad sparsity"))?;
-    let corpus = Corpus::build(
-        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
-        2024,
-    );
+    let nm = parse_nm(&p)?;
+    let recipe = recipe_from_args(&p, nm)?;
+    anyhow::ensure!(!recipe.is_dense(), "serve needs a pruned model, not the Dense recipe");
+    let corpus = parse_corpus(&p)?;
     let cfg = PipelineCfg {
         nm,
         lcp: LcpCfg { steps: p.get_usize("steps"), nm, ..Default::default() },
         ..Default::default()
     };
-    log::info!("pruning {} with {} for serving", p.get("model"), method.name());
-    let pruned = prune_model(&ps, &corpus, method, &cfg);
+    log::info!("pruning {} with recipe {} for serving", p.get("model"), recipe.name());
+    let pruned = prune_with_recipe(&ps, &corpus, &recipe, &cfg);
     let sm = SparseModel::from_pruned(&pruned)?;
     println!(
-        "compressed {} linears ({} stages): {} -> {} bytes ({:.3}x dense)",
+        "compressed {} linears ({} stages) from recipe {}: {} -> {} bytes ({:.3}x dense)",
         ps.cfg().prunable_linears().len(),
         sm.n_stages(),
+        sm.recipe_name(),
         sm.dense_bytes(),
         sm.storage_bytes(),
         sm.storage_bytes() as f64 / sm.dense_bytes() as f64
@@ -305,7 +440,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// few concurrent client threads, verify per-request parity, and report
 /// the loop's throughput.
 fn run_serve_streaming(
-    p: &permllm::util::cli::Parsed,
+    p: &Parsed,
     server: &Server,
     threads: usize,
     n_stages: usize,
@@ -399,14 +534,38 @@ fn run_serve_streaming(
     Ok(())
 }
 
+/// Decode token-selection policy from the `--sampler` flags.  Numeric
+/// values are parsed with typed errors (not the panicking `Parsed`
+/// getters) so a bad `--temperature` exits with usage, like every
+/// other recipe flag.
+fn sampler_from_args(p: &Parsed) -> Result<Sampler> {
+    fn num<T: std::str::FromStr>(p: &Parsed, key: &str, what: &str) -> Result<T> {
+        p.get(key)
+            .parse()
+            .map_err(|_| anyhow!("--{key} must be {what}, got '{}'", p.get(key)))
+    }
+    let sampler = match p.get("sampler") {
+        "greedy" => Sampler::Greedy,
+        "top-k" | "topk" => Sampler::TopK {
+            k: num(p, "top-k", "an integer >= 1")?,
+            temperature: num(p, "temperature", "a number > 0")?,
+            seed: num(p, "sample-seed", "an integer")?,
+        },
+        other => return Err(anyhow!("unknown --sampler '{other}' (valid: greedy, top-k)")),
+    };
+    sampler.validate().map_err(|e| anyhow!("--sampler: {e}"))?;
+    Ok(sampler)
+}
+
 /// `permllm serve --decode`: KV-cached token generation through the
 /// continuous-batching decode loop — concurrent client threads submit
 /// random prompts with staggered generation lengths, tokens stream back
 /// through their tickets, and a sample is verified against the
-/// sequential KV-cached reference generator (bit-identical kernels, so
-/// batching must not change a single token).
+/// sequential KV-cached reference generator (bit-identical kernels and
+/// per-request sampling RNG, so batching must not change a single
+/// token, greedy or sampled).
 fn run_serve_decode(
-    p: &permllm::util::cli::Parsed,
+    p: &Parsed,
     server: &Server,
     threads: usize,
     n_stages: usize,
@@ -417,6 +576,7 @@ fn run_serve_decode(
     let prompt_len = p.get_usize("tokens").max(1);
     let max_new = p.get_usize("max-new").max(1);
     let seed = p.get_u64("seed");
+    let sampler = sampler_from_args(p)?;
     let path = server.cfg().path;
     let vocab = server.model().cfg().vocab as u32;
     let engines: Vec<Box<dyn ExecBackend + Send>> = if p.get_bool("sequential") {
@@ -440,6 +600,7 @@ fn run_serve_decode(
                             prompt: prompt.clone(),
                             max_new_tokens: 1 + i % max_new,
                             eos: None,
+                            sampler,
                         };
                         let max_new_i = req.max_new_tokens;
                         match client.submit(req) {
@@ -488,10 +649,12 @@ fn run_serve_decode(
         report.tokens_per_s(),
         report.generated_per_s()
     );
-    // Verify a sample against the sequential KV-cached reference.
+    // Verify a sample against the sequential KV-cached reference (same
+    // sampler, so greedy and seeded top-k must both match exactly).
     let mut engine = native(threads);
     for (toks, prompt, max_new_i) in outputs.iter().take(3) {
-        let want = server.model().generate(&mut engine, prompt, *max_new_i, None, path)?;
+        let want =
+            server.model().generate(&mut engine, prompt, *max_new_i, None, path, sampler)?;
         anyhow::ensure!(
             toks == &want,
             "batched decode diverged from the sequential reference for prompt {prompt:?}"
@@ -512,17 +675,14 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         .parse_from(args)
         .map_err(|e| anyhow!(e))?;
     let ps = load_or_synth(p.get("model"), p.get("params"))?;
-    let corpus = Corpus::build(
-        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
-        2024,
-    );
+    let corpus = parse_corpus(&p)?;
     let ppl = match p.get("backend") {
         "host" => eval_perplexity(&ps, &corpus, 99, 8, 64),
         "native" => {
             let mut engine = NativeEngine::with_model(ps.cfg().clone());
             eval_perplexity_exec(&mut engine, &ps, &corpus, 99, 8, 64)?
         }
-        other => return Err(anyhow!("unknown backend '{other}'")),
+        other => return Err(anyhow!("unknown --backend '{other}' (valid: host, native)")),
     };
     println!("perplexity({}): {ppl:.3}", p.get("corpus"));
     let mut mean = 0.0;
@@ -548,7 +708,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .map_err(|e| anyhow!(e))?;
     let losses = permllm::coordinator::pretrain(
         Path::new(p.get("artifacts")),
-        CorpusKind::parse(p.get("corpus")).ok_or_else(|| anyhow!("bad corpus"))?,
+        CorpusKind::parse(p.get("corpus"))
+            .ok_or_else(|| anyhow!("unknown --corpus '{}' (valid: c4, wikitext2, pile)", p.get("corpus")))?,
         p.get_usize("steps"),
         p.get_usize("log-every"),
         Path::new(p.get("out")),

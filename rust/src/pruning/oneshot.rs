@@ -57,7 +57,22 @@ pub fn prune_oneshot(metric: Metric, w: &Mat, x: &Mat, cfg: NmConfig) -> PruneRe
 /// Prune with an explicit pre-permutation (`src_of`): permute channels,
 /// recompute the mask in permuted order (Eq. 8), mask.
 pub fn prune_permuted(metric: Metric, w: &Mat, x: &Mat, cfg: NmConfig, src_of: &[usize]) -> PruneResult {
-    let s = importance(metric, w, x);
+    prune_scored(&importance(metric, w, x), w, cfg, src_of)
+}
+
+/// The [`prune_permuted`] body with the importance matrix supplied by
+/// the caller — bit-identical to [`prune_permuted`] when
+/// `s == importance(metric, w, x)`, and the primitive the trait-based
+/// recipe path ([`crate::recipe`]) builds on (the driver computes `s`
+/// once and shares it between the permutation search and the masking).
+pub fn prune_scored(s: &Mat, w: &Mat, cfg: NmConfig, src_of: &[usize]) -> PruneResult {
+    if src_of.iter().enumerate().all(|(j, &i)| j == i) {
+        // Identity: skip the two full-matrix permute copies (a gather
+        // by the identity yields the same values bit for bit).
+        let mask = NmMask::from_scores(s, cfg);
+        let weight = mask.apply(w);
+        return PruneResult { mask, weight, src_of: src_of.to_vec() };
+    }
     let wp = w.permute_cols(src_of);
     let sp = s.permute_cols(src_of);
     let mask = NmMask::from_scores(&sp, cfg);

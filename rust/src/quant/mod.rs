@@ -12,6 +12,11 @@
 //! * [`range_sort_perm`] — RPTQ-style: sort channels by dynamic range;
 //! * reuse of the N:M machinery — any `src_of` from `cp::ria_cp` or the
 //!   LCP trainer can be passed to [`quantize_permuted`].
+//!
+//! [`range_sort_perm`] also composes with any pruning metric and weight
+//! update through the recipe API ([`crate::recipe::RangeSortPerm`]
+//! implements `PermStrategy`), so quantization-aware reordering can
+//! drive the N:M pipeline end-to-end.
 
 use crate::tensor::Mat;
 

@@ -1,0 +1,1296 @@
+//! Composable pruning recipes: metric × permutation × weight-update.
+//!
+//! The paper's headline claim is that learnable channel permutation
+//! "seamlessly integrates with existing one-shot pruning methods" — the
+//! three axes of a pruning method are orthogonal:
+//!
+//! * **what to keep** — an importance metric ([`ScoreMetric`]:
+//!   magnitude / Wanda / RIA, wrapping [`crate::pruning::Metric`]);
+//! * **how to regroup channels** — a permutation search
+//!   ([`PermStrategy`]: identity, RIA's heuristic CP, Pool&Yu greedy
+//!   CP, the Sinkhorn LCP trainer, or RPTQ-style range sorting from
+//!   [`crate::quant`]);
+//! * **what to do with the survivors** — a weight-update policy
+//!   ([`WeightUpdate`]: plain masking, or SparseGPT's OBS update).
+//!
+//! A [`PruneRecipe`] composes one implementation of each with an N:M
+//! pattern.  Every row of the paper's Tables 1/2/8 is a recipe (see
+//! [`rows`]), the legacy `coordinator::PruneMethod` enum lowers into
+//! recipes ([`crate::coordinator::PruneMethod::to_recipe`]), and
+//! combinations the closed enum could not express — e.g. a learned
+//! permutation *with* SparseGPT's weight update, the ROSE-style row —
+//! are one builder chain away.  Recipes serialize to JSON
+//! ([`PruneRecipe::to_json`] / [`PruneRecipe::from_json`]) so bench
+//! artifacts record exactly which recipe produced a set of weights and
+//! `permllm prune --sweep recipes.json` can fan a recipe list out over
+//! the worker pool.
+//!
+//! ## Example: composing a recipe
+//!
+//! ```
+//! use permllm::pruning::Metric;
+//! use permllm::recipe::{HeuristicCpPerm, MetricScore, ObsSparseGpt, PruneRecipe};
+//! use permllm::sparsity::NmConfig;
+//!
+//! // RIA scores + heuristic channel permutation + SparseGPT's OBS
+//! // update — a combination the legacy PruneMethod enum had no variant
+//! // for:
+//! let recipe = PruneRecipe::builder(NmConfig::PAT_2_4)
+//!     .metric(MetricScore(Metric::Ria))
+//!     .perm(HeuristicCpPerm)
+//!     .update(ObsSparseGpt::default())
+//!     .build();
+//! assert_eq!(recipe.name(), "Ria+CP+SparseGPT");
+//!
+//! // Recipes round-trip through JSON for bench artifacts and sweeps.
+//! let back = PruneRecipe::from_json(&recipe.to_json()).unwrap();
+//! assert_eq!(back.name(), recipe.name());
+//! ```
+//!
+//! ## Example: the traits are open
+//!
+//! ```
+//! use permllm::recipe::{PruneRecipe, ScoreMetric};
+//! use permllm::sparsity::NmConfig;
+//! use permllm::tensor::Mat;
+//!
+//! /// A metric the crate does not ship: activation-blind magnitude
+//! /// normalized per row.
+//! struct RowRelative;
+//! impl ScoreMetric for RowRelative {
+//!     fn name(&self) -> String {
+//!         "rowrel".into()
+//!     }
+//!     fn score(&self, w: &Mat, _x: &Mat) -> Mat {
+//!         let mut s = w.map(f32::abs);
+//!         for r in 0..s.rows() {
+//!             let sum: f32 = s.row(r).iter().sum::<f32>() + 1e-12;
+//!             for v in s.row_mut(r) {
+//!                 *v /= sum;
+//!             }
+//!         }
+//!         s
+//!     }
+//! }
+//!
+//! let recipe = PruneRecipe::builder(NmConfig::PAT_2_4).metric(RowRelative).build();
+//! assert_eq!(recipe.name(), "Rowrel");
+//! ```
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::cp::{greedy_cp, ria_cp};
+use crate::lcp::{train_lcp, HostBackend, LayerData, LcpCfg, LcpResult};
+use crate::pruning::{prune_scored, sparsegpt, Metric, PruneResult, SparseGptCfg};
+use crate::quant::range_sort_perm;
+use crate::runtime::{ExecLcpBackend, NativeCfg, NativeEngine};
+use crate::sparsity::NmConfig;
+use crate::tensor::Mat;
+use crate::util::json::{self, Json};
+
+/// How learned-permutation strategies execute the LCP trainer's per-step
+/// kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LcpExecutor {
+    /// Call [`HostBackend`] directly (no artifact indirection).
+    Host,
+    /// Route through the [`crate::runtime::ExecBackend`] trait served by
+    /// [`NativeEngine`] — the same math behind the artifact interface the
+    /// PJRT engine implements.  Numerically identical to `Host` (pinned
+    /// by `host_and_native_executors_prune_identically`); pays a small
+    /// per-step tensor copy at the trait boundary, an order below the
+    /// matmul cost, in exchange for exercising the artifact plumbing on
+    /// every default run.  Use `Host` (`--backend host`) to shave that
+    /// off when benchmarking raw LCP throughput.
+    Native,
+}
+
+impl LcpExecutor {
+    /// Valid `--backend` CLI values, for error messages.
+    pub const VALID: &str = "host, native";
+
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> Option<LcpExecutor> {
+        match s {
+            "host" => Some(LcpExecutor::Host),
+            "native" => Some(LcpExecutor::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LcpExecutor::Host => "host",
+            LcpExecutor::Native => "native",
+        }
+    }
+}
+
+/// Per-layer context a [`PermStrategy`] runs under: the recipe's N:M
+/// pattern plus the pipeline-level defaults a strategy inherits unless
+/// its own configuration overrides them.
+#[derive(Debug, Clone)]
+pub struct PermContext {
+    /// Decoder-layer index of the linear being pruned.
+    pub layer: usize,
+    /// The recipe's sparsity pattern.
+    pub nm: NmConfig,
+    /// Pipeline-default LCP hyperparameters ([`LearnedPerm`] fields
+    /// override individual values).
+    pub lcp: LcpCfg,
+    /// Pipeline-default partial-PermLLM threshold: layers below it fall
+    /// back to heuristic CP (Table 7).
+    pub lcp_from_layer: usize,
+    /// Pipeline-default LCP kernel executor.
+    pub executor: LcpExecutor,
+}
+
+// ---------------------------------------------------------------------------
+// The three open traits.
+// ---------------------------------------------------------------------------
+
+/// Importance scoring: which weights matter (the metric axis of Tables
+/// 1/2/8).  Implementations must be deterministic — the same `(w, x)`
+/// must give bit-identical scores, or recipe↔legacy parity breaks.
+pub trait ScoreMetric: Send + Sync {
+    /// Lowercase identifier ("wanda"); row labels capitalize the first
+    /// letter, JSON stores it verbatim.
+    fn name(&self) -> String;
+
+    /// Importance matrix `S` `[C_out, C_in]` for weight `w` and
+    /// calibration activations `x` `[T, C_in]`.
+    fn score(&self, w: &Mat, x: &Mat) -> Mat;
+
+    /// JSON descriptor (the built-in deserializer only knows the kinds
+    /// in [`METRIC_KINDS`]; custom impls serialize their name and must
+    /// be re-attached in code).
+    fn to_json(&self) -> Json {
+        Json::Str(self.name())
+    }
+}
+
+/// Channel-permutation search: how input channels are regrouped before
+/// the Eq. 7/8 mask (the permutation axis).
+pub trait PermStrategy: Send + Sync {
+    /// Stable kind identifier for JSON ("identity", "cp", "learned", ...).
+    fn kind(&self) -> &'static str;
+
+    /// Compose the metric's row label into the recipe label —
+    /// `"Wanda"` -> `"Wanda+CP"` / `"PermLLM_Wanda"` / ...
+    fn decorate(&self, base: &str) -> String;
+
+    /// Whether this strategy is the identity (drives the legacy
+    /// `"SparseGPT"` label, which drops the metric entirely).
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Whether [`PermStrategy::permutation`] reads the score matrix.
+    /// Strategies that ignore it (identity, range-sort) return `false`
+    /// so the pipeline can skip scoring when the update policy ignores
+    /// it too; the conservative default is `true`.
+    fn needs_scores(&self) -> bool {
+        true
+    }
+
+    /// Whether the pipeline should keep the identity-permutation result
+    /// when it has lower calibration error (the legacy PermLLM guard
+    /// against the Fig. 1 failure mode; heuristic CP historically ran
+    /// unguarded, so the default is `false`).
+    fn guard_identity(&self, _ctx: &PermContext) -> bool {
+        false
+    }
+
+    /// The permutation (`src_of`: stored column `j` reads original
+    /// channel `src_of[j]`) for scores `s`, weight `w`, activations `x`.
+    fn permutation(&self, s: &Mat, w: &Mat, x: &Mat, ctx: &PermContext) -> Vec<usize>;
+
+    /// JSON descriptor; strategies with configuration emit an object
+    /// with a `kind` field.
+    fn to_json(&self) -> Json {
+        Json::Str(self.kind().to_string())
+    }
+}
+
+/// Weight-update policy: what happens to the surviving weights (the
+/// "Weight Update" column of Table 2).
+pub trait WeightUpdate: Send + Sync {
+    /// Stable kind identifier for JSON ("none", "sparsegpt").
+    fn kind(&self) -> &'static str;
+
+    /// Whether this policy modifies surviving weight values (Table 2's
+    /// "Weight Update" column).  Mask-only policies keep the `false`
+    /// default; updating policies must override it — the row label and
+    /// the bench JSON report it.
+    fn updates_weights(&self) -> bool {
+        false
+    }
+
+    /// Label component appended to updating rows; `None` keeps the
+    /// metric's label unchanged (when [`WeightUpdate::updates_weights`]
+    /// is true but no label is given, the capitalized kind is used).
+    fn label(&self) -> Option<&'static str> {
+        None
+    }
+
+    /// Whether [`WeightUpdate::prune`] reads the score matrix.  The OBS
+    /// solver picks its own mask, so it returns `false`; the
+    /// conservative default is `true`.
+    fn needs_scores(&self) -> bool {
+        true
+    }
+
+    /// Prune `w` under permutation `src_of` with precomputed scores `s`
+    /// (`s == metric.score(w, x)`, original channel order; an empty
+    /// matrix when neither the strategy nor the update declares
+    /// [`WeightUpdate::needs_scores`]).  The returned [`PruneResult`]
+    /// is in *storage* (permuted) order with `src_of` recorded.
+    fn prune(&self, s: &Mat, w: &Mat, x: &Mat, nm: NmConfig, src_of: &[usize]) -> PruneResult;
+
+    /// JSON descriptor.
+    fn to_json(&self) -> Json {
+        Json::Str(self.kind().to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in metric.
+// ---------------------------------------------------------------------------
+
+/// The built-in metrics, wrapping [`crate::pruning::Metric`]
+/// (magnitude / Wanda / RIA) behind [`ScoreMetric`].
+#[derive(Debug, Clone, Copy)]
+pub struct MetricScore(pub Metric);
+
+impl ScoreMetric for MetricScore {
+    fn name(&self) -> String {
+        self.0.name().to_string()
+    }
+
+    fn score(&self, w: &Mat, x: &Mat) -> Mat {
+        crate::pruning::importance(self.0, w, x)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in permutation strategies.
+// ---------------------------------------------------------------------------
+
+/// No permutation: channels stay in their original order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdentityPerm;
+
+impl PermStrategy for IdentityPerm {
+    fn kind(&self) -> &'static str {
+        "identity"
+    }
+
+    fn decorate(&self, base: &str) -> String {
+        base.to_string()
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn needs_scores(&self) -> bool {
+        false
+    }
+
+    fn permutation(&self, _s: &Mat, w: &Mat, _x: &Mat, _ctx: &PermContext) -> Vec<usize> {
+        (0..w.cols()).collect()
+    }
+}
+
+/// RIA's two-stage heuristic CP ([`crate::cp::ria_cp`]) — the paper's
+/// "+CP" rows.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HeuristicCpPerm;
+
+impl PermStrategy for HeuristicCpPerm {
+    fn kind(&self) -> &'static str {
+        "cp"
+    }
+
+    fn decorate(&self, base: &str) -> String {
+        format!("{base}+CP")
+    }
+
+    fn permutation(&self, s: &Mat, _w: &Mat, _x: &Mat, ctx: &PermContext) -> Vec<usize> {
+        ria_cp(s, ctx.nm)
+    }
+}
+
+/// Pool & Yu-style greedy swap search ([`crate::cp::greedy_cp`]) —
+/// exhaustive-ish, only sensible for small layers (Fig. 1's regime).
+#[derive(Debug, Clone, Copy)]
+pub struct GreedyCpPerm {
+    /// Improvement sweeps over all channel pairs.
+    pub max_sweeps: usize,
+}
+
+impl Default for GreedyCpPerm {
+    fn default() -> Self {
+        GreedyCpPerm { max_sweeps: 2 }
+    }
+}
+
+impl PermStrategy for GreedyCpPerm {
+    fn kind(&self) -> &'static str {
+        "greedy-cp"
+    }
+
+    fn decorate(&self, base: &str) -> String {
+        format!("{base}+GreedyCP")
+    }
+
+    fn permutation(&self, s: &Mat, _w: &Mat, _x: &Mat, ctx: &PermContext) -> Vec<usize> {
+        greedy_cp(s, ctx.nm, self.max_sweeps)
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("kind", json::s(self.kind())),
+            ("max_sweeps", json::num(self.max_sweeps as f64)),
+        ])
+    }
+}
+
+/// The learnable channel permutation (the paper's core contribution):
+/// heuristic-CP warm start, block-wise Sinkhorn/Hungarian refinement
+/// through the LCP trainer, keep-best guard against the identity
+/// baseline.  Every field is an *override* of the pipeline defaults in
+/// [`PermContext`] — `LearnedPerm::default()` reproduces the legacy
+/// `PruneMethod::PermLlm` behavior bit for bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LearnedPerm {
+    /// LCP block size B (Table 6 sweeps this through the recipe path).
+    pub block: Option<usize>,
+    /// Optimization steps.
+    pub steps: Option<usize>,
+    /// AdamW learning rate.
+    pub lr: Option<f32>,
+    /// Sinkhorn iterations L (Table 4's ablation axis).
+    pub sinkhorn_iters: Option<usize>,
+    /// Partial PermLLM (Table 7): layers below this index fall back to
+    /// heuristic CP.
+    pub from_layer: Option<usize>,
+    /// LCP kernel executor.
+    pub executor: Option<LcpExecutor>,
+}
+
+impl LearnedPerm {
+    fn resolved_from_layer(&self, ctx: &PermContext) -> usize {
+        self.from_layer.unwrap_or(ctx.lcp_from_layer)
+    }
+
+    fn resolve_lcp(&self, ctx: &PermContext) -> LcpCfg {
+        let mut cfg = ctx.lcp;
+        cfg.nm = ctx.nm;
+        if let Some(b) = self.block {
+            cfg.block = b;
+        }
+        if let Some(s) = self.steps {
+            cfg.steps = s;
+        }
+        if let Some(lr) = self.lr {
+            cfg.lr = lr;
+        }
+        if let Some(it) = self.sinkhorn_iters {
+            cfg.sinkhorn_iters = it;
+        }
+        cfg
+    }
+}
+
+impl PermStrategy for LearnedPerm {
+    fn kind(&self) -> &'static str {
+        "learned"
+    }
+
+    fn decorate(&self, base: &str) -> String {
+        format!("PermLLM_{base}")
+    }
+
+    fn guard_identity(&self, ctx: &PermContext) -> bool {
+        // The keep-best guard only applies where LCP actually ran;
+        // partial-PermLLM layers below the threshold use unguarded
+        // heuristic CP, exactly like the legacy pipeline.
+        ctx.layer >= self.resolved_from_layer(ctx)
+    }
+
+    fn permutation(&self, s: &Mat, w: &Mat, x: &Mat, ctx: &PermContext) -> Vec<usize> {
+        if ctx.layer < self.resolved_from_layer(ctx) {
+            // Partial PermLLM (Table 7): heuristic CP on early layers.
+            return ria_cp(s, ctx.nm);
+        }
+        // Seed LCP from the heuristic CP solution: learn a block-wise
+        // *refinement* of the globally-allocated permutation.  Blocks
+        // can only express within-block reorderings, so composing with
+        // the global heuristic gives LCP the cross-block moves for
+        // free; the pipeline's keep-best guard (via `guard_identity`)
+        // then guarantees the result never regresses below plain
+        // one-shot pruning (paper's Table 1 ordering).
+        let perm_cp = ria_cp(s, ctx.nm);
+        let w_cp = w.permute_cols(&perm_cp);
+        let s_cp = s.permute_cols(&perm_cp);
+        let x_cp = x.permute_cols(&perm_cp);
+        let data = LayerData::new(w_cp, s_cp, x_cp);
+
+        let mut lcp_cfg = self.resolve_lcp(ctx);
+        // Sanitize, then clamp block to the layer width (largest valid
+        // divisor).  Arbitrary block values can now arrive via sweep
+        // JSON and per-recipe overrides, so first round to a positive
+        // multiple of the group size (0 would divide-by-zero below, a
+        // non-multiple would underflow the clamp loop), and bound the
+        // loop at one group so it always terminates.
+        let m = ctx.nm.m;
+        lcp_cfg.block = ((lcp_cfg.block / m).max(1) * m).min(w.cols());
+        if w.cols() % lcp_cfg.block != 0 {
+            let mut b = lcp_cfg.block;
+            while b > m && (w.cols() % b != 0 || b % m != 0) {
+                b -= m;
+            }
+            lcp_cfg.block = b.max(m);
+        }
+        let res = run_lcp(&data, w.cols(), lcp_cfg, ctx.nm, self.executor.unwrap_or(ctx.executor));
+        // Compose: global heuristic then block refinement.
+        res.src_of.iter().map(|&j| perm_cp[j]).collect()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", json::s(self.kind()))];
+        if let Some(b) = self.block {
+            pairs.push(("block", json::num(b as f64)));
+        }
+        if let Some(s) = self.steps {
+            pairs.push(("steps", json::num(s as f64)));
+        }
+        if let Some(lr) = self.lr {
+            pairs.push(("lr", json::num(lr as f64)));
+        }
+        if let Some(it) = self.sinkhorn_iters {
+            pairs.push(("sinkhorn_iters", json::num(it as f64)));
+        }
+        if let Some(fl) = self.from_layer {
+            pairs.push(("from_layer", json::num(fl as f64)));
+        }
+        if let Some(e) = self.executor {
+            pairs.push(("executor", json::s(e.name())));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// Train LCP for one layer through the chosen executor.
+///
+/// The `Native` path goes through the artifact-name interface
+/// ([`ExecLcpBackend`] over [`NativeEngine`]) — the same plumbing the
+/// PJRT engine serves — with internal fan-out disabled (`threads: 1`)
+/// because this runs inside the pipeline's per-layer worker pool.
+fn run_lcp(
+    data: &LayerData,
+    c_in: usize,
+    lcp_cfg: LcpCfg,
+    nm: NmConfig,
+    executor: LcpExecutor,
+) -> LcpResult {
+    match executor {
+        LcpExecutor::Host => {
+            let mut backend = HostBackend::new(data, nm, lcp_cfg.sinkhorn_iters);
+            train_lcp(&mut backend, c_in, lcp_cfg)
+        }
+        LcpExecutor::Native => {
+            let mut engine = NativeEngine::new(NativeCfg {
+                nm,
+                sinkhorn_iters: lcp_cfg.sinkhorn_iters,
+                threads: 1,
+                model: None,
+            });
+            let mut backend = ExecLcpBackend::new(&mut engine, data, lcp_cfg.block)
+                .expect("native LCP backend");
+            train_lcp(&mut backend, c_in, lcp_cfg)
+        }
+    }
+}
+
+/// RPTQ-style range sorting ([`crate::quant::range_sort_perm`]):
+/// regroup channels by dynamic range so outliers share groups — the
+/// quantization-aware reordering of the paper's §D, composable with any
+/// metric and update through the same trait.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RangeSortPerm;
+
+impl PermStrategy for RangeSortPerm {
+    fn kind(&self) -> &'static str {
+        "range-sort"
+    }
+
+    fn decorate(&self, base: &str) -> String {
+        format!("{base}+RangeSort")
+    }
+
+    fn needs_scores(&self) -> bool {
+        false
+    }
+
+    fn permutation(&self, _s: &Mat, w: &Mat, _x: &Mat, _ctx: &PermContext) -> Vec<usize> {
+        range_sort_perm(w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in weight updates.
+// ---------------------------------------------------------------------------
+
+/// Mask-only: keep surviving weights at their original values
+/// (magnitude / Wanda / RIA rows).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoUpdate;
+
+impl WeightUpdate for NoUpdate {
+    fn kind(&self) -> &'static str {
+        "none"
+    }
+
+    fn prune(&self, s: &Mat, w: &Mat, _x: &Mat, nm: NmConfig, src_of: &[usize]) -> PruneResult {
+        prune_scored(s, w, nm, src_of)
+    }
+}
+
+/// SparseGPT's OBS update ([`crate::pruning::sparsegpt`]): mask chosen
+/// by OBS saliency, survivors updated column-by-column from the damped
+/// calibration Hessian.  Under a non-identity permutation the update
+/// runs in permuted channel order — the ROSE-style composition of
+/// channel reordering with the OBS solver.
+#[derive(Debug, Clone, Copy)]
+pub struct ObsSparseGpt {
+    /// Relative Hessian dampening (reference: 0.01).
+    pub damp: f32,
+}
+
+impl Default for ObsSparseGpt {
+    fn default() -> Self {
+        ObsSparseGpt { damp: SparseGptCfg::default().damp }
+    }
+}
+
+impl WeightUpdate for ObsSparseGpt {
+    fn kind(&self) -> &'static str {
+        "sparsegpt"
+    }
+
+    fn updates_weights(&self) -> bool {
+        true
+    }
+
+    fn label(&self) -> Option<&'static str> {
+        Some("SparseGPT")
+    }
+
+    fn needs_scores(&self) -> bool {
+        false
+    }
+
+    fn prune(&self, _s: &Mat, w: &Mat, x: &Mat, nm: NmConfig, src_of: &[usize]) -> PruneResult {
+        let cfg = SparseGptCfg { damp: self.damp };
+        if src_of.iter().enumerate().all(|(j, &i)| j == i) {
+            // Identity: the legacy SparseGPT row, bit for bit.
+            return sparsegpt(w, x, nm, cfg);
+        }
+        let wp = w.permute_cols(src_of);
+        let xp = x.permute_cols(src_of);
+        let mut res = sparsegpt(&wp, &xp, nm, cfg);
+        res.src_of = src_of.to_vec();
+        res
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![("kind", json::s(self.kind())), ("damp", json::num(self.damp as f64))])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The recipe.
+// ---------------------------------------------------------------------------
+
+/// Valid built-in metric kinds (for CLI / JSON error messages).
+pub const METRIC_KINDS: &str = "magnitude, wanda, ria";
+/// Valid built-in permutation-strategy kinds.
+pub const PERM_KINDS: &str = "identity, cp, greedy-cp, learned, range-sort";
+/// Valid built-in weight-update kinds.
+pub const UPDATE_KINDS: &str = "none, sparsegpt";
+
+/// One composed pruning method: metric × permutation × update × N:M.
+///
+/// Cloning is cheap (the components are shared behind [`Arc`]), so
+/// benches declare row lists of recipes and the pipeline fans each
+/// layer's pruning out over worker threads with a shared recipe.
+#[derive(Clone)]
+pub struct PruneRecipe {
+    /// Importance scoring.
+    pub metric: Arc<dyn ScoreMetric>,
+    /// Channel-permutation search.
+    pub perm: Arc<dyn PermStrategy>,
+    /// Weight-update policy.
+    pub update: Arc<dyn WeightUpdate>,
+    /// Sparsity pattern.
+    pub nm: NmConfig,
+    /// The "Dense" row: skip pruning entirely (no metric/perm/update
+    /// runs; they are kept only so the struct stays uniform).
+    dense: bool,
+}
+
+impl fmt::Debug for PruneRecipe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PruneRecipe({} @ {})", self.name(), self.nm.name())
+    }
+}
+
+impl PruneRecipe {
+    /// Start composing a recipe (defaults: Wanda metric, identity
+    /// permutation, no weight update).
+    pub fn builder(nm: NmConfig) -> RecipeBuilder {
+        RecipeBuilder {
+            metric: Arc::new(MetricScore(Metric::Wanda)),
+            perm: Arc::new(IdentityPerm),
+            update: Arc::new(NoUpdate),
+            nm,
+        }
+    }
+
+    /// Compose from already-shared components.
+    pub fn from_parts(
+        metric: Arc<dyn ScoreMetric>,
+        perm: Arc<dyn PermStrategy>,
+        update: Arc<dyn WeightUpdate>,
+        nm: NmConfig,
+    ) -> PruneRecipe {
+        PruneRecipe { metric, perm, update, nm, dense: false }
+    }
+
+    /// The unpruned baseline row.
+    pub fn dense(nm: NmConfig) -> PruneRecipe {
+        PruneRecipe {
+            metric: Arc::new(MetricScore(Metric::Magnitude)),
+            perm: Arc::new(IdentityPerm),
+            update: Arc::new(NoUpdate),
+            nm,
+            dense: true,
+        }
+    }
+
+    /// One-shot metric, no permutation, no update (the Wanda/RIA rows).
+    pub fn oneshot(metric: Metric, nm: NmConfig) -> PruneRecipe {
+        Self::builder(nm).metric(MetricScore(metric)).build()
+    }
+
+    /// The legacy SparseGPT row: identity permutation + OBS update (the
+    /// metric is unused — the OBS solver picks its own mask).
+    pub fn sparsegpt(nm: NmConfig) -> PruneRecipe {
+        Self::builder(nm)
+            .metric(MetricScore(Metric::Magnitude))
+            .update(ObsSparseGpt::default())
+            .build()
+    }
+
+    /// Whether this is the unpruned "Dense" row.
+    pub fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    /// Whether the recipe updates surviving weight values (Table 2's
+    /// "Weight Update" column).
+    pub fn updates_weights(&self) -> bool {
+        !self.dense && self.update.updates_weights()
+    }
+
+    /// Canonical row label.  Reproduces the legacy Table-1/2/8 labels
+    /// exactly ("Dense", "SparseGPT", "Wanda", "Wanda+CP",
+    /// "PermLLM_Wanda", ...) and extends them compositionally
+    /// ("PermLLM_Wanda+SparseGPT", "Ria+RangeSort", ...).
+    pub fn name(&self) -> String {
+        if self.dense {
+            return "Dense".into();
+        }
+        let base = cap(&self.metric.name());
+        // Updating policies always surface in the label: their declared
+        // label component, or the capitalized kind as a fallback so a
+        // custom policy without one is never misreported as mask-only.
+        let suffix = match self.update.label() {
+            Some(u) => Some(u.to_string()),
+            None if self.update.updates_weights() => Some(cap(self.update.kind())),
+            None => None,
+        };
+        match suffix {
+            None => self.perm.decorate(&base),
+            // Identity + an updating policy is the legacy SparseGPT-row
+            // shape, whose label never mentioned a metric (the OBS
+            // solver ignores it).
+            Some(u) if self.perm.is_identity() => u,
+            Some(u) => format!("{}+{u}", self.perm.decorate(&base)),
+        }
+    }
+
+    /// JSON descriptor — stamped into bench artifacts
+    /// (`sparse_inference --json`, `BENCH_serving.json`) so every
+    /// result records which recipe produced the weights.
+    pub fn to_json(&self) -> Json {
+        if self.dense {
+            return json::obj(vec![
+                ("name", json::s("Dense")),
+                ("dense", Json::Bool(true)),
+                ("nm", json::s(&self.nm.name())),
+            ]);
+        }
+        json::obj(vec![
+            ("name", json::s(&self.name())),
+            ("nm", json::s(&self.nm.name())),
+            ("metric", self.metric.to_json()),
+            ("perm", self.perm.to_json()),
+            ("update", self.update.to_json()),
+        ])
+    }
+
+    /// Rebuild a recipe from its JSON descriptor (built-in kinds only;
+    /// a custom trait impl deserializes to an error naming the valid
+    /// values).  Missing fields default to Wanda / identity / none /
+    /// 2:4.
+    pub fn from_json(v: &Json) -> Result<PruneRecipe> {
+        let _ = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("recipe must be a JSON object, got {}", v.to_string()))?;
+        let nm = match v.get("nm") {
+            None => NmConfig::PAT_2_4,
+            Some(j) => {
+                let s = j
+                    .as_str()
+                    .ok_or_else(|| anyhow!("recipe 'nm' must be a string like \"2:4\""))?;
+                NmConfig::parse(s).ok_or_else(|| {
+                    anyhow!("bad recipe 'nm' value '{s}' (expected zeros:group, e.g. 2:4 or 4:8)")
+                })?
+            }
+        };
+        if matches!(v.get("dense"), Some(Json::Bool(true)))
+            || v.get("name").and_then(Json::as_str) == Some("Dense")
+        {
+            return Ok(PruneRecipe::dense(nm));
+        }
+        let metric = match v.get("metric") {
+            None => Arc::new(MetricScore(Metric::Wanda)) as Arc<dyn ScoreMetric>,
+            Some(j) => {
+                let s = j.as_str().ok_or_else(|| anyhow!("recipe 'metric' must be a string"))?;
+                metric_from_kind(s)?
+            }
+        };
+        let perm = match v.get("perm") {
+            None => Arc::new(IdentityPerm) as Arc<dyn PermStrategy>,
+            Some(j) => perm_from_json(j)?,
+        };
+        let update = match v.get("update") {
+            None => Arc::new(NoUpdate) as Arc<dyn WeightUpdate>,
+            Some(j) => update_from_json(j)?,
+        };
+        Ok(PruneRecipe::from_parts(metric, perm, update, nm))
+    }
+}
+
+/// Builder for [`PruneRecipe`]; every axis has a default so rows read
+/// as deltas from plain one-shot Wanda.
+pub struct RecipeBuilder {
+    metric: Arc<dyn ScoreMetric>,
+    perm: Arc<dyn PermStrategy>,
+    update: Arc<dyn WeightUpdate>,
+    nm: NmConfig,
+}
+
+impl RecipeBuilder {
+    pub fn metric(mut self, m: impl ScoreMetric + 'static) -> Self {
+        self.metric = Arc::new(m);
+        self
+    }
+
+    /// Convenience for the built-in metrics.
+    pub fn metric_kind(self, m: Metric) -> Self {
+        self.metric(MetricScore(m))
+    }
+
+    pub fn perm(mut self, p: impl PermStrategy + 'static) -> Self {
+        self.perm = Arc::new(p);
+        self
+    }
+
+    pub fn update(mut self, u: impl WeightUpdate + 'static) -> Self {
+        self.update = Arc::new(u);
+        self
+    }
+
+    pub fn build(self) -> PruneRecipe {
+        PruneRecipe {
+            metric: self.metric,
+            perm: self.perm,
+            update: self.update,
+            nm: self.nm,
+            dense: false,
+        }
+    }
+}
+
+fn cap(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kind parsing (shared by JSON deserialization and the CLI flags, so
+// both fail with the same valid-value lists).
+// ---------------------------------------------------------------------------
+
+/// Resolve a built-in metric kind string.
+pub fn metric_from_kind(s: &str) -> Result<Arc<dyn ScoreMetric>> {
+    Metric::parse(s)
+        .map(|m| Arc::new(MetricScore(m)) as Arc<dyn ScoreMetric>)
+        .ok_or_else(|| anyhow!("unknown metric '{s}' (valid: {METRIC_KINDS})"))
+}
+
+/// Resolve a built-in permutation-strategy kind string (no
+/// configuration — use [`perm_from_json`] for configured strategies).
+pub fn perm_from_kind(s: &str) -> Result<Arc<dyn PermStrategy>> {
+    match s {
+        "identity" | "none" => Ok(Arc::new(IdentityPerm)),
+        "cp" | "heuristic-cp" => Ok(Arc::new(HeuristicCpPerm)),
+        "greedy-cp" => Ok(Arc::new(GreedyCpPerm::default())),
+        "learned" | "lcp" => Ok(Arc::new(LearnedPerm::default())),
+        "range-sort" | "rangesort" => Ok(Arc::new(RangeSortPerm)),
+        _ => Err(anyhow!("unknown permutation strategy '{s}' (valid: {PERM_KINDS})")),
+    }
+}
+
+/// Resolve a built-in weight-update kind string.
+pub fn update_from_kind(s: &str) -> Result<Arc<dyn WeightUpdate>> {
+    match s {
+        "none" => Ok(Arc::new(NoUpdate)),
+        "sparsegpt" | "obs" => Ok(Arc::new(ObsSparseGpt::default())),
+        _ => Err(anyhow!("unknown weight update '{s}' (valid: {UPDATE_KINDS})")),
+    }
+}
+
+/// Parse a permutation descriptor: either a kind string or an object
+/// `{"kind": ..., <overrides>}`.
+pub fn perm_from_json(v: &Json) -> Result<Arc<dyn PermStrategy>> {
+    match v {
+        Json::Str(s) => perm_from_kind(s),
+        Json::Obj(_) => {
+            let kind = v.get("kind").and_then(Json::as_str).ok_or_else(|| {
+                anyhow!("permutation object needs a string 'kind' (valid: {PERM_KINDS})")
+            })?;
+            match kind {
+                "learned" | "lcp" => {
+                    let get_usize = |k: &str| v.get(k).and_then(Json::as_usize);
+                    Ok(Arc::new(LearnedPerm {
+                        block: get_usize("block"),
+                        steps: get_usize("steps"),
+                        lr: v.get("lr").and_then(Json::as_f64).map(|x| x as f32),
+                        sinkhorn_iters: get_usize("sinkhorn_iters"),
+                        from_layer: get_usize("from_layer"),
+                        executor: match v.get("executor").and_then(Json::as_str) {
+                            None => None,
+                            Some(e) => Some(LcpExecutor::parse(e).ok_or_else(|| {
+                                anyhow!("unknown executor '{e}' (valid: {})", LcpExecutor::VALID)
+                            })?),
+                        },
+                    }))
+                }
+                "greedy-cp" => Ok(Arc::new(GreedyCpPerm {
+                    max_sweeps: v
+                        .get("max_sweeps")
+                        .and_then(Json::as_usize)
+                        .unwrap_or_else(|| GreedyCpPerm::default().max_sweeps),
+                })),
+                other => perm_from_kind(other),
+            }
+        }
+        _ => Err(anyhow!("permutation must be a kind string or object (valid kinds: {PERM_KINDS})")),
+    }
+}
+
+/// Parse a weight-update descriptor: a kind string or
+/// `{"kind": ..., <overrides>}`.
+pub fn update_from_json(v: &Json) -> Result<Arc<dyn WeightUpdate>> {
+    match v {
+        Json::Str(s) => update_from_kind(s),
+        Json::Obj(_) => {
+            let kind = v.get("kind").and_then(Json::as_str).ok_or_else(|| {
+                anyhow!("update object needs a string 'kind' (valid: {UPDATE_KINDS})")
+            })?;
+            match kind {
+                "sparsegpt" | "obs" => Ok(Arc::new(ObsSparseGpt {
+                    damp: v
+                        .get("damp")
+                        .and_then(Json::as_f64)
+                        .map(|d| d as f32)
+                        .unwrap_or_else(|| ObsSparseGpt::default().damp),
+                })),
+                other => update_from_kind(other),
+            }
+        }
+        _ => Err(anyhow!("update must be a kind string or object (valid kinds: {UPDATE_KINDS})")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical row lists (the paper tables, shared by the bench binaries
+// and the label-pinning tests).
+// ---------------------------------------------------------------------------
+
+/// The paper-table row declarations, shared by `benches/table*.rs` and
+/// the label-pinning tests so a bench can never drift from the pinned
+/// labels.
+pub mod rows {
+    use super::*;
+
+    /// Table 1's method rows at `nm` (plus the ROSE-style learned-perm +
+    /// OBS-update row the closed enum could not express, appended last).
+    pub fn table1(nm: NmConfig) -> Vec<PruneRecipe> {
+        vec![
+            PruneRecipe::dense(nm),
+            PruneRecipe::sparsegpt(nm),
+            PruneRecipe::oneshot(Metric::Wanda, nm),
+            PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(HeuristicCpPerm).build(),
+            PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(LearnedPerm::default()).build(),
+            PruneRecipe::oneshot(Metric::Ria, nm),
+            PruneRecipe::builder(nm).metric_kind(Metric::Ria).perm(HeuristicCpPerm).build(),
+            PruneRecipe::builder(nm).metric_kind(Metric::Ria).perm(LearnedPerm::default()).build(),
+            PruneRecipe::builder(nm)
+                .metric_kind(Metric::Wanda)
+                .perm(LearnedPerm::default())
+                .update(ObsSparseGpt::default())
+                .build(),
+        ]
+    }
+
+    /// The Table 2 / Table 8 headline rows at `nm`.
+    pub fn headline(nm: NmConfig) -> Vec<PruneRecipe> {
+        vec![
+            PruneRecipe::dense(nm),
+            PruneRecipe::sparsegpt(nm),
+            PruneRecipe::oneshot(Metric::Wanda, nm),
+            PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(HeuristicCpPerm).build(),
+            PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(LearnedPerm::default()).build(),
+        ]
+    }
+
+    /// Table 2's "Weight Update" column for a recipe row.
+    pub fn weight_update_cell(r: &PruneRecipe) -> &'static str {
+        if r.is_dense() {
+            "-"
+        } else if r.updates_weights() {
+            "yes"
+        } else {
+            "no"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::{importance, prune_oneshot, prune_permuted};
+    use crate::util::rng::Pcg32;
+
+    fn ctx(nm: NmConfig) -> PermContext {
+        PermContext {
+            layer: 0,
+            nm,
+            lcp: LcpCfg { block: 8, steps: 6, lr: 0.1, nm, ..Default::default() },
+            lcp_from_layer: 0,
+            executor: LcpExecutor::Native,
+        }
+    }
+
+    fn layer(rng: &mut Pcg32) -> (Mat, Mat) {
+        (Mat::randn(8, 16, 1.0, rng), Mat::randn(12, 16, 1.0, rng))
+    }
+
+    #[test]
+    fn legacy_labels_are_pinned() {
+        let nm = NmConfig::PAT_2_4;
+        // The exact Table-1 row labels the legacy enum produced.
+        let want = [
+            "Dense",
+            "SparseGPT",
+            "Wanda",
+            "Wanda+CP",
+            "PermLLM_Wanda",
+            "Ria",
+            "Ria+CP",
+            "PermLLM_Ria",
+            "PermLLM_Wanda+SparseGPT",
+        ];
+        let got: Vec<String> = rows::table1(nm).iter().map(PruneRecipe::name).collect();
+        assert_eq!(got, want);
+        assert_eq!(PruneRecipe::oneshot(Metric::Magnitude, nm).name(), "Magnitude");
+        // Novel compositions get systematic labels.
+        let rose = PruneRecipe::builder(nm)
+            .metric_kind(Metric::Ria)
+            .perm(HeuristicCpPerm)
+            .update(ObsSparseGpt::default())
+            .build();
+        assert_eq!(rose.name(), "Ria+CP+SparseGPT");
+        let rs = PruneRecipe::builder(nm).metric_kind(Metric::Wanda).perm(RangeSortPerm).build();
+        assert_eq!(rs.name(), "Wanda+RangeSort");
+        let greedy = PruneRecipe::builder(nm).perm(GreedyCpPerm::default()).build();
+        assert_eq!(greedy.name(), "Wanda+GreedyCP");
+    }
+
+    #[test]
+    fn weight_update_cells_match_table2() {
+        let cells: Vec<&str> =
+            rows::headline(NmConfig::PAT_2_4).iter().map(rows::weight_update_cell).collect();
+        assert_eq!(cells, ["-", "yes", "no", "no", "no"]);
+    }
+
+    #[test]
+    fn custom_updating_policy_without_label_is_still_reported() {
+        // updates_weights is decoupled from label: a third-party policy
+        // that modifies weights but declares no label component must
+        // still show "yes" in the WeightUpd column and surface in the
+        // row name (via its capitalized kind).
+        struct DampAll;
+        impl WeightUpdate for DampAll {
+            fn kind(&self) -> &'static str {
+                "damp-all"
+            }
+            fn updates_weights(&self) -> bool {
+                true
+            }
+            fn prune(&self, s: &Mat, w: &Mat, _x: &Mat, nm: NmConfig, src: &[usize]) -> PruneResult {
+                let mut res = prune_scored(s, w, nm, src);
+                for v in res.weight.data_mut() {
+                    *v *= 0.5;
+                }
+                res
+            }
+        }
+        let recipe = PruneRecipe::builder(NmConfig::PAT_2_4).update(DampAll).build();
+        assert!(recipe.updates_weights());
+        assert_eq!(rows::weight_update_cell(&recipe), "yes");
+        assert_eq!(recipe.name(), "Damp-all");
+        let with_perm = PruneRecipe::builder(NmConfig::PAT_2_4)
+            .perm(HeuristicCpPerm)
+            .update(DampAll)
+            .build();
+        assert_eq!(with_perm.name(), "Wanda+CP+Damp-all");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_row() {
+        let mut all = rows::table1(NmConfig::PAT_2_4);
+        all.extend(rows::headline(NmConfig::PAT_4_8));
+        all.push(
+            PruneRecipe::builder(NmConfig::PAT_2_4)
+                .metric_kind(Metric::Ria)
+                .perm(LearnedPerm {
+                    block: Some(32),
+                    steps: Some(12),
+                    lr: Some(0.1),
+                    sinkhorn_iters: Some(3),
+                    from_layer: Some(2),
+                    executor: Some(LcpExecutor::Host),
+                })
+                .update(ObsSparseGpt { damp: 0.02 })
+                .build(),
+        );
+        all.push(PruneRecipe::builder(NmConfig::PAT_2_4).perm(RangeSortPerm).build());
+        for recipe in all {
+            let j = recipe.to_json();
+            let back = PruneRecipe::from_json(&j).unwrap();
+            assert_eq!(back.name(), recipe.name(), "{j:?}");
+            assert_eq!(back.nm, recipe.nm);
+            assert_eq!(back.to_json(), j, "roundtrip must be a fixpoint");
+        }
+    }
+
+    #[test]
+    fn from_json_errors_name_the_valid_values() {
+        let bad_metric = Json::parse(r#"{"metric": "l0"}"#).unwrap();
+        let e = PruneRecipe::from_json(&bad_metric).unwrap_err().to_string();
+        assert!(e.contains(METRIC_KINDS), "{e}");
+        let bad_perm = Json::parse(r#"{"perm": "hungarian"}"#).unwrap();
+        let e = PruneRecipe::from_json(&bad_perm).unwrap_err().to_string();
+        assert!(e.contains(PERM_KINDS), "{e}");
+        let bad_update = Json::parse(r#"{"update": "adamw"}"#).unwrap();
+        let e = PruneRecipe::from_json(&bad_update).unwrap_err().to_string();
+        assert!(e.contains(UPDATE_KINDS), "{e}");
+        let bad_nm = Json::parse(r#"{"nm": "4:2"}"#).unwrap();
+        assert!(PruneRecipe::from_json(&bad_nm).is_err());
+        assert!(PruneRecipe::from_json(&Json::parse("[1]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn no_update_matches_oneshot_and_permuted_bitwise() {
+        let mut rng = Pcg32::seeded(1);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        for metric in [Metric::Magnitude, Metric::Wanda, Metric::Ria] {
+            let s = importance(metric, &w, &x);
+            let id: Vec<usize> = (0..w.cols()).collect();
+            let a = NoUpdate.prune(&s, &w, &x, nm, &id);
+            let b = prune_oneshot(metric, &w, &x, nm);
+            assert_eq!(a.weight.data(), b.weight.data(), "{}", metric.name());
+            assert_eq!(a.src_of, b.src_of);
+            let perm = rng.permutation(w.cols());
+            let a = NoUpdate.prune(&s, &w, &x, nm, &perm);
+            let b = prune_permuted(metric, &w, &x, nm, &perm);
+            assert_eq!(a.weight.data(), b.weight.data(), "{}", metric.name());
+            assert_eq!(a.src_of, b.src_of);
+        }
+    }
+
+    #[test]
+    fn obs_update_matches_sparsegpt_bitwise_at_identity() {
+        let mut rng = Pcg32::seeded(2);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let id: Vec<usize> = (0..w.cols()).collect();
+        let a = ObsSparseGpt::default().prune(&s, &w, &x, nm, &id);
+        let b = sparsegpt(&w, &x, nm, SparseGptCfg::default());
+        assert_eq!(a.weight.data(), b.weight.data());
+        assert_eq!(a.src_of, b.src_of);
+    }
+
+    #[test]
+    fn obs_update_composes_with_a_permutation() {
+        // ROSE-style: reorder channels, then run the OBS solver in the
+        // permuted order.  The result must be a valid N:M prune whose
+        // runtime path (permute activations, sparse matmul) is coherent.
+        let mut rng = Pcg32::seeded(3);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Ria, &w, &x);
+        let perm = rng.permutation(w.cols());
+        let res = ObsSparseGpt::default().prune(&s, &w, &x, nm, &perm);
+        assert!(res.mask.verify());
+        assert_eq!(res.src_of, perm);
+        assert!(res.weight.data().iter().all(|v| v.is_finite()));
+        // And matches running sparsegpt on explicitly permuted inputs.
+        let direct =
+            sparsegpt(&w.permute_cols(&perm), &x.permute_cols(&perm), nm, SparseGptCfg::default());
+        assert_eq!(res.weight.data(), direct.weight.data());
+    }
+
+    #[test]
+    fn range_sort_perm_strategy_matches_quant_helper() {
+        // Satellite: quantization-aware reordering composes with any
+        // metric through the open trait.
+        let mut rng = Pcg32::seeded(4);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let got = RangeSortPerm.permutation(&s, &w, &x, &ctx(nm));
+        assert_eq!(got, range_sort_perm(&w));
+        // Full composition parity: recipe-layer prune == prune_permuted
+        // with the quant helper's permutation.
+        let res = NoUpdate.prune(&s, &w, &x, nm, &got);
+        let want = prune_permuted(Metric::Wanda, &w, &x, nm, &range_sort_perm(&w));
+        assert_eq!(res.weight.data(), want.weight.data());
+        assert!(res.mask.verify());
+    }
+
+    #[test]
+    fn identity_perm_is_identity() {
+        let mut rng = Pcg32::seeded(5);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let c = ctx(nm);
+        assert_eq!(IdentityPerm.permutation(&s, &w, &x, &c), (0..16).collect::<Vec<_>>());
+        assert!(IdentityPerm.is_identity());
+        assert!(!IdentityPerm.guard_identity(&c));
+    }
+
+    #[test]
+    fn learned_perm_respects_from_layer_and_guard() {
+        let mut rng = Pcg32::seeded(6);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let mut c = ctx(nm);
+        let lp = LearnedPerm { from_layer: Some(2), ..Default::default() };
+        // Below the threshold: heuristic CP, unguarded.
+        c.layer = 1;
+        assert_eq!(lp.permutation(&s, &w, &x, &c), ria_cp(&s, nm));
+        assert!(!lp.guard_identity(&c));
+        // At the threshold: LCP runs (valid block-respecting perm) and
+        // the keep-best guard applies.
+        c.layer = 2;
+        assert!(lp.guard_identity(&c));
+        let perm = lp.permutation(&s, &w, &x, &c);
+        let mut seen = vec![false; 16];
+        for &i in &perm {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn learned_perm_sanitizes_hostile_block_overrides() {
+        // Arbitrary block values arrive via sweep JSON / CLI now:
+        // 0 must not divide-by-zero and a non-multiple of M must not
+        // underflow the clamp loop — both settle on a valid divisor
+        // and produce a proper permutation.
+        let mut rng = Pcg32::seeded(8);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let c = ctx(nm);
+        for bad_block in [0usize, 5, 7, 1000] {
+            let lp = LearnedPerm { block: Some(bad_block), ..Default::default() };
+            let perm = lp.permutation(&s, &w, &x, &c);
+            let mut seen = vec![false; w.cols()];
+            for &i in &perm {
+                assert!(!seen[i], "block={bad_block} produced a non-permutation");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn learned_perm_overrides_resolve_over_context() {
+        let nm = NmConfig::PAT_2_4;
+        let c = ctx(nm);
+        let lp = LearnedPerm { block: Some(4), lr: Some(0.5), ..Default::default() };
+        let resolved = lp.resolve_lcp(&c);
+        assert_eq!(resolved.block, 4);
+        assert_eq!(resolved.lr, 0.5);
+        // Unset fields inherit the pipeline defaults.
+        assert_eq!(resolved.steps, c.lcp.steps);
+        assert_eq!(resolved.sinkhorn_iters, c.lcp.sinkhorn_iters);
+        assert_eq!(resolved.nm, nm);
+    }
+
+    #[test]
+    fn novel_learned_plus_obs_runs_end_to_end_on_a_layer() {
+        // The acceptance combination: learned permutation + SparseGPT
+        // update, at the layer level.
+        let mut rng = Pcg32::seeded(7);
+        let (w, x) = layer(&mut rng);
+        let nm = NmConfig::PAT_2_4;
+        let s = importance(Metric::Wanda, &w, &x);
+        let c = ctx(nm);
+        let perm = LearnedPerm::default().permutation(&s, &w, &x, &c);
+        let res = ObsSparseGpt::default().prune(&s, &w, &x, nm, &perm);
+        assert!(res.mask.verify());
+        assert_eq!(res.src_of, perm);
+        // The OBS update must actually change surviving values somewhere.
+        let masked_only = NoUpdate.prune(&s, &w, &x, nm, &perm);
+        assert_ne!(res.weight.data(), masked_only.weight.data());
+    }
+}

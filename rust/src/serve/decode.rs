@@ -4,9 +4,9 @@
 //! [`Server::run_streaming`] serves one forward pass per request; this
 //! module serves *generations*: a client submits a prompt
 //! ([`DecodeClient::submit`] with a [`GenRequest`]) and its
-//! [`GenTicket`] yields tokens as they are produced (greedy argmax over
-//! the LM head), ending after `max_new_tokens` or at the request's EOS
-//! token.
+//! [`GenTicket`] yields tokens as they are produced (greedy argmax or
+//! seeded top-k over the LM head, per the request's [`Sampler`]),
+//! ending after `max_new_tokens` or at the request's EOS token.
 //!
 //! The loop is a continuous batcher over *steps*, not requests:
 //!
@@ -21,9 +21,11 @@
 //!    span attends through its own request's cache at its own positions,
 //!    so batching never changes a request's numbers;
 //! 3. the **collector** computes each member's next token from the LM
-//!    head, streams it to the ticket, and either completes the request
-//!    or pushes it back into the pool for its next decode step — the
-//!    rejoin that makes the batching continuous.
+//!    head with the request's own [`Sampler`] (and per-request RNG, so
+//!    stochastic decoding is batching-independent), streams it to the
+//!    ticket, and either completes the request or pushes it back into
+//!    the pool for its next decode step — the rejoin that makes the
+//!    batching continuous.
 //!
 //! Backpressure ([`super::ServeCfg::queue_depth`] /
 //! [`super::ServeCfg::request_timeout`]) and shutdown semantics match
@@ -37,14 +39,16 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::{ContinuousBatcher, StepItem};
-use super::model::greedy_token;
+use super::model::Sampler;
 use super::server::{Server, StageStats};
 use super::stream::{CloseGuard, HasClosed, ServeError, SharedQueue};
 use crate::model::KvCache;
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
 
-/// One generation request: prompt token ids plus stop conditions.
+/// One generation request: prompt token ids plus stop conditions and
+/// the token-selection policy.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub prompt: Vec<u32>,
@@ -53,6 +57,16 @@ pub struct GenRequest {
     /// Optional end-of-sequence token: generation stops when it is
     /// produced (the EOS token itself is still streamed).
     pub eos: Option<u32>,
+    /// Token selection per decode step ([`Sampler::Greedy`] or seeded
+    /// [`Sampler::TopK`]; deterministic either way).
+    pub sampler: Sampler,
+}
+
+impl GenRequest {
+    /// Greedy generation with no EOS — the common case.
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { prompt, max_new_tokens, eos: None, sampler: Sampler::Greedy }
+    }
 }
 
 /// What the loop streams to a ticket.
@@ -119,6 +133,7 @@ struct PendingGen {
     prompt: Vec<u32>,
     max_new_tokens: usize,
     eos: Option<u32>,
+    sampler: Sampler,
     reply: mpsc::Sender<GenReply>,
     enqueued: Instant,
 }
@@ -130,6 +145,11 @@ struct GenState {
     reply: mpsc::Sender<GenReply>,
     max_new_tokens: usize,
     eos: Option<u32>,
+    /// Token-selection policy plus its private RNG: one draw per step,
+    /// owned by the request, so trajectories are independent of how
+    /// steps are batched.
+    sampler: Sampler,
+    rng: Pcg32,
     n_generated: usize,
 }
 
@@ -192,6 +212,9 @@ impl DecodeClient<'_> {
                 req.max_new_tokens, self.max_new_cap
             )));
         }
+        if let Err(e) = req.sampler.validate() {
+            return Err(ServeError::Invalid(format!("request {id}: {e}")));
+        }
         self.queue.admit(self.queue_depth)?;
         let (tx, rx) = mpsc::channel();
         {
@@ -208,6 +231,7 @@ impl DecodeClient<'_> {
                 prompt: req.prompt,
                 max_new_tokens: req.max_new_tokens,
                 eos: req.eos,
+                sampler: req.sampler,
                 reply: tx,
                 enqueued: Instant::now(),
             });
@@ -439,10 +463,11 @@ impl Server {
                         } else {
                             tally.decode_tokens += hi - lo;
                         }
-                        // Greedy argmax over the LM head of the span's
-                        // last hidden row — the next token.
+                        // The span's next token: the request's sampler
+                        // over the LM head of its last hidden row.
                         let last = x.row_block(hi - 1, hi);
-                        let tok = greedy_token(model.logits(&last).row(0));
+                        let tok =
+                            state.sampler.sample(model.logits(&last).row(0), &mut state.rng);
                         state.n_generated += 1;
                         let stop = state.n_generated >= state.max_new_tokens
                             || state.eos == Some(tok);
@@ -525,6 +550,8 @@ impl Server {
                             reply: p.reply,
                             max_new_tokens: p.max_new_tokens,
                             eos: p.eos,
+                            sampler: p.sampler,
+                            rng: p.sampler.rng(),
                             n_generated: 0,
                         };
                         cb.push(StepItem {
@@ -632,7 +659,7 @@ mod tests {
     }
 
     fn gen_req(prompt: Vec<u32>, max_new: usize) -> GenRequest {
-        GenRequest { prompt, max_new_tokens: max_new, eos: None }
+        GenRequest::greedy(prompt, max_new)
     }
 
     #[test]
@@ -687,7 +714,14 @@ mod tests {
         for (prompt, max_new, toks) in &outputs {
             let want = server
                 .model()
-                .generate(&mut engine, prompt, *max_new, None, ServePath::FullDecoder)
+                .generate(
+                    &mut engine,
+                    prompt,
+                    *max_new,
+                    None,
+                    ServePath::FullDecoder,
+                    Sampler::Greedy,
+                )
                 .unwrap();
             assert_eq!(toks, &want, "prompt {prompt:?} diverged from the reference");
         }
@@ -702,7 +736,7 @@ mod tests {
         let mut engine = NativeEngine::default();
         let want = server
             .model()
-            .generate(&mut engine, &prompt, 5, None, ServePath::FullDecoder)
+            .generate(&mut engine, &prompt, 5, None, ServePath::FullDecoder, Sampler::Greedy)
             .unwrap();
         let eos = want[1];
         let cut = want.iter().position(|&t| t == eos).unwrap();
@@ -713,6 +747,7 @@ mod tests {
                         prompt: prompt.clone(),
                         max_new_tokens: 5,
                         eos: Some(eos),
+                        sampler: Sampler::Greedy,
                     })
                     .unwrap();
                 let mut got = Vec::new();
@@ -741,9 +776,50 @@ mod tests {
         let mut engine = NativeEngine::default();
         let want = server
             .model()
-            .generate(&mut engine, &[1, 2, 3, 4], 3, None, ServePath::MlpOnly)
+            .generate(&mut engine, &[1, 2, 3, 4], 3, None, ServePath::MlpOnly, Sampler::Greedy)
             .unwrap();
         assert_eq!(toks, want);
+    }
+
+    #[test]
+    fn topk_decode_matches_the_sequential_sampled_reference() {
+        // Satellite acceptance: the sampler rides through the
+        // continuous-batching loop — each request owns its seeded RNG,
+        // so batched stochastic decoding is bit-identical to the
+        // sequential `SparseModel::generate` with the same sampler.
+        let server = decode_server(ServePath::FullDecoder);
+        let sampler = Sampler::TopK { k: 3, temperature: 0.7, seed: 2024 };
+        let (outputs, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for t in 0..2u64 {
+                        handles.push(s.spawn(move || {
+                            let prompt: Vec<u32> =
+                                (0..3).map(|j| ((t * 31 + j * 7) % 256) as u32).collect();
+                            let req = GenRequest {
+                                prompt: prompt.clone(),
+                                max_new_tokens: 4,
+                                eos: None,
+                                sampler,
+                            };
+                            let toks = client.submit(req).unwrap().wait().unwrap();
+                            (prompt, toks)
+                        }));
+                    }
+                    handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+                })
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 2);
+        let mut engine = NativeEngine::default();
+        for (prompt, toks) in &outputs {
+            let want = server
+                .model()
+                .generate(&mut engine, prompt, 4, None, ServePath::FullDecoder, sampler)
+                .unwrap();
+            assert_eq!(toks, &want, "prompt {prompt:?} diverged under top-k sampling");
+        }
     }
 
     #[test]
@@ -785,6 +861,25 @@ mod tests {
                 ));
                 assert!(matches!(
                     client.submit(gen_req(vec![1], 9)),
+                    Err(ServeError::Invalid(_))
+                ));
+                // Malformed samplers are rejected with the typed reason.
+                assert!(matches!(
+                    client.submit(GenRequest {
+                        prompt: vec![1],
+                        max_new_tokens: 2,
+                        eos: None,
+                        sampler: Sampler::TopK { k: 0, temperature: 1.0, seed: 0 },
+                    }),
+                    Err(ServeError::Invalid(_))
+                ));
+                assert!(matches!(
+                    client.submit(GenRequest {
+                        prompt: vec![1],
+                        max_new_tokens: 2,
+                        eos: None,
+                        sampler: Sampler::TopK { k: 2, temperature: 0.0, seed: 0 },
+                    }),
                     Err(ServeError::Invalid(_))
                 ));
                 // A valid one still flows.

@@ -41,7 +41,9 @@
 //!   [`ServeError::TimedOut`] through the ticket.
 //! * [`Server::run_decode_streaming`] is the *generation* loop: clients
 //!   submit prompts ([`DecodeClient::submit`] with a [`GenRequest`]) and
-//!   their [`GenTicket`]s stream greedy tokens as they are produced.
+//!   their [`GenTicket`]s stream tokens as they are produced, selected
+//!   per request by a [`Sampler`] (greedy argmax, or seeded top-k with
+//!   a per-request RNG so sampling is batching-independent).
 //!   Each request carries a per-request [`KvCache`]; prefill writes K/V
 //!   into it and every subsequent step runs one token of incremental
 //!   attention at the right RoPE offsets
@@ -78,7 +80,7 @@ pub use batcher::{
     StepItem,
 };
 pub use decode::{DecodeClient, DecodeReport, GenRequest, GenTicket};
-pub use model::{greedy_token, DenseModel, ServePath, SparseLayer, SparseModel};
+pub use model::{greedy_token, DenseModel, Sampler, ServePath, SparseLayer, SparseModel};
 pub use server::{ServeCfg, ServeReport, Server, StageStats};
 pub use stream::{ServeError, StreamClient, StreamReport, Ticket};
 

@@ -16,6 +16,8 @@ use crate::model::{
 use crate::runtime::{ExecBackend, TensorValue};
 use crate::sparsity::{Compressed, NmConfig};
 use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 
 /// Which sublayers of each decoder layer run on the sparse path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -307,6 +309,111 @@ pub fn greedy_token(logits: &[f32]) -> u32 {
     best as u32
 }
 
+/// Token-selection policy for the generation paths
+/// ([`SparseModel::generate`] and the continuous-batching decode loop).
+///
+/// Sampling is deterministic under a fixed seed: each generation owns a
+/// [`Pcg32`] derived from the sampler ([`Sampler::rng`]) and draws
+/// exactly once per step, so a request's token trajectory is identical
+/// whether it is served alone or coalesced into step batches.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Sampler {
+    /// Argmax ([`greedy_token`]) — the default, bit-reproducible
+    /// without any RNG state.
+    #[default]
+    Greedy,
+    /// Sample from the `temperature`-scaled softmax over the `k`
+    /// highest logits (ties broken toward lower token ids when ranking).
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+impl Sampler {
+    /// The per-generation RNG this sampler's draws come from.  Greedy
+    /// never consumes it; top-k consumes exactly one draw per step.
+    pub fn rng(&self) -> Pcg32 {
+        match self {
+            Sampler::Greedy => Pcg32::new(0, 0x5a3),
+            Sampler::TopK { seed, .. } => Pcg32::new(*seed, 0x5a3),
+        }
+    }
+
+    /// Reject malformed configurations with a human-readable reason
+    /// (checked once at submit time so the decode loop never panics on
+    /// a bad request).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            Sampler::Greedy => Ok(()),
+            Sampler::TopK { k, temperature, .. } => {
+                if *k == 0 {
+                    return Err("top-k sampler needs k >= 1".into());
+                }
+                if !temperature.is_finite() || *temperature <= 0.0 {
+                    return Err(format!(
+                        "top-k sampler needs a finite temperature > 0, got {temperature}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Pick the next token from one row of LM-head logits.
+    pub fn sample(&self, logits: &[f32], rng: &mut Pcg32) -> u32 {
+        match self {
+            Sampler::Greedy => greedy_token(logits),
+            Sampler::TopK { k, temperature, .. } => {
+                let k = (*k).clamp(1, logits.len());
+                // Rank by logit, ties toward the lower token id — the
+                // same deterministic order greedy_token uses.  NaNs
+                // group last (a degenerate model must not panic the
+                // decode collector: Rust's sorts reject non-total
+                // comparators), which makes this a strict total order,
+                // so partial selection of the k best then sorting just
+                // those k is identical to a full sort + truncate —
+                // O(V + k log k) per decode step instead of O(V log V).
+                let by_rank = |&a: &usize, &b: &usize| {
+                    let (fa, fb) = (logits[a], logits[b]);
+                    fa.is_nan()
+                        .cmp(&fb.is_nan())
+                        .then(fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal))
+                        .then(a.cmp(&b))
+                };
+                let mut order: Vec<usize> = (0..logits.len()).collect();
+                if k < order.len() {
+                    let _ = order.select_nth_unstable_by(k - 1, by_rank);
+                    order.truncate(k);
+                }
+                order.sort_by(by_rank);
+                // NaNs ranked last: trim them so they cannot poison the
+                // softmax normalizer (z = NaN would make every finite
+                // candidate unreachable).  All-NaN logits keep one entry
+                // and fall through to the deterministic tail return.
+                while order.len() > 1 && logits[*order.last().expect("k >= 1")].is_nan() {
+                    order.pop();
+                }
+                // Temperature-scaled softmax over the shortlist.
+                let mx = logits[order[0]];
+                let mut probs: Vec<f32> =
+                    order.iter().map(|&i| ((logits[i] - mx) / temperature).exp()).collect();
+                let z: f32 = probs.iter().sum();
+                for p in probs.iter_mut() {
+                    *p /= z;
+                }
+                // One inverse-CDF draw per step.
+                let u = rng.uniform();
+                let mut acc = 0.0f32;
+                for (p, &i) in probs.iter().zip(&order) {
+                    acc += p;
+                    if u < acc {
+                        return i as u32;
+                    }
+                }
+                *order.last().expect("k >= 1") as u32
+            }
+        }
+    }
+}
+
 /// The dense decoder-stage math for one layer, parameterized by how a
 /// linear is applied — the single copy shared by
 /// [`SparseModel::dense_stage`] and [`DenseModel::stage`] so the two
@@ -454,6 +561,12 @@ pub struct SparseModel {
     final_norm: Mat,
     /// LM head `[vocab, d]` — dense; the decode path's logits exit point.
     lm_head: Mat,
+    /// Canonical label of the recipe that produced the weights.
+    recipe_name: String,
+    /// Full JSON descriptor of that recipe — stamped into bench
+    /// artifacts (`sparse_inference --json`) so results always record
+    /// which metric × permutation × update combination they measure.
+    recipe_json: Json,
 }
 
 impl SparseModel {
@@ -502,11 +615,23 @@ impl SparseModel {
             tok_embed,
             final_norm,
             lm_head,
+            recipe_name: pruned.recipe.name(),
+            recipe_json: pruned.recipe.to_json(),
         })
     }
 
     pub fn cfg(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    /// Canonical label of the recipe that produced these weights.
+    pub fn recipe_name(&self) -> &str {
+        &self.recipe_name
+    }
+
+    /// JSON descriptor of the producing recipe (for bench artifacts).
+    pub fn recipe_json(&self) -> &Json {
+        &self.recipe_json
     }
 
     pub fn nm(&self) -> NmConfig {
@@ -712,13 +837,16 @@ impl SparseModel {
         head_logits(h, &self.final_norm, self.norm_eps, &self.lm_head)
     }
 
-    /// Greedy KV-cached generation: prefill `prompt` once, then decode
-    /// one token per step through [`SparseModel::forward_cached`],
-    /// stopping after `max_new_tokens` or at `eos` (which is included in
-    /// the output when hit).  This is the single-request reference the
+    /// KV-cached generation: prefill `prompt` once, then decode one
+    /// token per step through [`SparseModel::forward_cached`], picking
+    /// each token with `sampler` ([`Sampler::Greedy`] for argmax,
+    /// [`Sampler::TopK`] for seeded stochastic decoding), stopping
+    /// after `max_new_tokens` or at `eos` (which is included in the
+    /// output when hit).  This is the single-request reference the
     /// continuous-batching decode loop (`Server::run_decode_streaming`)
     /// is bit-compared against: same kernels, same per-span attention,
-    /// so batching must not change a request's tokens.
+    /// same one-draw-per-step RNG discipline, so batching must not
+    /// change a request's tokens.
     pub fn generate(
         &self,
         engine: &mut dyn ExecBackend,
@@ -726,8 +854,13 @@ impl SparseModel {
         max_new_tokens: usize,
         eos: Option<u32>,
         path: ServePath,
+        sampler: Sampler,
     ) -> Result<Vec<u32>> {
         anyhow::ensure!(max_new_tokens > 0, "max_new_tokens must be >= 1");
+        if let Err(e) = sampler.validate() {
+            anyhow::bail!("invalid sampler: {e}");
+        }
+        let mut rng = sampler.rng();
         let mut caches = vec![self.new_cache()];
         let mut x = self.embed(prompt)?;
         let mut out = Vec::with_capacity(max_new_tokens);
@@ -735,7 +868,7 @@ impl SparseModel {
             let rows = x.rows();
             let h = self.forward_cached(engine, &x, &[(0, rows)], &mut caches, path)?;
             let last = h.row_block(rows - 1, rows);
-            let tok = greedy_token(self.logits(&last).row(0));
+            let tok = sampler.sample(self.logits(&last).row(0), &mut rng);
             out.push(tok);
             if out.len() >= max_new_tokens || eos == Some(tok) {
                 return Ok(out);
@@ -928,13 +1061,13 @@ impl DenseModel {
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::coordinator::{prune_model, PipelineCfg, PruneMethod};
+    use crate::coordinator::{prune_with_recipe, PipelineCfg};
     use crate::data::{Corpus, CorpusKind};
     use crate::lcp::LcpCfg;
     use crate::model::synth_trained_params;
     use crate::pruning::Metric;
+    use crate::recipe::PruneRecipe;
     use crate::runtime::{NativeCfg, NativeEngine};
-    use crate::util::rng::Pcg32;
     use crate::util::testkit::assert_close;
 
     pub(crate) fn sparse_model_named(name: &str, nm: NmConfig) -> SparseModel {
@@ -949,7 +1082,7 @@ pub(crate) mod tests {
             lcp: LcpCfg { block: 16, steps: 6, lr: 0.1, nm, ..Default::default() },
             ..Default::default()
         };
-        let pruned = prune_model(&ps, &corpus, PruneMethod::OneShot(Metric::Wanda), &pc);
+        let pruned = prune_with_recipe(&ps, &corpus, &PruneRecipe::oneshot(Metric::Wanda, nm), &pc);
         SparseModel::from_pruned(&pruned).unwrap()
     }
 
@@ -982,8 +1115,12 @@ pub(crate) mod tests {
         let cfg = ModelConfig::by_name("tiny-s").unwrap();
         let ps = synth_trained_params(&cfg, 11);
         let corpus = Corpus::build(CorpusKind::C4Like, 5);
-        let pruned =
-            prune_model(&ps, &corpus, PruneMethod::Dense, &PipelineCfg::default());
+        let pruned = prune_with_recipe(
+            &ps,
+            &corpus,
+            &PruneRecipe::dense(NmConfig::PAT_2_4),
+            &PipelineCfg::default(),
+        );
         assert!(SparseModel::from_pruned(&pruned).is_err());
     }
 
@@ -1186,8 +1323,9 @@ pub(crate) mod tests {
         let sm = tiny_sparse_model();
         let mut engine = NativeEngine::default();
         let prompt: Vec<u32> = vec![5, 250, 17, 99];
-        let got =
-            sm.generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder).unwrap();
+        let got = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, Sampler::Greedy)
+            .unwrap();
         assert_eq!(got.len(), 6);
         // Reference: greedy loop that re-forwards the whole sequence per
         // step (no KV cache) — same kernels, so argmax must agree.
@@ -1207,14 +1345,119 @@ pub(crate) mod tests {
         // EOS cuts generation short and is included in the output.
         let eos = got[1];
         let stopped = sm
-            .generate(&mut engine, &prompt, 6, Some(eos), ServePath::FullDecoder)
+            .generate(&mut engine, &prompt, 6, Some(eos), ServePath::FullDecoder, Sampler::Greedy)
             .unwrap();
         let cut = got.iter().position(|&t| t == eos).expect("eos came from got");
         assert_eq!(stopped, got[..=cut].to_vec());
         // Degenerate arguments are rejected.
-        assert!(sm.generate(&mut engine, &prompt, 0, None, ServePath::FullDecoder).is_err());
+        assert!(sm
+            .generate(&mut engine, &prompt, 0, None, ServePath::FullDecoder, Sampler::Greedy)
+            .is_err());
+        assert!(sm
+            .generate(
+                &mut engine,
+                &prompt,
+                2,
+                None,
+                ServePath::FullDecoder,
+                Sampler::TopK { k: 0, temperature: 1.0, seed: 1 },
+            )
+            .is_err());
         assert!(sm.embed(&[]).is_err());
         assert!(sm.embed(&[sm.cfg().vocab as u32]).is_err());
+    }
+
+    #[test]
+    fn topk_sampling_is_seed_deterministic_and_k1_is_greedy() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let prompt: Vec<u32> = vec![12, 7, 200];
+        let topk = Sampler::TopK { k: 4, temperature: 0.8, seed: 99 };
+        let a = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, topk)
+            .unwrap();
+        let b = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, topk)
+            .unwrap();
+        // Same seed, same kernels => the stochastic trajectory is
+        // reproducible bit for bit.
+        assert_eq!(a, b);
+        // A different seed is allowed to (and here does) diverge from
+        // greedy at some step; k=1 must *always* equal greedy.
+        let greedy = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, Sampler::Greedy)
+            .unwrap();
+        let k1 = sm
+            .generate(
+                &mut engine,
+                &prompt,
+                6,
+                None,
+                ServePath::FullDecoder,
+                Sampler::TopK { k: 1, temperature: 0.5, seed: 3 },
+            )
+            .unwrap();
+        assert_eq!(k1, greedy);
+    }
+
+    #[test]
+    fn topk_sample_stays_inside_the_shortlist() {
+        // Statistical unit check on the sampler itself: draws only come
+        // from the k highest logits, and every shortlist member is
+        // reachable at a hot temperature.
+        let logits = vec![0.0f32, 5.0, 4.0, -1.0, 3.0, 2.0];
+        let sampler = Sampler::TopK { k: 3, temperature: 2.0, seed: 11 };
+        let mut rng = sampler.rng();
+        let mut seen = [0usize; 6];
+        for _ in 0..400 {
+            let t = sampler.sample(&logits, &mut rng) as usize;
+            seen[t] += 1;
+        }
+        // Top-3 by logit are tokens 1, 2, 4.
+        assert_eq!(seen[0] + seen[3] + seen[5], 0, "{seen:?}");
+        assert!(seen[1] > 0 && seen[2] > 0 && seen[4] > 0, "{seen:?}");
+        // Greedy on the same logits is the argmax.
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_sample_tolerates_nan_logits() {
+        // A degenerate model (NaN in the LM head) must not panic the
+        // decode collector: the ranking comparator stays a total order
+        // with NaNs grouped last, so they are never sampled while any
+        // real logit remains in the shortlist.
+        let logits = vec![f32::NAN, 2.0, f32::NAN, 1.0, 3.0, f32::NAN];
+        let sampler = Sampler::TopK { k: 3, temperature: 1.0, seed: 5 };
+        let mut rng = sampler.rng();
+        for _ in 0..100 {
+            let t = sampler.sample(&logits, &mut rng) as usize;
+            assert!(matches!(t, 1 | 3 | 4), "sampled NaN token {t}");
+        }
+        // k larger than the number of finite logits: the NaN tail is
+        // trimmed from the shortlist, so the single real logit is the
+        // only reachable token (a NaN softmax normalizer would
+        // otherwise make it unreachable).
+        let one_real = vec![1.0f32, f32::NAN, f32::NAN, f32::NAN];
+        for _ in 0..20 {
+            assert_eq!(sampler.sample(&one_real, &mut rng), 0);
+        }
+        // All-NaN logits still return deterministically instead of
+        // panicking (greedy's behavior on the same input is token 0).
+        let all_nan = vec![f32::NAN; 4];
+        let _ = sampler.sample(&all_nan, &mut rng);
+        assert_eq!(Sampler::Greedy.sample(&all_nan, &mut rng), 0);
+    }
+
+    #[test]
+    fn recipe_descriptor_is_stamped_into_the_model() {
+        let sm = tiny_sparse_model();
+        assert_eq!(sm.recipe_name(), "Wanda");
+        let j = sm.recipe_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("Wanda"));
+        assert_eq!(j.get("nm").and_then(Json::as_str), Some("2:4"));
+        // The descriptor round-trips through the recipe deserializer.
+        let back = PruneRecipe::from_json(j).unwrap();
+        assert_eq!(back.name(), sm.recipe_name());
     }
 
     #[test]

@@ -45,8 +45,8 @@ use permllm::recipe::{LearnedPerm, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
 use permllm::sparsity::NmConfig;
 use permllm::serve::{
-    greedy_token, BatcherCfg, DenseModel, KvCache, Request, ServeCfg, ServePath, ServeReport,
-    Server, SparseModel,
+    greedy_token, BatcherCfg, DenseModel, KvCache, Percentiles, Request, ServeCfg, ServePath,
+    ServeReport, Server, SparseModel,
 };
 use permllm::tensor::Mat;
 use permllm::util::cli::Cli;
@@ -84,9 +84,11 @@ fn engines(n: usize, threads: usize) -> Vec<Box<dyn ExecBackend + Send>> {
 /// One KV-cached generation bench over a batch of prompts: timed prefill
 /// (all prompts as one span batch) and a timed greedy decode loop
 /// (`gen_steps` one-token steps per prompt, batched across prompts).
-/// Returns `(prefill_seconds, decode_seconds, per-prompt tokens)` —
-/// generic over the model via closures so the dense baseline and both
-/// sparse paths run the identical loop.
+/// Returns `(prefill_seconds, decode_seconds, per-step seconds,
+/// per-prompt tokens)` — the per-step samples feed the decode
+/// tail-latency percentiles in the bench artifact — generic over the
+/// model via closures so the dense baseline and both sparse paths run
+/// the identical loop.
 fn decode_bench(
     width: usize,
     new_cache: &dyn Fn() -> KvCache,
@@ -95,7 +97,7 @@ fn decode_bench(
     mut fwd: impl FnMut(&Mat, &[(usize, usize)], &mut [KvCache]) -> anyhow::Result<Mat>,
     prompts: &[Vec<u32>],
     gen_steps: usize,
-) -> anyhow::Result<(f64, f64, Vec<Vec<u32>>)> {
+) -> anyhow::Result<(f64, f64, Vec<f64>, Vec<Vec<u32>>)> {
     let r = prompts.len();
     let rows = prompts[0].len();
     let mut caches: Vec<KvCache> = (0..r).map(|_| new_cache()).collect();
@@ -118,8 +120,10 @@ fn decode_bench(
         cur.row_mut(i).copy_from_slice(h.row(hi - 1));
     }
     let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); r];
+    let mut step_s = Vec::with_capacity(gen_steps);
     let t1 = Instant::now();
     for _ in 0..gen_steps {
+        let s0 = Instant::now();
         let logits = logits_of(&cur);
         let mut xs = Mat::zeros(r, width);
         for i in 0..r {
@@ -128,9 +132,18 @@ fn decode_bench(
             xs.row_mut(i).copy_from_slice(embed(&[tok])?.row(0));
         }
         cur = fwd(&xs, &step_spans, &mut caches)?;
+        step_s.push(s0.elapsed().as_secs_f64());
     }
     let decode_s = t1.elapsed().as_secs_f64();
-    Ok((prefill_s, decode_s, tokens))
+    Ok((prefill_s, decode_s, step_s, tokens))
+}
+
+/// Nearest-rank p50/p90/p99 over per-decode-step seconds, in ms — every
+/// request advances one token per step, so a step's duration *is* the
+/// per-token latency at this batch size.
+fn step_percentiles_ms(step_s: &[f64]) -> Percentiles {
+    let mut ms: Vec<f64> = step_s.iter().map(|s| s * 1e3).collect();
+    Percentiles::of(&mut ms)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -286,9 +299,9 @@ fn main() -> anyhow::Result<()> {
             gen_steps,
         )
     };
-    let (mlp_pre_s, mlp_dec_s, _) = bench_path(ServePath::MlpOnly)?;
-    let (fd_pre_s, fd_dec_s, fd_tokens) = bench_path(ServePath::FullDecoder)?;
-    let (dn_pre_s, dn_dec_s, dn_tokens) = decode_bench(
+    let (mlp_pre_s, mlp_dec_s, mlp_step_s, _) = bench_path(ServePath::MlpOnly)?;
+    let (fd_pre_s, fd_dec_s, fd_step_s, fd_tokens) = bench_path(ServePath::FullDecoder)?;
+    let (dn_pre_s, dn_dec_s, dn_step_s, dn_tokens) = decode_bench(
         dense.width(),
         &|| dense.new_cache(),
         &|t| dense.embed(t),
@@ -308,6 +321,16 @@ fn main() -> anyhow::Result<()> {
     println!(
         "[decode bench]   full-decoder decode speedup vs dense: {:.2}x",
         fd_dec / dn_dec.max(1e-12)
+    );
+    let (dn_lat, mlp_lat, fd_lat) = (
+        step_percentiles_ms(&dn_step_s),
+        step_percentiles_ms(&mlp_step_s),
+        step_percentiles_ms(&fd_step_s),
+    );
+    println!(
+        "[decode bench]   per-token latency (ms): dense p50 {:.3} / p99 {:.3}, mlp-only p50 \
+         {:.3} / p99 {:.3}, full-decoder p50 {:.3} / p99 {:.3}",
+        dn_lat.p50, dn_lat.p99, mlp_lat.p50, mlp_lat.p99, fd_lat.p50, fd_lat.p99
     );
 
     // Decode parity: the KV-cached full-decoder generation of prompt 0
@@ -368,6 +391,17 @@ fn main() -> anyhow::Result<()> {
         ("sparse_full_decoder_prefill_tokens_per_s", json::num(fd_pre)),
         ("sparse_full_decoder_decode_tokens_per_s", json::num(fd_dec)),
         ("decode_speedup_vs_dense", json::num(fd_dec / dn_dec.max(1e-12))),
+        // Decode tail latency (nearest-rank percentiles over per-step
+        // wall clock, ms) — BENCH_serving.json's tail-latency columns.
+        ("dense_decode_token_latency_p50_ms", json::num(dn_lat.p50)),
+        ("dense_decode_token_latency_p90_ms", json::num(dn_lat.p90)),
+        ("dense_decode_token_latency_p99_ms", json::num(dn_lat.p99)),
+        ("sparse_mlp_only_decode_token_latency_p50_ms", json::num(mlp_lat.p50)),
+        ("sparse_mlp_only_decode_token_latency_p90_ms", json::num(mlp_lat.p90)),
+        ("sparse_mlp_only_decode_token_latency_p99_ms", json::num(mlp_lat.p99)),
+        ("sparse_full_decoder_decode_token_latency_p50_ms", json::num(fd_lat.p50)),
+        ("sparse_full_decoder_decode_token_latency_p90_ms", json::num(fd_lat.p90)),
+        ("sparse_full_decoder_decode_token_latency_p99_ms", json::num(fd_lat.p99)),
     ]);
     let json_path = p.get("json");
     if !json_path.is_empty() {

@@ -322,6 +322,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("linger-ms", "2", "streaming: micro-batch linger (ms) before dispatching a partial batch")
     .opt("queue-depth", "0", "streaming/decode: max in-flight requests before submit fails fast (0 = unbounded)")
     .opt("timeout-ms", "0", "streaming/decode: per-request queue timeout in ms (0 = disabled)")
+    .opt("stats-every", "0", "streaming/decode: emit a StatsReport JSON line to stderr every N ms (0 = off)")
     .parse_from(args)
     .map_err(|e| anyhow!(e))?;
 
@@ -373,6 +374,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             linger: Duration::from_millis(p.get_u64("linger-ms")),
             queue_depth: p.get_usize("queue-depth"),
             request_timeout: Duration::from_millis(p.get_u64("timeout-ms")),
+            stats_every: Duration::from_millis(p.get_u64("stats-every")),
             ..ServeCfg::default()
         },
     );
@@ -520,6 +522,11 @@ fn run_serve_streaming(
         report.tokens_per_s(),
         report.total_tokens
     );
+    let lat = &report.stats.request_latency_ms;
+    println!(
+        "request latency: p50 {:.2}ms / p90 {:.2}ms / p99 {:.2}ms over {} samples",
+        lat.p50, lat.p90, lat.p99, lat.n
+    );
     let mut max_err = 0.0f32;
     for (y, x) in &outputs {
         let want = server.model().dense_forward(x, &[(0, x.rows())], path);
@@ -648,6 +655,17 @@ fn run_serve_decode(
         report.total_seconds,
         report.tokens_per_s(),
         report.generated_per_s()
+    );
+    let req = &report.stats.request_latency_ms;
+    let tok = &report.stats.token_latency_ms;
+    println!(
+        "request latency: p50 {:.2}ms / p90 {:.2}ms / p99 {:.2}ms; per-token: p50 {:.2}ms / \
+         p90 {:.2}ms / p99 {:.2}ms",
+        req.p50, req.p90, req.p99, tok.p50, tok.p90, tok.p99
+    );
+    println!(
+        "KV cache: {} bytes high water ({} resident at drain)",
+        report.stats.kv_high_water_bytes, report.stats.kv_bytes
     );
     // Verify a sample against the sequential KV-cached reference (same
     // sampler, so greedy and seeded top-k must both match exactly).

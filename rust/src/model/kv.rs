@@ -75,6 +75,13 @@ impl KvCache {
         self.k.iter().chain(&self.v).map(|b| b.len() * 4).sum()
     }
 
+    /// What [`KvCache::bytes`] returns once `positions` rows are cached
+    /// at every layer — the closed form serving-memory accounting (and
+    /// its tests) check observed residency against.
+    pub fn bytes_for(n_layers: usize, dim: usize, positions: usize) -> usize {
+        2 * n_layers * positions * dim * 4
+    }
+
     /// Append `[t_new, dim]` rotated keys and values for `layer`.
     pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
         assert_eq!(k_rows.cols(), self.dim, "key width != cache dim");
@@ -123,6 +130,7 @@ mod tests {
         cache.append(1, &k, &v);
         // 2 layers x (K + V) x 3 rows x 4 cols x 4 bytes.
         assert_eq!(cache.bytes(), 2 * 2 * 3 * 4 * 4);
+        assert_eq!(cache.bytes(), KvCache::bytes_for(2, 4, 3));
         let (km, vm) = cache.mats(0);
         assert_eq!(km.data(), k.data());
         assert_eq!(vm.data(), v.data());

@@ -30,7 +30,17 @@
 //! Backpressure ([`super::ServeCfg::queue_depth`] /
 //! [`super::ServeCfg::request_timeout`]) and shutdown semantics match
 //! the forward loop: closing admissions drains every in-flight
-//! generation to its stop condition before the loop returns.
+//! generation to its stop condition before the loop returns.  The
+//! timeout is a deadline on the *whole generation*: a request can
+//! expire before prefill or mid-generation, every time it rejoins the
+//! step pool — the ticket observes [`ServeError::TimedOut`], the
+//! in-flight slot frees, and the request's [`KvCache`] drops.
+//!
+//! The loop is instrumented through the [`super::stats`] plane: submit,
+//! scheduler, and collector record typed [`super::StatsEvent`]s, and
+//! [`DecodeReport::stats`] carries the final [`super::StatsReport`]
+//! (periodic reports stream through [`super::ServeCfg::stats_every`] /
+//! [`super::ServeCfg::stats_sink`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -41,6 +51,10 @@ use anyhow::Result;
 use super::batcher::{ContinuousBatcher, StepItem};
 use super::model::Sampler;
 use super::server::{Server, StageStats};
+use super::stats::{
+    ReqOutcome, SamplerStop, StatsEvent, StatsHub, StatsRecorder, StatsReport, StatsSink,
+    DEFAULT_WINDOW,
+};
 use super::stream::{CloseGuard, HasClosed, ServeError, SharedQueue};
 use crate::model::KvCache;
 use crate::runtime::ExecBackend;
@@ -151,6 +165,17 @@ struct GenState {
     sampler: Sampler,
     rng: Pcg32,
     n_generated: usize,
+    /// When the request was submitted — the generation-wide
+    /// `request_timeout` deadline is measured from here, and so is the
+    /// request's end-to-end latency sample.
+    enqueued: Instant,
+    /// When the previous token was streamed (the enqueue time until the
+    /// first token) — per-token latency samples are the gaps.
+    last_token_at: Instant,
+    /// Last observed [`KvCache::bytes`] for this request, so the
+    /// collector can record growth deltas and free the exact resident
+    /// amount when the generation ends.
+    kv_bytes: usize,
 }
 
 /// An in-flight request re-entering the pool for its next decode step.
@@ -183,6 +208,7 @@ pub struct DecodeClient<'q> {
     vocab: usize,
     queue_depth: usize,
     max_new_cap: usize,
+    stats: &'q StatsRecorder,
 }
 
 impl DecodeClient<'_> {
@@ -215,7 +241,12 @@ impl DecodeClient<'_> {
         if let Err(e) = req.sampler.validate() {
             return Err(ServeError::Invalid(format!("request {id}: {e}")));
         }
-        self.queue.admit(self.queue_depth)?;
+        self.stats.record(StatsEvent::Submitted);
+        if let Err(e) = self.queue.admit(self.queue_depth) {
+            self.stats.record(StatsEvent::Rejected);
+            return Err(e);
+        }
+        self.stats.record(StatsEvent::Admitted);
         let (tx, rx) = mpsc::channel();
         {
             let mut st = self.queue.state.lock().unwrap();
@@ -224,6 +255,7 @@ impl DecodeClient<'_> {
                 // re-takes it to publish the wakeup.
                 drop(st);
                 self.queue.unadmit();
+                self.stats.record(StatsEvent::Retracted);
                 return Err(ServeError::ShuttingDown);
             }
             st.pending.push(PendingGen {
@@ -249,6 +281,9 @@ struct DecodeWork {
     states: Vec<GenState>,
     caches: Vec<KvCache>,
     stage_s: Vec<f64>,
+    /// When the scheduler dispatched this step — step latency is the
+    /// gap to the collector picking it up.
+    dispatched: Instant,
     err: Option<String>,
 }
 
@@ -280,7 +315,10 @@ pub struct DecodeReport {
     pub generated_tokens: usize,
     /// Step batches dispatched.
     pub n_steps: usize,
-    /// Generations admitted into the loop.
+    /// Generations served to a terminal state other than expiry —
+    /// admissions net of `n_timed_out`, so
+    /// `n_requests == n_completed + n_abandoned + n_failed` and
+    /// `n_requests + n_timed_out` equals successful submissions.
     pub n_requests: usize,
     /// Generations that ran to their stop condition (max-new-tokens or
     /// EOS).
@@ -290,10 +328,15 @@ pub struct DecodeReport {
     pub n_abandoned: usize,
     /// Generations whose batch failed mid-pipeline.
     pub n_failed: usize,
-    /// Generations expired before prefill ([`ServeError::TimedOut`]).
+    /// Generations expired by `request_timeout`
+    /// ([`ServeError::TimedOut`]) — before prefill or mid-generation,
+    /// checked every time the request rejoins the step pool.
     pub n_timed_out: usize,
     /// Submissions refused at admission ([`ServeError::QueueFull`]).
     pub n_rejected: usize,
+    /// Final aggregate from the serve-loop metrics plane: latency
+    /// percentiles, KV high-water bytes, occupancy histogram.
+    pub stats: StatsReport,
 }
 
 impl DecodeReport {
@@ -354,6 +397,16 @@ impl Server {
         let batcher_cfg = self.cfg().batcher.clone();
         let queue: SharedQueue<GenQueueState> = SharedQueue::new();
         let next_id = AtomicU64::new(0);
+        // Metrics plane: recorders used by non-`move` closures must
+        // outlive the scope, so they are declared here; stage threads
+        // create their own and move them in.
+        let stats_every = self.cfg().stats_every;
+        let sink = self.cfg().stats_sink.clone().unwrap_or_default();
+        let hub = StatsHub::new(DEFAULT_WINDOW);
+        let submit_stats = hub.recorder();
+        let sched_stats = hub.recorder();
+        let coll_stats = hub.recorder();
+        let sampler_stop = SamplerStop::new();
         let t0 = Instant::now();
 
         let (result, tally) = std::thread::scope(|scope| {
@@ -363,6 +416,7 @@ impl Server {
                 let mut engine = engines.into_iter().next().expect("len checked");
                 let (tx, rx) = mpsc::channel::<DecodeWork>();
                 let rx_in = std::mem::replace(&mut prev_rx, rx);
+                let stage_rec = hub.recorder();
                 scope.spawn(move || {
                     for mut work in rx_in {
                         for layer in 0..n_stages {
@@ -379,8 +433,10 @@ impl Server {
                                 path,
                             ) {
                                 Ok(y) => {
+                                    let s = s0.elapsed().as_secs_f64();
                                     work.x = y;
-                                    work.stage_s.push(s0.elapsed().as_secs_f64());
+                                    work.stage_s.push(s);
+                                    stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                 }
                                 Err(e) => work.err = Some(format!("{e:#}")),
                             }
@@ -394,6 +450,7 @@ impl Server {
                 for (layer, mut engine) in engines.into_iter().take(n_stages).enumerate() {
                     let (tx, rx) = mpsc::channel::<DecodeWork>();
                     let rx_in = std::mem::replace(&mut prev_rx, rx);
+                    let stage_rec = hub.recorder();
                     scope.spawn(move || {
                         for mut work in rx_in {
                             if work.err.is_none() {
@@ -407,8 +464,10 @@ impl Server {
                                     path,
                                 ) {
                                     Ok(y) => {
+                                        let s = s0.elapsed().as_secs_f64();
                                         work.x = y;
-                                        work.stage_s.push(s0.elapsed().as_secs_f64());
+                                        work.stage_s.push(s);
+                                        stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                     }
                                     Err(e) => work.err = Some(format!("{e:#}")),
                                 }
@@ -439,8 +498,13 @@ impl Server {
                     n_failed: 0,
                 };
                 for work in done_rx {
-                    let DecodeWork { x, spans, prefill, states, caches, stage_s, err } = work;
+                    let DecodeWork { x, spans, prefill, states, caches, stage_s, dispatched, err } =
+                        work;
+                    let done_at = Instant::now();
                     tally.n_steps += 1;
+                    coll_stats.record(StatsEvent::StepDone {
+                        seconds: done_at.duration_since(dispatched).as_secs_f64(),
+                    });
                     let tokens = x.rows();
                     for (layer, s) in stage_s.iter().enumerate() {
                         tally.stage_stats[layer].seconds += s;
@@ -450,6 +514,11 @@ impl Server {
                         for state in states {
                             let _ = state.reply.send(Err(ServeError::Stage(e.clone())));
                             tally.n_failed += 1;
+                            coll_stats.record(StatsEvent::RequestDone {
+                                latency_s: done_at.duration_since(state.enqueued).as_secs_f64(),
+                                outcome: ReqOutcome::Failed,
+                            });
+                            coll_stats.kv_free(state.kv_bytes);
                             queue_ref.release();
                         }
                         continue;
@@ -463,27 +532,47 @@ impl Server {
                         } else {
                             tally.decode_tokens += hi - lo;
                         }
+                        // The cache only grows: record the step's growth
+                        // so the gauge tracks resident + high-water KV.
+                        let cache_bytes = cache.bytes();
+                        coll_stats.kv_alloc(cache_bytes - state.kv_bytes);
+                        state.kv_bytes = cache_bytes;
                         // The span's next token: the request's sampler
                         // over the LM head of its last hidden row.
                         let last = x.row_block(hi - 1, hi);
                         let tok =
                             state.sampler.sample(model.logits(&last).row(0), &mut state.rng);
                         state.n_generated += 1;
-                        let stop = state.n_generated >= state.max_new_tokens
+                        let ended = state.n_generated >= state.max_new_tokens
                             || state.eos == Some(tok);
                         // A dropped ticket ends its generation early —
                         // no point decoding for nobody.
                         let delivered = state.reply.send(Ok(GenEvent::Token(tok))).is_ok();
                         if delivered {
                             tally.generated_tokens += 1;
+                            coll_stats.record(StatsEvent::TokenStreamed {
+                                latency_s: done_at
+                                    .duration_since(state.last_token_at)
+                                    .as_secs_f64(),
+                            });
+                            state.last_token_at = done_at;
                         }
-                        if stop || !delivered {
+                        if ended || !delivered {
                             let _ = state.reply.send(Ok(GenEvent::Done));
-                            if stop {
+                            if ended {
                                 tally.n_completed += 1;
                             } else {
                                 tally.n_abandoned += 1;
                             }
+                            coll_stats.record(StatsEvent::RequestDone {
+                                latency_s: done_at.duration_since(state.enqueued).as_secs_f64(),
+                                outcome: if ended {
+                                    ReqOutcome::Completed
+                                } else {
+                                    ReqOutcome::Abandoned
+                                },
+                            });
+                            coll_stats.kv_free(state.kv_bytes);
                             queue_ref.release();
                         } else {
                             let mut st = queue_ref.state.lock().unwrap();
@@ -537,10 +626,12 @@ impl Server {
                                 queue.arrived.wait_timeout(st, deadline - now).unwrap();
                             st = guard;
                         }
+                        sched_stats.set_queue_depth(st.pending.len() + st.rejoin.len());
                         (st.pending.drain(..).collect(), st.rejoin.drain(..).collect())
                     };
                     for p in news {
                         if let Some(e) = queue.stale(p.enqueued, timeout) {
+                            sched_stats.record(StatsEvent::Expired);
                             let _ = p.reply.send(Err(e));
                             continue;
                         }
@@ -553,6 +644,9 @@ impl Server {
                             sampler: p.sampler,
                             rng: p.sampler.rng(),
                             n_generated: 0,
+                            enqueued: p.enqueued,
+                            last_token_at: p.enqueued,
+                            kv_bytes: 0,
                         };
                         cb.push(StepItem {
                             id: p.id,
@@ -563,6 +657,18 @@ impl Server {
                         .expect("prefill step validated at submit");
                     }
                     for r in rejoins {
+                        // `request_timeout` is a deadline on the whole
+                        // generation, so it is re-checked at every
+                        // rejoin, not just before prefill: the ticket
+                        // observes the typed error, the in-flight slot
+                        // frees, and dropping the rejoin drops its
+                        // KvCache.
+                        if let Some(e) = queue.stale(r.state.enqueued, timeout) {
+                            sched_stats.record(StatsEvent::Expired);
+                            sched_stats.kv_free(r.state.kv_bytes);
+                            let _ = r.state.reply.send(Err(e));
+                            continue;
+                        }
                         let x = model.embed(&[r.token]).expect("generated token is in-vocab");
                         cb.push(StepItem {
                             id: r.state.id,
@@ -573,6 +679,11 @@ impl Server {
                         .expect("decode step is one row");
                     }
                     while let Some(batch) = cb.next_batch() {
+                        sched_stats.record(StatsEvent::BatchDispatched {
+                            requests: batch.n_requests(),
+                            prefill_tokens: batch.prefill_tokens(),
+                            decode_tokens: batch.decode_tokens(),
+                        });
                         let spans = batch.spans().to_vec();
                         let (states, caches): (Vec<GenState>, Vec<KvCache>) =
                             batch.payloads.into_iter().unzip();
@@ -583,6 +694,7 @@ impl Server {
                             states,
                             caches,
                             stage_s: Vec::with_capacity(n_stages),
+                            dispatched: Instant::now(),
                             err: None,
                         };
                         if tx.send(work).is_err() {
@@ -593,6 +705,20 @@ impl Server {
                 // Dropping `tx` lets the stage chain and collector drain.
             });
 
+            // ---- periodic stats sampler (only when enabled) ----
+            if !stats_every.is_zero() {
+                let scope_queue = &queue;
+                let scope_hub = &hub;
+                let scope_sink = &sink;
+                let scope_stop = &sampler_stop;
+                scope.spawn(move || {
+                    while !scope_stop.wait_for(stats_every) {
+                        let in_flight = scope_queue.in_flight.load(Ordering::Acquire);
+                        scope_sink.emit(&scope_hub.sample(in_flight, false));
+                    }
+                });
+            }
+
             // ---- client closure on the caller's thread ----
             let close = CloseGuard(&queue);
             let result = client_fn(DecodeClient {
@@ -601,12 +727,20 @@ impl Server {
                 vocab: model.cfg().vocab,
                 queue_depth,
                 max_new_cap,
+                stats: &submit_stats,
             });
             drop(close);
             let tally = collector.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            sampler_stop.stop();
             (result, tally)
         });
 
+        let stats = hub.sample(queue.in_flight.load(Ordering::Acquire), true);
+        if !stats_every.is_zero() {
+            sink.emit(&stats);
+        }
+        let admitted = queue.admitted.load(Ordering::Relaxed);
+        let timed_out = queue.timed_out.load(Ordering::Relaxed);
         Ok((
             result,
             DecodeReport {
@@ -616,12 +750,13 @@ impl Server {
                 decode_tokens: tally.decode_tokens,
                 generated_tokens: tally.generated_tokens,
                 n_steps: tally.n_steps,
-                n_requests: queue.admitted.load(Ordering::Relaxed),
+                n_requests: admitted.saturating_sub(timed_out),
                 n_completed: tally.n_completed,
                 n_abandoned: tally.n_abandoned,
                 n_failed: tally.n_failed,
-                n_timed_out: queue.timed_out.load(Ordering::Relaxed),
+                n_timed_out: timed_out,
                 n_rejected: queue.rejected.load(Ordering::Relaxed),
+                stats,
             },
         ))
     }
@@ -888,5 +1023,237 @@ mod tests {
             .unwrap();
         assert_eq!(report.n_completed, 1);
         assert_eq!(report.n_failed, 0);
+    }
+
+    #[test]
+    fn mid_generation_timeout_expires_slot_and_kv() {
+        // `request_timeout` is a whole-generation deadline: a generation
+        // that keeps rejoining past it must expire through its ticket
+        // with the typed error, free its in-flight slot (the follow-up
+        // submit succeeds), and release its KV cache (final resident
+        // bytes are zero).  Pre-fix, the deadline was only checked
+        // before prefill and this request ran all the way to
+        // `max_new_tokens`.
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().queue_depth = 1;
+        server.cfg_mut().request_timeout = Duration::from_millis(40);
+        let ((n_tokens, timed_out), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                let mut ticket = client.submit(gen_req(vec![1, 2, 3], 5000)).unwrap();
+                let mut n_tokens = 0usize;
+                let timed_out = loop {
+                    match ticket.next_token() {
+                        Some(Ok(_)) => n_tokens += 1,
+                        Some(Err(ServeError::TimedOut { .. })) => break true,
+                        Some(Err(e)) => panic!("unexpected stream error: {e:?}"),
+                        None => break false,
+                    }
+                };
+                // The slot freed: a fresh generation is admitted and
+                // completes.  The expiry is published to the ticket just
+                // before the slot releases, so retry the race away.
+                let follow = loop {
+                    match client.submit(gen_req(vec![4, 5], 2)) {
+                        Ok(t) => break t,
+                        Err(ServeError::QueueFull { .. }) => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => panic!("unexpected submit error: {e:?}"),
+                    }
+                };
+                assert_eq!(follow.wait().unwrap().len(), 2);
+                (n_tokens, timed_out)
+            })
+            .unwrap();
+        assert!(timed_out, "generation must expire mid-flight, not run to max_new_tokens");
+        assert!(n_tokens >= 1, "prefill beat the deadline, some tokens streamed");
+        assert!(n_tokens < 5000, "expired long before the cap");
+        assert_eq!(report.n_timed_out, 1);
+        assert_eq!(report.n_requests, 1, "only the follow-up reached a served terminal state");
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.stats.n_expired, 1);
+        assert_eq!(report.stats.kv_bytes, 0, "the expired generation's cache was released");
+        assert!(report.stats.kv_high_water_bytes > 0);
+    }
+
+    #[test]
+    fn decode_counters_add_up_under_concurrent_stress() {
+        // Accounting invariant: every submission lands in exactly one
+        // bucket, so `n_requests + n_timed_out + n_rejected` equals
+        // submissions — including generations expired *after* admission
+        // — under concurrent clients racing a tight deadline and a
+        // shallow queue.
+        let mut server = decode_server(ServePath::MlpOnly);
+        server.cfg_mut().queue_depth = 2;
+        server.cfg_mut().request_timeout = Duration::from_millis(25);
+        let ((ok, rejected, timed_out, completed), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for t in 0..4u32 {
+                        handles.push(s.spawn(move || {
+                            let (mut ok, mut rejected, mut timed_out, mut completed) =
+                                (0usize, 0usize, 0usize, 0usize);
+                            for i in 0..6u32 {
+                                let prompt: Vec<u32> = (0..1 + (t + i) % 3)
+                                    .map(|j| (t * 37 + i * 11 + j) % 256)
+                                    .collect();
+                                let max_new = 1 + ((t + i) % 4) as usize * 40;
+                                match client.submit(gen_req(prompt, max_new)) {
+                                    Ok(ticket) => {
+                                        ok += 1;
+                                        match ticket.wait() {
+                                            Ok(_) => completed += 1,
+                                            Err(ServeError::TimedOut { .. }) => timed_out += 1,
+                                            Err(e) => panic!("unexpected outcome: {e:?}"),
+                                        }
+                                    }
+                                    Err(ServeError::QueueFull { .. }) => rejected += 1,
+                                    Err(e) => panic!("unexpected submit error: {e:?}"),
+                                }
+                            }
+                            (ok, rejected, timed_out, completed)
+                        }));
+                    }
+                    handles.into_iter().map(|h| h.join().unwrap()).fold(
+                        (0, 0, 0, 0),
+                        |acc, c| (acc.0 + c.0, acc.1 + c.1, acc.2 + c.2, acc.3 + c.3),
+                    )
+                })
+            })
+            .unwrap();
+        assert_eq!(ok + rejected, 24, "every submission got a typed outcome");
+        assert_eq!(ok, completed + timed_out);
+        assert_eq!(report.n_rejected, rejected);
+        assert_eq!(report.n_timed_out, timed_out);
+        assert_eq!(report.n_requests + report.n_timed_out, ok, "admissions all accounted for");
+        assert_eq!(report.n_requests, report.n_completed + report.n_abandoned + report.n_failed);
+        assert_eq!(report.n_completed, completed);
+        assert_eq!(report.n_abandoned, 0, "every ticket was awaited");
+        assert_eq!(report.n_failed, 0);
+        assert_eq!(report.stats.n_admitted, ok);
+        assert_eq!(report.stats.n_rejected, rejected);
+        assert_eq!(report.stats.n_expired, timed_out);
+        assert_eq!(report.stats.n_completed, completed);
+        assert_eq!(report.stats.in_flight, 0);
+        assert_eq!(report.stats.kv_bytes, 0, "every terminal path released its cache");
+    }
+
+    #[test]
+    fn kv_lifecycle_releases_caches_and_tracks_high_water() {
+        // Completed, EOS-stopped, and shutdown-drained generations all
+        // release their caches: final resident KV is zero and the
+        // high-water mark equals the closed-form hand computation over a
+        // staggered sequential scenario.  A generation with `pl` prompt
+        // tokens that streams `g` tokens peaks at `pl + g - 1` cached
+        // positions (the step producing token `k` runs with
+        // `pl + k - 1` positions resident).
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().queue_depth = 1;
+        let n_layers = server.model().cfg().n_layers;
+        let dim = server.model().width();
+        let cases: [(usize, usize); 3] = [(3, 4), (5, 1), (2, 6)];
+        // EOS reference: generation stops right after producing
+        // `want[1]` the first time it appears.
+        let eos_prompt: Vec<u32> = vec![7, 3, 11];
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &eos_prompt, 5, None, ServePath::FullDecoder, Sampler::Greedy)
+            .unwrap();
+        let eos = want[1];
+        let eos_len = want.iter().position(|&t| t == eos).unwrap() + 1;
+        let (drain_ticket, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                // queue_depth = 1 serializes the cases; the previous
+                // slot releases just after its Done arrives, so retry
+                // the submit race away.
+                let submit_retry = |req: GenRequest| loop {
+                    match client.submit(req.clone()) {
+                        Ok(t) => break t,
+                        Err(ServeError::QueueFull { .. }) => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => panic!("unexpected submit error: {e:?}"),
+                    }
+                };
+                for &(pl, g) in &cases {
+                    let prompt: Vec<u32> =
+                        (0..pl as u32).map(|j| (j * 13 + 5) % 256).collect();
+                    assert_eq!(submit_retry(gen_req(prompt, g)).wait().unwrap().len(), g);
+                }
+                let toks = submit_retry(GenRequest {
+                    prompt: eos_prompt.clone(),
+                    max_new_tokens: 5,
+                    eos: Some(eos),
+                    sampler: Sampler::Greedy,
+                })
+                .wait()
+                .unwrap();
+                assert_eq!(toks.len(), eos_len);
+                // Shutdown-drained: return the ticket (keep it alive) so
+                // the drain completes the generation instead of
+                // abandoning it at the first undeliverable token.
+                submit_retry(gen_req(vec![9, 10], 3))
+            })
+            .unwrap();
+        assert_eq!(drain_ticket.wait().unwrap().len(), 3);
+        assert_eq!(report.n_completed, 5);
+        assert_eq!(report.n_abandoned, 0);
+        let peak_positions = cases
+            .iter()
+            .map(|&(pl, g)| pl + g - 1)
+            .chain([eos_prompt.len() + eos_len - 1, 2 + 3 - 1])
+            .max()
+            .unwrap();
+        assert_eq!(
+            report.stats.kv_high_water_bytes,
+            KvCache::bytes_for(n_layers, dim, peak_positions),
+            "high-water KV must match the closed form"
+        );
+        assert_eq!(report.stats.kv_bytes, 0, "every generation released its cache");
+    }
+
+    #[test]
+    fn stats_sampler_emits_periodic_monotone_reports() {
+        use std::sync::{Arc, Mutex};
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().stats_every = Duration::from_millis(10);
+        let collected: Arc<Mutex<Vec<StatsReport>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink_reports = Arc::clone(&collected);
+        server.cfg_mut().stats_sink = Some(StatsSink::new(move |r: &StatsReport| {
+            sink_reports.lock().unwrap().push(r.clone());
+        }));
+        let (tickets, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                let tickets = (0..2u32)
+                    .map(|i| client.submit(gen_req(vec![i + 1, i + 5, i + 9], 60)).unwrap())
+                    .collect::<Vec<_>>();
+                // Keep the loop alive across a few sampling periods.
+                std::thread::sleep(Duration::from_millis(35));
+                tickets
+            })
+            .unwrap();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), 60);
+        }
+        let reports = collected.lock().unwrap();
+        assert!(!reports.is_empty(), "at least the final report reaches the sink");
+        for r in reports.iter() {
+            for p in [&r.request_latency_ms, &r.token_latency_ms, &r.step_latency_ms] {
+                assert!(
+                    p.p50 <= p.p90 && p.p90 <= p.p99,
+                    "percentiles must be monotone: {p:?}"
+                );
+            }
+        }
+        let last = reports.last().unwrap();
+        assert!(last.is_final, "the final aggregate is emitted last");
+        assert_eq!(last.generated_tokens, report.generated_tokens);
+        assert_eq!(last.n_completed, 2);
+        assert_eq!(last.kv_bytes, 0);
+        assert!(last.kv_high_water_bytes > 0);
+        assert!(report.stats.is_final);
+        assert_eq!(report.stats.generated_tokens, 120);
     }
 }

@@ -51,6 +51,15 @@
 //!   coalesces mixed prefill + decode steps under the same token/request
 //!   budgets, and in-flight requests rejoin the decode pool after every
 //!   token — continuous batching, not drain-and-refill.
+//! * The [`stats`] module is the loops' metrics plane: serve-loop
+//!   threads record typed [`StatsEvent`]s into per-thread ring buffers,
+//!   and a sampler thread ([`ServeCfg::stats_every`]) aggregates them
+//!   into periodic [`StatsReport`]s — interval tokens/s for prefill vs
+//!   decode, queue depth, batch-occupancy histogram, resident and
+//!   high-water KV-cache bytes, and p50/p90/p99 request / per-token /
+//!   step latency — emitted as JSON lines through a [`StatsSink`]
+//!   (stderr by default) and returned as the final aggregate on
+//!   [`StreamReport::stats`] / [`DecodeReport::stats`].
 //! * [`DenseModel`] materializes the dense-masked weights once — the
 //!   benchmark baseline the CI bench gate compares sparse serving
 //!   against, never part of the serving path itself.  It shares the
@@ -73,6 +82,7 @@ mod batcher;
 mod decode;
 mod model;
 mod server;
+pub mod stats;
 mod stream;
 
 pub use batcher::{
@@ -82,6 +92,9 @@ pub use batcher::{
 pub use decode::{DecodeClient, DecodeReport, GenRequest, GenTicket};
 pub use model::{greedy_token, DenseModel, Sampler, ServePath, SparseLayer, SparseModel};
 pub use server::{ServeCfg, ServeReport, Server, StageStats};
+pub use stats::{
+    Percentiles, ReqOutcome, StatsEvent, StatsHub, StatsRecorder, StatsReport, StatsSink,
+};
 pub use stream::{ServeError, StreamClient, StreamReport, Ticket};
 
 pub use crate::model::KvCache;

@@ -299,14 +299,24 @@ fn head_logits(h: &Mat, final_norm: &Mat, eps: f32, lm_head: &Mat) -> Mat {
 
 /// Greedy decoding: index of the largest logit (ties break to the lowest
 /// index, deterministically).
+///
+/// NaN logits are skipped, so a degenerate model still decodes the best
+/// finite candidate — the same rule [`Sampler::TopK`] ranks by, which
+/// keeps `TopK { k: 1 }` bit-identical to greedy on any input.  All-NaN
+/// logits return token 0.  (The old strict `v > logits[best]` scan got
+/// stuck on a NaN at index 0: every comparison against NaN is false.)
 pub fn greedy_token(logits: &[f32]) -> u32 {
-    let mut best = 0usize;
-    for (i, &v) in logits.iter().enumerate().skip(1) {
-        if v > logits[best] {
-            best = i;
+    let mut best: Option<usize> = None;
+    for (i, &v) in logits.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some(b) if logits[b] >= v => {}
+            _ => best = Some(i),
         }
     }
-    best as u32
+    best.unwrap_or(0) as u32
 }
 
 /// Token-selection policy for the generation paths
@@ -1446,6 +1456,56 @@ pub(crate) mod tests {
         let all_nan = vec![f32::NAN; 4];
         let _ = sampler.sample(&all_nan, &mut rng);
         assert_eq!(Sampler::Greedy.sample(&all_nan, &mut rng), 0);
+    }
+
+    #[test]
+    fn topk1_is_bit_identical_to_greedy_on_adversarial_logits() {
+        // Property test over adversarial logit vectors: `TopK { k: 1 }`
+        // and `greedy_token` are the same function on *any* input —
+        // ties, NaN holes (including a NaN at index 0, which the old
+        // strict `>` greedy scan got stuck on), infinities, and all-NaN
+        // rows.
+        let mut rng = Pcg32::new(0xadf5, 17);
+        for case in 0..500u32 {
+            let n = 1 + rng.below(12) as usize;
+            let mut logits: Vec<f32> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => f32::NEG_INFINITY,
+                    3 => 0.0,
+                    _ => (rng.below(5) as f32 - 2.0) * 0.5, // ties likely
+                })
+                .collect();
+            if case % 3 == 0 {
+                logits[0] = f32::NAN; // the old greedy bug's trigger
+            }
+            let want = greedy_token(&logits);
+            // Greedy invariant: lowest-index maximum over the non-NaN
+            // entries, token 0 when every entry is NaN.
+            let non_nan: Vec<(usize, f32)> = logits
+                .iter()
+                .copied()
+                .enumerate()
+                .filter(|(_, v)| !v.is_nan())
+                .collect();
+            match non_nan.iter().map(|&(_, v)| v).reduce(f32::max) {
+                Some(mx) => {
+                    let first = non_nan.iter().find(|&&(_, v)| v == mx).unwrap().0;
+                    assert_eq!(want as usize, first, "logits {logits:?}");
+                }
+                None => assert_eq!(want, 0, "all-NaN logits {logits:?}"),
+            }
+            for seed in [0u64, 7, 0xdead] {
+                let sampler = Sampler::TopK { k: 1, temperature: 0.7, seed };
+                let mut srng = sampler.rng();
+                assert_eq!(
+                    sampler.sample(&logits, &mut srng),
+                    want,
+                    "k=1 diverged from greedy on {logits:?}"
+                );
+            }
+        }
     }
 
     #[test]

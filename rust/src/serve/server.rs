@@ -45,15 +45,28 @@ pub struct ServeCfg {
     /// with [`super::ServeError::QueueFull`].  0 = unbounded (the
     /// pre-backpressure behavior).
     pub queue_depth: usize,
-    /// Streaming/decode backpressure: a request that sits undispatched
-    /// longer than this expires with [`super::ServeError::TimedOut`]
-    /// through its ticket (checked when the batcher drains the queue).
-    /// Zero disables the timeout.
+    /// Streaming/decode backpressure: how long a request may live
+    /// before it expires with [`super::ServeError::TimedOut`] through
+    /// its ticket.  For the forward loop this is time spent
+    /// undispatched; for the decode loop it is a deadline on the
+    /// *whole generation* — checked before prefill and every time the
+    /// request rejoins the step pool, so a slow or stuck generation
+    /// releases its in-flight slot and KV cache instead of holding
+    /// them to its stop condition.  Zero disables the timeout.
     pub request_timeout: Duration,
     /// Decode only ([`Server::run_decode_streaming`]): hard cap on
     /// `max_new_tokens` a single generation request may ask for.  0 =
     /// uncapped.
     pub max_new_tokens_cap: usize,
+    /// Streaming/decode observability: emit a [`super::StatsReport`]
+    /// through [`ServeCfg::stats_sink`] on this cadence while the loop
+    /// runs (plus one final post-drain aggregate).  Zero disables the
+    /// sampler thread; the final aggregate is still computed and
+    /// returned on the run's report.
+    pub stats_every: Duration,
+    /// Where periodic reports go; `None` means the default sink (one
+    /// JSON object per line on stderr).
+    pub stats_sink: Option<super::StatsSink>,
 }
 
 impl Default for ServeCfg {
@@ -65,6 +78,8 @@ impl Default for ServeCfg {
             queue_depth: 0,
             request_timeout: Duration::ZERO,
             max_new_tokens_cap: 0,
+            stats_every: Duration::ZERO,
+            stats_sink: None,
         }
     }
 }

@@ -1,0 +1,873 @@
+//! Lock-light metrics plane for the streaming and decode serving loops.
+//!
+//! Production serving is only as good as its observability: throughput
+//! claims need measured tail latency, and the counters a metrics plane
+//! maintains double as an invariant harness over the serve loops'
+//! accounting (every submission ends in exactly one of
+//! completed/abandoned/failed/expired/rejected/retracted).
+//!
+//! The design keeps the hot path cheap:
+//!
+//! * Each serve-loop thread (client submit path, scheduler, stage
+//!   threads, collector) holds its own [`StatsRecorder`] and records
+//!   typed [`StatsEvent`]s.  Counting events bump shared atomics —
+//!   exact, wait-free.  Latency samples go into the recorder's **own**
+//!   bounded ring buffer ([`CircularQueue`]), so recorders never
+//!   contend with each other; a full ring drops the oldest sample
+//!   (counted in [`StatsReport::events_dropped`]) instead of blocking
+//!   the serving thread.
+//! * A sampler thread (spawned by the loops when
+//!   [`super::ServeCfg::stats_every`] is nonzero) periodically calls
+//!   [`StatsHub::sample`], which drains every ring into sorted bounded
+//!   windows and emits a [`StatsReport`]: cumulative counters,
+//!   interval prefill/decode tokens-per-second, batch-occupancy
+//!   histogram, KV-cache resident/high-water bytes (fed by
+//!   [`crate::model::KvCache::bytes`] deltas), and nearest-rank
+//!   p50/p90/p99 request, per-token, and step latency.  Percentiles
+//!   come from a sorted window, so `p50 <= p90 <= p99` holds by
+//!   construction.
+//! * Reports serialize to JSON through the in-repo
+//!   [`crate::util::json`] substrate ([`StatsReport::to_json`]); the
+//!   default [`StatsSink`] prints one JSON object per line to stderr,
+//!   which is what `permllm serve --stats-every <ms>` and the CI
+//!   stats-smoke step parse.
+//!
+//! ```
+//! use permllm::serve::stats::{ReqOutcome, StatsEvent, StatsHub};
+//!
+//! let hub = StatsHub::new(64);
+//! let rec = hub.recorder();
+//! rec.record(StatsEvent::Submitted);
+//! rec.record(StatsEvent::Admitted);
+//! rec.record(StatsEvent::BatchDispatched { requests: 1, prefill_tokens: 3, decode_tokens: 0 });
+//! rec.record(StatsEvent::StepDone { seconds: 0.002 });
+//! rec.record(StatsEvent::TokenStreamed { latency_s: 0.002 });
+//! rec.record(StatsEvent::RequestDone { latency_s: 0.004, outcome: ReqOutcome::Completed });
+//!
+//! let report = hub.sample(0, true);
+//! assert_eq!((report.n_submitted, report.n_admitted, report.n_completed), (1, 1, 1));
+//! assert_eq!(report.generated_tokens, 1);
+//! assert!(report.request_latency_ms.p50 <= report.request_latency_ms.p99);
+//! // One JSON object per line — what `--stats-every` prints to stderr.
+//! let line = report.to_json().to_string();
+//! assert!(line.starts_with('{'));
+//! ```
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{self, num, Json};
+
+/// Default latency-window capacity (samples kept per percentile window).
+pub const DEFAULT_WINDOW: usize = 4096;
+
+/// Batch-occupancy histogram buckets: requests per dispatched batch,
+/// power-of-two edges `1, 2, <=4, <=8, ..., <=128, >128`.
+pub const N_OCCUPANCY_BUCKETS: usize = 9;
+
+fn occupancy_bucket(requests: usize) -> usize {
+    let r = requests.clamp(1, 1 << 16);
+    (r.next_power_of_two().trailing_zeros() as usize).min(N_OCCUPANCY_BUCKETS - 1)
+}
+
+/// Fixed-capacity ring buffer: `push` beyond capacity overwrites the
+/// oldest element (and reports it), so writers never block and never
+/// grow.  Retrieval order is unspecified — the consumers here sort
+/// (percentile windows) or drain wholesale (recorder rings).
+#[derive(Debug, Clone)]
+pub struct CircularQueue<T> {
+    buf: Vec<T>,
+    cap: usize,
+    /// Next overwrite position once `buf` is full.
+    next: usize,
+    /// Everything ever pushed (monotonic, survives overwrites/drains).
+    total: u64,
+}
+
+impl<T> CircularQueue<T> {
+    pub fn new(cap: usize) -> CircularQueue<T> {
+        assert!(cap > 0, "CircularQueue needs capacity >= 1");
+        CircularQueue { buf: Vec::new(), cap, next: 0, total: 0 }
+    }
+
+    /// Append `v`; returns `true` when an old element was overwritten.
+    pub fn push(&mut self, v: T) -> bool {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+            false
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.cap;
+            true
+        }
+    }
+
+    /// Resident elements (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Elements ever pushed, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.buf.iter()
+    }
+
+    /// Take every resident element out (the cumulative `total` stays).
+    pub fn drain(&mut self) -> Vec<T> {
+        self.next = 0;
+        std::mem::take(&mut self.buf)
+    }
+}
+
+/// How a served request ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqOutcome {
+    /// Ran to its stop condition (forward pass replied; generation hit
+    /// max-new-tokens or EOS).
+    Completed,
+    /// Cut short because its ticket was dropped mid-flight.
+    Abandoned,
+    /// Its batch failed in a pipeline stage.
+    Failed,
+}
+
+/// One typed observation from a serve-loop thread.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StatsEvent {
+    /// A well-formed submission reached admission control.
+    Submitted,
+    /// Admission reserved an in-flight slot.
+    Admitted,
+    /// Admission refused (queue full).
+    Rejected,
+    /// An admitted submission was rolled back (lost the race with
+    /// shutdown) — it never entered the loop.
+    Retracted,
+    /// An admitted request expired via `request_timeout` (before
+    /// dispatch, or when a generation rejoined the step pool).
+    Expired,
+    /// The scheduler dispatched a batch into the stage chain.
+    BatchDispatched { requests: usize, prefill_tokens: usize, decode_tokens: usize },
+    /// A stage thread spent `seconds` of busy time on one batch.
+    StageBusy { seconds: f64 },
+    /// A dispatched batch cleared the full stage chain.
+    StepDone { seconds: f64 },
+    /// One token was streamed to a ticket; `latency_s` is the gap since
+    /// that request's previous token (or its enqueue, for the first).
+    TokenStreamed { latency_s: f64 },
+    /// A request reached a terminal state; `latency_s` is enqueue to
+    /// completion.
+    RequestDone { latency_s: f64, outcome: ReqOutcome },
+}
+
+/// A latency sample routed to its percentile window at sample time.
+#[derive(Debug, Clone, Copy)]
+enum LatSample {
+    Step(f64),
+    Token(f64),
+    Request(f64),
+}
+
+/// Shared exact counters (every recorder bumps the same atomics).
+struct Counters {
+    submitted: AtomicUsize,
+    admitted: AtomicUsize,
+    rejected: AtomicUsize,
+    retracted: AtomicUsize,
+    expired: AtomicUsize,
+    completed: AtomicUsize,
+    abandoned: AtomicUsize,
+    failed: AtomicUsize,
+    steps: AtomicUsize,
+    prefill_tokens: AtomicUsize,
+    decode_tokens: AtomicUsize,
+    generated_tokens: AtomicUsize,
+    occupancy: [AtomicUsize; N_OCCUPANCY_BUCKETS],
+    stage_busy_us: AtomicU64,
+    /// Resident KV-cache bytes across live requests (gauge).
+    kv_bytes: AtomicUsize,
+    /// High-water mark of `kv_bytes`.
+    kv_high_water: AtomicUsize,
+    /// Last observed scheduler backlog (gauge).
+    queue_depth: AtomicUsize,
+}
+
+impl Counters {
+    fn new() -> Counters {
+        Counters {
+            submitted: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            retracted: AtomicUsize::new(0),
+            expired: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            abandoned: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            steps: AtomicUsize::new(0),
+            prefill_tokens: AtomicUsize::new(0),
+            decode_tokens: AtomicUsize::new(0),
+            generated_tokens: AtomicUsize::new(0),
+            occupancy: std::array::from_fn(|_| AtomicUsize::new(0)),
+            stage_busy_us: AtomicU64::new(0),
+            kv_bytes: AtomicUsize::new(0),
+            kv_high_water: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
+        }
+    }
+
+    fn kv_alloc(&self, delta: usize) {
+        if delta == 0 {
+            return;
+        }
+        let now = self.kv_bytes.fetch_add(delta, Ordering::AcqRel) + delta;
+        self.kv_high_water.fetch_max(now, Ordering::AcqRel);
+    }
+
+    fn kv_free(&self, bytes: usize) {
+        // Saturating: an error path may release an estimate.
+        let _ = self
+            .kv_bytes
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| Some(n.saturating_sub(bytes)));
+    }
+}
+
+struct RecorderInner {
+    counters: Arc<Counters>,
+    ring: Mutex<CircularQueue<LatSample>>,
+    /// Latency samples overwritten before a sampler drained them.
+    dropped: AtomicUsize,
+}
+
+/// Per-thread event recorder.  `Clone` shares the same ring (cheap Arc
+/// clone); for true per-thread buffers ask the hub for one recorder per
+/// thread ([`StatsHub::recorder`]).
+#[derive(Clone)]
+pub struct StatsRecorder(Arc<RecorderInner>);
+
+impl StatsRecorder {
+    /// Record one event.  Counting events are exact (shared atomics);
+    /// latency samples go into this recorder's own bounded ring.
+    pub fn record(&self, ev: StatsEvent) {
+        let c = &self.0.counters;
+        match ev {
+            StatsEvent::Submitted => {
+                c.submitted.fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::Admitted => {
+                c.admitted.fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::Rejected => {
+                c.rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::Retracted => {
+                c.retracted.fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::Expired => {
+                c.expired.fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::BatchDispatched { requests, prefill_tokens, decode_tokens } => {
+                c.steps.fetch_add(1, Ordering::Relaxed);
+                c.prefill_tokens.fetch_add(prefill_tokens, Ordering::Relaxed);
+                c.decode_tokens.fetch_add(decode_tokens, Ordering::Relaxed);
+                c.occupancy[occupancy_bucket(requests)].fetch_add(1, Ordering::Relaxed);
+            }
+            StatsEvent::StageBusy { seconds } => {
+                c.stage_busy_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+            }
+            StatsEvent::StepDone { seconds } => self.push(LatSample::Step(seconds)),
+            StatsEvent::TokenStreamed { latency_s } => {
+                c.generated_tokens.fetch_add(1, Ordering::Relaxed);
+                self.push(LatSample::Token(latency_s));
+            }
+            StatsEvent::RequestDone { latency_s, outcome } => {
+                let ctr = match outcome {
+                    ReqOutcome::Completed => &c.completed,
+                    ReqOutcome::Abandoned => &c.abandoned,
+                    ReqOutcome::Failed => &c.failed,
+                };
+                ctr.fetch_add(1, Ordering::Relaxed);
+                self.push(LatSample::Request(latency_s));
+            }
+        }
+    }
+
+    fn push(&self, s: LatSample) {
+        if self.0.ring.lock().unwrap_or_else(|e| e.into_inner()).push(s) {
+            self.0.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Grow the resident-KV gauge by `delta` bytes (tracks high water).
+    pub fn kv_alloc(&self, delta: usize) {
+        self.0.counters.kv_alloc(delta);
+    }
+
+    /// Shrink the resident-KV gauge by `bytes` (a cache was dropped).
+    pub fn kv_free(&self, bytes: usize) {
+        self.0.counters.kv_free(bytes);
+    }
+
+    /// Publish the scheduler backlog observed at its last wakeup.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.0.counters.queue_depth.store(depth, Ordering::Relaxed);
+    }
+}
+
+impl fmt::Debug for StatsRecorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StatsRecorder").finish_non_exhaustive()
+    }
+}
+
+/// Sorted-at-sample-time percentile windows (one per latency kind).
+struct Windows {
+    step: CircularQueue<f64>,
+    token: CircularQueue<f64>,
+    request: CircularQueue<f64>,
+    /// Snapshot state for interval rates.
+    last_t: f64,
+    last_prefill: usize,
+    last_decode: usize,
+}
+
+/// The aggregation point: hands out recorders, owns the percentile
+/// windows, and turns the current state into [`StatsReport`]s.
+pub struct StatsHub {
+    t0: Instant,
+    counters: Arc<Counters>,
+    recorders: Mutex<Vec<Arc<RecorderInner>>>,
+    windows: Mutex<Windows>,
+    /// Ring capacity for new recorders (same as the window capacity).
+    ring_cap: usize,
+}
+
+impl StatsHub {
+    /// A hub whose latency windows (and per-recorder rings) keep up to
+    /// `window` samples each ([`DEFAULT_WINDOW`] is the serving
+    /// default).
+    pub fn new(window: usize) -> StatsHub {
+        StatsHub {
+            t0: Instant::now(),
+            counters: Arc::new(Counters::new()),
+            recorders: Mutex::new(Vec::new()),
+            windows: Mutex::new(Windows {
+                step: CircularQueue::new(window),
+                token: CircularQueue::new(window),
+                request: CircularQueue::new(window),
+                last_t: 0.0,
+                last_prefill: 0,
+                last_decode: 0,
+            }),
+            ring_cap: window,
+        }
+    }
+
+    /// A new recorder with its own latency ring, registered with this
+    /// hub so [`StatsHub::sample`] drains it.
+    pub fn recorder(&self) -> StatsRecorder {
+        let inner = Arc::new(RecorderInner {
+            counters: Arc::clone(&self.counters),
+            ring: Mutex::new(CircularQueue::new(self.ring_cap)),
+            dropped: AtomicUsize::new(0),
+        });
+        self.recorders.lock().unwrap_or_else(|e| e.into_inner()).push(Arc::clone(&inner));
+        StatsRecorder(inner)
+    }
+
+    /// Grow the resident-KV gauge (also available on every recorder).
+    pub fn kv_alloc(&self, delta: usize) {
+        self.counters.kv_alloc(delta);
+    }
+
+    /// Shrink the resident-KV gauge (also available on every recorder).
+    pub fn kv_free(&self, bytes: usize) {
+        self.counters.kv_free(bytes);
+    }
+
+    /// Drain every recorder ring into the percentile windows and
+    /// snapshot everything into a [`StatsReport`].  `in_flight` is the
+    /// caller-observed in-flight request count (the hub does not own
+    /// the admission atomics); `is_final` marks the post-drain
+    /// aggregate emitted once per run.
+    pub fn sample(&self, in_flight: usize, is_final: bool) -> StatsReport {
+        let mut w = self.windows.lock().unwrap_or_else(|e| e.into_inner());
+        let mut events_dropped = 0usize;
+        {
+            let recorders = self.recorders.lock().unwrap_or_else(|e| e.into_inner());
+            for rec in recorders.iter() {
+                let drained = rec.ring.lock().unwrap_or_else(|e| e.into_inner()).drain();
+                for s in drained {
+                    match s {
+                        LatSample::Step(v) => w.step.push(v * 1e3),
+                        LatSample::Token(v) => w.token.push(v * 1e3),
+                        LatSample::Request(v) => w.request.push(v * 1e3),
+                    };
+                }
+                events_dropped += rec.dropped.load(Ordering::Relaxed);
+            }
+        }
+        let c = &self.counters;
+        let t_s = self.t0.elapsed().as_secs_f64();
+        let interval_s = (t_s - w.last_t).max(1e-9);
+        let prefill_tokens = c.prefill_tokens.load(Ordering::Relaxed);
+        let decode_tokens = c.decode_tokens.load(Ordering::Relaxed);
+        let report = StatsReport {
+            t_s,
+            interval_s,
+            is_final,
+            n_submitted: c.submitted.load(Ordering::Relaxed) - c.retracted.load(Ordering::Relaxed),
+            n_admitted: c.admitted.load(Ordering::Relaxed) - c.retracted.load(Ordering::Relaxed),
+            n_rejected: c.rejected.load(Ordering::Relaxed),
+            n_expired: c.expired.load(Ordering::Relaxed),
+            n_completed: c.completed.load(Ordering::Relaxed),
+            n_abandoned: c.abandoned.load(Ordering::Relaxed),
+            n_failed: c.failed.load(Ordering::Relaxed),
+            in_flight,
+            queue_depth: c.queue_depth.load(Ordering::Relaxed),
+            n_steps: c.steps.load(Ordering::Relaxed),
+            prefill_tokens,
+            decode_tokens,
+            generated_tokens: c.generated_tokens.load(Ordering::Relaxed),
+            prefill_tokens_per_s: (prefill_tokens - w.last_prefill) as f64 / interval_s,
+            decode_tokens_per_s: (decode_tokens - w.last_decode) as f64 / interval_s,
+            batch_occupancy_hist: std::array::from_fn(|i| {
+                c.occupancy[i].load(Ordering::Relaxed)
+            }),
+            stage_busy_s: c.stage_busy_us.load(Ordering::Relaxed) as f64 / 1e6,
+            kv_bytes: c.kv_bytes.load(Ordering::Relaxed),
+            kv_high_water_bytes: c.kv_high_water.load(Ordering::Relaxed),
+            request_latency_ms: Percentiles::of_window(&w.request),
+            token_latency_ms: Percentiles::of_window(&w.token),
+            step_latency_ms: Percentiles::of_window(&w.step),
+            events_dropped,
+        };
+        w.last_t = t_s;
+        w.last_prefill = prefill_tokens;
+        w.last_decode = decode_tokens;
+        report
+    }
+}
+
+impl fmt::Debug for StatsHub {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StatsHub").field("ring_cap", &self.ring_cap).finish_non_exhaustive()
+    }
+}
+
+/// Nearest-rank percentiles over a sample set.  Computed from a sorted
+/// window, so `p50 <= p90 <= p99` always holds; an empty set reports
+/// zeros with `n = 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Percentiles {
+    /// Samples ever observed (the window keeps the most recent ones).
+    pub n: u64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Percentiles of `samples` (sorted in place; `n` = its length).
+    pub fn of(samples: &mut [f64]) -> Percentiles {
+        samples.sort_by(|a, b| a.total_cmp(b));
+        Percentiles {
+            n: samples.len() as u64,
+            p50: nearest_rank(samples, 0.50),
+            p90: nearest_rank(samples, 0.90),
+            p99: nearest_rank(samples, 0.99),
+        }
+    }
+
+    fn of_window(w: &CircularQueue<f64>) -> Percentiles {
+        let mut resident: Vec<f64> = w.iter().copied().collect();
+        let mut p = Percentiles::of(&mut resident);
+        p.n = w.total();
+        p
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("n", num(self.n as f64)),
+            ("p50", num(self.p50)),
+            ("p90", num(self.p90)),
+            ("p99", num(self.p99)),
+        ])
+    }
+}
+
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// One aggregated snapshot of the serving loop — what the sampler
+/// thread emits every `--stats-every` tick and what the final report
+/// carries after drain.
+#[derive(Debug, Clone)]
+pub struct StatsReport {
+    /// Seconds since the loop (hub) started.
+    pub t_s: f64,
+    /// Seconds since the previous sample (= `t_s` for the first).
+    pub interval_s: f64,
+    /// True for the once-per-run post-drain aggregate.
+    pub is_final: bool,
+    /// Well-formed submissions (validated; net of shutdown retractions).
+    pub n_submitted: usize,
+    /// Submissions admitted into the loop (net of retractions).
+    pub n_admitted: usize,
+    /// Submissions refused at admission (queue full).
+    pub n_rejected: usize,
+    /// Admitted requests expired via `request_timeout`.
+    pub n_expired: usize,
+    /// Requests that ran to their stop condition.
+    pub n_completed: usize,
+    /// Requests cut short by a dropped ticket.
+    pub n_abandoned: usize,
+    /// Requests whose batch failed in a stage.
+    pub n_failed: usize,
+    /// Admitted-but-unfinished requests at sample time.
+    pub in_flight: usize,
+    /// Scheduler backlog at its last wakeup.
+    pub queue_depth: usize,
+    /// Batches dispatched into the stage chain.
+    pub n_steps: usize,
+    /// Prompt rows processed (prefill spans).
+    pub prefill_tokens: usize,
+    /// One-token decode rows processed.
+    pub decode_tokens: usize,
+    /// Tokens streamed to tickets.
+    pub generated_tokens: usize,
+    /// Prefill rows per second over the last interval.
+    pub prefill_tokens_per_s: f64,
+    /// Decode rows per second over the last interval.
+    pub decode_tokens_per_s: f64,
+    /// Requests-per-batch histogram, bucket edges `1, 2, <=4, <=8,
+    /// <=16, <=32, <=64, <=128, >128`.
+    pub batch_occupancy_hist: [usize; N_OCCUPANCY_BUCKETS],
+    /// Summed stage-thread busy seconds.
+    pub stage_busy_s: f64,
+    /// Resident KV-cache bytes at sample time.
+    pub kv_bytes: usize,
+    /// High-water mark of resident KV-cache bytes.
+    pub kv_high_water_bytes: usize,
+    /// Enqueue-to-terminal request latency.
+    pub request_latency_ms: Percentiles,
+    /// Inter-token latency (gap between consecutive streamed tokens).
+    pub token_latency_ms: Percentiles,
+    /// Full-stage-chain latency per dispatched batch.
+    pub step_latency_ms: Percentiles,
+    /// Latency samples lost to ring-buffer overwrites (cumulative).
+    pub events_dropped: usize,
+}
+
+impl StatsReport {
+    /// Serialize as one flat JSON object (stable keys; percentile
+    /// fields nest `{n, p50, p90, p99}`).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("t_s", num(self.t_s)),
+            ("interval_s", num(self.interval_s)),
+            ("final", Json::Bool(self.is_final)),
+            ("n_submitted", num(self.n_submitted as f64)),
+            ("n_admitted", num(self.n_admitted as f64)),
+            ("n_rejected", num(self.n_rejected as f64)),
+            ("n_expired", num(self.n_expired as f64)),
+            ("n_completed", num(self.n_completed as f64)),
+            ("n_abandoned", num(self.n_abandoned as f64)),
+            ("n_failed", num(self.n_failed as f64)),
+            ("in_flight", num(self.in_flight as f64)),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("n_steps", num(self.n_steps as f64)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
+            ("decode_tokens", num(self.decode_tokens as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("prefill_tokens_per_s", num(self.prefill_tokens_per_s)),
+            ("decode_tokens_per_s", num(self.decode_tokens_per_s)),
+            (
+                "batch_occupancy_hist",
+                json::arr(self.batch_occupancy_hist.iter().map(|&n| num(n as f64)).collect()),
+            ),
+            ("stage_busy_s", num(self.stage_busy_s)),
+            ("kv_bytes", num(self.kv_bytes as f64)),
+            ("kv_high_water_bytes", num(self.kv_high_water_bytes as f64)),
+            ("request_latency_ms", self.request_latency_ms.to_json()),
+            ("token_latency_ms", self.token_latency_ms.to_json()),
+            ("step_latency_ms", self.step_latency_ms.to_json()),
+            ("events_dropped", num(self.events_dropped as f64)),
+        ])
+    }
+}
+
+type SinkFn = dyn Fn(&StatsReport) + Send + Sync;
+
+/// Where periodic reports go.  The default prints one JSON object per
+/// line to stderr (log lines never start with `{`, so consumers can
+/// `grep '^{'`); tests install collecting sinks via [`StatsSink::new`].
+pub struct StatsSink(Arc<SinkFn>);
+
+impl StatsSink {
+    pub fn new(f: impl Fn(&StatsReport) + Send + Sync + 'static) -> StatsSink {
+        StatsSink(Arc::new(f))
+    }
+
+    /// One compact JSON object per report, to stderr.
+    pub fn stderr_json() -> StatsSink {
+        StatsSink::new(|r| eprintln!("{}", r.to_json().to_string()))
+    }
+
+    pub fn emit(&self, report: &StatsReport) {
+        (self.0)(report)
+    }
+}
+
+impl Default for StatsSink {
+    fn default() -> Self {
+        StatsSink::stderr_json()
+    }
+}
+
+impl Clone for StatsSink {
+    fn clone(&self) -> Self {
+        StatsSink(Arc::clone(&self.0))
+    }
+}
+
+impl fmt::Debug for StatsSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("StatsSink(..)")
+    }
+}
+
+/// Stop flag for the sampler thread: `wait_for` parks for one cadence
+/// tick (or until stopped), `stop` wakes and ends it.
+pub(super) struct SamplerStop {
+    stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl SamplerStop {
+    pub(super) fn new() -> SamplerStop {
+        SamplerStop { stopped: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Park for `interval`; returns `true` once stopped.
+    pub(super) fn wait_for(&self, interval: Duration) -> bool {
+        let deadline = Instant::now() + interval;
+        let mut stopped = self.stopped.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if *stopped {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(stopped, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            stopped = guard;
+        }
+    }
+
+    pub(super) fn stop(&self) {
+        *self.stopped.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circular_queue_overwrites_oldest_and_counts_total() {
+        let mut q = CircularQueue::new(3);
+        assert!(q.is_empty());
+        assert!(!q.push(1));
+        assert!(!q.push(2));
+        assert!(!q.push(3));
+        assert_eq!((q.len(), q.total()), (3, 3));
+        // Fourth push overwrites the oldest (1).
+        assert!(q.push(4));
+        assert_eq!((q.len(), q.total()), (3, 4));
+        let mut resident: Vec<i32> = q.iter().copied().collect();
+        resident.sort_unstable();
+        assert_eq!(resident, vec![2, 3, 4]);
+        assert_eq!(q.drain().len(), 3);
+        assert!(q.is_empty());
+        assert_eq!(q.total(), 4, "total survives drain");
+        // Refills cleanly after a drain.
+        assert!(!q.push(5));
+        assert_eq!((q.len(), q.total()), (1, 5));
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank_and_monotone() {
+        let mut one = vec![7.0];
+        let p = Percentiles::of(&mut one);
+        assert_eq!((p.n, p.p50, p.p90, p.p99), (1, 7.0, 7.0, 7.0));
+
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = Percentiles::of(&mut v);
+        assert_eq!((p.p50, p.p90, p.p99), (50.0, 90.0, 99.0));
+
+        let empty = Percentiles::of(&mut []);
+        assert_eq!((empty.n, empty.p50, empty.p99), (0, 0.0, 0.0));
+
+        // Monotone regardless of input order.
+        let mut shuffled = vec![9.0, 0.5, 3.0, 3.0, 12.0, 1.0, 8.0];
+        let p = Percentiles::of(&mut shuffled);
+        assert!(p.p50 <= p.p90 && p.p90 <= p.p99, "{p:?}");
+    }
+
+    #[test]
+    fn occupancy_buckets_have_power_of_two_edges() {
+        assert_eq!(occupancy_bucket(0), 0, "degenerate batches clamp to 1");
+        assert_eq!(occupancy_bucket(1), 0);
+        assert_eq!(occupancy_bucket(2), 1);
+        assert_eq!(occupancy_bucket(3), 2);
+        assert_eq!(occupancy_bucket(4), 2);
+        assert_eq!(occupancy_bucket(5), 3);
+        assert_eq!(occupancy_bucket(128), 7);
+        assert_eq!(occupancy_bucket(129), 8);
+        assert_eq!(occupancy_bucket(1 << 20), 8, "overflow clamps to the last bucket");
+    }
+
+    #[test]
+    fn hub_aggregates_events_and_reports_json_roundtrip() {
+        let hub = StatsHub::new(16);
+        let rec = hub.recorder();
+        for _ in 0..3 {
+            rec.record(StatsEvent::Submitted);
+            rec.record(StatsEvent::Admitted);
+        }
+        rec.record(StatsEvent::Submitted);
+        rec.record(StatsEvent::Rejected);
+        rec.record(StatsEvent::BatchDispatched {
+            requests: 3,
+            prefill_tokens: 9,
+            decode_tokens: 0,
+        });
+        rec.record(StatsEvent::BatchDispatched {
+            requests: 2,
+            prefill_tokens: 0,
+            decode_tokens: 2,
+        });
+        rec.record(StatsEvent::StageBusy { seconds: 0.5 });
+        rec.record(StatsEvent::StepDone { seconds: 0.010 });
+        rec.record(StatsEvent::StepDone { seconds: 0.030 });
+        for latency_s in [0.001, 0.002, 0.003] {
+            rec.record(StatsEvent::TokenStreamed { latency_s });
+        }
+        rec.record(StatsEvent::RequestDone { latency_s: 0.05, outcome: ReqOutcome::Completed });
+        rec.record(StatsEvent::RequestDone { latency_s: 0.07, outcome: ReqOutcome::Completed });
+        rec.record(StatsEvent::RequestDone { latency_s: 0.02, outcome: ReqOutcome::Abandoned });
+        rec.record(StatsEvent::Expired);
+        hub.kv_alloc(1000);
+        hub.kv_alloc(500);
+        hub.kv_free(1200);
+
+        let report = hub.sample(1, false);
+        assert_eq!(report.n_submitted, 4);
+        assert_eq!(report.n_admitted, 3);
+        assert_eq!(report.n_rejected, 1);
+        assert_eq!(report.n_expired, 1);
+        assert_eq!(report.n_completed, 2);
+        assert_eq!(report.n_abandoned, 1);
+        assert_eq!(report.n_steps, 2);
+        assert_eq!((report.prefill_tokens, report.decode_tokens), (9, 2));
+        assert_eq!(report.generated_tokens, 3);
+        assert_eq!(report.batch_occupancy_hist[occupancy_bucket(3)], 1);
+        assert_eq!(report.batch_occupancy_hist[occupancy_bucket(2)], 1);
+        assert!((report.stage_busy_s - 0.5).abs() < 1e-6);
+        assert_eq!(report.kv_bytes, 300);
+        assert_eq!(report.kv_high_water_bytes, 1500);
+        assert_eq!(report.request_latency_ms.n, 3);
+        assert!((report.request_latency_ms.p50 - 50.0).abs() < 1e-9);
+        assert!(report.step_latency_ms.p50 <= report.step_latency_ms.p99);
+        assert_eq!(report.events_dropped, 0);
+
+        // JSON round-trips through the in-repo parser with the same
+        // numbers the CI smoke step asserts on.
+        let parsed = crate::util::json::Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("n_admitted").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("generated_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("final"), Some(&Json::Bool(false)));
+        let p = parsed.get("request_latency_ms").unwrap();
+        let (p50, p90, p99) = (
+            p.get("p50").unwrap().as_f64().unwrap(),
+            p.get("p90").unwrap().as_f64().unwrap(),
+            p.get("p99").unwrap().as_f64().unwrap(),
+        );
+        assert!(p50 <= p90 && p90 <= p99);
+        assert_eq!(
+            parsed.get("batch_occupancy_hist").unwrap().as_arr().unwrap().len(),
+            N_OCCUPANCY_BUCKETS
+        );
+    }
+
+    #[test]
+    fn retracted_admissions_are_netted_out() {
+        let hub = StatsHub::new(8);
+        let rec = hub.recorder();
+        rec.record(StatsEvent::Submitted);
+        rec.record(StatsEvent::Admitted);
+        rec.record(StatsEvent::Retracted);
+        let report = hub.sample(0, true);
+        assert_eq!((report.n_submitted, report.n_admitted), (0, 0));
+    }
+
+    #[test]
+    fn ring_overflow_is_counted_not_blocking() {
+        let hub = StatsHub::new(2);
+        let rec = hub.recorder();
+        for i in 0..5 {
+            rec.record(StatsEvent::StepDone { seconds: i as f64 });
+        }
+        let report = hub.sample(0, false);
+        // 2 resident samples survive, 3 were overwritten.
+        assert_eq!(report.events_dropped, 3);
+        assert_eq!(report.step_latency_ms.n, 2, "window keeps the resident samples");
+    }
+
+    #[test]
+    fn interval_rates_reset_between_samples() {
+        let hub = StatsHub::new(8);
+        let rec = hub.recorder();
+        rec.record(StatsEvent::BatchDispatched {
+            requests: 1,
+            prefill_tokens: 100,
+            decode_tokens: 0,
+        });
+        let first = hub.sample(0, false);
+        assert!(first.prefill_tokens_per_s > 0.0);
+        // No new tokens since the last sample: the interval rate is
+        // zero even though the cumulative counter is not.
+        let second = hub.sample(0, false);
+        assert_eq!(second.prefill_tokens, 100);
+        assert_eq!(second.prefill_tokens_per_s, 0.0);
+    }
+
+    #[test]
+    fn sampler_stop_wakes_the_waiter() {
+        let stop = SamplerStop::new();
+        assert!(!stop.wait_for(Duration::from_millis(1)), "not stopped yet: tick elapses");
+        stop.stop();
+        assert!(stop.wait_for(Duration::from_secs(3600)), "stopped: returns immediately");
+    }
+}

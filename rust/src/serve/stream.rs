@@ -31,6 +31,10 @@ use anyhow::Result;
 
 use super::batcher::{MicroBatcher, Request};
 use super::server::{Server, StageStats};
+use super::stats::{
+    ReqOutcome, SamplerStop, StatsEvent, StatsHub, StatsRecorder, StatsReport, StatsSink,
+    DEFAULT_WINDOW,
+};
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
 
@@ -254,6 +258,7 @@ pub struct StreamClient<'q> {
     next_id: &'q AtomicU64,
     width: usize,
     queue_depth: usize,
+    stats: &'q StatsRecorder,
 }
 
 impl StreamClient<'_> {
@@ -279,7 +284,12 @@ impl StreamClient<'_> {
         if x.rows() == 0 {
             return Err(ServeError::Invalid(format!("request {id}: empty activation batch")));
         }
-        self.queue.admit(self.queue_depth)?;
+        self.stats.record(StatsEvent::Submitted);
+        if let Err(e) = self.queue.admit(self.queue_depth) {
+            self.stats.record(StatsEvent::Rejected);
+            return Err(e);
+        }
+        self.stats.record(StatsEvent::Admitted);
         let (tx, rx) = mpsc::channel();
         {
             let mut st = self.queue.state.lock().unwrap();
@@ -288,6 +298,7 @@ impl StreamClient<'_> {
                 // re-takes it to publish the wakeup.
                 drop(st);
                 self.queue.unadmit();
+                self.stats.record(StatsEvent::Retracted);
                 return Err(ServeError::ShuttingDown);
             }
             st.pending.push(PendingReq {
@@ -305,8 +316,12 @@ impl StreamClient<'_> {
 struct StreamWork {
     batch: super::batcher::MicroBatch,
     x: Mat,
-    /// Reply senders parallel to `batch.ids`.
-    replies: Vec<mpsc::Sender<Reply>>,
+    /// Reply senders (with enqueue times, for request latency)
+    /// parallel to `batch.ids`.
+    replies: Vec<(mpsc::Sender<Reply>, Instant)>,
+    /// When the batcher sent this batch into the stage chain — the
+    /// step-latency clock.
+    dispatched: Instant,
     stage_s: Vec<f64>,
     err: Option<String>,
 }
@@ -331,6 +346,9 @@ pub struct StreamReport {
     pub n_timed_out: usize,
     /// Submissions refused at admission ([`ServeError::QueueFull`]).
     pub n_rejected: usize,
+    /// Final post-drain metrics aggregate (latency percentiles, batch
+    /// occupancy, interval rates) from the stats plane.
+    pub stats: StatsReport,
 }
 
 impl StreamReport {
@@ -386,6 +404,16 @@ impl Server {
         let batcher_cfg = self.cfg().batcher.clone();
         let queue: SharedQueue<QueueState> = SharedQueue::new();
         let next_id = AtomicU64::new(0);
+        // Metrics plane: one recorder per serve-loop thread (declared
+        // out here so non-`move` worker closures can borrow them), a
+        // sampler stop flag, and the sink periodic reports go to.
+        let stats_every = self.cfg().stats_every;
+        let sink = self.cfg().stats_sink.clone().unwrap_or_default();
+        let hub = StatsHub::new(DEFAULT_WINDOW);
+        let submit_stats = hub.recorder();
+        let sched_stats = hub.recorder();
+        let coll_stats = hub.recorder();
+        let stop = SamplerStop::new();
         let t0 = Instant::now();
 
         let (result, tally) = std::thread::scope(|scope| {
@@ -395,6 +423,7 @@ impl Server {
                 let mut engine = engines.into_iter().next().expect("len checked");
                 let (tx, rx) = mpsc::channel::<StreamWork>();
                 let rx_in = std::mem::replace(&mut prev_rx, rx);
+                let stage_rec = hub.recorder();
                 scope.spawn(move || {
                     for mut work in rx_in {
                         for layer in 0..n_stages {
@@ -406,7 +435,9 @@ impl Server {
                             match model.stage(engine.as_mut(), layer, &work.x, spans, path) {
                                 Ok(y) => {
                                     work.x = y;
-                                    work.stage_s.push(s0.elapsed().as_secs_f64());
+                                    let s = s0.elapsed().as_secs_f64();
+                                    work.stage_s.push(s);
+                                    stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                 }
                                 Err(e) => work.err = Some(format!("{e:#}")),
                             }
@@ -420,6 +451,7 @@ impl Server {
                 for (layer, mut engine) in engines.into_iter().take(n_stages).enumerate() {
                     let (tx, rx) = mpsc::channel::<StreamWork>();
                     let rx_in = std::mem::replace(&mut prev_rx, rx);
+                    let stage_rec = hub.recorder();
                     scope.spawn(move || {
                         for mut work in rx_in {
                             if work.err.is_none() {
@@ -433,7 +465,9 @@ impl Server {
                                 ) {
                                     Ok(y) => {
                                         work.x = y;
-                                        work.stage_s.push(s0.elapsed().as_secs_f64());
+                                        let s = s0.elapsed().as_secs_f64();
+                                        work.stage_s.push(s);
+                                        stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                     }
                                     Err(e) => work.err = Some(format!("{e:#}")),
                                 }
@@ -456,12 +490,15 @@ impl Server {
                 let (mut total_tokens, mut n_batches) = (0usize, 0usize);
                 let (mut n_requests, mut n_failed) = (0usize, 0usize);
                 for work in done_rx {
-                    let StreamWork { mut batch, x, replies, stage_s, err } = work;
+                    let StreamWork { mut batch, x, replies, dispatched, stage_s, err } = work;
                     // The batcher moved the activations out; restore the
                     // final-stage output so `tokens`/`split` see it.
                     batch.x = x;
                     n_batches += 1;
                     n_requests += batch.n_requests();
+                    coll_stats.record(StatsEvent::StepDone {
+                        seconds: dispatched.elapsed().as_secs_f64(),
+                    });
                     let tokens = batch.tokens();
                     for (layer, s) in stage_s.iter().enumerate() {
                         stage_stats[layer].seconds += s;
@@ -469,16 +506,26 @@ impl Server {
                     }
                     if let Some(e) = err {
                         n_failed += batch.n_requests();
-                        for reply in &replies {
+                        for (reply, enqueued) in &replies {
                             // A dropped ticket is fine; ignore send errors.
                             let _ = reply.send(Err(ServeError::Stage(e.clone())));
+                            coll_stats.record(StatsEvent::RequestDone {
+                                latency_s: enqueued.elapsed().as_secs_f64(),
+                                outcome: ReqOutcome::Failed,
+                            });
                             queue_ref.release();
                         }
                         continue;
                     }
                     total_tokens += tokens;
-                    for ((_, y), reply) in batch.split(&batch.x).into_iter().zip(&replies) {
+                    for ((_, y), (reply, enqueued)) in
+                        batch.split(&batch.x).into_iter().zip(&replies)
+                    {
                         let _ = reply.send(Ok(y));
+                        coll_stats.record(StatsEvent::RequestDone {
+                            latency_s: enqueued.elapsed().as_secs_f64(),
+                            outcome: ReqOutcome::Completed,
+                        });
                         queue_ref.release();
                     }
                 }
@@ -489,7 +536,7 @@ impl Server {
             scope.spawn(|| {
                 let tx = batch_tx;
                 let mut mb = MicroBatcher::new(model.width(), batcher_cfg.clone());
-                let mut replies: HashMap<u64, mpsc::Sender<Reply>> = HashMap::new();
+                let mut replies: HashMap<u64, (mpsc::Sender<Reply>, Instant)> = HashMap::new();
                 loop {
                     let drained: Vec<PendingReq> = {
                         let mut st = queue.state.lock().unwrap();
@@ -499,6 +546,7 @@ impl Server {
                         if st.pending.is_empty() && st.closed {
                             break;
                         }
+                        sched_stats.set_queue_depth(st.pending.len());
                         // Linger: give the batch a chance to fill before
                         // dispatching a partial one — cut short by the
                         // token budget, the request cap, or shutdown.
@@ -528,10 +576,11 @@ impl Server {
                         // their tickets get the typed error instead of a
                         // stale dispatch.
                         if let Some(e) = queue.stale(p.enqueued, timeout) {
+                            sched_stats.record(StatsEvent::Expired);
                             let _ = p.reply.send(Err(e));
                             continue;
                         }
-                        replies.insert(p.req.id, p.reply);
+                        replies.insert(p.req.id, (p.reply, p.enqueued));
                         mb.push(p.req).expect("client validated width/rows at submit");
                     }
                     while let Some(mut batch) = mb.next_batch() {
@@ -540,11 +589,17 @@ impl Server {
                             .iter()
                             .map(|id| replies.remove(id).expect("one reply per request"))
                             .collect();
+                        sched_stats.record(StatsEvent::BatchDispatched {
+                            requests: batch.n_requests(),
+                            prefill_tokens: batch.tokens(),
+                            decode_tokens: 0,
+                        });
                         let x = std::mem::replace(&mut batch.x, Mat::zeros(0, 0));
                         let work = StreamWork {
                             batch,
                             x,
                             replies: batch_replies,
+                            dispatched: Instant::now(),
                             stage_s: Vec::with_capacity(n_stages),
                             err: None,
                         };
@@ -557,6 +612,15 @@ impl Server {
                 // run dry and exit.
             });
 
+            // ---- sampler: periodic StatsReport JSON while the loop runs ----
+            if !stats_every.is_zero() {
+                scope.spawn(|| {
+                    while !stop.wait_for(stats_every) {
+                        sink.emit(&hub.sample(queue.in_flight.load(Ordering::Acquire), false));
+                    }
+                });
+            }
+
             // ---- client closure on the caller's thread ----
             let close = CloseGuard(&queue);
             let result = client_fn(StreamClient {
@@ -564,12 +628,21 @@ impl Server {
                 next_id: &next_id,
                 width: model.width(),
                 queue_depth,
+                stats: &submit_stats,
             });
             drop(close); // close + notify so the batcher drains and exits
             let tally = collector.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            stop.stop(); // the sampler parks in ticks; end it so the scope joins fast
             (result, tally)
         });
 
+        // Final post-drain aggregate: always computed into the report;
+        // emitted through the sink only when periodic stats were on (so
+        // short runs still produce at least one JSON line).
+        let stats = hub.sample(queue.in_flight.load(Ordering::Acquire), true);
+        if !stats_every.is_zero() {
+            sink.emit(&stats);
+        }
         let (stage_stats, total_tokens, n_batches, n_requests, n_failed) = tally;
         Ok((
             result,
@@ -582,6 +655,7 @@ impl Server {
                 n_failed,
                 n_timed_out: queue.timed_out.load(Ordering::Relaxed),
                 n_rejected: queue.rejected.load(Ordering::Relaxed),
+                stats,
             },
         ))
     }
@@ -802,6 +876,79 @@ mod tests {
         }
         assert_eq!(report.n_timed_out, 1);
         assert_eq!(report.n_requests, 0, "expired requests never reach the stages");
+        // The stats plane saw the same story.
+        assert_eq!(report.stats.n_admitted, 1);
+        assert_eq!(report.stats.n_expired, 1);
+        assert_eq!(report.stats.n_completed, 0);
+        assert_eq!(report.stats.in_flight, 0, "the expired request released its slot");
+    }
+
+    #[test]
+    fn counter_invariants_hold_under_concurrent_stress() {
+        // Satellite: with client threads hammering a depth-2 queue,
+        // `n_requests + n_timed_out` must equal the client-observed
+        // successful submissions and `n_rejected` the refused ones —
+        // whatever the interleaving.
+        let mut server = streaming_server(ServePath::MlpOnly);
+        server.cfg_mut().queue_depth = 2;
+        server.cfg_mut().request_timeout = Duration::from_millis(250);
+        let width = server.model().width();
+        let (counts, report) = server
+            .run_streaming(engines(1, 1), |client| {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..4u64)
+                        .map(|t| {
+                            s.spawn(move || {
+                                let (mut ok, mut rejected) = (0usize, 0usize);
+                                let mut tickets = Vec::new();
+                                for i in 0..6usize {
+                                    let rows = 1 + (t as usize + i) % 3;
+                                    match client.submit(Mat::zeros(rows, width)) {
+                                        Ok(ticket) => {
+                                            ok += 1;
+                                            tickets.push(ticket);
+                                        }
+                                        Err(ServeError::QueueFull { .. }) => rejected += 1,
+                                        Err(e) => panic!("unexpected submit error: {e}"),
+                                    }
+                                }
+                                let (mut served, mut timed_out) = (0usize, 0usize);
+                                for ticket in tickets {
+                                    match ticket.wait() {
+                                        Ok(_) => served += 1,
+                                        Err(ServeError::TimedOut { .. }) => timed_out += 1,
+                                        Err(e) => panic!("unexpected ticket error: {e}"),
+                                    }
+                                }
+                                (ok, rejected, served, timed_out)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).fold(
+                        (0usize, 0usize, 0usize, 0usize),
+                        |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2, a.3 + b.3),
+                    )
+                })
+            })
+            .unwrap();
+        let (ok, rejected, served, timed_out) = counts;
+        assert_eq!(ok + rejected, 4 * 6, "every submit resolved one way");
+        assert_eq!(ok, served + timed_out, "every ticket resolved one way");
+        assert_eq!(
+            report.n_requests + report.n_timed_out,
+            ok,
+            "admitted = served through the stages + expired"
+        );
+        assert_eq!(report.n_requests, served);
+        assert_eq!(report.n_timed_out, timed_out);
+        assert_eq!(report.n_rejected, rejected);
+        assert_eq!(report.n_failed, 0);
+        // The stats plane agrees with the queue counters and clients.
+        assert_eq!(report.stats.n_admitted, ok);
+        assert_eq!(report.stats.n_rejected, rejected);
+        assert_eq!(report.stats.n_expired, timed_out);
+        assert_eq!(report.stats.n_completed, served);
+        assert_eq!(report.stats.in_flight, 0, "drained: nothing left in flight");
     }
 
     #[test]

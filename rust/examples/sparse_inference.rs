@@ -20,7 +20,10 @@
 //! prefill vs decode tokens/s for the dense baseline, MLP-only sparse,
 //! and full-decoder sparse (batched greedy decode through
 //! `forward_cached`), and verifies the KV-cached token trajectory
-//! against a full-sequence re-forward greedy loop.
+//! against a full-sequence re-forward greedy loop.  A paged-KV workload
+//! then serves two generations through a pressure-sized `KvPool`
+//! (preemption + copy-on-write prefix sharing) and verifies they still
+//! match the sequential contiguous reference.
 //!
 //! Verifies full-decoder parity against the host dense-masked forward
 //! (<1e-3), bit-determinism across thread counts, and **gates** on the
@@ -45,8 +48,8 @@ use permllm::recipe::{LearnedPerm, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
 use permllm::sparsity::NmConfig;
 use permllm::serve::{
-    greedy_token, BatcherCfg, DenseModel, KvCache, Percentiles, Request, ServeCfg, ServePath,
-    ServeReport, Server, SparseModel,
+    greedy_token, BatcherCfg, DenseModel, GenRequest, KvStore, Percentiles, Request, Sampler,
+    ServeCfg, ServePath, ServeReport, Server, SparseModel,
 };
 use permllm::tensor::Mat;
 use permllm::util::cli::Cli;
@@ -91,16 +94,16 @@ fn engines(n: usize, threads: usize) -> Vec<Box<dyn ExecBackend + Send>> {
 /// the identical loop.
 fn decode_bench(
     width: usize,
-    new_cache: &dyn Fn() -> KvCache,
+    new_cache: &dyn Fn() -> KvStore,
     embed: &dyn Fn(&[u32]) -> anyhow::Result<Mat>,
     logits_of: &dyn Fn(&Mat) -> Mat,
-    mut fwd: impl FnMut(&Mat, &[(usize, usize)], &mut [KvCache]) -> anyhow::Result<Mat>,
+    mut fwd: impl FnMut(&Mat, &[(usize, usize)], &mut [KvStore]) -> anyhow::Result<Mat>,
     prompts: &[Vec<u32>],
     gen_steps: usize,
 ) -> anyhow::Result<(f64, f64, Vec<f64>, Vec<Vec<u32>>)> {
     let r = prompts.len();
     let rows = prompts[0].len();
-    let mut caches: Vec<KvCache> = (0..r).map(|_| new_cache()).collect();
+    let mut caches: Vec<KvStore> = (0..r).map(|_| new_cache()).collect();
     let mut x = Mat::zeros(r * rows, width);
     let mut spans = Vec::with_capacity(r);
     for (i, p) in prompts.iter().enumerate() {
@@ -357,6 +360,57 @@ fn main() -> anyhow::Result<()> {
     let agree = fd_tokens.iter().zip(&dn_tokens).filter(|(a, b)| a == b).count();
     println!("dense and sparse decode agree on {agree}/{n_requests} token trajectories");
 
+    // ---- paged-KV pool: preemption + recompute under page pressure ----
+    // Serve two full-decoder generations through the continuous-batching
+    // decode loop with a pool sized for exactly one request's worst
+    // case: their combined peak cannot fit, so the loop preempts and
+    // recomputes, and must still produce exactly the sequential
+    // reference tokens.  Prefix sharing is on — identical prompts, so
+    // an admission after the first prefill adopts its pages
+    // copy-on-write.
+    let kv_new = gen_steps;
+    let kv_pt = 16usize;
+    let kv_layers = server.model().cfg().n_layers;
+    let kv_pool_pages = kv_layers * (rows + kv_new - 1).div_ceil(kv_pt);
+    server.cfg_mut().path = ServePath::FullDecoder;
+    server.cfg_mut().kv_pages = kv_pool_pages;
+    server.cfg_mut().kv_page_tokens = kv_pt;
+    server.cfg_mut().kv_share_prefix = true;
+    let kv_prompt = prompts[0].clone();
+    let (kv_outs, kv_report) = server.run_decode_streaming(engines(1, 1), |client| {
+        let tickets: Vec<_> = (0..2)
+            .map(|_| client.submit(GenRequest::greedy(kv_prompt.clone(), kv_new)).unwrap())
+            .collect();
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect::<Vec<_>>()
+    })?;
+    let kv_want = server.model().generate(
+        &mut engine1,
+        &kv_prompt,
+        kv_new,
+        None,
+        ServePath::FullDecoder,
+        Sampler::Greedy,
+    )?;
+    for toks in &kv_outs {
+        anyhow::ensure!(
+            toks == &kv_want,
+            "paged decode diverged from the sequential contiguous reference"
+        );
+    }
+    anyhow::ensure!(
+        kv_report.stats.kv_free_pages == kv_pool_pages,
+        "paged serving leaked pages: {} of {kv_pool_pages} free at drain",
+        kv_report.stats.kv_free_pages
+    );
+    println!(
+        "[paged kv] pool {kv_pool_pages} pages x {kv_pt} tokens: {} preemptions, shared peak \
+         {} pages, {} CoW forks; both generations match the sequential reference: OK",
+        kv_report.stats.kv_preemptions,
+        kv_report.stats.kv_shared_pages_peak,
+        kv_report.stats.kv_cow_forks
+    );
+    server.cfg_mut().kv_pages = 0;
+
     // The CI bench gate: full-decoder sparse serving must not regress
     // below the dense baseline.
     let gate: f64 = std::env::var("PERMLLM_BENCH_GATE")
@@ -402,6 +456,13 @@ fn main() -> anyhow::Result<()> {
         ("sparse_full_decoder_decode_token_latency_p50_ms", json::num(fd_lat.p50)),
         ("sparse_full_decoder_decode_token_latency_p90_ms", json::num(fd_lat.p90)),
         ("sparse_full_decoder_decode_token_latency_p99_ms", json::num(fd_lat.p99)),
+        // Paged-KV pool workload (pressure-sized: forces preemption and
+        // exercises copy-on-write prefix sharing).
+        ("kv_pool_pages", json::num(kv_pool_pages as f64)),
+        ("kv_page_tokens", json::num(kv_pt as f64)),
+        ("kv_preemptions", json::num(kv_report.stats.kv_preemptions as f64)),
+        ("kv_shared_pages_peak", json::num(kv_report.stats.kv_shared_pages_peak as f64)),
+        ("kv_cow_forks", json::num(kv_report.stats.kv_cow_forks as f64)),
     ]);
     let json_path = p.get("json");
     if !json_path.is_empty() {

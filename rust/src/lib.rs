@@ -79,8 +79,11 @@
 //! `sparse_inference` example for the benchmark loop).  Token
 //! generation runs through the KV-cached decode loop
 //! ([`serve::Server::run_decode_streaming`], `permllm serve --decode`):
-//! per-request [`serve::KvCache`]s, continuous batching of mixed
-//! prefill + decode steps, and greedy token streaming per ticket.
+//! per-request [`serve::KvStore`]s — contiguous buffers, or fixed-size
+//! pages from a shared [`serve::KvPool`] with copy-on-write prefix
+//! sharing and preemption-by-recompute (`--kv-pages`) — continuous
+//! batching of mixed prefill + decode steps, and greedy / top-k / top-p
+//! token streaming per ticket.
 //!
 //! See `examples/` (`quickstart`, `prune_llm`, `end_to_end`,
 //! `sparse_inference`, `ablation_lcp`) and the README for the full tour.

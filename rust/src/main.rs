@@ -8,7 +8,8 @@
 //!   serve     prune, compress, and serve the sparse path (batched or
 //!             streaming, MLP-only or full decoder with --sparse-attn,
 //!             KV-cached token generation with --decode and greedy or
-//!             seeded top-k sampling via --sampler,
+//!             seeded top-k/top-p sampling via --sampler, a paged KV
+//!             pool with prefix sharing and preemption via --kv-pages,
 //!             optionally pipelined across decoder layers)
 //!   eval      evaluate a saved model (perplexity + zero-shot suite)
 //!   train     pretrain the tiny LM via the AOT train_step artifact (pjrt)
@@ -314,10 +315,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .flag("stream", "long-lived streaming loop: requests enqueue while batches are in flight")
     .flag("decode", "KV-cached token generation: prompts in, greedy tokens out (continuous batching)")
     .opt("max-new", "16", "decode: max tokens to generate per request (staggered across requests)")
-    .opt("sampler", "greedy", "decode token selection: greedy|top-k")
+    .opt("sampler", "greedy", "decode token selection: greedy|top-k|top-p")
     .opt("top-k", "8", "decode: top-k shortlist size (with --sampler top-k)")
-    .opt("temperature", "0.8", "decode: top-k softmax temperature (with --sampler top-k)")
-    .opt("sample-seed", "7", "decode: top-k sampling seed (deterministic per seed)")
+    .opt("top-p", "0.9", "decode: nucleus mass in (0,1] (with --sampler top-p)")
+    .opt("temperature", "0.8", "decode: top-k/top-p softmax temperature")
+    .opt("sample-seed", "7", "decode: top-k/top-p sampling seed (deterministic per seed)")
+    .opt("kv-pages", "0", "decode: paged KV pool size in pages (0 = contiguous per-request caches)")
+    .opt("kv-page-tokens", "16", "decode: token rows per KV page, per layer (with --kv-pages)")
+    .flag("kv-share-prefix", "decode: share prefill pages across requests with a common page-aligned prompt prefix (copy-on-write; needs --kv-pages and --sparse-attn)")
     .opt("stream-clients", "4", "streaming/decode: concurrent submitting threads")
     .opt("linger-ms", "2", "streaming: micro-batch linger (ms) before dispatching a partial batch")
     .opt("queue-depth", "0", "streaming/decode: max in-flight requests before submit fails fast (0 = unbounded)")
@@ -375,6 +380,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             queue_depth: p.get_usize("queue-depth"),
             request_timeout: Duration::from_millis(p.get_u64("timeout-ms")),
             stats_every: Duration::from_millis(p.get_u64("stats-every")),
+            kv_pages: p.get_usize("kv-pages"),
+            kv_page_tokens: p.get_usize("kv-page-tokens"),
+            kv_share_prefix: p.get_bool("kv-share-prefix"),
             ..ServeCfg::default()
         },
     );
@@ -558,7 +566,14 @@ fn sampler_from_args(p: &Parsed) -> Result<Sampler> {
             temperature: num(p, "temperature", "a number > 0")?,
             seed: num(p, "sample-seed", "an integer")?,
         },
-        other => return Err(anyhow!("unknown --sampler '{other}' (valid: greedy, top-k)")),
+        "top-p" | "topp" => Sampler::TopP {
+            p: num(p, "top-p", "a number in (0, 1]")?,
+            temperature: num(p, "temperature", "a number > 0")?,
+            seed: num(p, "sample-seed", "an integer")?,
+        },
+        other => {
+            return Err(anyhow!("unknown --sampler '{other}' (valid: greedy, top-k, top-p)"))
+        }
     };
     sampler.validate().map_err(|e| anyhow!("--sampler: {e}"))?;
     Ok(sampler)
@@ -667,8 +682,20 @@ fn run_serve_decode(
         "KV cache: {} bytes high water ({} resident at drain)",
         report.stats.kv_high_water_bytes, report.stats.kv_bytes
     );
+    if report.stats.kv_pool_pages > 0 {
+        println!(
+            "KV pool: {} pages ({} free at drain), shared peak {} pages, {} preemptions, \
+             {} CoW forks",
+            report.stats.kv_pool_pages,
+            report.stats.kv_free_pages,
+            report.stats.kv_shared_pages_peak,
+            report.stats.kv_preemptions,
+            report.stats.kv_cow_forks
+        );
+    }
     // Verify a sample against the sequential KV-cached reference (same
-    // sampler, so greedy and seeded top-k must both match exactly).
+    // sampler, so greedy and seeded top-k/top-p must all match exactly
+    // — paged or contiguous).
     let mut engine = native(threads);
     for (toks, prompt, max_new_i) in outputs.iter().take(3) {
         let want =

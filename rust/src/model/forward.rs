@@ -7,7 +7,7 @@
 use std::collections::HashMap;
 
 use super::config::{LinearKind, LinearRef, ModelConfig};
-use super::kv::KvCache;
+use super::kv::{ContigRows, KvRows, KvStore};
 use super::params::ParamStore;
 use crate::tensor::Mat;
 
@@ -136,6 +136,19 @@ pub(crate) fn causal_attention_offset(
     let t_all = offset + t_new;
     assert_eq!(k.len(), t_all * d, "q/k shape mismatch");
     assert_eq!(v.len(), t_all * d, "q/v shape mismatch");
+    causal_attention_rows(q, &ContigRows { k, v, dim: d }, n_heads, offset)
+}
+
+/// The attention inner loop, generic over the cached K/V layout
+/// ([`KvRows`]): each key/value row is a contiguous `dim`-wide slice
+/// whatever the storage (flat buffer or paged block table), so the
+/// per-`(head, query, key)` arithmetic — term order included — is
+/// byte-for-byte the loop [`causal_attention_offset`] always ran.
+/// Monomorphized per layout; the paged decode path pays one slice lookup
+/// per key row and no branch inside the dot-product loops.
+fn causal_attention_rows<R: KvRows>(q: &Mat, rows: &R, n_heads: usize, offset: usize) -> Mat {
+    let (t_new, d) = q.shape();
+    let t_all = offset + t_new;
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut o = Mat::zeros(t_new, d);
@@ -147,7 +160,7 @@ pub(crate) fn causal_attention_offset(
             let qrow = &q.row(qi)[base..base + hd];
             let mut mx = f32::NEG_INFINITY;
             for ki in 0..=qabs {
-                let krow = &k[ki * d + base..ki * d + base + hd];
+                let krow = &rows.k_row(ki)[base..base + hd];
                 let mut dot = 0.0f32;
                 for e in 0..hd {
                     dot += qrow[e] * krow[e];
@@ -163,7 +176,7 @@ pub(crate) fn causal_attention_offset(
             let orow = o.row_mut(qi);
             for ki in 0..=qabs {
                 let w = att[ki] / z;
-                let vrow = &v[ki * d + base..ki * d + base + hd];
+                let vrow = &rows.v_row(ki)[base..base + hd];
                 for e in 0..hd {
                     orow[base + e] += w * vrow[e];
                 }
@@ -189,15 +202,20 @@ pub(crate) fn cached_attention(
     v: Mat,
     n_heads: usize,
     theta: f32,
-    cache: &mut KvCache,
+    cache: &mut KvStore,
     layer: usize,
 ) -> Mat {
     let offset = cache.pos(layer);
     rope_at(&mut q, n_heads, theta, offset);
     rope_at(&mut k, n_heads, theta, offset);
     cache.append(layer, &k, &v);
-    let (k_all, v_all) = cache.slices(layer);
-    causal_attention_offset(&q, k_all, v_all, n_heads, offset)
+    match cache {
+        KvStore::Contiguous(c) => {
+            let (k_all, v_all) = c.slices(layer);
+            causal_attention_offset(&q, k_all, v_all, n_heads, offset)
+        }
+        KvStore::Paged(p) => causal_attention_rows(&q, &p.rows(layer), n_heads, offset),
+    }
 }
 
 /// Forward one sequence with optional activation capture.
@@ -276,10 +294,13 @@ pub fn lm_forward(ps: &ParamStore, batch: &[Vec<u8>]) -> Vec<Mat> {
 /// this), which is the parity bar the serving subsystem's KV-cached
 /// decode path (`crate::serve`) is held to.
 ///
-/// `cache` must have been created with this model's layer count and
-/// width ([`KvCache::new`]) and only ever fed by this function for this
-/// sequence.
-pub fn lm_forward_step(ps: &ParamStore, cache: &mut KvCache, tokens: &[u8]) -> Mat {
+/// `cache` is a [`KvStore`] of either layout — the legacy contiguous
+/// buffers ([`KvStore::contiguous`]) or a pool-backed paged store
+/// ([`KvStore::paged`], funded by the caller before each step) — created
+/// with this model's layer count and width and only ever fed by this
+/// function for this sequence.  The two layouts are bit-identical
+/// (`tests::paged_store_logits_match_contiguous_bit_for_bit`).
+pub fn lm_forward_step(ps: &ParamStore, cache: &mut KvStore, tokens: &[u8]) -> Mat {
     let cfg = ps.cfg();
     assert_eq!(cache.n_layers(), cfg.n_layers, "cache layer count != model");
     assert_eq!(cache.dim(), cfg.dim, "cache width != model");
@@ -423,7 +444,7 @@ mod tests {
         let mut rng = Pcg32::seeded(9);
         let s = seq(&mut rng, 12);
         let full = &lm_forward(&ps, &[s.clone()])[0];
-        let mut cache = KvCache::new(cfg.n_layers, cfg.dim);
+        let mut cache = KvStore::contiguous(cfg.n_layers, cfg.dim);
         let prefill = lm_forward_step(&ps, &mut cache, &s[..5]);
         assert_eq!(prefill.shape(), (5, cfg.vocab));
         for pos in 0..5 {
@@ -449,9 +470,9 @@ mod tests {
         let (cfg, ps) = tiny();
         let mut rng = Pcg32::seeded(10);
         let s = seq(&mut rng, 9);
-        let mut whole = KvCache::new(cfg.n_layers, cfg.dim);
+        let mut whole = KvStore::contiguous(cfg.n_layers, cfg.dim);
         let all = lm_forward_step(&ps, &mut whole, &s);
-        let mut chunked = KvCache::new(cfg.n_layers, cfg.dim);
+        let mut chunked = KvStore::contiguous(cfg.n_layers, cfg.dim);
         let head = lm_forward_step(&ps, &mut chunked, &s[..4]);
         let tail = lm_forward_step(&ps, &mut chunked, &s[4..]);
         for pos in 0..4 {
@@ -459,6 +480,41 @@ mod tests {
         }
         for pos in 4..9 {
             assert_eq!(tail.row(pos - 4), all.row(pos), "chunk B row {pos}");
+        }
+    }
+
+    #[test]
+    fn paged_store_logits_match_contiguous_bit_for_bit() {
+        // Property test over random prompt/decode schedules and page
+        // sizes: feeding the same chunks through a contiguous store and
+        // a pool-backed paged store must produce byte-identical logits
+        // at every step — the layout changes where K/V rows live, never
+        // a single arithmetic term.
+        use super::super::kv::KvPool;
+        let (cfg, ps) = tiny();
+        let mut rng = Pcg32::seeded(12);
+        for round in 0..3 {
+            let total = 8 + rng.below(8) as usize;
+            let s = seq(&mut rng, total);
+            let pt = 1 + rng.below(5) as usize;
+            let pool = KvPool::new(128, pt, cfg.n_layers, cfg.dim);
+            let mut contig = KvStore::contiguous(cfg.n_layers, cfg.dim);
+            let mut paged = KvStore::paged(pool.new_cache());
+            let mut at = 0usize;
+            while at < total {
+                let hi = (at + 1 + rng.below(4) as usize).min(total);
+                let chunk = &s[at..hi];
+                let p = paged.as_paged_mut().unwrap();
+                let need = p.pages_for(chunk.len());
+                p.fund(pool.reserve(need).expect("pool sized amply"));
+                let a = lm_forward_step(&ps, &mut contig, chunk);
+                let b = lm_forward_step(&ps, &mut paged, chunk);
+                assert_eq!(a.data(), b.data(), "round {round} pt {pt} rows {at}..{hi}");
+                at = hi;
+            }
+            assert_eq!(paged.len(), total);
+            drop(paged);
+            assert_eq!(pool.free_pages(), 128, "all pages recycled on drop");
         }
     }
 

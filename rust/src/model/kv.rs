@@ -1,14 +1,38 @@
-//! Per-sequence key/value cache for incremental (KV-cached) decoding.
+//! Per-sequence key/value storage for incremental (KV-cached) decoding
+//! — contiguous per-request buffers and the paged, pooled layout behind
+//! one [`KvStore`] interface.
 //!
 //! Autoregressive decode re-uses the attention keys and values of every
 //! already-processed position instead of re-running the full sequence:
 //! each forward step appends the *rotated* keys (RoPE already applied at
 //! the row's absolute position) and the values for the new rows, and the
-//! next step's queries attend over the whole cache.  One [`KvCache`]
-//! holds one sequence's K/V for **every** decoder layer, so a request
-//! carries a single cache object through the serving pipeline
-//! (`crate::serve`) or the host reference forward
-//! ([`crate::model::lm_forward_step`]).
+//! next step's queries attend over the whole cache.  Two layouts provide
+//! that contract:
+//!
+//! * [`KvCache`] — the legacy contiguous layout: one growable flat
+//!   buffer per layer, owned by one request.  Simple, zero bookkeeping,
+//!   unbounded growth.
+//! * [`PagedKvCache`] over a shared [`KvPool`] — fixed-size pages
+//!   (`page_tokens x dim` of K and of V per layer), a pool-wide free
+//!   list, and a per-request per-layer block table.  Requests admit by
+//!   *free pages*, pages return to the pool the moment the last holder
+//!   drops them, and concurrent requests with a common prompt prefix can
+//!   share refcounted prefill pages ([`KvPool::lookup_prefix`] /
+//!   [`KvPool::publish_prefix`]) copy-on-write style: shared pages are
+//!   always full, so a diverging request simply starts appending into
+//!   its own pages — a metadata-only fork.
+//!
+//! [`KvStore`] wraps either layout behind the `KvCache`-shaped API so
+//! the attention glue ([`crate::model::lm_forward_step`], the serving
+//! subsystem's `cached_attention` path) is layout-agnostic, and the
+//! paged read path hands out per-row slices (each K/V row lives entirely
+//! inside one page) so the attention inner loop runs the *identical*
+//! arithmetic in the identical order — paged and contiguous decode are
+//! bit-identical, which the layout-equivalence tests pin.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::tensor::Mat;
 
@@ -110,6 +134,693 @@ impl KvCache {
     }
 }
 
+/// Row access into one layer's cached K/V, whatever the layout — the
+/// single read interface the attention inner loop is generic over.  Each
+/// row is a contiguous `dim`-wide slice (pages never split a row), so
+/// the per-`(head, query, key)` arithmetic is identical across layouts.
+pub(crate) trait KvRows {
+    /// Rotated key row `i` (`dim` floats).
+    fn k_row(&self, i: usize) -> &[f32];
+    /// Value row `i` (`dim` floats).
+    fn v_row(&self, i: usize) -> &[f32];
+}
+
+/// [`KvRows`] over the contiguous flat slices of a [`KvCache`] layer.
+pub(crate) struct ContigRows<'a> {
+    pub(crate) k: &'a [f32],
+    pub(crate) v: &'a [f32],
+    pub(crate) dim: usize,
+}
+
+impl KvRows for ContigRows<'_> {
+    #[inline]
+    fn k_row(&self, i: usize) -> &[f32] {
+        &self.k[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    fn v_row(&self, i: usize) -> &[f32] {
+        &self.v[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// One page worth of K and V for one layer: `page_tokens * dim` floats
+/// each, preallocated once by the pool and recycled for the pool's
+/// lifetime.
+#[derive(Debug)]
+pub(crate) struct KvBuf {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// A page checked out of a [`KvPool`].  Dropping the last handle returns
+/// the underlying buffer to the pool's free list automatically, so
+/// owned, shared, and registry-held pages all account themselves —
+/// there is no explicit free call to forget.
+#[derive(Debug)]
+pub struct PooledPage {
+    buf: Option<KvBuf>,
+    pool: Weak<KvPool>,
+}
+
+impl PooledPage {
+    fn k(&self) -> &[f32] {
+        &self.buf.as_ref().expect("page buffer present until drop").k
+    }
+
+    fn v(&self) -> &[f32] {
+        &self.buf.as_ref().expect("page buffer present until drop").v
+    }
+}
+
+impl Drop for PooledPage {
+    fn drop(&mut self) {
+        if let (Some(buf), Some(pool)) = (self.buf.take(), self.pool.upgrade()) {
+            pool.give_back(vec![buf]);
+        }
+    }
+}
+
+/// A published prompt prefix: per-layer chains of full, immutable pages
+/// plus the exact tokens they cover (stored so a hash collision can
+/// never alias two different prompts).
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    /// `pages[layer][i]` — refcounted, always-full pages.
+    pages: Vec<Vec<Arc<PooledPage>>>,
+}
+
+struct PoolState {
+    free: Vec<KvBuf>,
+    registry: HashMap<u64, PrefixEntry>,
+}
+
+/// A shared-prefix match from [`KvPool::lookup_prefix`]: the adopter
+/// clones these page handles into its own block table instead of
+/// re-prefilling the covered tokens.
+pub struct SharedPrefix {
+    /// Prompt tokens the shared pages cover (a multiple of
+    /// [`KvPool::page_tokens`]).
+    pub tokens_covered: usize,
+    pages: Vec<Vec<Arc<PooledPage>>>,
+}
+
+/// Fixed-capacity paged KV allocator shared by every in-flight request
+/// of one decode loop: `n_pages` pages of `page_tokens x dim` K and V
+/// (per layer a request touches), a free list, and a refcounted
+/// prefix-sharing registry.
+///
+/// The serving scheduler admits work by free pages ([`KvPool::reserve`]
+/// is all-or-nothing) and preempts the youngest generation when the pool
+/// is exhausted mid-decode; pages return to the free list automatically
+/// when their last holder drops ([`PooledPage`]).
+///
+/// ```
+/// use permllm::model::{KvPool, KvStore};
+/// use permllm::tensor::Mat;
+///
+/// // 8 pages of 4 tokens x 2 channels, for a 1-layer model.
+/// let pool = KvPool::new(8, 4, 1, 2);
+/// let mut store = KvStore::paged(pool.new_cache());
+/// let paged = store.as_paged_mut().unwrap();
+/// let need = paged.pages_for(6); // 6 rows cross 2 page boundaries
+/// assert_eq!(need, 2);
+/// paged.fund(pool.reserve(need).unwrap());
+/// store.append(0, &Mat::zeros(6, 2), &Mat::zeros(6, 2));
+/// assert_eq!((store.len(), pool.free_pages()), (6, 6));
+/// drop(store); // pages return to the free list automatically
+/// assert_eq!(pool.free_pages(), 8);
+/// ```
+pub struct KvPool {
+    n_pages: usize,
+    page_tokens: usize,
+    n_layers: usize,
+    dim: usize,
+    state: Mutex<PoolState>,
+    /// Gauges/counters, readable without the state lock.
+    free_pages: AtomicUsize,
+    shared_pages_peak: AtomicUsize,
+    preemptions: AtomicUsize,
+    cow_forks: AtomicUsize,
+}
+
+impl KvPool {
+    /// Allocate a pool of `n_pages` pages up front (each holding
+    /// `page_tokens * dim` K floats and as many V floats) for a model
+    /// with `n_layers` cached decoder layers of width `dim`.
+    pub fn new(n_pages: usize, page_tokens: usize, n_layers: usize, dim: usize) -> Arc<KvPool> {
+        assert!(n_pages > 0, "KvPool needs at least one page");
+        assert!(page_tokens > 0, "KvPool pages hold at least one token");
+        assert!(dim > 0, "KvPool needs a nonzero width");
+        let free = (0..n_pages)
+            .map(|_| KvBuf {
+                k: vec![0.0; page_tokens * dim],
+                v: vec![0.0; page_tokens * dim],
+            })
+            .collect();
+        Arc::new(KvPool {
+            n_pages,
+            page_tokens,
+            n_layers,
+            dim,
+            state: Mutex::new(PoolState { free, registry: HashMap::new() }),
+            free_pages: AtomicUsize::new(n_pages),
+            shared_pages_peak: AtomicUsize::new(0),
+            preemptions: AtomicUsize::new(0),
+            cow_forks: AtomicUsize::new(0),
+        })
+    }
+
+    /// Total pool capacity in pages.
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Tokens per page.
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Cached decoder layers per request.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Activation width.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bytes of one page (f32 K + V).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.page_tokens * self.dim * 4
+    }
+
+    /// Pages currently on the free list.
+    pub fn free_pages(&self) -> usize {
+        self.free_pages.load(Ordering::Acquire)
+    }
+
+    /// Pages currently checked out (owned, shared, or reserved).
+    pub fn used_pages(&self) -> usize {
+        self.n_pages - self.free_pages()
+    }
+
+    /// Distinct pages currently held by the prefix-sharing registry.
+    pub fn shared_pages(&self) -> usize {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        Self::distinct_registry_pages(&st)
+    }
+
+    /// High water of [`KvPool::shared_pages`] (monotone).
+    pub fn shared_pages_peak(&self) -> usize {
+        self.shared_pages_peak.load(Ordering::Acquire)
+    }
+
+    /// Generations evicted for recompute because the pool ran dry.
+    pub fn preemptions(&self) -> usize {
+        self.preemptions.load(Ordering::Acquire)
+    }
+
+    /// Requests that diverged from a shared prefix into pages of their
+    /// own (the copy-on-write fork — metadata only, shared pages are
+    /// never copied because they are always full).
+    pub fn cow_forks(&self) -> usize {
+        self.cow_forks.load(Ordering::Acquire)
+    }
+
+    /// Count one preemption (called by the scheduler that evicted).
+    pub fn note_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn note_cow_fork(&self) {
+        self.cow_forks.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn distinct_registry_pages(st: &PoolState) -> usize {
+        let mut seen = HashSet::new();
+        for entry in st.registry.values() {
+            for chain in &entry.pages {
+                for page in chain {
+                    seen.insert(Arc::as_ptr(page) as usize);
+                }
+            }
+        }
+        seen.len()
+    }
+
+    /// Pop `n` free pages, all or nothing.  When the free list is short,
+    /// the prefix registry is evicted first (pages no request references
+    /// return to the free list as their registry handles drop); `None`
+    /// means the demand cannot be met even then — the caller defers or
+    /// preempts.
+    pub fn reserve(&self, n: usize) -> Option<Vec<KvBuf>> {
+        loop {
+            let evicted = {
+                let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+                if st.free.len() >= n {
+                    let at = st.free.len() - n;
+                    let bufs = st.free.split_off(at);
+                    self.free_pages.store(st.free.len(), Ordering::Release);
+                    return Some(bufs);
+                }
+                if st.registry.is_empty() {
+                    return None;
+                }
+                std::mem::take(&mut st.registry)
+            };
+            // Dropped outside the lock: each page's Drop re-enters
+            // `give_back`, which takes the state mutex.
+            drop(evicted);
+        }
+    }
+
+    /// Return page buffers to the free list ([`PooledPage`] drops and
+    /// released reservations land here).
+    pub(crate) fn give_back(&self, bufs: Vec<KvBuf>) {
+        if bufs.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.free.extend(bufs);
+        debug_assert!(st.free.len() <= self.n_pages, "more pages returned than allocated");
+        self.free_pages.store(st.free.len(), Ordering::Release);
+    }
+
+    /// Fresh empty paged cache drawing on this pool.  It holds no pages
+    /// until [`PagedKvCache::fund`] hands it reserved ones.
+    pub fn new_cache(self: &Arc<Self>) -> PagedKvCache {
+        PagedKvCache {
+            pool: Arc::clone(self),
+            blocks: vec![Vec::new(); self.n_layers],
+            len: vec![0; self.n_layers],
+            reserve: Vec::new(),
+            shared_prefix_pages: 0,
+            forked: false,
+        }
+    }
+
+    /// Longest published prefix of `tokens` (hash-matched at full-page
+    /// granularity, token-verified), capped at `max_tokens` so the
+    /// adopter can keep at least one uncovered suffix token to forward.
+    pub fn lookup_prefix(&self, tokens: &[u32], max_tokens: usize) -> Option<SharedPrefix> {
+        let cover = tokens.len().min(max_tokens) / self.page_tokens;
+        if cover == 0 {
+            return None;
+        }
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        for pages in (1..=cover).rev() {
+            let prefix = &tokens[..pages * self.page_tokens];
+            if let Some(entry) = st.registry.get(&fnv1a_tokens(prefix)) {
+                if entry.tokens == prefix {
+                    return Some(SharedPrefix {
+                        tokens_covered: prefix.len(),
+                        pages: entry.pages.clone(),
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Publish the full pages covering a prompt prefix so later requests
+    /// with the same prompt can adopt them.  `pages[layer]` holds the
+    /// frozen page chain ([`PagedKvCache::freeze_prefix`]); an entry is
+    /// registered for every full-page sub-prefix so partial overlaps
+    /// match too.  No-op for prefixes already published.
+    pub fn publish_prefix(&self, tokens: &[u32], pages: &[Vec<Arc<PooledPage>>]) {
+        let chain_len = pages.first().map_or(0, Vec::len);
+        if chain_len == 0 {
+            return;
+        }
+        assert!(
+            tokens.len() >= chain_len * self.page_tokens,
+            "prefix tokens shorter than the published pages"
+        );
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        for pcount in 1..=chain_len {
+            let prefix = &tokens[..pcount * self.page_tokens];
+            st.registry.entry(fnv1a_tokens(prefix)).or_insert_with(|| PrefixEntry {
+                tokens: prefix.to_vec(),
+                pages: pages.iter().map(|chain| chain[..pcount].to_vec()).collect(),
+            });
+        }
+        let shared = Self::distinct_registry_pages(&st);
+        self.shared_pages_peak.fetch_max(shared, Ordering::AcqRel);
+    }
+
+    /// Drop every registry entry (drain/shutdown): pages no live request
+    /// references return to the free list immediately.
+    pub fn flush_shared(&self) {
+        let evicted = {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut st.registry)
+        };
+        drop(evicted);
+    }
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvPool")
+            .field("n_pages", &self.n_pages)
+            .field("page_tokens", &self.page_tokens)
+            .field("n_layers", &self.n_layers)
+            .field("dim", &self.dim)
+            .field("free_pages", &self.free_pages())
+            .finish()
+    }
+}
+
+/// FNV-1a over the token ids' little-endian bytes — the prefix-registry
+/// key (token equality is still checked on lookup, so collisions cost a
+/// miss, never a wrong match).
+fn fnv1a_tokens(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One request's paged KV view: a per-layer block table of refcounted
+/// pages from a shared [`KvPool`], plus a reservation stack of pages the
+/// scheduler funded for the upcoming step, so [`PagedKvCache::append`]
+/// never has to allocate (or fail) on the forward hot path.
+///
+/// Shared (prefix-adopted) pages are always full, so writes only ever
+/// touch pages this request uniquely owns — a request diverging from a
+/// shared prefix simply appends into a fresh page (the copy-on-write
+/// fork, counted on the pool).
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pool: Arc<KvPool>,
+    /// `blocks[layer][i]` covers positions `i*page_tokens..` of `layer`.
+    blocks: Vec<Vec<Arc<PooledPage>>>,
+    /// Positions cached per layer (layers advance independently
+    /// mid-pass, like [`KvCache`]).
+    len: Vec<usize>,
+    /// Pages reserved for upcoming appends, not yet in any block table.
+    reserve: Vec<KvBuf>,
+    /// Leading pages per layer that are shared with the pool registry /
+    /// other requests (never written, excluded from [`Self::bytes`]).
+    shared_prefix_pages: usize,
+    forked: bool,
+}
+
+/// [`KvRows`] over one layer of a [`PagedKvCache`]: row `i` lives at
+/// offset `(i % page_tokens) * dim` of page `i / page_tokens`.
+pub(crate) struct PagedRows<'a> {
+    blocks: &'a [Arc<PooledPage>],
+    page_tokens: usize,
+    dim: usize,
+}
+
+impl KvRows for PagedRows<'_> {
+    #[inline]
+    fn k_row(&self, i: usize) -> &[f32] {
+        let at = (i % self.page_tokens) * self.dim;
+        &self.blocks[i / self.page_tokens].k()[at..at + self.dim]
+    }
+
+    #[inline]
+    fn v_row(&self, i: usize) -> &[f32] {
+        let at = (i % self.page_tokens) * self.dim;
+        &self.blocks[i / self.page_tokens].v()[at..at + self.dim]
+    }
+}
+
+impl PagedKvCache {
+    /// The pool this cache draws on.
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Decoder layers this cache covers.
+    pub fn n_layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Activation width.
+    pub fn dim(&self) -> usize {
+        self.pool.dim
+    }
+
+    /// Positions cached at `layer`.
+    pub fn pos(&self, layer: usize) -> usize {
+        self.len[layer]
+    }
+
+    /// Sequence length cached so far (positions at layer 0).
+    pub fn len(&self) -> usize {
+        self.len.first().copied().unwrap_or(0)
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident footprint in bytes: pages this request uniquely owns
+    /// plus its unspent reservation.  Shared prefix pages are excluded —
+    /// they are accounted once, on the pool's shared-page gauge, not per
+    /// adopter.
+    pub fn bytes(&self) -> usize {
+        let total: usize = self.blocks.iter().map(Vec::len).sum();
+        let shared = self.shared_prefix_pages * self.blocks.len();
+        (total - shared + self.reserve.len()) * self.pool.page_bytes()
+    }
+
+    /// Pages a step appending `rows` new tokens to **every** layer will
+    /// need beyond what the current tables cover — what the scheduler
+    /// must [`KvPool::reserve`] before dispatching the step.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        let pt = self.pool.page_tokens;
+        let before = (self.len() + pt - 1) / pt;
+        let after = (self.len() + rows + pt - 1) / pt;
+        (after - before) * self.blocks.len()
+    }
+
+    /// Hand this cache pages popped by [`KvPool::reserve`]; subsequent
+    /// [`KvStore::append`]s consume them instead of touching the pool.
+    pub fn fund(&mut self, bufs: Vec<KvBuf>) {
+        self.reserve.extend(bufs);
+    }
+
+    /// Pages currently reserved but not yet appended into.
+    pub fn reserve_len(&self) -> usize {
+        self.reserve.len()
+    }
+
+    /// Return unspent reserved pages to the pool (end of a step that
+    /// reserved more than it appended — e.g. the MLP-only path, which
+    /// never caches attention).
+    pub fn release_reserve(&mut self) {
+        let bufs = std::mem::take(&mut self.reserve);
+        self.pool.give_back(bufs);
+    }
+
+    /// Adopt a published prompt prefix: clone its page chains into this
+    /// (empty) cache so prefill starts at `tokens_covered` instead of 0.
+    pub fn adopt_prefix(&mut self, prefix: &SharedPrefix) {
+        assert!(self.is_empty(), "prefix adoption only into an empty cache");
+        assert_eq!(prefix.pages.len(), self.blocks.len(), "prefix layer count mismatch");
+        for (layer, chain) in prefix.pages.iter().enumerate() {
+            self.blocks[layer] = chain.clone();
+            self.len[layer] = prefix.tokens_covered;
+        }
+        self.shared_prefix_pages = prefix.tokens_covered / self.pool.page_tokens;
+    }
+
+    /// Freeze the first `pages` full pages of every layer as shared
+    /// (immutable) and return the chains for [`KvPool::publish_prefix`].
+    /// The cache keeps reading them; it just may never write them again
+    /// — which it would not anyway, full pages are append-complete.
+    pub fn freeze_prefix(&mut self, pages: usize) -> Vec<Vec<Arc<PooledPage>>> {
+        let pt = self.pool.page_tokens;
+        let chains: Vec<Vec<Arc<PooledPage>>> = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(layer, blocks)| {
+                assert!(
+                    self.len[layer] >= pages * pt,
+                    "cannot freeze pages that are not yet full"
+                );
+                blocks[..pages].to_vec()
+            })
+            .collect();
+        self.shared_prefix_pages = self.shared_prefix_pages.max(pages);
+        // The freezer is the prefix's author, not an adopter: its later
+        // appends are ordinary growth, not a copy-on-write divergence.
+        self.forked = true;
+        chains
+    }
+
+    /// Append `[t_new, dim]` rotated keys and values for `layer`,
+    /// drawing new pages from the reservation stack.  Panics if the
+    /// scheduler did not [`PagedKvCache::fund`] enough pages — the
+    /// admission contract, not a recoverable condition.
+    pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        let dim = self.pool.dim;
+        assert_eq!(k_rows.cols(), dim, "key width != cache dim");
+        assert_eq!(v_rows.cols(), dim, "value width != cache dim");
+        assert_eq!(k_rows.rows(), v_rows.rows(), "k/v row count mismatch");
+        let pt = self.pool.page_tokens;
+        for r in 0..k_rows.rows() {
+            let slot = self.len[layer] % pt;
+            if slot == 0 {
+                let buf = self
+                    .reserve
+                    .pop()
+                    .expect("paged KV append without a page reservation");
+                if self.shared_prefix_pages > 0 && !self.forked {
+                    // First owned page after an adopted prefix: the
+                    // copy-on-write divergence point.
+                    self.forked = true;
+                    self.pool.note_cow_fork();
+                }
+                self.blocks[layer].push(Arc::new(PooledPage {
+                    buf: Some(buf),
+                    pool: Arc::downgrade(&self.pool),
+                }));
+            }
+            let page = self.blocks[layer]
+                .last_mut()
+                .expect("block table nonempty after page push");
+            let page = Arc::get_mut(page)
+                .expect("appended page is uniquely owned (shared pages are immutable)");
+            let buf = page.buf.as_mut().expect("page buffer present until drop");
+            buf.k[slot * dim..(slot + 1) * dim].copy_from_slice(k_rows.row(r));
+            buf.v[slot * dim..(slot + 1) * dim].copy_from_slice(v_rows.row(r));
+            self.len[layer] += 1;
+        }
+    }
+
+    /// Row-access view of `layer` for the attention read path.
+    pub(crate) fn rows(&self, layer: usize) -> PagedRows<'_> {
+        PagedRows {
+            blocks: &self.blocks[layer],
+            page_tokens: self.pool.page_tokens,
+            dim: self.pool.dim,
+        }
+    }
+}
+
+/// One request's KV storage, contiguous or paged, behind the
+/// [`KvCache`]-shaped API — the type the serving pipeline and the host
+/// incremental forward ([`crate::model::lm_forward_step`]) carry, so
+/// every caller is layout-agnostic and the two layouts stay
+/// bit-identical by construction.
+///
+/// ```
+/// use permllm::model::KvStore;
+/// use permllm::tensor::Mat;
+///
+/// let mut store = KvStore::contiguous(2, 4);
+/// store.append(0, &Mat::zeros(3, 4), &Mat::zeros(3, 4));
+/// assert_eq!((store.pos(0), store.pos(1)), (3, 0));
+/// assert!(!store.is_paged());
+/// ```
+#[derive(Debug)]
+pub enum KvStore {
+    /// Legacy per-request contiguous buffers.
+    Contiguous(KvCache),
+    /// Pooled fixed-size pages with block tables.
+    Paged(PagedKvCache),
+}
+
+impl KvStore {
+    /// Fresh contiguous store ([`KvCache::new`]).
+    pub fn contiguous(n_layers: usize, dim: usize) -> KvStore {
+        KvStore::Contiguous(KvCache::new(n_layers, dim))
+    }
+
+    /// Wrap a pool-backed paged cache ([`KvPool::new_cache`]).
+    pub fn paged(cache: PagedKvCache) -> KvStore {
+        KvStore::Paged(cache)
+    }
+
+    /// True for the paged layout.
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvStore::Paged(_))
+    }
+
+    /// The paged cache, when this store is paged — the scheduler's
+    /// funding/adoption hooks live on [`PagedKvCache`].
+    pub fn as_paged_mut(&mut self) -> Option<&mut PagedKvCache> {
+        match self {
+            KvStore::Paged(p) => Some(p),
+            KvStore::Contiguous(_) => None,
+        }
+    }
+
+    /// Decoder layers this store covers.
+    pub fn n_layers(&self) -> usize {
+        match self {
+            KvStore::Contiguous(c) => c.n_layers(),
+            KvStore::Paged(p) => p.n_layers(),
+        }
+    }
+
+    /// Activation width.
+    pub fn dim(&self) -> usize {
+        match self {
+            KvStore::Contiguous(c) => c.dim(),
+            KvStore::Paged(p) => p.dim(),
+        }
+    }
+
+    /// Positions cached at `layer`.
+    pub fn pos(&self, layer: usize) -> usize {
+        match self {
+            KvStore::Contiguous(c) => c.pos(layer),
+            KvStore::Paged(p) => p.pos(layer),
+        }
+    }
+
+    /// Sequence length cached so far (positions at layer 0).
+    pub fn len(&self) -> usize {
+        match self {
+            KvStore::Contiguous(c) => c.len(),
+            KvStore::Paged(p) => p.len(),
+        }
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident footprint in bytes (for paged stores: uniquely-owned
+    /// pages + unspent reservation; shared prefix pages are accounted on
+    /// the pool, not per request).
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvStore::Contiguous(c) => c.bytes(),
+            KvStore::Paged(p) => p.bytes(),
+        }
+    }
+
+    /// Append `[t_new, dim]` rotated keys and values for `layer`.
+    pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        match self {
+            KvStore::Contiguous(c) => c.append(layer, k_rows, v_rows),
+            KvStore::Paged(p) => p.append(layer, k_rows, v_rows),
+        }
+    }
+}
+
+impl From<KvCache> for KvStore {
+    fn from(cache: KvCache) -> KvStore {
+        KvStore::Contiguous(cache)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +859,156 @@ mod tests {
     fn wrong_width_is_rejected() {
         let mut cache = KvCache::new(1, 4);
         cache.append(0, &Mat::zeros(1, 5), &Mat::zeros(1, 5));
+    }
+
+    #[test]
+    fn paged_rows_match_contiguous_bit_for_bit() {
+        // Random append schedules at several page sizes: every cached row
+        // read back through the paged block table must equal the
+        // contiguous layout exactly.
+        let (n_layers, dim) = (2usize, 4usize);
+        let mut rng = Pcg32::seeded(41);
+        for pt in [1usize, 2, 3, 5] {
+            let pool = KvPool::new(64, pt, n_layers, dim);
+            let mut contig = KvCache::new(n_layers, dim);
+            let mut paged = pool.new_cache();
+            for _ in 0..5 {
+                let rows = 1 + rng.below(4) as usize;
+                let k = Mat::randn(rows, dim, 1.0, &mut rng);
+                let v = Mat::randn(rows, dim, 1.0, &mut rng);
+                let need = paged.pages_for(rows);
+                paged.fund(pool.reserve(need).expect("pool sized amply"));
+                for layer in 0..n_layers {
+                    contig.append(layer, &k, &v);
+                    paged.append(layer, &k, &v);
+                }
+            }
+            assert_eq!(contig.len(), paged.len());
+            for layer in 0..n_layers {
+                let (kc, vc) = contig.slices(layer);
+                let view = paged.rows(layer);
+                for i in 0..contig.pos(layer) {
+                    assert_eq!(view.k_row(i), &kc[i * dim..(i + 1) * dim], "pt {pt} k row {i}");
+                    assert_eq!(view.v_row(i), &vc[i * dim..(i + 1) * dim], "pt {pt} v row {i}");
+                }
+            }
+            assert_eq!(paged.reserve_len(), 0, "reservation exactly consumed");
+            let held = pool.used_pages();
+            assert_eq!(paged.bytes(), held * pool.page_bytes());
+            drop(paged);
+            assert_eq!(pool.free_pages(), 64, "dropping the cache returns every page");
+        }
+    }
+
+    #[test]
+    fn reserve_is_all_or_nothing_and_pages_recycle() {
+        let pool = KvPool::new(4, 2, 1, 4);
+        let a = pool.reserve(3).expect("3 of 4");
+        assert_eq!((a.len(), pool.free_pages(), pool.used_pages()), (3, 1, 3));
+        assert!(pool.reserve(2).is_none(), "only 1 page left");
+        assert_eq!(pool.free_pages(), 1, "failed reserve takes nothing");
+        pool.give_back(a);
+        assert_eq!(pool.free_pages(), 4);
+        assert_eq!(pool.page_bytes(), 2 * 2 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "paged KV append without a page reservation")]
+    fn unfunded_append_is_rejected() {
+        let pool = KvPool::new(2, 2, 1, 4);
+        let mut cache = pool.new_cache();
+        cache.append(0, &Mat::zeros(1, 4), &Mat::zeros(1, 4));
+    }
+
+    #[test]
+    fn prefix_publish_lookup_adopt_and_evict() {
+        let (n_layers, dim, pt) = (2usize, 4usize, 2usize);
+        let pool = KvPool::new(8, pt, n_layers, dim);
+        let tokens: Vec<u32> = vec![10, 11, 12, 13, 14]; // 2 full pages + 1
+        let mut rng = Pcg32::seeded(43);
+        let k = Mat::randn(tokens.len(), dim, 1.0, &mut rng);
+        let v = Mat::randn(tokens.len(), dim, 1.0, &mut rng);
+
+        // Writer prefilled the whole prompt, then publishes the 2 full pages.
+        let mut writer = pool.new_cache();
+        writer.fund(pool.reserve(writer.pages_for(tokens.len())).unwrap());
+        for layer in 0..n_layers {
+            writer.append(layer, &k, &v);
+        }
+        let chains = writer.freeze_prefix(2);
+        pool.publish_prefix(&tokens, &chains);
+        assert_eq!(pool.shared_pages(), 2 * n_layers);
+        assert_eq!(pool.shared_pages_peak(), 2 * n_layers);
+        // Frozen pages no longer count against the writer's residency.
+        assert_eq!(writer.bytes(), n_layers * pool.page_bytes());
+
+        // A prompt sharing both pages adopts them; the cap keeps >=1
+        // suffix token uncovered.
+        let prompt: Vec<u32> = vec![10, 11, 12, 13, 99];
+        let hit = pool.lookup_prefix(&prompt, prompt.len() - 1).expect("2-page hit");
+        assert_eq!(hit.tokens_covered, 4);
+        // A prompt sharing only the first page matches the sub-entry.
+        let short: Vec<u32> = vec![10, 11, 77, 78];
+        let hit1 = pool.lookup_prefix(&short, short.len() - 1).expect("1-page hit");
+        assert_eq!(hit1.tokens_covered, 2);
+        // No match below one full page, or for different tokens.
+        assert!(pool.lookup_prefix(&prompt, 1).is_none());
+        assert!(pool.lookup_prefix(&[1, 2, 3, 4], 3).is_none());
+
+        let mut reader = pool.new_cache();
+        reader.adopt_prefix(&hit);
+        assert_eq!(reader.len(), 4);
+        assert_eq!(reader.bytes(), 0, "adopted pages are accounted on the pool");
+        // Divergence: the reader's first own append is the CoW fork.
+        assert_eq!(pool.cow_forks(), 0);
+        reader.fund(pool.reserve(reader.pages_for(1)).unwrap());
+        let k1 = Mat::randn(1, dim, 1.0, &mut rng);
+        let v1 = Mat::randn(1, dim, 1.0, &mut rng);
+        for layer in 0..n_layers {
+            reader.append(layer, &k1, &v1);
+        }
+        assert_eq!(pool.cow_forks(), 1);
+        // The adopted rows read back the writer's data, the fork row its own.
+        let view = reader.rows(0);
+        assert_eq!(view.k_row(0), &k.data()[..dim]);
+        assert_eq!(view.k_row(4), k1.row(0));
+
+        // Pool exhausted: a big reserve evicts the registry; pages still
+        // referenced by writer/reader survive until those drop.
+        drop(writer);
+        drop(reader);
+        assert!(pool.shared_pages() > 0, "registry still holds the prefix");
+        let bufs = pool.reserve(8).expect("eviction frees the registry pages");
+        assert_eq!(bufs.len(), 8);
+        assert_eq!(pool.shared_pages(), 0);
+        pool.give_back(bufs);
+        pool.flush_shared();
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn kv_store_mirrors_both_layouts() {
+        let mut rng = Pcg32::seeded(47);
+        let k = Mat::randn(3, 4, 1.0, &mut rng);
+        let v = Mat::randn(3, 4, 1.0, &mut rng);
+        let mut contig = KvStore::contiguous(2, 4);
+        let pool = KvPool::new(8, 2, 2, 4);
+        let mut paged = KvStore::paged(pool.new_cache());
+        paged
+            .as_paged_mut()
+            .unwrap()
+            .fund(pool.reserve(paged.as_paged_mut().unwrap().pages_for(3)).unwrap());
+        for store in [&mut contig, &mut paged] {
+            assert!(store.is_empty());
+            store.append(0, &k, &v);
+            store.append(1, &k, &v);
+            assert_eq!((store.n_layers(), store.dim(), store.len()), (2, 4, 3));
+            assert_eq!(store.pos(1), 3);
+        }
+        assert!(!contig.is_paged());
+        assert!(paged.is_paged());
+        assert_eq!(contig.bytes(), KvCache::bytes_for(2, 4, 3));
+        // Paged rounds up to whole pages: 2 pages x 2 layers.
+        assert_eq!(paged.bytes(), 4 * pool.page_bytes());
     }
 }

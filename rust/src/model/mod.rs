@@ -17,6 +17,6 @@ mod synth;
 pub use config::{LinearKind, LinearRef, ModelConfig};
 pub use forward::{forward_captured, lm_forward, lm_forward_step, lm_loss, perplexity, Captured};
 pub(crate) use forward::{cached_attention, causal_attention, rmsnorm, rope, swiglu};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvPool, KvStore, PagedKvCache, PooledPage, SharedPrefix};
 pub use params::ParamStore;
 pub use synth::synth_trained_params;

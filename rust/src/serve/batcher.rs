@@ -327,12 +327,32 @@ impl<T> ContinuousBatcher<T> {
     /// `None` when the pool is empty.  A single over-budget prefill still
     /// forms its own batch — big prompts are admitted, not starved.
     pub fn next_batch(&mut self) -> Option<StepBatch<T>> {
-        let first = self.pool.pop_front()?;
+        self.next_batch_gated(|_| true)
+    }
+
+    /// [`ContinuousBatcher::next_batch`] with an admission gate: the
+    /// front step must pass `gate` or no batch forms at all — steps park
+    /// in the pool, FIFO order intact, so later arrivals never overtake
+    /// a starved front.  Follow-up steps join only while the budgets
+    /// hold *and* the gate passes; the first gate miss ends the batch.
+    ///
+    /// `gate` may mutate the step (the paged decode loop funds the
+    /// step's KV page reservation inside its gate, so the `true` verdict
+    /// and the pages it claims are one atomic decision).  A gate that is
+    /// always `true` makes this exactly [`ContinuousBatcher::next_batch`].
+    pub fn next_batch_gated(
+        &mut self,
+        mut gate: impl FnMut(&mut StepItem<T>) -> bool,
+    ) -> Option<StepBatch<T>> {
+        if !gate(self.pool.front_mut()?) {
+            return None;
+        }
+        let first = self.pool.pop_front().expect("front was gated");
         let mut members = vec![first];
         let mut tokens = members[0].x.rows();
         while members.len() < self.cfg.max_requests {
-            let Some(next) = self.pool.front() else { break };
-            if tokens + next.x.rows() > self.cfg.max_tokens {
+            let Some(next) = self.pool.front_mut() else { break };
+            if tokens + next.x.rows() > self.cfg.max_tokens || !gate(next) {
                 break;
             }
             tokens += next.x.rows();
@@ -358,6 +378,25 @@ impl<T> ContinuousBatcher<T> {
         let seq = self.next_seq;
         self.next_seq += 1;
         Some(StepBatch { seq, ids, spans, prefill, x, payloads })
+    }
+
+    /// Remove and return the newest (highest request id) single-row
+    /// decode step that is *not* at the front of the pool — the
+    /// preemption victim when the shared KV pool runs dry.  Evicting the
+    /// youngest generation frees the most future-facing pages for the
+    /// starved older front, and the front itself is never stolen (it is
+    /// the very step the scheduler is trying to admit).  Prefill steps
+    /// hold no pages yet and are never victims.
+    pub fn steal_newest_decode(&mut self) -> Option<StepItem<T>> {
+        let at = self
+            .pool
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, it)| !it.is_prefill)
+            .max_by_key(|(_, it)| it.id)
+            .map(|(i, _)| i)?;
+        self.pool.remove(at)
     }
 }
 
@@ -522,6 +561,44 @@ mod tests {
             assert_eq!(hi - lo, r);
             assert_eq!(&b.x.data()[lo * 4..hi * 4], x.data());
         }
+    }
+
+    #[test]
+    fn gated_batch_parks_on_front_failure_and_stops_at_first_miss() {
+        let mut rng = Pcg32::seeded(10);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg { max_tokens: 10, max_requests: 8 });
+        for id in 0..4u64 {
+            cb.push(step(id, 1, false, &mut rng)).unwrap();
+        }
+        // Front fails the gate: nothing forms, nothing is lost, and the
+        // FIFO order is untouched — later steps never overtake it.
+        assert!(cb.next_batch_gated(|it| it.id != 0).is_none());
+        assert_eq!(cb.pending(), 4);
+        // Gate admits 0 and 1, rejects 2: the batch ends there even
+        // though the budgets had room, and 2, 3 stay queued in order.
+        let b = cb.next_batch_gated(|it| it.id < 2).unwrap();
+        assert_eq!(b.ids, vec![0, 1]);
+        assert_eq!(cb.pending(), 2);
+        // A trivially-true gate is exactly next_batch.
+        let b = cb.next_batch_gated(|_| true).unwrap();
+        assert_eq!(b.ids, vec![2, 3]);
+        assert!(cb.next_batch_gated(|_| true).is_none());
+    }
+
+    #[test]
+    fn steal_newest_decode_skips_front_and_prefills() {
+        let mut rng = Pcg32::seeded(11);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg::default());
+        cb.push(step(5, 1, false, &mut rng)).unwrap(); // front: never stolen
+        cb.push(step(9, 3, true, &mut rng)).unwrap(); // prefill: never stolen
+        cb.push(step(7, 1, false, &mut rng)).unwrap();
+        cb.push(step(8, 1, false, &mut rng)).unwrap();
+        assert_eq!(cb.steal_newest_decode().expect("victim").id, 8);
+        assert_eq!(cb.steal_newest_decode().expect("victim").id, 7);
+        assert!(cb.steal_newest_decode().is_none(), "front and prefills are not victims");
+        // The survivors still batch in FIFO order.
+        let b = cb.next_batch().unwrap();
+        assert_eq!(b.ids, vec![5, 9]);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! The loop is a continuous batcher over *steps*, not requests:
 //!
 //! 1. the **scheduler** thread drains newly admitted prompts (prefill
-//!    steps, all prompt rows at once, fresh [`KvCache`]) and rejoining
+//!    steps, all prompt rows at once, fresh [`KvStore`]) and rejoining
 //!    in-flight requests (decode steps, one token row, warm cache) from
 //!    one FIFO pool into mixed [`super::StepBatch`]es under the
 //!    [`super::BatcherCfg`] budgets;
@@ -34,7 +34,22 @@
 //! timeout is a deadline on the *whole generation*: a request can
 //! expire before prefill or mid-generation, every time it rejoins the
 //! step pool — the ticket observes [`ServeError::TimedOut`], the
-//! in-flight slot frees, and the request's [`KvCache`] drops.
+//! in-flight slot frees, and the request's [`KvStore`] drops.
+//!
+//! With [`super::ServeCfg::kv_pages`] nonzero, every generation's KV
+//! lives in fixed-size pages of one shared [`super::KvPool`] instead of
+//! a private contiguous buffer: the scheduler funds each step's page
+//! demand before dispatch (admission by free pages, all-or-nothing — an
+//! unfundable step parks and FIFO order is preserved), **preempts** the
+//! youngest in-flight decode behind a starved front when the pool runs
+//! dry (its pages return and it re-enters as a recompute prefill of its
+//! prompt plus every token sampled so far — bit-identical, because
+//! chunked and whole prefill agree and the request's RNG is untouched),
+//! and with [`super::ServeCfg::kv_share_prefix`] publishes each
+//! prompt's full prefill pages so later requests with the same prompt
+//! prefix adopt them copy-on-write.  Paged and contiguous serving
+//! produce identical tokens — including across a forced
+//! preemption/recompute cycle — which the tests here pin.
 //!
 //! The loop is instrumented through the [`super::stats`] plane: submit,
 //! scheduler, and collector record typed [`super::StatsEvent`]s, and
@@ -44,19 +59,19 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{ContinuousBatcher, StepItem};
-use super::model::Sampler;
+use super::model::{Sampler, ServePath};
 use super::server::{Server, StageStats};
 use super::stats::{
     ReqOutcome, SamplerStop, StatsEvent, StatsHub, StatsRecorder, StatsReport, StatsSink,
     DEFAULT_WINDOW,
 };
 use super::stream::{CloseGuard, HasClosed, ServeError, SharedQueue};
-use crate::model::KvCache;
+use crate::model::KvStore;
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
 use crate::util::rng::Pcg32;
@@ -71,8 +86,9 @@ pub struct GenRequest {
     /// Optional end-of-sequence token: generation stops when it is
     /// produced (the EOS token itself is still streamed).
     pub eos: Option<u32>,
-    /// Token selection per decode step ([`Sampler::Greedy`] or seeded
-    /// [`Sampler::TopK`]; deterministic either way).
+    /// Token selection per decode step ([`Sampler::Greedy`], seeded
+    /// [`Sampler::TopK`], or seeded [`Sampler::TopP`]; deterministic
+    /// either way).
     pub sampler: Sampler,
 }
 
@@ -172,16 +188,21 @@ struct GenState {
     /// When the previous token was streamed (the enqueue time until the
     /// first token) — per-token latency samples are the gaps.
     last_token_at: Instant,
-    /// Last observed [`KvCache::bytes`] for this request, so the
-    /// collector can record growth deltas and free the exact resident
+    /// Last observed [`KvStore::bytes`] for this request, so the
+    /// collector can record residency deltas and free the exact resident
     /// amount when the generation ends.
     kv_bytes: usize,
+    /// Prompt plus every token sampled so far.  A preempted generation
+    /// re-prefills exactly this sequence to rebuild its KV bit-for-bit,
+    /// and its full-page prompt prefix is what gets published for
+    /// sharing.
+    tokens: Vec<u32>,
 }
 
 /// An in-flight request re-entering the pool for its next decode step.
 struct Rejoin {
     state: GenState,
-    cache: KvCache,
+    cache: KvStore,
     /// The token just generated — the next step's input row.
     token: u32,
 }
@@ -208,6 +229,11 @@ pub struct DecodeClient<'q> {
     vocab: usize,
     queue_depth: usize,
     max_new_cap: usize,
+    /// `(pool pages, page tokens, layers)` when serving from a paged
+    /// [`super::KvPool`] on the full-decoder path — lets `submit` reject
+    /// a generation whose worst-case page demand could never fit, which
+    /// would otherwise park forever.
+    kv_check: Option<(usize, usize, usize)>,
     stats: &'q StatsRecorder,
 }
 
@@ -240,6 +266,23 @@ impl DecodeClient<'_> {
         }
         if let Err(e) = req.sampler.validate() {
             return Err(ServeError::Invalid(format!("request {id}: {e}")));
+        }
+        if let Some((n_pages, page_tokens, n_layers)) = self.kv_check {
+            // At its last step the store holds prompt + max_new - 1 rows
+            // per layer (the final sampled token is never appended); a
+            // request whose worst case exceeds the whole pool could
+            // never be scheduled and would park the queue forever.
+            let rows = req.prompt.len() + req.max_new_tokens - 1;
+            let worst = n_layers * rows.div_ceil(page_tokens);
+            if worst > n_pages {
+                return Err(ServeError::Invalid(format!(
+                    "request {id}: worst-case KV demand of {worst} pages ({} prompt + {} new \
+                     tokens, {page_tokens} tokens/page x {n_layers} layers) exceeds the \
+                     {n_pages}-page pool",
+                    req.prompt.len(),
+                    req.max_new_tokens,
+                )));
+            }
         }
         self.stats.record(StatsEvent::Submitted);
         if let Err(e) = self.queue.admit(self.queue_depth) {
@@ -279,7 +322,7 @@ struct DecodeWork {
     spans: Vec<(usize, usize)>,
     prefill: Vec<bool>,
     states: Vec<GenState>,
-    caches: Vec<KvCache>,
+    caches: Vec<KvStore>,
     stage_s: Vec<f64>,
     /// When the scheduler dispatched this step — step latency is the
     /// gap to the collector picking it up.
@@ -395,6 +438,23 @@ impl Server {
         let queue_depth = self.cfg().queue_depth;
         let max_new_cap = self.cfg().max_new_tokens_cap;
         let batcher_cfg = self.cfg().batcher.clone();
+        anyhow::ensure!(
+            self.cfg().kv_pages == 0 || self.cfg().kv_page_tokens > 0,
+            "kv_page_tokens must be >= 1 when kv_pages is set"
+        );
+        // Paged KV: one shared pool; stores grow only on the
+        // full-decoder path (MLP-only has no attention state), so page
+        // funding and prefix sharing apply there alone.
+        let pool = (self.cfg().kv_pages > 0)
+            .then(|| model.new_kv_pool(self.cfg().kv_pages, self.cfg().kv_page_tokens));
+        let kv_funding = pool.is_some() && path == ServePath::FullDecoder;
+        let kv_share_prefix = kv_funding && self.cfg().kv_share_prefix;
+        let kv_check = if kv_funding {
+            let p = pool.as_ref().expect("funding implies a pool");
+            Some((p.n_pages(), p.page_tokens(), p.n_layers()))
+        } else {
+            None
+        };
         let queue: SharedQueue<GenQueueState> = SharedQueue::new();
         let next_id = AtomicU64::new(0);
         // Metrics plane: recorders used by non-`move` closures must
@@ -482,8 +542,24 @@ impl Server {
 
             // ---- collector: next token per member, complete or rejoin ----
             let queue_ref = &queue;
+            let coll_pool = pool.clone();
+            let coll_share = kv_share_prefix;
             let collector = scope.spawn(move || {
                 let done_rx = prev_rx;
+                // Mirror the pool's counters into the stats plane after
+                // every processed step, so periodic reports see live
+                // free/shared-page gauges.
+                let sync_pool_gauges = || {
+                    if let Some(p) = &coll_pool {
+                        coll_stats.set_kv_pool(
+                            p.n_pages(),
+                            p.free_pages(),
+                            p.shared_pages(),
+                            p.preemptions(),
+                            p.cow_forks(),
+                        );
+                    }
+                };
                 let stage_stats: Vec<StageStats> = (0..n_stages)
                     .map(|layer| StageStats { layer, seconds: 0.0, tokens: 0 })
                     .collect();
@@ -511,6 +587,9 @@ impl Server {
                         tally.stage_stats[layer].tokens += tokens;
                     }
                     if let Some(e) = err {
+                        // Drop the stores first so any pooled pages are
+                        // back on the free list before slots release.
+                        drop(caches);
                         for state in states {
                             let _ = state.reply.send(Err(ServeError::Stage(e.clone())));
                             tally.n_failed += 1;
@@ -521,10 +600,11 @@ impl Server {
                             coll_stats.kv_free(state.kv_bytes);
                             queue_ref.release();
                         }
+                        sync_pool_gauges();
                         continue;
                     }
                     let span_iter = spans.iter().zip(&prefill);
-                    for ((&(lo, hi), &is_prefill), (mut state, cache)) in
+                    for ((&(lo, hi), &is_prefill), (mut state, mut cache)) in
                         span_iter.zip(states.into_iter().zip(caches))
                     {
                         if is_prefill {
@@ -532,10 +612,35 @@ impl Server {
                         } else {
                             tally.decode_tokens += hi - lo;
                         }
-                        // The cache only grows: record the step's growth
-                        // so the gauge tracks resident + high-water KV.
+                        if let Some(paged) = cache.as_paged_mut() {
+                            // Funding is sized exactly per step, so this
+                            // is normally empty — defensive return of any
+                            // unspent pages.
+                            paged.release_reserve();
+                            // First prefill done: publish the prompt's
+                            // full pages so same-prefix requests admitted
+                            // later share them copy-on-write.
+                            if coll_share && is_prefill && state.n_generated == 0 {
+                                let pt = paged.pool().page_tokens();
+                                let pages = state.tokens.len() / pt;
+                                if pages > 0 {
+                                    let chains = paged.freeze_prefix(pages);
+                                    paged
+                                        .pool()
+                                        .publish_prefix(&state.tokens[..pages * pt], &chains);
+                                }
+                            }
+                        }
+                        // Residency is a signed delta: paged stores can
+                        // shrink when a frozen prefix moves into the
+                        // pool's shared-page accounting.  The high-water
+                        // mark stays monotone either way.
                         let cache_bytes = cache.bytes();
-                        coll_stats.kv_alloc(cache_bytes - state.kv_bytes);
+                        if cache_bytes >= state.kv_bytes {
+                            coll_stats.kv_alloc(cache_bytes - state.kv_bytes);
+                        } else {
+                            coll_stats.kv_free(state.kv_bytes - cache_bytes);
+                        }
                         state.kv_bytes = cache_bytes;
                         // The span's next token: the request's sampler
                         // over the LM head of its last hidden row.
@@ -543,6 +648,7 @@ impl Server {
                         let tok =
                             state.sampler.sample(model.logits(&last).row(0), &mut state.rng);
                         state.n_generated += 1;
+                        state.tokens.push(tok);
                         let ended = state.n_generated >= state.max_new_tokens
                             || state.eos == Some(tok);
                         // A dropped ticket ends its generation early —
@@ -573,6 +679,10 @@ impl Server {
                                 },
                             });
                             coll_stats.kv_free(state.kv_bytes);
+                            // Return this generation's pages before the
+                            // release wakeup, so a scheduler parked on
+                            // page funding sees them free.
+                            drop(cache);
                             queue_ref.release();
                         } else {
                             let mut st = queue_ref.state.lock().unwrap();
@@ -581,6 +691,7 @@ impl Server {
                             queue_ref.arrived.notify_all();
                         }
                     }
+                    sync_pool_gauges();
                 }
                 tally
             });
@@ -588,13 +699,30 @@ impl Server {
             // ---- scheduler: the continuous batcher over the step pool ----
             scope.spawn(|| {
                 let tx = step_tx;
-                let mut cb: ContinuousBatcher<(GenState, KvCache)> =
+                let mut cb: ContinuousBatcher<(GenState, KvStore)> =
                     ContinuousBatcher::new(model.width(), batcher_cfg.clone());
                 'outer: loop {
+                    let parked = cb.pending() > 0;
                     let (news, rejoins): (Vec<PendingGen>, Vec<Rejoin>) = {
                         let mut st = queue.state.lock().unwrap();
                         loop {
                             if !st.pending.is_empty() || !st.rejoin.is_empty() {
+                                break;
+                            }
+                            if parked {
+                                // Steps parked on page funding are woken
+                                // by *completions* freeing pages (release
+                                // notifies `arrived`), but poll on the
+                                // linger cadence too so a missed wakeup
+                                // can't strand them.
+                                let tick = if linger.is_zero() {
+                                    Duration::from_millis(1)
+                                } else {
+                                    linger
+                                };
+                                let (guard, _) =
+                                    queue.arrived.wait_timeout(st, tick).unwrap();
+                                st = guard;
                                 break;
                             }
                             // Exit only when nothing is pending, nothing
@@ -635,7 +763,34 @@ impl Server {
                             let _ = p.reply.send(Err(e));
                             continue;
                         }
-                        let x = model.embed(&p.prompt).expect("prompt validated at submit");
+                        let mut store = match &pool {
+                            Some(pool) => KvStore::paged(pool.new_cache()),
+                            None => model.new_cache(),
+                        };
+                        // Prefix sharing: adopt the longest published
+                        // full-page prefix of this prompt (capped one
+                        // short of the whole prompt, so at least one
+                        // suffix row still runs as prefill) and forward
+                        // only the uncovered suffix.  Chunked and whole
+                        // prefill agree bit-for-bit, so adoption cannot
+                        // change the trajectory.
+                        let mut covered = 0usize;
+                        if kv_share_prefix {
+                            if let Some(hit) = pool
+                                .as_ref()
+                                .expect("sharing implies a pool")
+                                .lookup_prefix(&p.prompt, p.prompt.len() - 1)
+                            {
+                                covered = hit.tokens_covered;
+                                store
+                                    .as_paged_mut()
+                                    .expect("pool stores are paged")
+                                    .adopt_prefix(&hit);
+                            }
+                        }
+                        let x = model
+                            .embed(&p.prompt[covered..])
+                            .expect("prompt validated at submit");
                         let state = GenState {
                             id: p.id,
                             reply: p.reply,
@@ -647,12 +802,13 @@ impl Server {
                             enqueued: p.enqueued,
                             last_token_at: p.enqueued,
                             kv_bytes: 0,
+                            tokens: p.prompt,
                         };
                         cb.push(StepItem {
                             id: p.id,
                             x,
                             is_prefill: true,
-                            payload: (state, model.new_cache()),
+                            payload: (state, store),
                         })
                         .expect("prefill step validated at submit");
                     }
@@ -662,7 +818,7 @@ impl Server {
                         // rejoin, not just before prefill: the ticket
                         // observes the typed error, the in-flight slot
                         // frees, and dropping the rejoin drops its
-                        // KvCache.
+                        // KvStore (returning any pooled pages).
                         if let Some(e) = queue.stale(r.state.enqueued, timeout) {
                             sched_stats.record(StatsEvent::Expired);
                             sched_stats.kv_free(r.state.kv_bytes);
@@ -678,28 +834,102 @@ impl Server {
                         })
                         .expect("decode step is one row");
                     }
-                    while let Some(batch) = cb.next_batch() {
-                        sched_stats.record(StatsEvent::BatchDispatched {
-                            requests: batch.n_requests(),
-                            prefill_tokens: batch.prefill_tokens(),
-                            decode_tokens: batch.decode_tokens(),
-                        });
-                        let spans = batch.spans().to_vec();
-                        let (states, caches): (Vec<GenState>, Vec<KvCache>) =
-                            batch.payloads.into_iter().unzip();
-                        let work = DecodeWork {
-                            x: batch.x,
-                            spans,
-                            prefill: batch.prefill,
-                            states,
-                            caches,
-                            stage_s: Vec::with_capacity(n_stages),
-                            dispatched: Instant::now(),
-                            err: None,
+                    // Dispatch: paged serving gates every batch member on
+                    // page funding (all-or-nothing per step); an
+                    // unfundable front parks the queue in FIFO order, and
+                    // if a younger in-flight decode sits behind it, that
+                    // generation is preempted — its pages return to the
+                    // pool and it re-enters as a recompute prefill.
+                    loop {
+                        let mut gate = |item: &mut StepItem<(GenState, KvStore)>| {
+                            if !kv_funding {
+                                return true;
+                            }
+                            let pool = pool.as_ref().expect("funding implies a pool");
+                            let rows = item.x.rows();
+                            let paged = item
+                                .payload
+                                .1
+                                .as_paged_mut()
+                                .expect("pool stores are paged");
+                            let need = paged.pages_for(rows);
+                            if need == 0 {
+                                return true;
+                            }
+                            match pool.reserve(need) {
+                                Some(bufs) => {
+                                    paged.fund(bufs);
+                                    true
+                                }
+                                None => false,
+                            }
                         };
-                        if tx.send(work).is_err() {
-                            return; // stage chain died; nothing to do
+                        while let Some(batch) = cb.next_batch_gated(&mut gate) {
+                            sched_stats.record(StatsEvent::BatchDispatched {
+                                requests: batch.n_requests(),
+                                prefill_tokens: batch.prefill_tokens(),
+                                decode_tokens: batch.decode_tokens(),
+                            });
+                            let spans = batch.spans().to_vec();
+                            let (states, caches): (Vec<GenState>, Vec<KvStore>) =
+                                batch.payloads.into_iter().unzip();
+                            let work = DecodeWork {
+                                x: batch.x,
+                                spans,
+                                prefill: batch.prefill,
+                                states,
+                                caches,
+                                stage_s: Vec::with_capacity(n_stages),
+                                dispatched: Instant::now(),
+                                err: None,
+                            };
+                            if tx.send(work).is_err() {
+                                return; // stage chain died; nothing to do
+                            }
                         }
+                        if cb.pending() == 0 || !kv_funding {
+                            break;
+                        }
+                        // The front could not fund its step.  Preempt the
+                        // youngest in-flight decode behind it (never the
+                        // front itself: FIFO keeps the oldest request
+                        // making progress); with no victim, the parked
+                        // steps wait for completions to free pages.
+                        let Some(victim) = cb.steal_newest_decode() else { break };
+                        let (mut vstate, vstore) = victim.payload;
+                        // Dropping the store returns every page it holds
+                        // (block tables and any unspent reserve).
+                        drop(vstore);
+                        let p = pool.as_ref().expect("funding implies a pool");
+                        p.note_preemption();
+                        sched_stats.kv_free(vstate.kv_bytes);
+                        vstate.kv_bytes = 0;
+                        // Recompute: re-prefill the prompt plus every
+                        // token sampled so far (its pending next-step
+                        // input was never appended), which rebuilds the
+                        // KV bit-for-bit — chunked and whole prefill
+                        // agree and the request's RNG is untouched — then
+                        // retry dispatch with the freed pages.
+                        let x = model
+                            .embed(&vstate.tokens)
+                            .expect("tokens were validated at submit or sampled in-vocab");
+                        let store = KvStore::paged(p.new_cache());
+                        cb.push(StepItem {
+                            id: vstate.id,
+                            x,
+                            is_prefill: true,
+                            payload: (vstate, store),
+                        })
+                        .expect("recompute prefill has model width");
+                    }
+                    if let Some(p) = &pool {
+                        sched_stats.set_kv_pool(
+                            p.n_pages(),
+                            p.free_pages(),
+                            p.shared_pages(),
+                            p.preemptions(),
+                            p.cow_forks(),
+                        );
                     }
                 }
                 // Dropping `tx` lets the stage chain and collector drain.
@@ -727,6 +957,7 @@ impl Server {
                 vocab: model.cfg().vocab,
                 queue_depth,
                 max_new_cap,
+                kv_check,
                 stats: &submit_stats,
             });
             drop(close);
@@ -735,6 +966,19 @@ impl Server {
             (result, tally)
         });
 
+        if let Some(p) = &pool {
+            // Drained: release the prefix registry so every page is back
+            // on the free list, then publish the terminal pool gauges
+            // (the shared-pages peak survives in the report).
+            p.flush_shared();
+            submit_stats.set_kv_pool(
+                p.n_pages(),
+                p.free_pages(),
+                p.shared_pages(),
+                p.preemptions(),
+                p.cow_forks(),
+            );
+        }
         let stats = hub.sample(queue.in_flight.load(Ordering::Acquire), true);
         if !stats_every.is_zero() {
             sink.emit(&stats);
@@ -767,6 +1011,7 @@ mod tests {
     use std::time::Duration;
 
     use super::*;
+    use crate::model::KvCache;
     use crate::runtime::{NativeCfg, NativeEngine};
     use crate::serve::batcher::BatcherCfg;
     use crate::serve::model::tests::tiny_sparse_model;
@@ -1255,5 +1500,171 @@ mod tests {
         assert!(last.kv_high_water_bytes > 0);
         assert!(report.stats.is_final);
         assert_eq!(report.stats.generated_tokens, 120);
+    }
+
+    #[test]
+    fn paged_decode_is_bit_identical_including_forced_preemption() {
+        // Tentpole acceptance: a pool that cannot hold two full
+        // generations at their peak (each needs 10 of 12 pages) forces
+        // at least one preemption/recompute cycle, yet every streamed
+        // token must equal the sequential contiguous-cache reference,
+        // and every page must be back on the free list at drain.
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().kv_pages = 12;
+        server.cfg_mut().kv_page_tokens = 2;
+        let prompts: [Vec<u32>; 2] = [vec![5, 9, 13, 17], vec![21, 25, 29, 33]];
+        let (outputs, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                let tickets: Vec<GenTicket> = prompts
+                    .iter()
+                    .map(|p| client.submit(gen_req(p.clone(), 6)).unwrap())
+                    .collect();
+                tickets.into_iter().map(|t| t.wait().unwrap()).collect::<Vec<_>>()
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 2);
+        let mut engine = NativeEngine::default();
+        for (prompt, toks) in prompts.iter().zip(&outputs) {
+            let want = server
+                .model()
+                .generate(&mut engine, prompt, 6, None, ServePath::FullDecoder, Sampler::Greedy)
+                .unwrap();
+            assert_eq!(toks, &want, "prompt {prompt:?} diverged under paged serving");
+        }
+        assert!(
+            report.stats.kv_preemptions >= 1,
+            "the 12-page pool cannot hold both peaks; a preemption must fire"
+        );
+        assert_eq!(report.stats.kv_pool_pages, 12);
+        assert_eq!(report.stats.kv_free_pages, 12, "every page returned at drain");
+        assert_eq!(report.stats.kv_used_pages(), 0);
+        assert_eq!(report.stats.kv_bytes, 0, "preempted + completed KV fully released");
+    }
+
+    #[test]
+    fn shared_prompt_prefixes_are_adopted_copy_on_write() {
+        // Two requests with the same prompt: the first prefills and
+        // publishes its full prompt pages; waiting for its first token
+        // guarantees the publish happened before the second submit, so
+        // the second adopts the shared pages and must still stream the
+        // exact reference tokens (diverging copy-on-write afterwards).
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().kv_pages = 64;
+        server.cfg_mut().kv_page_tokens = 2;
+        server.cfg_mut().kv_share_prefix = true;
+        let prompt: Vec<u32> = vec![3, 14, 15, 92, 65];
+        let ((first_toks, second_toks), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                let mut first = client.submit(gen_req(prompt.clone(), 4)).unwrap();
+                let t0 = first.next_token().unwrap().unwrap();
+                let second = client.submit(gen_req(prompt.clone(), 4)).unwrap();
+                let mut a = vec![t0];
+                while let Some(t) = first.next_token() {
+                    a.push(t.unwrap());
+                }
+                (a, second.wait().unwrap())
+            })
+            .unwrap();
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &prompt, 4, None, ServePath::FullDecoder, Sampler::Greedy)
+            .unwrap();
+        assert_eq!(first_toks, want, "publisher diverged from the reference");
+        assert_eq!(second_toks, want, "adopter must read shared pages bit-identically");
+        assert!(report.stats.kv_shared_pages_peak > 0, "prefix pages were shared");
+        assert!(report.stats.kv_cow_forks >= 1, "the adopter diverged into its own pages");
+        assert_eq!(report.stats.kv_shared_pages, 0, "registry flushed at drain");
+        assert_eq!(report.stats.kv_free_pages, 64);
+        assert_eq!(report.stats.kv_bytes, 0);
+    }
+
+    #[test]
+    fn topp_decode_matches_the_sequential_sampled_reference() {
+        let server = decode_server(ServePath::FullDecoder);
+        let sampler = Sampler::TopP { p: 0.85, temperature: 0.9, seed: 4242 };
+        let prompt: Vec<u32> = vec![8, 21, 34];
+        let (toks, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                client
+                    .submit(GenRequest {
+                        prompt: prompt.clone(),
+                        max_new_tokens: 5,
+                        eos: None,
+                        sampler,
+                    })
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 1);
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &prompt, 5, None, ServePath::FullDecoder, sampler)
+            .unwrap();
+        assert_eq!(toks, want, "batched top-p must match the sequential draw-for-draw");
+        // Malformed nucleus mass is rejected at submit with the typed
+        // reason, before admission.
+        let ((), _report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                assert!(matches!(
+                    client.submit(GenRequest {
+                        prompt: vec![1],
+                        max_new_tokens: 2,
+                        eos: None,
+                        sampler: Sampler::TopP { p: 1.5, temperature: 1.0, seed: 0 },
+                    }),
+                    Err(ServeError::Invalid(_))
+                ));
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn oversized_generations_are_rejected_before_admission_when_paged() {
+        let mut server = decode_server(ServePath::FullDecoder);
+        server.cfg_mut().kv_pages = 4;
+        server.cfg_mut().kv_page_tokens = 2;
+        let ((), report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                // Worst case: 2 layers x ceil((3 + 8 - 1) / 2) = 10 pages
+                // against a 4-page pool — could never be scheduled, so it
+                // must fail fast and typed instead of parking forever.
+                assert!(matches!(
+                    client.submit(gen_req(vec![1, 2, 3], 8)),
+                    Err(ServeError::Invalid(_))
+                ));
+                // A generation that fits (2 x ceil(3/2) = 4 pages) flows.
+                let toks = client.submit(gen_req(vec![1, 2], 2)).unwrap().wait().unwrap();
+                assert_eq!(toks.len(), 2);
+            })
+            .unwrap();
+        assert_eq!(report.n_completed, 1);
+        assert_eq!(report.stats.kv_free_pages, 4);
+    }
+
+    #[test]
+    fn mlp_only_decode_ignores_the_pool_but_still_matches() {
+        // The MLP-only path has no attention state: paged serving must
+        // neither fund pages for it nor cap its admissions, and tokens
+        // still match the sequential reference.
+        let mut server = decode_server(ServePath::MlpOnly);
+        server.cfg_mut().kv_pages = 2;
+        server.cfg_mut().kv_page_tokens = 2;
+        let (toks, report) = server
+            .run_decode_streaming(engines(1, 1), |client| {
+                client.submit(gen_req(vec![1, 2, 3, 4], 3)).unwrap().wait().unwrap()
+            })
+            .unwrap();
+        let mut engine = NativeEngine::default();
+        let want = server
+            .model()
+            .generate(&mut engine, &[1, 2, 3, 4], 3, None, ServePath::MlpOnly, Sampler::Greedy)
+            .unwrap();
+        assert_eq!(toks, want);
+        assert_eq!(report.stats.kv_pool_pages, 2);
+        assert_eq!(report.stats.kv_free_pages, 2, "no page was ever taken");
     }
 }

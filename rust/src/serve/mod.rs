@@ -42,21 +42,28 @@
 //! * [`Server::run_decode_streaming`] is the *generation* loop: clients
 //!   submit prompts ([`DecodeClient::submit`] with a [`GenRequest`]) and
 //!   their [`GenTicket`]s stream tokens as they are produced, selected
-//!   per request by a [`Sampler`] (greedy argmax, or seeded top-k with
-//!   a per-request RNG so sampling is batching-independent).
-//!   Each request carries a per-request [`KvCache`]; prefill writes K/V
-//!   into it and every subsequent step runs one token of incremental
-//!   attention at the right RoPE offsets
-//!   ([`SparseModel::stage_cached`]).  The [`ContinuousBatcher`]
-//!   coalesces mixed prefill + decode steps under the same token/request
-//!   budgets, and in-flight requests rejoin the decode pool after every
-//!   token — continuous batching, not drain-and-refill.
+//!   per request by a [`Sampler`] (greedy argmax, or seeded top-k /
+//!   top-p with a per-request RNG so sampling is batching-independent).
+//!   Each request carries a [`KvStore`]; prefill writes K/V into it and
+//!   every subsequent step runs one token of incremental attention at
+//!   the right RoPE offsets ([`SparseModel::stage_cached`]).  The
+//!   [`ContinuousBatcher`] coalesces mixed prefill + decode steps under
+//!   the same token/request budgets, and in-flight requests rejoin the
+//!   decode pool after every token — continuous batching, not
+//!   drain-and-refill.  With [`ServeCfg::kv_pages`] the stores are
+//!   [`PagedKvCache`]s over one shared [`KvPool`] — fixed-size pages,
+//!   per-request block tables, admission gated on free pages with
+//!   preemption-by-recompute when the pool runs dry, and (with
+//!   [`ServeCfg::kv_share_prefix`]) refcounted copy-on-write sharing of
+//!   common prompt-prefix pages — bit-identical to the contiguous
+//!   layout, including across a forced preemption.
 //! * The [`stats`] module is the loops' metrics plane: serve-loop
 //!   threads record typed [`StatsEvent`]s into per-thread ring buffers,
 //!   and a sampler thread ([`ServeCfg::stats_every`]) aggregates them
 //!   into periodic [`StatsReport`]s — interval tokens/s for prefill vs
 //!   decode, queue depth, batch-occupancy histogram, resident and
-//!   high-water KV-cache bytes, and p50/p90/p99 request / per-token /
+//!   high-water KV-cache bytes, paged-pool gauges (free/shared pages,
+//!   preemptions, CoW forks), and p50/p90/p99 request / per-token /
 //!   step latency — emitted as JSON lines through a [`StatsSink`]
 //!   (stderr by default) and returned as the final aggregate on
 //!   [`StreamReport::stats`] / [`DecodeReport::stats`].
@@ -97,4 +104,4 @@ pub use stats::{
 };
 pub use stream::{ServeError, StreamClient, StreamReport, Ticket};
 
-pub use crate::model::KvCache;
+pub use crate::model::{KvCache, KvPool, KvStore, PagedKvCache, SharedPrefix};

@@ -9,9 +9,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::PrunedModel;
+use std::sync::Arc;
+
 use crate::model::{
-    cached_attention, causal_attention, rmsnorm, rope, swiglu, KvCache, LinearKind, LinearRef,
-    ModelConfig,
+    cached_attention, causal_attention, rmsnorm, rope, swiglu, KvPool, KvStore, LinearKind,
+    LinearRef, ModelConfig,
 };
 use crate::runtime::{ExecBackend, TensorValue};
 use crate::sparsity::{Compressed, NmConfig};
@@ -228,13 +230,14 @@ fn check_seqs(seqs: &[(usize, usize)], rows: usize) -> Result<()> {
     Ok(())
 }
 
-/// One [`KvCache`] per span, in span order — the prefill/decode stage
+/// One [`KvStore`] per span, in span order — the prefill/decode stage
 /// signature.  Prefill and decode are the *same* cached-attention call:
 /// a span whose cache is empty is a prefill (RoPE starts at 0), a span
 /// with cached positions is an incremental step (the new rows attend
 /// over the cache at the right offsets).  A mixed batch simply mixes the
-/// two kinds of span.
-fn check_caches(seqs: &[(usize, usize)], caches: &[KvCache], n_layers: usize) -> Result<()> {
+/// two kinds of span, and each store may be contiguous or paged — the
+/// attention glue is layout-agnostic.
+fn check_caches(seqs: &[(usize, usize)], caches: &[KvStore], n_layers: usize) -> Result<()> {
     anyhow::ensure!(
         caches.len() == seqs.len(),
         "got {} KV caches for {} sequence spans",
@@ -263,7 +266,7 @@ fn attend_spans_cached(
     v: &Mat,
     (n_heads, theta): (usize, f32),
     seqs: &[(usize, usize)],
-    caches: &mut [KvCache],
+    caches: &mut [KvStore],
     layer: usize,
 ) -> Mat {
     let mut o = Mat::zeros(q.rows(), q.cols());
@@ -335,15 +338,34 @@ pub enum Sampler {
     /// Sample from the `temperature`-scaled softmax over the `k`
     /// highest logits (ties broken toward lower token ids when ranking).
     TopK { k: usize, temperature: f32, seed: u64 },
+    /// Nucleus sampling: the shortlist is the smallest set of
+    /// highest-probability tokens whose `temperature`-scaled softmax
+    /// mass reaches `p` (always at least one token), renormalized and
+    /// sampled with one draw per step.  `p = 1.0` is the full softmax.
+    TopP { p: f32, temperature: f32, seed: u64 },
+}
+
+/// The strict total order the stochastic samplers rank tokens by:
+/// higher logit first, ties toward the lower token id, NaNs grouped
+/// last.  NaNs must not be `Ordering::Equal`-ambiguous: Rust's sorts
+/// reject non-total comparators, and a degenerate model (NaN logits)
+/// must not panic the decode collector.
+fn rank_tokens(logits: &[f32], a: usize, b: usize) -> std::cmp::Ordering {
+    let (fa, fb) = (logits[a], logits[b]);
+    fa.is_nan()
+        .cmp(&fb.is_nan())
+        .then(fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal))
+        .then(a.cmp(&b))
 }
 
 impl Sampler {
     /// The per-generation RNG this sampler's draws come from.  Greedy
-    /// never consumes it; top-k consumes exactly one draw per step.
+    /// never consumes it; top-k and top-p consume exactly one draw per
+    /// step.
     pub fn rng(&self) -> Pcg32 {
         match self {
             Sampler::Greedy => Pcg32::new(0, 0x5a3),
-            Sampler::TopK { seed, .. } => Pcg32::new(*seed, 0x5a3),
+            Sampler::TopK { seed, .. } | Sampler::TopP { seed, .. } => Pcg32::new(*seed, 0x5a3),
         }
     }
 
@@ -357,14 +379,24 @@ impl Sampler {
                 if *k == 0 {
                     return Err("top-k sampler needs k >= 1".into());
                 }
-                if !temperature.is_finite() || *temperature <= 0.0 {
-                    return Err(format!(
-                        "top-k sampler needs a finite temperature > 0, got {temperature}"
-                    ));
+                Self::validate_temperature("top-k", *temperature)
+            }
+            Sampler::TopP { p, temperature, .. } => {
+                if !p.is_finite() || *p <= 0.0 || *p > 1.0 {
+                    return Err(format!("top-p sampler needs p in (0, 1], got {p}"));
                 }
-                Ok(())
+                Self::validate_temperature("top-p", *temperature)
             }
         }
+    }
+
+    fn validate_temperature(which: &str, temperature: f32) -> Result<(), String> {
+        if !temperature.is_finite() || temperature <= 0.0 {
+            return Err(format!(
+                "{which} sampler needs a finite temperature > 0, got {temperature}"
+            ));
+        }
+        Ok(())
     }
 
     /// Pick the next token from one row of LM-head logits.
@@ -381,13 +413,7 @@ impl Sampler {
                 // so partial selection of the k best then sorting just
                 // those k is identical to a full sort + truncate —
                 // O(V + k log k) per decode step instead of O(V log V).
-                let by_rank = |&a: &usize, &b: &usize| {
-                    let (fa, fb) = (logits[a], logits[b]);
-                    fa.is_nan()
-                        .cmp(&fb.is_nan())
-                        .then(fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal))
-                        .then(a.cmp(&b))
-                };
+                let by_rank = |&a: &usize, &b: &usize| rank_tokens(logits, a, b);
                 let mut order: Vec<usize> = (0..logits.len()).collect();
                 if k < order.len() {
                     let _ = order.select_nth_unstable_by(k - 1, by_rank);
@@ -419,6 +445,50 @@ impl Sampler {
                     }
                 }
                 *order.last().expect("k >= 1") as u32
+            }
+            Sampler::TopP { p, temperature, .. } => {
+                // Rank every token by the same total order top-k uses,
+                // trim the NaN tail (it must not poison the softmax
+                // normalizer), then keep the smallest prefix of the
+                // distribution whose temperature-scaled mass reaches p
+                // — the nucleus.  At least one token always survives.
+                let mut order: Vec<usize> = (0..logits.len()).collect();
+                order.sort_by(|&a, &b| rank_tokens(logits, a, b));
+                while order.len() > 1 && logits[*order.last().expect("vocab nonempty")].is_nan() {
+                    order.pop();
+                }
+                let mx = logits[order[0]];
+                let mut probs: Vec<f32> =
+                    order.iter().map(|&i| ((logits[i] - mx) / temperature).exp()).collect();
+                let z: f32 = probs.iter().sum();
+                // Cumulative walk in rank order; comparing against p*z
+                // avoids dividing every term before the cut is known.
+                let mut cut = order.len();
+                let mut acc = 0.0f32;
+                for (n, pr) in probs.iter().enumerate() {
+                    acc += pr;
+                    if acc >= *p * z {
+                        cut = n + 1;
+                        break;
+                    }
+                }
+                order.truncate(cut);
+                probs.truncate(cut);
+                let zs: f32 = probs.iter().sum();
+                for q in probs.iter_mut() {
+                    *q /= zs;
+                }
+                // One inverse-CDF draw per step — the same discipline as
+                // top-k, so trajectories are batching-independent.
+                let u = rng.uniform();
+                let mut acc = 0.0f32;
+                for (pr, &i) in probs.iter().zip(&order) {
+                    acc += pr;
+                    if u < acc {
+                        return i as u32;
+                    }
+                }
+                *order.last().expect("nucleus keeps >= 1 token") as u32
             }
         }
     }
@@ -474,7 +544,7 @@ impl DenseStage<'_> {
         layer: usize,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
         path: ServePath,
         apply: &dyn Fn(LinearKind, &Mat) -> Mat,
     ) -> Mat {
@@ -748,11 +818,21 @@ impl SparseModel {
         Ok(cur)
     }
 
-    /// An empty per-request KV cache sized for this model — one per
-    /// request, carried through every [`SparseModel::stage_cached`] call
-    /// of that request's lifetime.
-    pub fn new_cache(&self) -> KvCache {
-        KvCache::new(self.cfg.n_layers, self.cfg.dim)
+    /// An empty per-request KV store (contiguous layout) sized for this
+    /// model — one per request, carried through every
+    /// [`SparseModel::stage_cached`] call of that request's lifetime.
+    /// Paged serving creates stores from a shared pool instead
+    /// ([`SparseModel::new_kv_pool`] + [`KvPool::new_cache`]); the two
+    /// layouts decode bit-identically.
+    pub fn new_cache(&self) -> KvStore {
+        KvStore::contiguous(self.cfg.n_layers, self.cfg.dim)
+    }
+
+    /// A shared paged-KV pool sized for this model: `n_pages` pages of
+    /// `page_tokens` positions each, per decoder layer — the allocator
+    /// behind `--kv-pages` paged serving.
+    pub fn new_kv_pool(&self, n_pages: usize, page_tokens: usize) -> Arc<KvPool> {
+        KvPool::new(n_pages, page_tokens, self.cfg.n_layers, self.cfg.dim)
     }
 
     /// Decoder layer `layer`'s attention sublayer on the **KV-cached**
@@ -768,7 +848,7 @@ impl SparseModel {
         layer: usize,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
     ) -> Result<Mat> {
         check_seqs(seqs, x.rows())?;
         check_caches(seqs, caches, self.cfg.n_layers)?;
@@ -799,7 +879,7 @@ impl SparseModel {
         layer: usize,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
         path: ServePath,
     ) -> Result<Mat> {
         match path {
@@ -824,7 +904,7 @@ impl SparseModel {
         engine: &mut dyn ExecBackend,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
         path: ServePath,
     ) -> Result<Mat> {
         let mut cur = x.clone();
@@ -1013,9 +1093,10 @@ impl DenseModel {
         cur
     }
 
-    /// An empty per-request KV cache sized for this model.
-    pub fn new_cache(&self) -> KvCache {
-        KvCache::new(self.cfg.n_layers, self.cfg.dim)
+    /// An empty per-request KV store (contiguous layout) sized for this
+    /// model.
+    pub fn new_cache(&self) -> KvStore {
+        KvStore::contiguous(self.cfg.n_layers, self.cfg.dim)
     }
 
     /// KV-cached decoder-layer stage on plain dense matmuls — the decode
@@ -1026,7 +1107,7 @@ impl DenseModel {
         layer: usize,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
         path: ServePath,
     ) -> Mat {
         check_caches(seqs, caches, self.cfg.n_layers).expect("bad KV caches");
@@ -1047,7 +1128,7 @@ impl DenseModel {
         &self,
         x: &Mat,
         seqs: &[(usize, usize)],
-        caches: &mut [KvCache],
+        caches: &mut [KvStore],
         path: ServePath,
     ) -> Mat {
         let mut cur = x.clone();
@@ -1508,6 +1589,134 @@ pub(crate) mod tests {
         }
     }
 
+    /// Reserve and hand `store` the pages one step of `rows` new tokens
+    /// needs — the funding contract the decode scheduler follows.
+    fn fund(store: &mut KvStore, pool: &Arc<KvPool>, rows: usize) {
+        let p = store.as_paged_mut().expect("paged store");
+        let need = p.pages_for(rows);
+        p.fund(pool.reserve(need).expect("pool sized amply"));
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_at_both_patterns_and_paths() {
+        // Tentpole acceptance: a pool-backed paged KvStore decodes
+        // bit-identically to the contiguous layout — only where K/V rows
+        // live changes, never an arithmetic term — at 2:4 and 4:8, on
+        // both serve paths, across prefill and token-by-token decode.
+        for nm in [NmConfig::PAT_2_4, NmConfig::PAT_4_8] {
+            let sm = sparse_model_with(nm);
+            let mut engine = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            let mut rng = Pcg32::seeded(51);
+            for path in [ServePath::MlpOnly, ServePath::FullDecoder] {
+                let toks: Vec<u32> =
+                    (0..10).map(|_| rng.below(sm.cfg().vocab as u32)).collect();
+                let pool = sm.new_kv_pool(32, 3);
+                let mut contig = vec![sm.new_cache()];
+                let mut paged = vec![KvStore::paged(pool.new_cache())];
+                let prompt = 6usize;
+                let x = sm.embed(&toks[..prompt]).unwrap();
+                if path == ServePath::FullDecoder {
+                    fund(&mut paged[0], &pool, prompt);
+                }
+                let a = sm
+                    .forward_cached(&mut engine, &x, &[(0, prompt)], &mut contig, path)
+                    .unwrap();
+                let b = sm
+                    .forward_cached(&mut engine, &x, &[(0, prompt)], &mut paged, path)
+                    .unwrap();
+                assert_eq!(a.data(), b.data(), "{} {} prefill", nm.name(), path.name());
+                for t in prompt..toks.len() {
+                    let xt = sm.embed(&toks[t..t + 1]).unwrap();
+                    if path == ServePath::FullDecoder {
+                        fund(&mut paged[0], &pool, 1);
+                    }
+                    let sa = sm
+                        .forward_cached(&mut engine, &xt, &[(0, 1)], &mut contig, path)
+                        .unwrap();
+                    let sb = sm
+                        .forward_cached(&mut engine, &xt, &[(0, 1)], &mut paged, path)
+                        .unwrap();
+                    assert_eq!(
+                        sa.data(),
+                        sb.data(),
+                        "{} {} decode step {t}",
+                        nm.name(),
+                        path.name()
+                    );
+                }
+                if path == ServePath::FullDecoder {
+                    assert_eq!(paged[0].len(), toks.len());
+                    assert!(paged[0].bytes() > 0);
+                }
+                drop(paged);
+                assert_eq!(pool.free_pages(), 32, "pages recycled after drop");
+            }
+        }
+    }
+
+    #[test]
+    fn topp_sampling_is_seed_deterministic_and_tiny_p_is_greedy() {
+        let sm = tiny_sparse_model();
+        let mut engine = NativeEngine::default();
+        let prompt: Vec<u32> = vec![12, 7, 200];
+        let topp = Sampler::TopP { p: 0.9, temperature: 0.8, seed: 99 };
+        let a = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, topp)
+            .unwrap();
+        let b = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, topp)
+            .unwrap();
+        // Same seed, same kernels => reproducible bit for bit.
+        assert_eq!(a, b);
+        // A vanishing p keeps only the argmax in the nucleus — always
+        // identical to greedy, the top-p analogue of k = 1.
+        let greedy = sm
+            .generate(&mut engine, &prompt, 6, None, ServePath::FullDecoder, Sampler::Greedy)
+            .unwrap();
+        let tight = sm
+            .generate(
+                &mut engine,
+                &prompt,
+                6,
+                None,
+                ServePath::FullDecoder,
+                Sampler::TopP { p: 1e-6, temperature: 0.5, seed: 3 },
+            )
+            .unwrap();
+        assert_eq!(tight, greedy);
+        // Malformed configurations are rejected at validation.
+        assert!(Sampler::TopP { p: 0.0, temperature: 1.0, seed: 1 }.validate().is_err());
+        assert!(Sampler::TopP { p: 1.2, temperature: 1.0, seed: 1 }.validate().is_err());
+        assert!(Sampler::TopP { p: f32::NAN, temperature: 1.0, seed: 1 }.validate().is_err());
+        assert!(Sampler::TopP { p: 0.5, temperature: 0.0, seed: 1 }.validate().is_err());
+        assert!(Sampler::TopP { p: 1.0, temperature: 0.7, seed: 1 }.validate().is_ok());
+    }
+
+    #[test]
+    fn topp_sample_stays_inside_the_nucleus_and_tolerates_nan() {
+        // exp(5) / z ~ 0.64, + exp(4) ~ 0.875, + exp(3) ~ 0.962: at
+        // p = 0.95 the nucleus is exactly tokens {1, 2, 4}.
+        let logits = vec![0.0f32, 5.0, 4.0, -1.0, 3.0, 2.0];
+        let sampler = Sampler::TopP { p: 0.95, temperature: 1.0, seed: 11 };
+        let mut rng = sampler.rng();
+        let mut seen = [0usize; 6];
+        for _ in 0..400 {
+            seen[sampler.sample(&logits, &mut rng) as usize] += 1;
+        }
+        assert_eq!(seen[0] + seen[3] + seen[5], 0, "{seen:?}");
+        assert!(seen[1] > 0 && seen[2] > 0 && seen[4] > 0, "{seen:?}");
+        // NaN logits are trimmed before the softmax normalizer and never
+        // sampled while a finite candidate exists, even at p = 1.
+        let with_nan = vec![f32::NAN, 2.0, f32::NAN, 1.0, 3.0, f32::NAN];
+        let wide = Sampler::TopP { p: 1.0, temperature: 1.0, seed: 5 };
+        for _ in 0..100 {
+            let t = wide.sample(&with_nan, &mut rng) as usize;
+            assert!(matches!(t, 1 | 3 | 4), "sampled NaN token {t}");
+        }
+        // All-NaN logits return deterministically instead of panicking.
+        let _ = wide.sample(&[f32::NAN; 4], &mut rng);
+    }
+
     #[test]
     fn recipe_descriptor_is_stamped_into_the_model() {
         let sm = tiny_sparse_model();
@@ -1526,12 +1735,12 @@ pub(crate) mod tests {
         let mut engine = NativeEngine::default();
         let x = Mat::zeros(2, sm.width());
         // Wrong cache count.
-        let mut none: Vec<KvCache> = vec![];
+        let mut none: Vec<KvStore> = vec![];
         assert!(sm
             .forward_cached(&mut engine, &x, &[(0, 2)], &mut none, ServePath::FullDecoder)
             .is_err());
         // Wrong layer count.
-        let mut bad = vec![KvCache::new(sm.cfg().n_layers + 1, sm.width())];
+        let mut bad = vec![KvStore::contiguous(sm.cfg().n_layers + 1, sm.width())];
         assert!(sm
             .forward_cached(&mut engine, &x, &[(0, 2)], &mut bad, ServePath::FullDecoder)
             .is_err());

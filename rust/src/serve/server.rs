@@ -64,6 +64,20 @@ pub struct ServeCfg {
     /// sampler thread; the final aggregate is still computed and
     /// returned on the run's report.
     pub stats_every: Duration,
+    /// Decode only ([`Server::run_decode_streaming`]): size of the
+    /// shared paged-KV pool in pages.  0 (the default) keeps the
+    /// contiguous per-request [`super::KvCache`]; nonzero allocates a
+    /// [`super::KvPool`] and every generation's KV lives in pool pages,
+    /// with admission gated on free pages and preemption-by-recompute
+    /// when the pool runs dry mid-decode.
+    pub kv_pages: usize,
+    /// Decode only: token rows per KV page (per layer).  Ignored when
+    /// `kv_pages` is 0.
+    pub kv_page_tokens: usize,
+    /// Decode only: share prefill pages between concurrent requests
+    /// whose prompts have a common page-aligned prefix (copy-on-write;
+    /// hash-matched at admission).  Ignored when `kv_pages` is 0.
+    pub kv_share_prefix: bool,
     /// Where periodic reports go; `None` means the default sink (one
     /// JSON object per line on stderr).
     pub stats_sink: Option<super::StatsSink>,
@@ -80,6 +94,9 @@ impl Default for ServeCfg {
             max_new_tokens_cap: 0,
             stats_every: Duration::ZERO,
             stats_sink: None,
+            kv_pages: 0,
+            kv_page_tokens: 16,
+            kv_share_prefix: false,
         }
     }
 }

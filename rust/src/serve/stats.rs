@@ -22,7 +22,10 @@
 //!   windows and emits a [`StatsReport`]: cumulative counters,
 //!   interval prefill/decode tokens-per-second, batch-occupancy
 //!   histogram, KV-cache resident/high-water bytes (fed by
-//!   [`crate::model::KvCache::bytes`] deltas), and nearest-rank
+//!   [`crate::model::KvCache::bytes`] deltas), paged-KV pool gauges
+//!   (pool/free/shared pages plus preemption and copy-on-write fork
+//!   totals, published via [`StatsRecorder::set_kv_pool`]), and
+//!   nearest-rank
 //!   p50/p90/p99 request, per-token, and step latency.  Percentiles
 //!   come from a sorted window, so `p50 <= p90 <= p99` holds by
 //!   construction.
@@ -199,6 +202,18 @@ struct Counters {
     kv_bytes: AtomicUsize,
     /// High-water mark of `kv_bytes`.
     kv_high_water: AtomicUsize,
+    /// Paged-KV pool capacity in pages (0 when serving contiguously).
+    kv_pool_pages: AtomicUsize,
+    /// Free pages in the paged-KV pool (gauge).
+    kv_free_pages: AtomicUsize,
+    /// Distinct pages currently referenced by the prefix registry.
+    kv_shared_pages: AtomicUsize,
+    /// High-water mark of `kv_shared_pages`.
+    kv_shared_pages_peak: AtomicUsize,
+    /// Generations evicted and re-queued for recompute (cumulative).
+    kv_preemptions: AtomicUsize,
+    /// Copy-on-write forks off a shared prefix (cumulative).
+    kv_cow_forks: AtomicUsize,
     /// Last observed scheduler backlog (gauge).
     queue_depth: AtomicUsize,
 }
@@ -222,6 +237,12 @@ impl Counters {
             stage_busy_us: AtomicU64::new(0),
             kv_bytes: AtomicUsize::new(0),
             kv_high_water: AtomicUsize::new(0),
+            kv_pool_pages: AtomicUsize::new(0),
+            kv_free_pages: AtomicUsize::new(0),
+            kv_shared_pages: AtomicUsize::new(0),
+            kv_shared_pages_peak: AtomicUsize::new(0),
+            kv_preemptions: AtomicUsize::new(0),
+            kv_cow_forks: AtomicUsize::new(0),
             queue_depth: AtomicUsize::new(0),
         }
     }
@@ -239,6 +260,22 @@ impl Counters {
         let _ = self
             .kv_bytes
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| Some(n.saturating_sub(bytes)));
+    }
+
+    fn set_kv_pool(
+        &self,
+        pool_pages: usize,
+        free_pages: usize,
+        shared_pages: usize,
+        preemptions: usize,
+        cow_forks: usize,
+    ) {
+        self.kv_pool_pages.store(pool_pages, Ordering::Relaxed);
+        self.kv_free_pages.store(free_pages, Ordering::Relaxed);
+        self.kv_shared_pages.store(shared_pages, Ordering::Relaxed);
+        self.kv_shared_pages_peak.fetch_max(shared_pages, Ordering::AcqRel);
+        self.kv_preemptions.store(preemptions, Ordering::Relaxed);
+        self.kv_cow_forks.store(cow_forks, Ordering::Relaxed);
     }
 }
 
@@ -322,6 +359,21 @@ impl StatsRecorder {
     pub fn set_queue_depth(&self, depth: usize) {
         self.0.counters.queue_depth.store(depth, Ordering::Relaxed);
     }
+
+    /// Publish a snapshot of the paged-KV pool gauges (plain numbers, so
+    /// the stats plane stays decoupled from the model layer).  The
+    /// shared-pages peak is tracked here via `fetch_max`; preemption and
+    /// CoW-fork totals are cumulative counters owned by the pool.
+    pub fn set_kv_pool(
+        &self,
+        pool_pages: usize,
+        free_pages: usize,
+        shared_pages: usize,
+        preemptions: usize,
+        cow_forks: usize,
+    ) {
+        self.0.counters.set_kv_pool(pool_pages, free_pages, shared_pages, preemptions, cow_forks);
+    }
 }
 
 impl fmt::Debug for StatsRecorder {
@@ -395,6 +447,18 @@ impl StatsHub {
         self.counters.kv_free(bytes);
     }
 
+    /// Publish the paged-KV pool gauges (also available on recorders).
+    pub fn set_kv_pool(
+        &self,
+        pool_pages: usize,
+        free_pages: usize,
+        shared_pages: usize,
+        preemptions: usize,
+        cow_forks: usize,
+    ) {
+        self.counters.set_kv_pool(pool_pages, free_pages, shared_pages, preemptions, cow_forks);
+    }
+
     /// Drain every recorder ring into the percentile windows and
     /// snapshot everything into a [`StatsReport`].  `in_flight` is the
     /// caller-observed in-flight request count (the hub does not own
@@ -447,6 +511,12 @@ impl StatsHub {
             stage_busy_s: c.stage_busy_us.load(Ordering::Relaxed) as f64 / 1e6,
             kv_bytes: c.kv_bytes.load(Ordering::Relaxed),
             kv_high_water_bytes: c.kv_high_water.load(Ordering::Relaxed),
+            kv_pool_pages: c.kv_pool_pages.load(Ordering::Relaxed),
+            kv_free_pages: c.kv_free_pages.load(Ordering::Relaxed),
+            kv_shared_pages: c.kv_shared_pages.load(Ordering::Relaxed),
+            kv_shared_pages_peak: c.kv_shared_pages_peak.load(Ordering::Relaxed),
+            kv_preemptions: c.kv_preemptions.load(Ordering::Relaxed),
+            kv_cow_forks: c.kv_cow_forks.load(Ordering::Relaxed),
             request_latency_ms: Percentiles::of_window(&w.request),
             token_latency_ms: Percentiles::of_window(&w.token),
             step_latency_ms: Percentiles::of_window(&w.step),
@@ -564,6 +634,18 @@ pub struct StatsReport {
     pub kv_bytes: usize,
     /// High-water mark of resident KV-cache bytes.
     pub kv_high_water_bytes: usize,
+    /// Paged-KV pool capacity in pages (0 when serving contiguously).
+    pub kv_pool_pages: usize,
+    /// Free pages in the paged-KV pool at sample time.
+    pub kv_free_pages: usize,
+    /// Distinct pages held live by the shared-prefix registry.
+    pub kv_shared_pages: usize,
+    /// High-water mark of `kv_shared_pages`.
+    pub kv_shared_pages_peak: usize,
+    /// Generations evicted and re-queued for recompute (cumulative).
+    pub kv_preemptions: usize,
+    /// Copy-on-write forks off a shared prefix (cumulative).
+    pub kv_cow_forks: usize,
     /// Enqueue-to-terminal request latency.
     pub request_latency_ms: Percentiles,
     /// Inter-token latency (gap between consecutive streamed tokens).
@@ -575,6 +657,12 @@ pub struct StatsReport {
 }
 
 impl StatsReport {
+    /// Pool pages held by live requests or the prefix registry
+    /// (`kv_pool_pages - kv_free_pages`; 0 when serving contiguously).
+    pub fn kv_used_pages(&self) -> usize {
+        self.kv_pool_pages.saturating_sub(self.kv_free_pages)
+    }
+
     /// Serialize as one flat JSON object (stable keys; percentile
     /// fields nest `{n, p50, p90, p99}`).
     pub fn to_json(&self) -> Json {
@@ -604,6 +692,13 @@ impl StatsReport {
             ("stage_busy_s", num(self.stage_busy_s)),
             ("kv_bytes", num(self.kv_bytes as f64)),
             ("kv_high_water_bytes", num(self.kv_high_water_bytes as f64)),
+            ("kv_pool_pages", num(self.kv_pool_pages as f64)),
+            ("kv_free_pages", num(self.kv_free_pages as f64)),
+            ("kv_used_pages", num(self.kv_used_pages() as f64)),
+            ("kv_shared_pages", num(self.kv_shared_pages as f64)),
+            ("kv_shared_pages_peak", num(self.kv_shared_pages_peak as f64)),
+            ("kv_preemptions", num(self.kv_preemptions as f64)),
+            ("kv_cow_forks", num(self.kv_cow_forks as f64)),
             ("request_latency_ms", self.request_latency_ms.to_json()),
             ("token_latency_ms", self.token_latency_ms.to_json()),
             ("step_latency_ms", self.step_latency_ms.to_json()),
@@ -819,6 +914,43 @@ mod tests {
             parsed.get("batch_occupancy_hist").unwrap().as_arr().unwrap().len(),
             N_OCCUPANCY_BUCKETS
         );
+    }
+
+    #[test]
+    fn kv_pool_gauges_snapshot_and_track_the_shared_peak() {
+        let hub = StatsHub::new(8);
+        let rec = hub.recorder();
+        // No paged pool published: everything stays zero.
+        let report = hub.sample(0, false);
+        assert_eq!((report.kv_pool_pages, report.kv_used_pages()), (0, 0));
+
+        // Mid-flight snapshot: 3 of 16 pages shared, 10 free.
+        rec.record(StatsEvent::Submitted); // gauges coexist with counters
+        hub.set_kv_pool(16, 10, 3, 0, 1);
+        let report = hub.sample(0, false);
+        assert_eq!(report.kv_pool_pages, 16);
+        assert_eq!(report.kv_free_pages, 10);
+        assert_eq!(report.kv_used_pages(), 6);
+        assert_eq!(report.kv_shared_pages, 3);
+        assert_eq!(report.kv_shared_pages_peak, 3);
+        assert_eq!((report.kv_preemptions, report.kv_cow_forks), (0, 1));
+
+        // Drain: shared pages flushed and a preemption happened; the
+        // peak stays at its high-water mark while the gauge drops.
+        hub.set_kv_pool(16, 16, 0, 2, 1);
+        let report = hub.sample(0, true);
+        assert_eq!(report.kv_free_pages, 16);
+        assert_eq!(report.kv_used_pages(), 0);
+        assert_eq!(report.kv_shared_pages, 0);
+        assert_eq!(report.kv_shared_pages_peak, 3, "peak is monotone");
+        assert_eq!(report.kv_preemptions, 2);
+
+        let parsed = crate::util::json::Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("kv_pool_pages").unwrap().as_usize(), Some(16));
+        assert_eq!(parsed.get("kv_used_pages").unwrap().as_usize(), Some(0));
+        assert_eq!(parsed.get("kv_shared_pages_peak").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("kv_preemptions").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("kv_cow_forks").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //! against a full-sequence re-forward greedy loop.  A paged-KV workload
 //! then serves two generations through a pressure-sized `KvPool`
 //! (preemption + copy-on-write prefix sharing) and verifies they still
-//! match the sequential contiguous reference.
+//! match the sequential contiguous reference.  Finally a seeded mixed
+//! workload trace (`serve::trace`) is replayed through the decode loop
+//! and its per-class SLO report lands in the JSON summary as
+//! `trace_bench`.
 //!
 //! Verifies full-decoder parity against the host dense-masked forward
 //! (<1e-3), bit-determinism across thread counts, and **gates** on the
@@ -48,8 +51,8 @@ use permllm::recipe::{LearnedPerm, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
 use permllm::sparsity::NmConfig;
 use permllm::serve::{
-    greedy_token, BatcherCfg, DenseModel, GenRequest, KvStore, Percentiles, Request, Sampler,
-    ServeCfg, ServePath, ServeReport, Server, SparseModel,
+    greedy_token, trace, BatcherCfg, DenseModel, GenRequest, KvStore, Percentiles, Request,
+    Sampler, ServeCfg, ServePath, ServeReport, Server, SparseModel,
 };
 use permllm::tensor::Mat;
 use permllm::util::cli::Cli;
@@ -411,6 +414,57 @@ fn main() -> anyhow::Result<()> {
     );
     server.cfg_mut().kv_pages = 0;
 
+    // ---- trace-driven workload replay: per-class SLOs ----
+    // A small seeded mixed workload (chat / longdoc / burst /
+    // prefix-fleet) replayed through the decode loop at its recorded
+    // arrival times, paged pool + prefix sharing on so the fleet
+    // prefixes exercise copy-on-write page adoption.  Lands in the JSON
+    // artifact as `trace_bench` (field glossary: docs/BENCH_SCHEMA.md).
+    let tb_cfg = trace::TraceCfg {
+        vocab: server.model().cfg().vocab as u32,
+        prefix_tokens: kv_pt,
+        horizon_ms: 60,
+        deadline_ms: 0,
+        ..trace::TraceCfg::default()
+    }
+    .with_requests(if fast_mode() { 10 } else { 20 });
+    let workload = trace::generate(&tb_cfg);
+    server.cfg_mut().kv_pages = 256;
+    server.cfg_mut().kv_page_tokens = kv_pt;
+    server.cfg_mut().kv_share_prefix = true;
+    let (slo, _) = trace::replay(&server, engines(1, 1), &workload)?;
+    server.cfg_mut().kv_pages = 0;
+    server.cfg_mut().kv_share_prefix = false;
+    println!(
+        "[trace bench] {} requests replayed in {:.2}s ({} classes, {} CoW forks, {} preemptions):",
+        slo.n_requests,
+        slo.replay_seconds,
+        slo.classes.len(),
+        slo.kv_cow_forks,
+        slo.kv_preemptions
+    );
+    for c in &slo.classes {
+        println!(
+            "[trace bench]   {:<13} {:>3} reqs, first-token p50 {:>7.2}ms p99 {:>7.2}ms, \
+             per-token p50 {:>6.3}ms p99 {:>6.3}ms",
+            c.class,
+            c.n_requests,
+            c.first_token_ms.p50,
+            c.first_token_ms.p99,
+            c.token_latency_ms.p50,
+            c.token_latency_ms.p99
+        );
+    }
+    anyhow::ensure!(
+        slo.n_completed == slo.n_requests,
+        "trace replay dropped requests: {} of {} completed ({} rejected, {} failed)",
+        slo.n_completed,
+        slo.n_requests,
+        slo.n_rejected,
+        slo.n_failed
+    );
+    println!("[trace bench] every trace request completed: OK");
+
     // The CI bench gate: full-decoder sparse serving must not regress
     // below the dense baseline.
     let gate: f64 = std::env::var("PERMLLM_BENCH_GATE")
@@ -463,6 +517,9 @@ fn main() -> anyhow::Result<()> {
         ("kv_preemptions", json::num(kv_report.stats.kv_preemptions as f64)),
         ("kv_shared_pages_peak", json::num(kv_report.stats.kv_shared_pages_peak as f64)),
         ("kv_cow_forks", json::num(kv_report.stats.kv_cow_forks as f64)),
+        // Per-class SLO report from the trace-driven workload replay
+        // (serve::trace) — docs/BENCH_SCHEMA.md documents the fields.
+        ("trace_bench", slo.to_json()),
     ]);
     let json_path = p.get("json");
     if !json_path.is_empty() {

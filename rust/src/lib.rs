@@ -85,6 +85,14 @@
 //! batching of mixed prefill + decode steps, and greedy / top-k / top-p
 //! token streaming per ticket.
 //!
+//! A pruned model persists to a versioned binary [`snapshot`]
+//! (`permllm prune --snapshot-out` / `permllm serve --snapshot`, format
+//! spec in `docs/SNAPSHOT_FORMAT.md`), so serving boots without
+//! re-pruning and sweeps reuse pruned artifacts; [`serve::trace`] is
+//! the trace-driven workload harness (`permllm serve --trace-gen` /
+//! `--trace`) replaying seeded mixed workloads against the decode loop
+//! with per-class SLO reporting.
+//!
 //! See `examples/` (`quickstart`, `prune_llm`, `end_to_end`,
 //! `sparse_inference`, `ablation_lcp`) and the README for the full tour.
 
@@ -100,6 +108,7 @@ pub mod quant;
 pub mod recipe;
 pub mod runtime;
 pub mod serve;
+pub mod snapshot;
 pub mod sparsity;
 pub mod tensor;
 pub mod util;

@@ -10,7 +10,10 @@
 //!             KV-cached token generation with --decode and greedy or
 //!             seeded top-k/top-p sampling via --sampler, a paged KV
 //!             pool with prefix sharing and preemption via --kv-pages,
-//!             optionally pipelined across decoder layers)
+//!             optionally pipelined across decoder layers; --snapshot
+//!             boots from a `prune --snapshot-out` file without
+//!             re-pruning, and --trace-gen / --trace generate and
+//!             replay mixed workload traces with per-class SLO reports)
 //!   eval      evaluate a saved model (perplexity + zero-shot suite)
 //!   train     pretrain the tiny LM via the AOT train_step artifact (pjrt)
 //!   info      print artifact manifest / model summary
@@ -31,7 +34,7 @@ use permllm::model::{synth_trained_params, ModelConfig, ParamStore};
 use permllm::recipe::{self, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
 use permllm::serve::{
-    BatcherCfg, GenRequest, Request, Sampler, ServeCfg, ServePath, Server, SparseModel,
+    trace, BatcherCfg, GenRequest, Request, Sampler, ServeCfg, ServePath, Server, SparseModel,
 };
 use permllm::sparsity::NmConfig;
 use permllm::tensor::Mat;
@@ -61,6 +64,10 @@ fn main() {
                  \n  permllm serve --model tiny-s --requests 32 --tokens 64\
                  \n  permllm serve --model tiny-s --sparse-attn --stream\
                  \n  permllm serve --model tiny-s --sparse-attn --decode --max-new 16\
+                 \n  permllm prune --model tiny-s --metric wanda --perm identity --snapshot-out model.pmsn\
+                 \n  permllm serve --model tiny-s --snapshot model.pmsn --sparse-attn --decode\
+                 \n  permllm serve --model tiny-s --trace-gen trace.json --trace-requests 24\
+                 \n  permllm serve --model tiny-s --sparse-attn --trace trace.json --kv-pages 128 --kv-share-prefix\
                  \n  permllm eval  --params models/tiny-m.bin --backend native\
                  \n  permllm train --artifacts artifacts --steps 300 --out models/tiny-m.bin\
                  \n  permllm info  --artifacts artifacts\n\
@@ -173,6 +180,7 @@ fn cmd_prune(args: &[String]) -> Result<()> {
         .opt("lcp-from-layer", "0", "apply LCP only to layers >= this (partial PermLLM)")
         .opt("backend", "native", "LCP kernel executor: native (ExecBackend trait) | host (direct)")
         .opt("out", "", "save pruned model to this path")
+        .opt("snapshot-out", "", "dump the compressed sparse model to this versioned snapshot (serve it with `permllm serve --snapshot`; format: docs/SNAPSHOT_FORMAT.md)")
         .parse_from(args)
         .map_err(|e| anyhow!(e))?;
 
@@ -221,6 +229,20 @@ fn cmd_prune(args: &[String]) -> Result<()> {
     if !out.is_empty() {
         pruned.params.save(Path::new(out))?;
         log::info!("saved pruned model to {out}");
+    }
+    let snap_out = p.get("snapshot-out");
+    if !snap_out.is_empty() {
+        anyhow::ensure!(
+            !recipe.is_dense(),
+            "--snapshot-out captures the compressed sparse model; the Dense recipe has nothing to compress"
+        );
+        let sm = SparseModel::from_pruned(&pruned)?;
+        permllm::snapshot::dump(&sm, Path::new(snap_out))?;
+        println!(
+            "snapshot: wrote {snap_out} ({} bytes compressed, recipe {})",
+            sm.storage_bytes(),
+            sm.recipe_name()
+        );
     }
     Ok(())
 }
@@ -328,31 +350,82 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("queue-depth", "0", "streaming/decode: max in-flight requests before submit fails fast (0 = unbounded)")
     .opt("timeout-ms", "0", "streaming/decode: per-request queue timeout in ms (0 = disabled)")
     .opt("stats-every", "0", "streaming/decode: emit a StatsReport JSON line to stderr every N ms (0 = off)")
+    .opt("snapshot", "", "boot from a versioned model snapshot (permllm prune --snapshot-out) instead of re-pruning; the recipe/pattern flags are ignored")
+    .opt("trace", "", "replay a workload trace JSON (a --trace-gen file) through the decode loop and report per-class SLOs")
+    .opt("trace-gen", "", "generate a seeded workload trace JSON at this path and exit")
+    .opt("trace-seed", "7", "trace generator seed (with --trace-gen)")
+    .opt("trace-requests", "24", "approximate request count in the generated trace (with --trace-gen)")
+    .opt("slo-out", "", "write the --trace SLO report JSON to this path")
     .parse_from(args)
     .map_err(|e| anyhow!(e))?;
 
-    let ps = load_or_synth(p.get("model"), p.get("params"))?;
-    let nm = parse_nm(&p)?;
-    let recipe = recipe_from_args(&p, nm)?;
-    anyhow::ensure!(!recipe.is_dense(), "serve needs a pruned model, not the Dense recipe");
-    let corpus = parse_corpus(&p)?;
-    let cfg = PipelineCfg {
-        nm,
-        lcp: LcpCfg { steps: p.get_usize("steps"), nm, ..Default::default() },
-        ..Default::default()
+    // --trace-gen only writes a workload file; no model is pruned or
+    // loaded (the trace stores the vocab it drew tokens from, and
+    // replay re-validates against the serving model's vocab).
+    let trace_gen = p.get("trace-gen");
+    if !trace_gen.is_empty() {
+        let mcfg = ModelConfig::by_name(p.get("model"))
+            .ok_or_else(|| anyhow!("unknown model '{}'", p.get("model")))?;
+        let tc = trace::TraceCfg {
+            seed: p.get_u64("trace-seed"),
+            vocab: mcfg.vocab as u32,
+            // Page-align the shared fleet prefixes so CoW adoption can
+            // take whole pages under --kv-share-prefix.
+            prefix_tokens: p.get_usize("kv-page-tokens").max(1),
+            ..trace::TraceCfg::default()
+        }
+        .with_requests(p.get_usize("trace-requests"));
+        let t = trace::generate(&tc);
+        let classes: std::collections::BTreeSet<&str> =
+            t.requests.iter().map(|r| r.class.as_str()).collect();
+        t.save(Path::new(trace_gen))?;
+        println!(
+            "trace: wrote {} requests across {} classes to {trace_gen} (seed {})",
+            t.requests.len(),
+            classes.len(),
+            t.seed
+        );
+        return Ok(());
+    }
+
+    let snapshot = p.get("snapshot");
+    let sm = if !snapshot.is_empty() {
+        let sm = permllm::snapshot::load(Path::new(snapshot))?;
+        println!(
+            "loaded snapshot {snapshot}: {} ({} stages, recipe {}, pattern {}, {} bytes compressed)",
+            sm.cfg().name,
+            sm.n_stages(),
+            sm.recipe_name(),
+            sm.nm().name(),
+            sm.storage_bytes()
+        );
+        sm
+    } else {
+        let ps = load_or_synth(p.get("model"), p.get("params"))?;
+        let nm = parse_nm(&p)?;
+        let recipe = recipe_from_args(&p, nm)?;
+        anyhow::ensure!(!recipe.is_dense(), "serve needs a pruned model, not the Dense recipe");
+        let corpus = parse_corpus(&p)?;
+        let cfg = PipelineCfg {
+            nm,
+            lcp: LcpCfg { steps: p.get_usize("steps"), nm, ..Default::default() },
+            ..Default::default()
+        };
+        log::info!("pruning {} with recipe {} for serving", p.get("model"), recipe.name());
+        let pruned = prune_with_recipe(&ps, &corpus, &recipe, &cfg);
+        let sm = SparseModel::from_pruned(&pruned)?;
+        println!(
+            "compressed {} linears ({} stages) from recipe {}: {} -> {} bytes ({:.3}x dense)",
+            sm.cfg().prunable_linears().len(),
+            sm.n_stages(),
+            sm.recipe_name(),
+            sm.dense_bytes(),
+            sm.storage_bytes(),
+            sm.storage_bytes() as f64 / sm.dense_bytes() as f64
+        );
+        sm
     };
-    log::info!("pruning {} with recipe {} for serving", p.get("model"), recipe.name());
-    let pruned = prune_with_recipe(&ps, &corpus, &recipe, &cfg);
-    let sm = SparseModel::from_pruned(&pruned)?;
-    println!(
-        "compressed {} linears ({} stages) from recipe {}: {} -> {} bytes ({:.3}x dense)",
-        ps.cfg().prunable_linears().len(),
-        sm.n_stages(),
-        sm.recipe_name(),
-        sm.dense_bytes(),
-        sm.storage_bytes(),
-        sm.storage_bytes() as f64 / sm.dense_bytes() as f64
-    );
+    let nm = sm.nm();
 
     let n_stages = sm.n_stages();
     let threads = match p.get_usize("threads") {
@@ -391,6 +464,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         NativeEngine::new(NativeCfg { nm, threads, ..NativeCfg::default() })
     };
 
+    if !p.get("trace").is_empty() {
+        return run_serve_trace(&p, &server, threads, n_stages, &native);
+    }
     if p.get_bool("decode") {
         return run_serve_decode(&p, &server, threads, n_stages, &native);
     }
@@ -442,7 +518,73 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     println!("max |sparse - dense| = {max_err:.2e}");
     anyhow::ensure!(max_err < 1e-3, "serving output diverged from the dense reference");
+    // Content digest over the served activations, in request order — a
+    // fresh prune and a --snapshot boot of the same recipe must print
+    // identical digests (the CI snapshot smoke diffs this line).
+    let mut bytes = Vec::new();
+    for (_, y) in &report.outputs {
+        for v in y.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    println!("outputs-digest: {:016x}", permllm::snapshot::fnv1a64(&bytes));
     println!("sparse serving matches the dense-masked reference: OK");
+    Ok(())
+}
+
+/// `permllm serve --trace`: replay a recorded workload trace through the
+/// continuous-batching decode loop at its arrival times and print the
+/// per-class SLO report ([`trace::replay`]).
+fn run_serve_trace(
+    p: &Parsed,
+    server: &Server,
+    threads: usize,
+    n_stages: usize,
+    native: &dyn Fn(usize) -> NativeEngine,
+) -> Result<()> {
+    let path = p.get("trace");
+    let t = trace::Trace::load(Path::new(path))?;
+    let engines: Vec<Box<dyn ExecBackend + Send>> = if p.get_bool("sequential") {
+        vec![Box::new(native(threads)) as Box<dyn ExecBackend + Send>]
+    } else {
+        (0..n_stages).map(|_| Box::new(native(threads)) as Box<dyn ExecBackend + Send>).collect()
+    };
+    println!("replaying {} trace requests from {path} (seed {})", t.requests.len(), t.seed);
+    let (slo, report) = trace::replay(server, engines, &t)?;
+    for c in &slo.classes {
+        println!(
+            "  {:<13} {:>3} reqs: {} ok / {} rejected / {} timed out / {} failed / {} missed \
+             deadline; first-token p50 {:.1}ms p99 {:.1}ms; per-token p50 {:.2}ms p99 {:.2}ms",
+            c.class,
+            c.n_requests,
+            c.n_completed,
+            c.n_rejected,
+            c.n_timed_out,
+            c.n_failed,
+            c.n_deadline_missed,
+            c.first_token_ms.p50,
+            c.first_token_ms.p99,
+            c.token_latency_ms.p50,
+            c.token_latency_ms.p99
+        );
+    }
+    println!(
+        "replayed in {:.2}s: {} tokens generated, {} KV preemptions, {} CoW forks",
+        slo.replay_seconds, slo.generated_tokens, slo.kv_preemptions, slo.kv_cow_forks
+    );
+    println!("slo-report: {}", slo.to_json().to_string());
+    let out = p.get("slo-out");
+    if !out.is_empty() {
+        std::fs::write(out, slo.to_json().to_string() + "\n")
+            .map_err(|e| anyhow!("writing --slo-out {out}: {e}"))?;
+        println!("wrote SLO report to {out}");
+    }
+    anyhow::ensure!(slo.n_completed > 0, "trace replay completed no generations");
+    anyhow::ensure!(
+        report.n_failed == 0,
+        "{} generations failed mid-pipeline (not a backpressure refusal)",
+        report.n_failed
+    );
     Ok(())
 }
 
@@ -693,6 +835,17 @@ fn run_serve_decode(
             report.stats.kv_cow_forks
         );
     }
+    // Content digest over every generated token stream, in completion
+    // order — deterministic for a fixed seed/sampler, so a fresh prune
+    // and a --snapshot boot must print identical digests (the CI
+    // snapshot smoke diffs this line).
+    let mut bytes = Vec::new();
+    for (toks, _, _) in &outputs {
+        for t in toks {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+    }
+    println!("tokens-digest: {:016x}", permllm::snapshot::fnv1a64(&bytes));
     // Verify a sample against the sequential KV-cached reference (same
     // sampler, so greedy and seeded top-k/top-p must all match exactly
     // — paged or contiguous).

@@ -67,6 +67,19 @@
 //!   step latency — emitted as JSON lines through a [`StatsSink`]
 //!   (stderr by default) and returned as the final aggregate on
 //!   [`StreamReport::stats`] / [`DecodeReport::stats`].
+//! * The [`trace`] module is the workload harness: a seeded generator
+//!   for mixed request classes (short chat turns, long-document
+//!   prefill, bursty arrivals, shared-prefix fleets that exercise
+//!   copy-on-write page adoption) emitting a replayable JSON [`Trace`],
+//!   and a replayer ([`trace::replay`]) that drives
+//!   [`Server::run_decode_streaming`] at the trace's arrival times with
+//!   per-request deadlines and distills a per-class [`SloReport`]
+//!   (p50/p90/p99 first-token / per-token / request latency, timeout and
+//!   reject counts, KV preemptions) beside the [`StatsReport`].
+//! * A pruned model round-trips through [`crate::snapshot`]
+//!   ([`SparseModel::to_snapshot`] / [`SparseModel::from_snapshot`]), so
+//!   `permllm serve --snapshot model.bin` boots without re-pruning and
+//!   serves bit-identical tokens.
 //! * [`DenseModel`] materializes the dense-masked weights once — the
 //!   benchmark baseline the CI bench gate compares sparse serving
 //!   against, never part of the serving path itself.  It shares the
@@ -91,6 +104,10 @@ mod model;
 mod server;
 pub mod stats;
 mod stream;
+pub mod trace;
+
+#[cfg(test)]
+pub(crate) use model::tests as model_tests;
 
 pub use batcher::{
     BatcherCfg, ContinuousBatcher, MicroBatch, MicroBatcher, ReorderBuffer, Request, StepBatch,
@@ -103,5 +120,6 @@ pub use stats::{
     Percentiles, ReqOutcome, StatsEvent, StatsHub, StatsRecorder, StatsReport, StatsSink,
 };
 pub use stream::{ServeError, StreamClient, StreamReport, Ticket};
+pub use trace::{ClassSlo, SloReport, Trace, TraceCfg, TraceRequest};
 
 pub use crate::model::{KvCache, KvPool, KvStore, PagedKvCache, SharedPrefix};

@@ -99,18 +99,33 @@ impl SparseLayer {
         res: &crate::pruning::PruneResult,
     ) -> Result<SparseLayer> {
         let comp = Compressed::compress(&res.weight, &res.mask);
+        SparseLayer::from_compressed(instance, lin, &comp, res.src_of.clone())
+    }
+
+    /// Build a serving layer from already-compressed storage — the shared
+    /// tail of [`SparseLayer::build`] (fresh prune) and the snapshot
+    /// loader ([`SparseModel::from_snapshot`]).  `comp` has been through
+    /// [`Compressed`]'s structural validation, so a layer rebuilt from a
+    /// snapshot caches byte-identical artifact tensors to one built from
+    /// the original prune.
+    fn from_compressed(
+        instance: u64,
+        lin: LinearRef,
+        comp: &Compressed,
+        src_of: Vec<usize>,
+    ) -> Result<SparseLayer> {
         let (c_out, c_in) = comp.shape();
         let k = comp.k();
         let vals = TensorValue::f32(vec![c_out, k], comp.vals().to_vec())?;
         let idx =
             TensorValue::i32(vec![c_out, k], comp.idx().iter().map(|&v| v as i32).collect())?;
         anyhow::ensure!(
-            res.src_of.len() == c_in,
+            src_of.len() == c_in,
             "layer {}: src_of has {} entries, expected {c_in}",
             lin.param_name(),
-            res.src_of.len()
+            src_of.len()
         );
-        let src = TensorValue::i32(vec![c_in], res.src_of.iter().map(|&v| v as i32).collect())?;
+        let src = TensorValue::i32(vec![c_in], src_of.iter().map(|&v| v as i32).collect())?;
         let artifact = format!("sparse_fwd_{c_out}x{c_in}");
         let bind_key = format!("{artifact}@m{instance}.{}", lin.param_name());
         Ok(SparseLayer {
@@ -124,7 +139,7 @@ impl SparseLayer {
             vals,
             idx,
             src,
-            src_of: res.src_of.clone(),
+            src_of,
         })
     }
 
@@ -1147,6 +1162,156 @@ impl DenseModel {
     pub fn logits(&self, h: &Mat) -> Mat {
         head_logits(h, &self.final_norm, self.norm_eps, &self.lm_head)
     }
+
+    /// Capture everything serving needs into a [`crate::snapshot::
+    /// Snapshot`]: the per-linear compressed payloads exactly as the
+    /// cached artifact tensors hold them, the dense statics, config,
+    /// pattern, and recipe descriptor.
+    ///
+    /// Layers are emitted in [`ModelConfig::prunable_linears`] order (not
+    /// map order), so the same model always snapshots to the same bytes.
+    pub fn to_snapshot(&self) -> crate::snapshot::Snapshot {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for lin in self.cfg.prunable_linears() {
+            let l = &self.layers[&lin];
+            layers.push(crate::snapshot::SnapshotLayer {
+                name: lin.param_name(),
+                c_out: l.c_out,
+                c_in: l.c_in,
+                vals: l.vals.as_f32().expect("vals are f32").to_vec(),
+                idx: l.idx.as_i32().expect("idx is i32").iter().map(|&v| v as u32).collect(),
+                src_of: l.src_of.iter().map(|&v| v as u32).collect(),
+            });
+        }
+        let mut statics = vec![
+            ("tok_embed".to_string(), self.tok_embed.clone()),
+            ("final_norm".to_string(), self.final_norm.clone()),
+            ("lm_head".to_string(), self.lm_head.clone()),
+        ];
+        for l in 0..self.cfg.n_layers {
+            statics.push((format!("layers.{l}.attn_norm"), self.attn_norms[l].clone()));
+            statics.push((format!("layers.{l}.mlp_norm"), self.mlp_norms[l].clone()));
+        }
+        crate::snapshot::Snapshot {
+            cfg: self.cfg.clone(),
+            nm: self.nm,
+            recipe_name: self.recipe_name.clone(),
+            recipe_json: self.recipe_json.to_string(),
+            statics,
+            layers,
+        }
+    }
+
+    /// Rebuild a servable model from a decoded snapshot, validating the
+    /// payload semantically: every compressed linear replays through
+    /// [`Compressed::from_parts`] (full N:M group-structure check),
+    /// `src_of` must be a permutation, and every shape must agree with
+    /// the snapshot's own [`ModelConfig`].  Container-level integrity
+    /// (magic/version/checksum) has already been enforced by
+    /// [`crate::snapshot::Snapshot::decode`].
+    ///
+    /// The rebuilt model caches byte-identical artifact tensors to the
+    /// freshly pruned one it was dumped from, so serving output is
+    /// bit-identical on both [`ServePath`]s.
+    pub fn from_snapshot(snap: &crate::snapshot::Snapshot) -> Result<SparseModel> {
+        let cfg = snap.cfg.clone();
+        anyhow::ensure!(
+            cfg.vocab > 0 && cfg.dim > 0 && cfg.n_layers > 0 && cfg.n_heads > 0 && cfg.ffn > 0,
+            "snapshot config has a zero dimension: {cfg:?}"
+        );
+        anyhow::ensure!(
+            cfg.dim % cfg.n_heads == 0,
+            "snapshot config: dim {} not divisible by n_heads {}",
+            cfg.dim,
+            cfg.n_heads
+        );
+        let lins = cfg.prunable_linears();
+        anyhow::ensure!(
+            snap.layers.len() == lins.len(),
+            "snapshot has {} compressed linears, config {} needs {}",
+            snap.layers.len(),
+            cfg.name,
+            lins.len()
+        );
+        let by_name: HashMap<&str, &crate::snapshot::SnapshotLayer> =
+            snap.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+        let instance = MODEL_IDS.fetch_add(1, Ordering::Relaxed);
+        let mut layers = HashMap::new();
+        for lin in &lins {
+            let name = lin.param_name();
+            let sl = by_name
+                .get(name.as_str())
+                .ok_or_else(|| anyhow!("snapshot is missing compressed linear {name}"))?;
+            let want = cfg.param_shape(&name);
+            anyhow::ensure!(
+                vec![sl.c_out, sl.c_in] == want,
+                "snapshot linear {name} is [{}, {}], config wants {want:?}",
+                sl.c_out,
+                sl.c_in
+            );
+            let comp =
+                Compressed::from_parts(snap.nm, sl.c_out, sl.c_in, sl.vals.clone(), sl.idx.clone())
+                    .map_err(|e| anyhow!("snapshot linear {name}: {e:#}"))?;
+            let src_of = validate_permutation(&name, &sl.src_of, sl.c_in)?;
+            layers.insert(*lin, SparseLayer::from_compressed(instance, *lin, &comp, src_of)?);
+        }
+        let by_name: HashMap<&str, &Mat> =
+            snap.statics.iter().map(|(n, m)| (n.as_str(), m)).collect();
+        let fetch = |name: String, rows: usize, cols: usize| -> Result<Mat> {
+            let mat = *by_name
+                .get(name.as_str())
+                .ok_or_else(|| anyhow!("snapshot is missing static {name}"))?;
+            anyhow::ensure!(
+                mat.shape() == (rows, cols),
+                "snapshot static {name} is {:?}, config wants ({rows}, {cols})",
+                mat.shape()
+            );
+            Ok(mat.clone())
+        };
+        let tok_embed = fetch("tok_embed".to_string(), cfg.vocab, cfg.dim)?;
+        let final_norm = fetch("final_norm".to_string(), 1, cfg.dim)?;
+        let lm_head = fetch("lm_head".to_string(), cfg.vocab, cfg.dim)?;
+        let attn_norms = (0..cfg.n_layers)
+            .map(|l| fetch(format!("layers.{l}.attn_norm"), 1, cfg.dim))
+            .collect::<Result<Vec<_>>>()?;
+        let mlp_norms = (0..cfg.n_layers)
+            .map(|l| fetch(format!("layers.{l}.mlp_norm"), 1, cfg.dim))
+            .collect::<Result<Vec<_>>>()?;
+        let recipe_json = Json::parse(&snap.recipe_json)
+            .map_err(|e| anyhow!("snapshot recipe JSON does not parse: {e:?}"))?;
+        let norm_eps = cfg.norm_eps;
+        Ok(SparseModel {
+            cfg,
+            nm: snap.nm,
+            layers,
+            attn_norms,
+            mlp_norms,
+            norm_eps,
+            tok_embed,
+            final_norm,
+            lm_head,
+            recipe_name: snap.recipe_name.clone(),
+            recipe_json,
+        })
+    }
+}
+
+/// Check that `src_of` is a permutation of `0..c_in` and widen to the
+/// host-side `usize` form (snapshot payloads are untrusted input).
+fn validate_permutation(name: &str, src_of: &[u32], c_in: usize) -> Result<Vec<usize>> {
+    anyhow::ensure!(
+        src_of.len() == c_in,
+        "snapshot linear {name}: src_of has {} entries, expected {c_in}",
+        src_of.len()
+    );
+    let mut seen = vec![false; c_in];
+    for &v in src_of {
+        let v = v as usize;
+        anyhow::ensure!(v < c_in, "snapshot linear {name}: src_of entry {v} out of range");
+        anyhow::ensure!(!seen[v], "snapshot linear {name}: src_of repeats channel {v}");
+        seen[v] = true;
+    }
+    Ok(src_of.iter().map(|&v| v as usize).collect())
 }
 
 #[cfg(test)]
@@ -1303,6 +1468,77 @@ pub(crate) mod tests {
             assert_close(got.data(), base.data(), 1e-3)
                 .unwrap_or_else(|e| panic!("{} dense baseline: {e}", nm.name()));
         }
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_bit_identical_on_both_paths() {
+        // Tentpole acceptance: a model rebuilt from its snapshot serves
+        // BIT-identical outputs to the freshly pruned original — logits
+        // on both serve paths and greedy generation — and preserves the
+        // recipe identity that gets stamped into bench artifacts.
+        for nm in [NmConfig::PAT_2_4, NmConfig::PAT_4_8] {
+            let fresh = sparse_model_with(nm);
+            let snap = fresh.to_snapshot();
+            let bytes = snap.encode();
+            let loaded = SparseModel::from_snapshot(
+                &crate::snapshot::Snapshot::decode(&bytes).expect("own bytes decode"),
+            )
+            .expect("rebuild from snapshot");
+            assert_eq!(loaded.recipe_name(), fresh.recipe_name());
+            assert_eq!(
+                loaded.recipe_json().to_string(),
+                fresh.recipe_json().to_string()
+            );
+            assert_eq!(loaded.nm(), nm);
+            assert_eq!(loaded.storage_bytes(), fresh.storage_bytes());
+            let mut ea = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            let mut eb = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            let mut rng = Pcg32::seeded(77);
+            let toks: Vec<u32> = (0..7).map(|_| rng.below(fresh.cfg().vocab as u32)).collect();
+            for path in [ServePath::MlpOnly, ServePath::FullDecoder] {
+                let x = fresh.embed(&toks).unwrap();
+                let ha = fresh.forward(&mut ea, &x, &whole(&x), path).unwrap();
+                let hb = loaded.forward(&mut eb, &x, &whole(&x), path).unwrap();
+                assert_eq!(ha.data(), hb.data(), "{} {}: logits drifted", nm.name(), path.name());
+                assert_eq!(
+                    fresh.logits(&ha).data(),
+                    loaded.logits(&hb).data(),
+                    "{} {}: head logits drifted",
+                    nm.name(),
+                    path.name()
+                );
+                let ga = fresh
+                    .generate(&mut ea, &toks[..4], 5, None, path, Sampler::Greedy)
+                    .unwrap();
+                let gb = loaded
+                    .generate(&mut eb, &toks[..4], 5, None, path, Sampler::Greedy)
+                    .unwrap();
+                assert_eq!(ga, gb, "{} {}: generated tokens drifted", nm.name(), path.name());
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_config_and_payload_drift() {
+        let sm = tiny_sparse_model();
+        // A layer claiming the wrong shape for its name.
+        let mut snap = sm.to_snapshot();
+        snap.layers[0].name = "layers.0.w_gate".to_string();
+        snap.layers[4].name = "layers.0.wq".to_string(); // keep count/name-set valid
+        assert!(SparseModel::from_snapshot(&snap).is_err());
+        // A broken permutation (repeated channel).
+        let mut snap = sm.to_snapshot();
+        snap.layers[0].src_of[0] = snap.layers[0].src_of[1];
+        let err = SparseModel::from_snapshot(&snap).expect_err("must reject");
+        assert!(format!("{err:#}").contains("src_of"), "{err:#}");
+        // A missing static.
+        let mut snap = sm.to_snapshot();
+        snap.statics.retain(|(n, _)| n != "final_norm");
+        assert!(SparseModel::from_snapshot(&snap).is_err());
+        // Recipe JSON that does not parse.
+        let mut snap = sm.to_snapshot();
+        snap.recipe_json = "{not json".to_string();
+        assert!(SparseModel::from_snapshot(&snap).is_err());
     }
 
     #[test]

@@ -1,0 +1,717 @@
+//! Trace-driven workload harness: seeded mixed-workload generation,
+//! replay through the continuous-batching decode loop, SLO reporting.
+//!
+//! The decode loop's unit tests pin *correctness* (batching is
+//! bit-transparent); this module measures *behavior under load*.  A
+//! [`Trace`] is a replayable JSON description of a workload — request
+//! arrival times, prompts, generation lengths, latency deadlines —
+//! produced by the seeded [`generate`] so a workload can be
+//! regenerated, committed, or shipped to CI and replayed identically.
+//!
+//! Four request classes cover the serving scenarios the stack was built
+//! for:
+//!
+//! * [`CLASS_CHAT`] — short prompts, short generations: the
+//!   interactive-latency case.
+//! * [`CLASS_LONGDOC`] — long prompts, few new tokens: prefill-heavy
+//!   summarization/extraction traffic that stresses KV admission.
+//! * [`CLASS_BURST`] — chat-shaped requests arriving in Poisson-ish
+//!   clusters instead of uniformly: queueing and backpressure.
+//! * [`CLASS_PREFIX`] — fleets of requests sharing a page-aligned
+//!   prompt prefix (same system prompt, different suffixes): with
+//!   [`super::ServeCfg::kv_share_prefix`] these exercise copy-on-write
+//!   page adoption in the paged KV pool.
+//!
+//! [`replay`] submits the trace against [`super::Server::
+//! run_decode_streaming`] at the recorded arrival offsets, timestamps
+//! every streamed token, and distills a per-class [`SloReport`] —
+//! p50/p90/p99 first-token, per-token, and whole-request latency,
+//! completion/timeout/reject/deadline-miss counts, and the KV pool's
+//! preemption and CoW-fork totals — emitted beside the decode loop's
+//! own [`super::StatsReport`].  Entry points: `permllm serve
+//! --trace-gen` / `--trace` and the `trace_bench` section of the
+//! `sparse_inference --json` artifact (fields documented in
+//! `docs/BENCH_SCHEMA.md`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{DecodeReport, GenRequest, Percentiles, Sampler, ServeError, Server};
+use crate::runtime::ExecBackend;
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg32;
+
+/// Short interactive turns: small prompt, small generation.
+pub const CLASS_CHAT: &str = "chat";
+/// Long-document prefill: big prompt, few new tokens.
+pub const CLASS_LONGDOC: &str = "longdoc";
+/// Chat-shaped requests arriving in tight Poisson-ish clusters.
+pub const CLASS_BURST: &str = "burst";
+/// Shared-prefix fleets (common system prompt, distinct suffixes).
+pub const CLASS_PREFIX: &str = "prefix-fleet";
+
+/// One request of a workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Stable id, assigned in arrival order at generation time.
+    pub id: u64,
+    /// Workload class ([`CLASS_CHAT`] etc.; free-form in hand-written
+    /// traces).
+    pub class: String,
+    /// Submission time, milliseconds from replay start.
+    pub arrival_ms: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<u32>,
+    /// Generation length (no EOS in synthetic traces).
+    pub max_new_tokens: usize,
+    /// Completion deadline in milliseconds from submission; 0 = none.
+    /// Accounted by the replayer (deadline misses in the [`SloReport`]),
+    /// not enforced by the server.
+    pub deadline_ms: u64,
+}
+
+/// A replayable workload: seeded provenance plus the request list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Generator seed (0 for hand-written traces).
+    pub seed: u64,
+    /// Vocabulary the prompt tokens were drawn from; replay checks it
+    /// against the serving model.
+    pub vocab: u32,
+    pub requests: Vec<TraceRequest>,
+}
+
+/// Knobs for the seeded generator — class mix, arrival window, prefix
+/// geometry, deadlines.
+#[derive(Debug, Clone)]
+pub struct TraceCfg {
+    pub seed: u64,
+    /// Vocabulary to draw prompt tokens from.
+    pub vocab: u32,
+    /// Request count per class ([`CLASS_CHAT`] / [`CLASS_LONGDOC`] /
+    /// [`CLASS_BURST`]).
+    pub chat: usize,
+    pub longdoc: usize,
+    pub burst: usize,
+    /// Shared-prefix fleets: `fleets` groups of `fleet_size` requests,
+    /// each group sharing one `prefix_tokens`-token prompt prefix.
+    pub fleets: usize,
+    pub fleet_size: usize,
+    /// Arrival window in milliseconds — class arrivals spread over it.
+    pub horizon_ms: u64,
+    /// Shared-prefix length; align to the serving page size
+    /// (`--kv-page-tokens`) so whole prefix pages are adoptable.
+    pub prefix_tokens: usize,
+    /// Base completion deadline in ms (0 disables); scaled per class —
+    /// 1x chat/burst, 2x prefix fleets, 3x longdoc.
+    pub deadline_ms: u64,
+}
+
+impl Default for TraceCfg {
+    fn default() -> TraceCfg {
+        TraceCfg {
+            seed: 7,
+            vocab: 256,
+            chat: 8,
+            longdoc: 2,
+            burst: 6,
+            fleets: 2,
+            fleet_size: 3,
+            horizon_ms: 300,
+            prefix_tokens: 16,
+            deadline_ms: 10_000,
+        }
+    }
+}
+
+impl TraceCfg {
+    /// Rescale the class mix to roughly `total` requests, keeping the
+    /// default proportions (the `--trace-requests` CLI knob).
+    pub fn with_requests(mut self, total: usize) -> TraceCfg {
+        let total = total.max(4);
+        self.fleets = (total / 8).max(1);
+        let rest = total.saturating_sub(self.fleets * self.fleet_size).max(3);
+        self.chat = (rest * 2 / 5).max(1);
+        self.burst = (rest * 2 / 5).max(1);
+        self.longdoc = rest.saturating_sub(self.chat + self.burst).max(1);
+        self
+    }
+}
+
+fn rand_tokens(rng: &mut Pcg32, n: usize, vocab: u32) -> Vec<u32> {
+    (0..n).map(|_| rng.below(vocab.max(1))).collect()
+}
+
+/// Milliseconds drawn from an exponential distribution with the given
+/// mean — Poisson-ish inter-arrival gaps inside a burst.
+fn exp_ms(rng: &mut Pcg32, mean: f32) -> u64 {
+    let u = (1.0 - rng.uniform()).max(1e-6);
+    (-u.ln() * mean) as u64
+}
+
+/// Generate a mixed workload deterministically from `cfg.seed`: the
+/// same config always yields the same [`Trace`], byte-for-byte through
+/// [`Trace::to_json`].
+pub fn generate(cfg: &TraceCfg) -> Trace {
+    let mut rng = Pcg32::new(cfg.seed, 0x7ace);
+    let horizon = cfg.horizon_ms.max(1) as u32;
+    let mut reqs: Vec<TraceRequest> = Vec::new();
+    let mut push = |reqs: &mut Vec<TraceRequest>,
+                    rng: &mut Pcg32,
+                    class: &str,
+                    arrival_ms: u64,
+                    plen: usize,
+                    max_new: usize,
+                    deadline_mult: u64| {
+        let prompt = rand_tokens(rng, plen, cfg.vocab);
+        reqs.push(TraceRequest {
+            id: 0, // assigned after the arrival sort
+            class: class.to_string(),
+            arrival_ms,
+            prompt,
+            max_new_tokens: max_new.max(1),
+            deadline_ms: cfg.deadline_ms.saturating_mul(deadline_mult),
+        });
+    };
+
+    for _ in 0..cfg.chat {
+        let arrival = rng.below(horizon) as u64;
+        let plen = 4 + rng.below_usize(9); // 4..=12
+        let max_new = 2 + rng.below_usize(7); // 2..=8
+        push(&mut reqs, &mut rng, CLASS_CHAT, arrival, plen, max_new, 1);
+    }
+    for _ in 0..cfg.longdoc {
+        let arrival = rng.below(horizon) as u64;
+        let plen = 32 + rng.below_usize(33); // 32..=64
+        let max_new = 2 + rng.below_usize(3); // 2..=4
+        push(&mut reqs, &mut rng, CLASS_LONGDOC, arrival, plen, max_new, 3);
+    }
+    // Bursts: cluster centers spread over the horizon, members packed
+    // behind each center by exponential gaps.
+    let mut left = cfg.burst;
+    while left > 0 {
+        let members = left.min(3);
+        left -= members;
+        let mut at = rng.below(horizon) as u64;
+        for _ in 0..members {
+            at += exp_ms(&mut rng, 3.0);
+            let plen = 4 + rng.below_usize(7); // 4..=10
+            let max_new = 2 + rng.below_usize(5); // 2..=6
+            push(&mut reqs, &mut rng, CLASS_BURST, at, plen, max_new, 1);
+        }
+    }
+    // Shared-prefix fleets: one prefix per fleet, members staggered so
+    // the first member's prefill can publish its pages before the rest
+    // are admitted (CoW adoption is opportunistic, not required).
+    for _ in 0..cfg.fleets {
+        let prefix = rand_tokens(&mut rng, cfg.prefix_tokens, cfg.vocab);
+        let base = rng.below(horizon) as u64;
+        for i in 0..cfg.fleet_size {
+            let suffix = rand_tokens(&mut rng, 2 + rng.below_usize(5), cfg.vocab);
+            let mut prompt = prefix.clone();
+            prompt.extend_from_slice(&suffix);
+            let max_new = 2 + rng.below_usize(4); // 2..=5
+            reqs.push(TraceRequest {
+                id: 0,
+                class: CLASS_PREFIX.to_string(),
+                arrival_ms: base + (i as u64) * 10,
+                prompt,
+                max_new_tokens: max_new,
+                deadline_ms: cfg.deadline_ms.saturating_mul(2),
+            });
+        }
+    }
+    reqs.sort_by(|a, b| (a.arrival_ms, &a.class, &a.prompt).cmp(&(b.arrival_ms, &b.class, &b.prompt)));
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace { seed: cfg.seed, vocab: cfg.vocab, requests: reqs }
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seed", json::num(self.seed as f64)),
+            ("vocab", json::num(self.vocab as f64)),
+            (
+                "requests",
+                json::arr(
+                    self.requests
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("id", json::num(r.id as f64)),
+                                ("class", json::s(&r.class)),
+                                ("arrival_ms", json::num(r.arrival_ms as f64)),
+                                (
+                                    "prompt",
+                                    json::arr(
+                                        r.prompt.iter().map(|&t| json::num(t as f64)).collect(),
+                                    ),
+                                ),
+                                ("max_new_tokens", json::num(r.max_new_tokens as f64)),
+                                ("deadline_ms", json::num(r.deadline_ms as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Trace> {
+        let field = |o: &Json, k: &str| -> Result<f64> {
+            o.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace: missing or non-numeric field {k:?}"))
+        };
+        let vocab = field(v, "vocab")? as u32;
+        anyhow::ensure!(vocab > 0, "trace: vocab must be > 0");
+        let reqs = v
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace: missing \"requests\" array"))?;
+        let mut requests = Vec::with_capacity(reqs.len());
+        for (i, r) in reqs.iter().enumerate() {
+            let class = r
+                .get("class")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace request {i}: missing \"class\""))?
+                .to_string();
+            let prompt = r
+                .get("prompt")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("trace request {i}: missing \"prompt\""))?
+                .iter()
+                .map(|t| {
+                    t.as_f64().map(|v| v as u32).ok_or_else(|| {
+                        anyhow!("trace request {i}: non-numeric prompt token")
+                    })
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            anyhow::ensure!(!prompt.is_empty(), "trace request {i}: empty prompt");
+            let max_new = field(r, "max_new_tokens")? as usize;
+            anyhow::ensure!(max_new >= 1, "trace request {i}: max_new_tokens must be >= 1");
+            requests.push(TraceRequest {
+                id: field(r, "id")? as u64,
+                class,
+                arrival_ms: field(r, "arrival_ms")? as u64,
+                prompt,
+                max_new_tokens: max_new,
+                deadline_ms: field(r, "deadline_ms")? as u64,
+            });
+        }
+        Ok(Trace { seed: field(v, "seed")? as u64, vocab, requests })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow!("writing trace {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading trace {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("trace {}: {e:?}", path.display()))?;
+        Trace::from_json(&v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// replay
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Outcome {
+    Completed,
+    Rejected,
+    TimedOut,
+    Failed,
+}
+
+/// Replayer-side record of one request's fate.
+struct ReqResult {
+    class: String,
+    outcome: Outcome,
+    /// Cumulative ms from submission to each streamed token.
+    token_ms: Vec<f64>,
+    total_ms: f64,
+    deadline_missed: bool,
+}
+
+/// Per-class slice of the SLO report.
+#[derive(Debug, Clone)]
+pub struct ClassSlo {
+    pub class: String,
+    pub n_requests: u64,
+    pub n_completed: u64,
+    pub n_rejected: u64,
+    pub n_timed_out: u64,
+    pub n_failed: u64,
+    /// Requests that blew their trace deadline (including every
+    /// non-completed request that had one).
+    pub n_deadline_missed: u64,
+    /// Tokens streamed to this class.
+    pub tokens: u64,
+    /// Submission -> first streamed token.
+    pub first_token_ms: Percentiles,
+    /// Per-token latency: first-token gap, then inter-token gaps.
+    pub token_latency_ms: Percentiles,
+    /// Submission -> stream end, completed requests only.
+    pub request_ms: Percentiles,
+}
+
+impl ClassSlo {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("class", json::s(&self.class)),
+            ("n_requests", json::num(self.n_requests as f64)),
+            ("n_completed", json::num(self.n_completed as f64)),
+            ("n_rejected", json::num(self.n_rejected as f64)),
+            ("n_timed_out", json::num(self.n_timed_out as f64)),
+            ("n_failed", json::num(self.n_failed as f64)),
+            ("n_deadline_missed", json::num(self.n_deadline_missed as f64)),
+            ("tokens", json::num(self.tokens as f64)),
+            ("first_token_ms", self.first_token_ms.to_json()),
+            ("token_latency_ms", self.token_latency_ms.to_json()),
+            ("request_ms", self.request_ms.to_json()),
+        ])
+    }
+}
+
+/// What a trace replay measured: totals, per-class latency percentiles,
+/// and the KV pool counters relevant to load behavior.  Emitted beside
+/// (not instead of) the decode loop's [`super::StatsReport`].
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub replay_seconds: f64,
+    pub n_requests: u64,
+    pub n_completed: u64,
+    pub n_rejected: u64,
+    pub n_timed_out: u64,
+    pub n_failed: u64,
+    pub n_deadline_missed: u64,
+    pub generated_tokens: u64,
+    pub kv_preemptions: u64,
+    pub kv_cow_forks: u64,
+    /// Per-class breakdown, sorted by class name.
+    pub classes: Vec<ClassSlo>,
+}
+
+impl SloReport {
+    fn build(results: &[ReqResult], report: &DecodeReport, replay_seconds: f64) -> SloReport {
+        let mut by_class: BTreeMap<&str, Vec<&ReqResult>> = BTreeMap::new();
+        for r in results {
+            by_class.entry(&r.class).or_default().push(r);
+        }
+        let classes: Vec<ClassSlo> = by_class
+            .into_iter()
+            .map(|(class, rs)| {
+                let mut first = Vec::new();
+                let mut gaps = Vec::new();
+                let mut totals = Vec::new();
+                let mut tokens = 0u64;
+                for r in &rs {
+                    tokens += r.token_ms.len() as u64;
+                    if let Some(&t0) = r.token_ms.first() {
+                        first.push(t0);
+                        gaps.push(t0);
+                        gaps.extend(r.token_ms.windows(2).map(|w| w[1] - w[0]));
+                    }
+                    if r.outcome == Outcome::Completed {
+                        totals.push(r.total_ms);
+                    }
+                }
+                let count = |o: Outcome| rs.iter().filter(|r| r.outcome == o).count() as u64;
+                ClassSlo {
+                    class: class.to_string(),
+                    n_requests: rs.len() as u64,
+                    n_completed: count(Outcome::Completed),
+                    n_rejected: count(Outcome::Rejected),
+                    n_timed_out: count(Outcome::TimedOut),
+                    n_failed: count(Outcome::Failed),
+                    n_deadline_missed: rs.iter().filter(|r| r.deadline_missed).count() as u64,
+                    tokens,
+                    first_token_ms: Percentiles::of(&mut first),
+                    token_latency_ms: Percentiles::of(&mut gaps),
+                    request_ms: Percentiles::of(&mut totals),
+                }
+            })
+            .collect();
+        let total = |f: fn(&ClassSlo) -> u64| classes.iter().map(f).sum();
+        SloReport {
+            replay_seconds,
+            n_requests: total(|c| c.n_requests),
+            n_completed: total(|c| c.n_completed),
+            n_rejected: total(|c| c.n_rejected),
+            n_timed_out: total(|c| c.n_timed_out),
+            n_failed: total(|c| c.n_failed),
+            n_deadline_missed: total(|c| c.n_deadline_missed),
+            generated_tokens: total(|c| c.tokens),
+            kv_preemptions: report.stats.kv_preemptions as u64,
+            kv_cow_forks: report.stats.kv_cow_forks as u64,
+            classes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("replay_seconds", json::num(self.replay_seconds)),
+            ("n_requests", json::num(self.n_requests as f64)),
+            ("n_completed", json::num(self.n_completed as f64)),
+            ("n_rejected", json::num(self.n_rejected as f64)),
+            ("n_timed_out", json::num(self.n_timed_out as f64)),
+            ("n_failed", json::num(self.n_failed as f64)),
+            ("n_deadline_missed", json::num(self.n_deadline_missed as f64)),
+            ("generated_tokens", json::num(self.generated_tokens as f64)),
+            ("kv_preemptions", json::num(self.kv_preemptions as f64)),
+            ("kv_cow_forks", json::num(self.kv_cow_forks as f64)),
+            ("classes", json::arr(self.classes.iter().map(ClassSlo::to_json).collect())),
+        ])
+    }
+}
+
+/// Replay `trace` against the decode loop: submit each request at its
+/// `arrival_ms` offset (greedy sampling, no EOS), stream and timestamp
+/// every token from a per-request collector thread, and distill the
+/// [`SloReport`].  `engines` follows the
+/// [`super::Server::run_decode_streaming`] contract (1 backend, or one
+/// per decoder layer).
+///
+/// Outcome mapping: a submit-time refusal ([`ServeError::QueueFull`],
+/// invalid request, shutdown race) counts as rejected; a mid-stream
+/// [`ServeError::TimedOut`] as timed out; any other stream error as
+/// failed.  Deadlines are accounted here, not enforced by the server: a
+/// request misses its deadline when it does not complete within
+/// `deadline_ms` of submission (non-completed requests with a deadline
+/// always miss).
+pub fn replay(
+    server: &Server,
+    engines: Vec<Box<dyn ExecBackend + Send>>,
+    trace: &Trace,
+) -> Result<(SloReport, DecodeReport)> {
+    let vocab = server.model().cfg().vocab as u32;
+    anyhow::ensure!(!trace.requests.is_empty(), "trace has no requests");
+    for r in &trace.requests {
+        anyhow::ensure!(!r.prompt.is_empty(), "trace request {}: empty prompt", r.id);
+        if let Some(&t) = r.prompt.iter().find(|&&t| t >= vocab) {
+            anyhow::bail!(
+                "trace request {}: token {t} out of the serving model's vocab {vocab}",
+                r.id
+            );
+        }
+    }
+    let mut order: Vec<&TraceRequest> = trace.requests.iter().collect();
+    order.sort_by_key(|r| (r.arrival_ms, r.id));
+    let t0 = Instant::now();
+    let (results, report) = server.run_decode_streaming(engines, |client| {
+        thread::scope(|s| {
+            let start = Instant::now();
+            let mut joins = Vec::with_capacity(order.len());
+            for req in &order {
+                let due = Duration::from_millis(req.arrival_ms);
+                let elapsed = start.elapsed();
+                if due > elapsed {
+                    thread::sleep(due - elapsed);
+                }
+                let submitted = Instant::now();
+                let gen = GenRequest {
+                    prompt: req.prompt.clone(),
+                    max_new_tokens: req.max_new_tokens,
+                    eos: None,
+                    sampler: Sampler::Greedy,
+                };
+                match client.submit(gen) {
+                    Ok(mut ticket) => {
+                        let handle = s.spawn(move || {
+                            let mut token_ms = Vec::new();
+                            let mut err = None;
+                            while let Some(t) = ticket.next_token() {
+                                match t {
+                                    Ok(_) => {
+                                        token_ms.push(submitted.elapsed().as_secs_f64() * 1e3)
+                                    }
+                                    Err(e) => {
+                                        err = Some(e);
+                                        break;
+                                    }
+                                }
+                            }
+                            (token_ms, err, submitted.elapsed().as_secs_f64() * 1e3)
+                        });
+                        joins.push((*req, Ok(handle)));
+                    }
+                    Err(e) => joins.push((*req, Err(e))),
+                }
+            }
+            joins
+                .into_iter()
+                .map(|(req, sub)| {
+                    let (outcome, token_ms, total_ms) = match sub {
+                        Ok(handle) => {
+                            let (token_ms, err, total_ms) =
+                                handle.join().expect("collector thread never panics");
+                            let outcome = match err {
+                                None => Outcome::Completed,
+                                Some(ServeError::TimedOut { .. }) => Outcome::TimedOut,
+                                Some(_) => Outcome::Failed,
+                            };
+                            (outcome, token_ms, total_ms)
+                        }
+                        Err(_) => (Outcome::Rejected, Vec::new(), 0.0),
+                    };
+                    let deadline_missed = req.deadline_ms > 0
+                        && (outcome != Outcome::Completed
+                            || total_ms > req.deadline_ms as f64);
+                    ReqResult {
+                        class: req.class.clone(),
+                        outcome,
+                        token_ms,
+                        total_ms,
+                        deadline_missed,
+                    }
+                })
+                .collect::<Vec<ReqResult>>()
+        })
+    })?;
+    let slo = SloReport::build(&results, &report, t0.elapsed().as_secs_f64());
+    Ok((slo, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model_tests::tiny_sparse_model;
+    use super::super::{BatcherCfg, ServeCfg, ServePath};
+    use super::*;
+    use crate::runtime::{NativeCfg, NativeEngine};
+
+    fn small_cfg() -> TraceCfg {
+        TraceCfg {
+            chat: 3,
+            longdoc: 1,
+            burst: 3,
+            fleets: 1,
+            fleet_size: 3,
+            horizon_ms: 40,
+            ..TraceCfg::default()
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_mixed() {
+        let a = generate(&small_cfg());
+        let b = generate(&small_cfg());
+        assert_eq!(a, b, "same seed must regenerate the identical trace");
+        assert_ne!(
+            a.requests,
+            generate(&TraceCfg { seed: 8, ..small_cfg() }).requests,
+            "different seed must change the workload itself"
+        );
+        let classes: std::collections::BTreeSet<&str> =
+            a.requests.iter().map(|r| r.class.as_str()).collect();
+        for want in [CLASS_CHAT, CLASS_LONGDOC, CLASS_BURST, CLASS_PREFIX] {
+            assert!(classes.contains(want), "missing class {want}");
+        }
+        assert_eq!(a.requests.len(), 3 + 1 + 3 + 3);
+        for (i, r) in a.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids are assigned in sorted order");
+            assert!(r.prompt.iter().all(|&t| t < a.vocab));
+            assert!(r.max_new_tokens >= 1);
+            if i > 0 {
+                assert!(r.arrival_ms >= a.requests[i - 1].arrival_ms, "arrivals sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_members_share_a_page_aligned_prefix() {
+        let cfg = small_cfg();
+        let trace = generate(&cfg);
+        let fleet: Vec<&TraceRequest> =
+            trace.requests.iter().filter(|r| r.class == CLASS_PREFIX).collect();
+        assert_eq!(fleet.len(), cfg.fleet_size);
+        let prefix = &fleet[0].prompt[..cfg.prefix_tokens];
+        for m in &fleet {
+            assert!(m.prompt.len() > cfg.prefix_tokens, "suffix must be non-empty");
+            assert_eq!(&m.prompt[..cfg.prefix_tokens], prefix, "shared prefix diverged");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let trace = generate(&small_cfg());
+        let text = trace.to_json().to_string();
+        let back = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, trace);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_traces() {
+        for bad in [
+            r#"{"seed": 1, "vocab": 256}"#,
+            r#"{"seed": 1, "vocab": 0, "requests": []}"#,
+            r#"{"seed": 1, "vocab": 256, "requests": [{"id": 0, "class": "chat",
+                "arrival_ms": 0, "prompt": [], "max_new_tokens": 2, "deadline_ms": 0}]}"#,
+            r#"{"seed": 1, "vocab": 256, "requests": [{"id": 0, "class": "chat",
+                "arrival_ms": 0, "prompt": [1], "max_new_tokens": 0, "deadline_ms": 0}]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(Trace::from_json(&v).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn replay_smoke_accounts_every_request() {
+        // A small mixed trace replayed end-to-end through the decode
+        // loop with a paged, prefix-sharing KV pool: every request must
+        // complete (no deadline pressure at these sizes), per-class
+        // percentiles must be populated and monotone, and the totals
+        // must reconcile with the DecodeReport.
+        let cfg = TraceCfg { deadline_ms: 0, horizon_ms: 30, ..small_cfg() };
+        let trace = generate(&cfg);
+        let server = super::super::Server::new(
+            tiny_sparse_model(),
+            ServeCfg {
+                batcher: BatcherCfg { max_tokens: 96, max_requests: 4 },
+                path: ServePath::FullDecoder,
+                linger: Duration::from_millis(1),
+                kv_pages: 128,
+                kv_page_tokens: 16,
+                kv_share_prefix: true,
+                ..ServeCfg::default()
+            },
+        );
+        let engines: Vec<Box<dyn ExecBackend + Send>> =
+            vec![Box::new(NativeEngine::new(NativeCfg { threads: 1, ..NativeCfg::default() }))];
+        let (slo, report) = replay(&server, engines, &trace).unwrap();
+        assert_eq!(slo.n_requests, trace.requests.len() as u64);
+        assert_eq!(slo.n_completed, slo.n_requests, "nothing should fail at this load");
+        assert_eq!(slo.n_deadline_missed, 0, "deadline 0 disables accounting");
+        assert_eq!(slo.generated_tokens, report.generated_tokens as u64);
+        assert_eq!(slo.n_completed, report.n_completed as u64);
+        assert!(slo.classes.len() >= 3, "mixed trace must span classes");
+        let want: u64 = trace
+            .requests
+            .iter()
+            .map(|r| r.max_new_tokens as u64)
+            .sum();
+        assert_eq!(slo.generated_tokens, want, "greedy, no EOS => full lengths");
+        for c in &slo.classes {
+            assert_eq!(c.n_requests, c.n_completed);
+            assert!(c.tokens > 0);
+            for p in [&c.first_token_ms, &c.token_latency_ms, &c.request_ms] {
+                assert!(p.n > 0, "{}: empty percentiles", c.class);
+                assert!(
+                    p.p50 <= p.p90 && p.p90 <= p.p99,
+                    "{}: non-monotone percentiles {p:?}",
+                    c.class
+                );
+            }
+        }
+    }
+}

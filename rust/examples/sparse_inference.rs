@@ -28,6 +28,15 @@
 //! and its per-class SLO report lands in the JSON summary as
 //! `trace_bench`.
 //!
+//! Two hot-path sections ride along (see docs/BENCH_SCHEMA.md):
+//! a **kernel micro-bench** timing the vectorized gather-FMA N:M kernel
+//! against the preserved scalar reference on decode-shaped activations
+//! (`kernel_speedup_vs_scalar`, gated at `PERMLLM_KERNEL_GATE` x, default
+//! 1.0), and a **zero-alloc decode** pass that repeats the generation
+//! workload through the arena-backed `forward_cached_scratch` and counts
+//! heap allocations around each steady-state forward via this binary's
+//! counting global allocator (`decode_allocs_per_step`, gated at 0).
+//!
 //! Verifies full-decoder parity against the host dense-masked forward
 //! (<1e-3), bit-determinism across thread counts, and **gates** on the
 //! full-decoder sparse throughput staying above the dense baseline —
@@ -40,6 +49,8 @@
 //! PERMLLM_BENCH_FAST=1 cargo run --release --example sparse_inference -- --json bench_out.json
 //! ```
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use permllm::bench::{fast_mode, trained_or_synth};
@@ -49,16 +60,44 @@ use permllm::lcp::LcpCfg;
 use permllm::pruning::Metric;
 use permllm::recipe::{LearnedPerm, PruneRecipe};
 use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
-use permllm::sparsity::NmConfig;
 use permllm::serve::{
     greedy_token, trace, BatcherCfg, DenseModel, GenRequest, KvStore, Percentiles, Request,
     Sampler, ServeCfg, ServePath, ServeReport, Server, SparseModel,
 };
+use permllm::sparsity::{Compressed, NmConfig, NmMask};
 use permllm::tensor::Mat;
 use permllm::util::cli::Cli;
 use permllm::util::json::{self, Json};
 use permllm::util::pool::default_threads;
 use permllm::util::rng::Pcg32;
+use permllm::util::scratch::StepArena;
+
+/// The system allocator wrapped with an allocation counter, so the
+/// zero-alloc decode section can measure `decode_allocs_per_step`
+/// directly instead of inferring it.  Counts allocations and
+/// reallocations; frees are not interesting here.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn print_report(label: &str, report: &ServeReport) {
     println!(
@@ -150,6 +189,85 @@ fn decode_bench(
 fn step_percentiles_ms(step_s: &[f64]) -> Percentiles {
     let mut ms: Vec<f64> = step_s.iter().map(|s| s * 1e3).collect();
     Percentiles::of(&mut ms)
+}
+
+/// Best-of-`trials` wall time (seconds) for `reps` calls of `f` — the
+/// minimum over trials de-noises a shared CI runner.
+fn best_time(trials: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// One full generation pass (prefill + `gen_steps` greedy decode steps)
+/// through the arena-backed [`SparseModel::forward_cached_scratch`],
+/// counting heap allocations around each decode-step forward.  Pass 1
+/// with a fresh [`StepArena`] is the warmup that sizes the pools (the
+/// attention score buffer needs `pos + rows` floats, which grows every
+/// step, so only a full pass reaches the high-water mark); pass 2 over
+/// the identical workload with the same arena must then run every
+/// forward without touching the heap.  Returns
+/// `(forward_allocations, decode_steps, per-prompt tokens)`.
+fn decode_scratch_pass(
+    sm: &SparseModel,
+    engine: &mut dyn ExecBackend,
+    prompts: &[Vec<u32>],
+    gen_steps: usize,
+    arena: &mut StepArena,
+) -> anyhow::Result<(u64, u64, Vec<Vec<u32>>)> {
+    let r = prompts.len();
+    let rows = prompts[0].len();
+    let width = sm.width();
+    let path = ServePath::FullDecoder;
+    let mut caches: Vec<KvStore> = (0..r).map(|_| sm.new_cache()).collect();
+    for c in &mut caches {
+        // Pre-size the KV buffers for the whole generation, so appends
+        // inside the measured forwards cannot reallocate.
+        c.reserve(rows + gen_steps);
+    }
+    let mut x = Mat::zeros(r * rows, width);
+    let mut spans = Vec::with_capacity(r);
+    for (i, p) in prompts.iter().enumerate() {
+        let e = sm.embed(p)?;
+        for rr in 0..rows {
+            x.row_mut(i * rows + rr).copy_from_slice(e.row(rr));
+        }
+        spans.push((i * rows, (i + 1) * rows));
+    }
+    let h = sm.forward_cached_scratch(engine, &x, &spans, &mut caches, path, arena)?;
+    let step_spans: Vec<(usize, usize)> = (0..r).map(|i| (i, i + 1)).collect();
+    let mut cur = Mat::zeros(r, width);
+    for (i, &(_, hi)) in spans.iter().enumerate() {
+        cur.row_mut(i).copy_from_slice(h.row(hi - 1));
+    }
+    arena.give(h);
+    arena.step();
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); r];
+    let mut xs = Mat::zeros(r, width);
+    let mut fwd_allocs = 0u64;
+    for _ in 0..gen_steps {
+        // Sampling/embedding are the exits of the gated scope: the
+        // counter brackets only the arena-backed forward.
+        let logits = sm.logits(&cur);
+        for i in 0..r {
+            let tok = greedy_token(logits.row(i));
+            tokens[i].push(tok);
+            xs.row_mut(i).copy_from_slice(sm.embed(&[tok])?.row(0));
+        }
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let h = sm.forward_cached_scratch(engine, &xs, &step_spans, &mut caches, path, arena)?;
+        fwd_allocs += ALLOCS.load(Ordering::Relaxed) - a0;
+        cur.data_mut().copy_from_slice(h.data());
+        arena.give(h);
+        arena.step();
+    }
+    Ok((fwd_allocs, gen_steps as u64, tokens))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -363,6 +481,66 @@ fn main() -> anyhow::Result<()> {
     let agree = fd_tokens.iter().zip(&dn_tokens).filter(|(a, b)| a == b).count();
     println!("dense and sparse decode agree on {agree}/{n_requests} token trajectories");
 
+    // ---- kernel micro-bench: vectorized gather-FMA vs scalar reference ----
+    // Decode-shaped activations (one row per in-flight request): the
+    // vectorized kernel blocks LANES activation rows per compressed
+    // entry and reads the precomputed gather indices; the scalar
+    // reference is the pre-vectorization loop kept verbatim.  Both are
+    // bit-identical by construction, so this is a pure speed comparison.
+    let kw = Mat::randn(width, width, 1.0, &mut rng);
+    let kmask = NmMask::from_scores(&kw.map(f32::abs), NmConfig::PAT_2_4);
+    let kcomp = Compressed::compress(&kw, &kmask);
+    let kx = Mat::randn(n_requests, width, 1.0, &mut rng);
+    anyhow::ensure!(
+        kcomp.matmul_xt(&kx).data() == kcomp.matmul_xt_scalar(&kx).data(),
+        "vectorized kernel diverged from the scalar reference"
+    );
+    let (trials, reps) = if fast_mode() { (3, 50) } else { (5, 200) };
+    let vec_s = best_time(trials, reps, || {
+        std::hint::black_box(kcomp.matmul_xt(std::hint::black_box(&kx)));
+    });
+    let scalar_s = best_time(trials, reps, || {
+        std::hint::black_box(kcomp.matmul_xt_scalar(std::hint::black_box(&kx)));
+    });
+    let kernel_speedup = scalar_s.max(1e-12) / vec_s.max(1e-12);
+    println!(
+        "[kernel bench] {width}x{width} 2:4, {n_requests}-row decode activations: vectorized \
+         {:.4}ms vs scalar {:.4}ms per call -> {kernel_speedup:.2}x",
+        vec_s * 1e3 / reps as f64,
+        scalar_s * 1e3 / reps as f64
+    );
+
+    // ---- zero-alloc decode hot path: arena-backed forward ----
+    // Repeat the generation workload through `forward_cached_scratch`:
+    // pass 1 warms the arena to the workload's high-water mark, pass 2
+    // must then run every steady-state forward without a single heap
+    // allocation — and both must reproduce the `forward_cached` tokens
+    // bit-for-bit.
+    let mut arena = StepArena::new();
+    let scratch_engine = &mut decode_engine;
+    let (_, _, warm_tokens) =
+        decode_scratch_pass(sm, scratch_engine, &prompts, gen_steps, &mut arena)?;
+    let warm_grows = arena.grow_events();
+    let (fwd_allocs, alloc_steps, scratch_tokens) =
+        decode_scratch_pass(sm, scratch_engine, &prompts, gen_steps, &mut arena)?;
+    anyhow::ensure!(
+        warm_tokens == fd_tokens && scratch_tokens == fd_tokens,
+        "scratch-arena decode diverged from forward_cached"
+    );
+    anyhow::ensure!(
+        arena.grow_events() == warm_grows,
+        "warmed-up arena grew during the measured pass ({} -> {} grow events)",
+        warm_grows,
+        arena.grow_events()
+    );
+    let decode_allocs_per_step = fwd_allocs as f64 / alloc_steps.max(1) as f64;
+    println!(
+        "[alloc bench] scratch decode: {fwd_allocs} heap allocations across {alloc_steps} \
+         steady-state steps ({decode_allocs_per_step:.2}/step; arena holds {} pooled buffers \
+         after {warm_grows} warmup grow events)",
+        arena.pooled()
+    );
+
     // ---- paged-KV pool: preemption + recompute under page pressure ----
     // Serve two full-decoder generations through the continuous-batching
     // decode loop with a pool sized for exactly one request's worst
@@ -471,6 +649,12 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1.0);
+    // The kernel-ratio gate: the vectorized kernel must stay at least
+    // this much faster than the preserved scalar reference.
+    let kernel_gate: f64 = std::env::var("PERMLLM_KERNEL_GATE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
 
     let summary = json::obj(vec![
         ("model", json::s(model_name)),
@@ -510,6 +694,12 @@ fn main() -> anyhow::Result<()> {
         ("sparse_full_decoder_decode_token_latency_p50_ms", json::num(fd_lat.p50)),
         ("sparse_full_decoder_decode_token_latency_p90_ms", json::num(fd_lat.p90)),
         ("sparse_full_decoder_decode_token_latency_p99_ms", json::num(fd_lat.p99)),
+        // Hot-path micro-metrics (docs/BENCH_SCHEMA.md): vectorized N:M
+        // kernel vs the preserved scalar reference, and heap allocations
+        // per steady-state arena-backed decode forward.
+        ("kernel_speedup_vs_scalar", json::num(kernel_speedup)),
+        ("kernel_gate_ratio", json::num(kernel_gate)),
+        ("decode_allocs_per_step", json::num(decode_allocs_per_step)),
         // Paged-KV pool workload (pressure-sized: forces preemption and
         // exercises copy-on-write prefix sharing).
         ("kv_pool_pages", json::num(kv_pool_pages as f64)),
@@ -552,5 +742,17 @@ fn main() -> anyhow::Result<()> {
         "bench gate: sparse full-decoder decode >= {gate:.2}x dense decode: OK \
          ({fd_dec:.0} vs {dn_dec:.0} tok/s)"
     );
+    anyhow::ensure!(
+        kernel_speedup >= kernel_gate,
+        "kernel gate: vectorized/scalar ratio {kernel_speedup:.2}x fell below \
+         PERMLLM_KERNEL_GATE {kernel_gate:.2}x"
+    );
+    println!("kernel gate: vectorized >= {kernel_gate:.2}x scalar: OK ({kernel_speedup:.2}x)");
+    anyhow::ensure!(
+        fwd_allocs == 0,
+        "alloc gate: {fwd_allocs} heap allocations across {alloc_steps} steady-state decode \
+         steps (expected 0)"
+    );
+    println!("alloc gate: zero heap allocations across {alloc_steps} steady-state steps: OK");
     Ok(())
 }

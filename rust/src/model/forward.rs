@@ -10,6 +10,7 @@ use super::config::{LinearKind, LinearRef, ModelConfig};
 use super::kv::{ContigRows, KvRows, KvStore};
 use super::params::ParamStore;
 use crate::tensor::Mat;
+use crate::util::scratch::StepArena;
 
 /// Per-linear calibration activations captured during a forward pass:
 /// the input `X` (rows = tokens) of every prunable linear layer, in
@@ -44,8 +45,22 @@ impl Captured {
 /// RMSNorm with gain `g: [1, d]`.  Shared with the serving subsystem's
 /// dense reference path (`crate::serve`) so the two cannot drift.
 pub(crate) fn rmsnorm(x: &Mat, g: &Mat, eps: f32) -> Mat {
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    rmsnorm_into(x, g, eps, &mut out);
+    out
+}
+
+/// [`rmsnorm`] into arena-backed storage: same arithmetic, same element
+/// order, storage drawn from (and eventually returned to) `arena`.
+pub(crate) fn rmsnorm_scratch(x: &Mat, g: &Mat, eps: f32, arena: &mut StepArena) -> Mat {
+    let mut out = arena.take(x.rows(), x.cols());
+    rmsnorm_into(x, g, eps, &mut out);
+    out
+}
+
+fn rmsnorm_into(x: &Mat, g: &Mat, eps: f32, out: &mut Mat) {
     let (t, d) = x.shape();
-    let mut out = Mat::zeros(t, d);
+    debug_assert_eq!(out.shape(), (t, d));
     for r in 0..t {
         let row = x.row(r);
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -55,19 +70,30 @@ pub(crate) fn rmsnorm(x: &Mat, g: &Mat, eps: f32) -> Mat {
             orow[c] = row[c] * inv * g[(0, c)];
         }
     }
-    out
 }
 
 /// SwiGLU gate: `silu(gate) ⊙ up`, elementwise.  Shared with the serving
 /// subsystem's dense reference path so the two cannot drift.
 pub(crate) fn swiglu(gate: &Mat, up: &Mat) -> Mat {
-    assert_eq!(gate.shape(), up.shape());
     let mut out = Mat::zeros(gate.rows(), gate.cols());
+    swiglu_into(gate, up, &mut out);
+    out
+}
+
+/// [`swiglu`] into arena-backed storage (same arithmetic, same order).
+pub(crate) fn swiglu_scratch(gate: &Mat, up: &Mat, arena: &mut StepArena) -> Mat {
+    let mut out = arena.take(gate.rows(), gate.cols());
+    swiglu_into(gate, up, &mut out);
+    out
+}
+
+fn swiglu_into(gate: &Mat, up: &Mat, out: &mut Mat) {
+    assert_eq!(gate.shape(), up.shape());
+    debug_assert_eq!(out.shape(), gate.shape());
     for (o, (&g, &u)) in out.data_mut().iter_mut().zip(gate.data().iter().zip(up.data())) {
         let silu = g / (1.0 + (-g).exp());
         *o = silu * u;
     }
-    out
 }
 
 /// Split-half RoPE applied in place to `[T, H*hd]` laid out head-major;
@@ -149,10 +175,31 @@ pub(crate) fn causal_attention_offset(
 fn causal_attention_rows<R: KvRows>(q: &Mat, rows: &R, n_heads: usize, offset: usize) -> Mat {
     let (t_new, d) = q.shape();
     let t_all = offset + t_new;
-    let hd = d / n_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut o = Mat::zeros(t_new, d);
     let mut att = vec![0.0f32; t_all];
+    causal_attention_rows_into(q, rows, n_heads, offset, &mut o, &mut att);
+    o
+}
+
+/// The body of [`causal_attention_rows`], writing the attention mix into
+/// `o` (which must be `[T_new, d]` and all-zero — the mix accumulates)
+/// using `att` (`[offset + T_new]`, fully overwritten per query) as the
+/// score row.  Split out so the arena-backed hot path can run the exact
+/// same loop on recycled buffers.
+fn causal_attention_rows_into<R: KvRows>(
+    q: &Mat,
+    rows: &R,
+    n_heads: usize,
+    offset: usize,
+    o: &mut Mat,
+    att: &mut [f32],
+) {
+    let (t_new, d) = q.shape();
+    let t_all = offset + t_new;
+    debug_assert_eq!(o.shape(), (t_new, d));
+    debug_assert_eq!(att.len(), t_all);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
     for head in 0..n_heads {
         let base = head * hd;
         for qi in 0..t_new {
@@ -183,7 +230,6 @@ fn causal_attention_rows<R: KvRows>(q: &Mat, rows: &R, n_heads: usize, offset: u
             }
         }
     }
-    o
 }
 
 /// KV-cached attention for the new rows of one sequence at one layer:
@@ -216,6 +262,46 @@ pub(crate) fn cached_attention(
         }
         KvStore::Paged(p) => causal_attention_rows(&q, &p.rows(layer), n_heads, offset),
     }
+}
+
+/// [`cached_attention`] on arena storage: the attention mix and the
+/// per-query score row come from `arena`, and the consumed `q`/`k`/`v`
+/// (whose rows now live in the cache) are given back to it, so a
+/// steady-state decode step runs this without touching the allocator.
+/// Arithmetic and element order are exactly [`cached_attention`]'s.
+pub(crate) fn cached_attention_scratch(
+    mut q: Mat,
+    mut k: Mat,
+    v: Mat,
+    n_heads: usize,
+    theta: f32,
+    cache: &mut KvStore,
+    layer: usize,
+    arena: &mut StepArena,
+) -> Mat {
+    let offset = cache.pos(layer);
+    rope_at(&mut q, n_heads, theta, offset);
+    rope_at(&mut k, n_heads, theta, offset);
+    cache.append(layer, &k, &v);
+    let (t_new, d) = q.shape();
+    // `take` zero-fills, which the accumulating mix loop requires.
+    let mut o = arena.take(t_new, d);
+    let mut att = arena.take_vec(offset + t_new);
+    match cache {
+        KvStore::Contiguous(c) => {
+            let (k_all, v_all) = c.slices(layer);
+            let rows = ContigRows { k: k_all, v: v_all, dim: d };
+            causal_attention_rows_into(&q, &rows, n_heads, offset, &mut o, &mut att);
+        }
+        KvStore::Paged(p) => {
+            causal_attention_rows_into(&q, &p.rows(layer), n_heads, offset, &mut o, &mut att);
+        }
+    }
+    arena.give_vec(att);
+    arena.give(q);
+    arena.give(k);
+    arena.give(v);
+    o
 }
 
 /// Forward one sequence with optional activation capture.

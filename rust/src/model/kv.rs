@@ -106,6 +106,16 @@ impl KvCache {
         2 * n_layers * positions * dim * 4
     }
 
+    /// Pre-reserve capacity for `extra` more positions at every layer, so
+    /// the `append`s of the next `extra` decode steps cannot reallocate —
+    /// the zero-alloc hot path calls this once before a measured run.
+    pub fn reserve(&mut self, extra: usize) {
+        let n = extra * self.dim;
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.reserve(n);
+        }
+    }
+
     /// Append `[t_new, dim]` rotated keys and values for `layer`.
     pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
         assert_eq!(k_rows.cols(), self.dim, "key width != cache dim");
@@ -811,6 +821,17 @@ impl KvStore {
         match self {
             KvStore::Contiguous(c) => c.append(layer, k_rows, v_rows),
             KvStore::Paged(p) => p.append(layer, k_rows, v_rows),
+        }
+    }
+
+    /// Pre-reserve capacity for `extra` more positions at every layer.
+    /// Contiguous stores grow their flat buffers up front so appends
+    /// cannot reallocate ([`KvCache::reserve`]); paged stores are a no-op
+    /// — their capacity is the pool's funded pages.
+    pub fn reserve(&mut self, extra: usize) {
+        match self {
+            KvStore::Contiguous(c) => c.reserve(extra),
+            KvStore::Paged(_) => {}
         }
     }
 }

@@ -16,7 +16,10 @@ mod synth;
 
 pub use config::{LinearKind, LinearRef, ModelConfig};
 pub use forward::{forward_captured, lm_forward, lm_forward_step, lm_loss, perplexity, Captured};
-pub(crate) use forward::{cached_attention, causal_attention, rmsnorm, rope, swiglu};
+pub(crate) use forward::{
+    cached_attention, cached_attention_scratch, causal_attention, rmsnorm, rmsnorm_scratch, rope,
+    swiglu, swiglu_scratch,
+};
 pub use kv::{KvCache, KvPool, KvStore, PagedKvCache, PooledPage, SharedPrefix};
 pub use params::ParamStore;
 pub use synth::synth_trained_params;

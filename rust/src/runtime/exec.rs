@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::lcp::{LayerData, LcpBackend};
 use crate::tensor::Mat;
+use crate::util::scratch::StepArena;
 
 /// A host tensor crossing the backend boundary: shape + typed flat buffer.
 #[derive(Debug, Clone, PartialEq)]
@@ -163,6 +164,28 @@ pub trait ExecBackend {
     fn run_bound(&mut self, key: &str, dynamics: &[TensorValue]) -> Result<Vec<TensorValue>> {
         let _ = dynamics;
         Err(anyhow!("backend '{}' has no bound artifact under key '{key}'", self.backend_name()))
+    }
+
+    /// Allocation-free fast path for a bound single-matrix artifact:
+    /// compute `artifact(x)` into a matrix drawn from `arena`, returning
+    /// `None` when this backend has no such shortcut (the caller then
+    /// falls back to [`ExecBackend::run_bound`] with a `TensorValue`
+    /// round-trip).
+    ///
+    /// The contract mirrors `run_bound` exactly — same key, same single
+    /// dynamic input, bit-identical output — minus the boundary copies:
+    /// implementations must take every temporary from `arena` and give
+    /// intermediates back, so steady-state callers (the serving decode
+    /// loop) see zero heap allocations.  The native engine overrides this
+    /// for `sparse_fwd_*`.
+    fn run_bound_mat(
+        &mut self,
+        key: &str,
+        x: &Mat,
+        arena: &mut StepArena,
+    ) -> Option<Result<Mat>> {
+        let _ = (key, x, arena);
+        None
     }
 
     /// Whether this backend implements [`ExecBackend::bind`] /

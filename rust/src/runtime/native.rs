@@ -33,6 +33,7 @@ use crate::model::ModelConfig;
 use crate::sparsity::{Compressed, NmConfig};
 use crate::tensor::Mat;
 use crate::util::pool::parallel_map;
+use crate::util::scratch::StepArena;
 
 /// Configuration for the native backend.
 #[derive(Debug, Clone)]
@@ -362,6 +363,31 @@ impl ExecBackend for NativeEngine {
         Ok(vec![TensorValue::f32(vec![yr, yc], y.into_vec())?])
     }
 
+    /// The zero-copy, zero-alloc form of [`NativeEngine::run_bound`] for
+    /// `sparse_fwd_*`: the permuted activation and the output both come
+    /// from `arena`, no `TensorValue` crosses the boundary.  Bit-identical
+    /// to `run_bound` — same `permute_cols` gather, same
+    /// `matmul_xt_threads` kernel at the same thread count (pinned by
+    /// `bound_sparse_fwd_scratch_matches_run_bound`).
+    fn run_bound_mat(&mut self, key: &str, x: &Mat, arena: &mut StepArena) -> Option<Result<Mat>> {
+        let Some(Bound::SparseFwd { comp, src }) = self.bound.get(key) else {
+            return Some(Err(anyhow!("native backend: no bound artifact under key '{key}'")));
+        };
+        let (c_out, c_in) = comp.shape();
+        if x.cols() != c_in {
+            return Some(Err(anyhow!(
+                "bound sparse_fwd '{key}': input 'x' has shape {:?}, expected [T, {c_in}]",
+                x.shape()
+            )));
+        }
+        let mut xp = arena.take(x.rows(), c_in);
+        x.permute_cols_into(src, &mut xp);
+        let mut y = arena.take(x.rows(), c_out);
+        comp.matmul_xt_threads_into(&xp, self.cfg.threads, &mut y);
+        arena.give(xp);
+        Some(Ok(y))
+    }
+
     fn supports_bind(&self) -> bool {
         true
     }
@@ -617,6 +643,48 @@ mod tests {
             .is_err());
         // Wrong dynamic arity.
         assert!(engine.run_bound("layers.0.wq", &[x_v.clone(), x_v]).is_err());
+    }
+
+    #[test]
+    fn bound_sparse_fwd_scratch_matches_run_bound() {
+        let mut rng = Pcg32::seeded(23);
+        let (c_out, c_in, t) = (5usize, 24usize, 9usize);
+        let w = Mat::randn(c_out, c_in, 1.0, &mut rng);
+        let mask = NmMask::from_scores(&w.map(f32::abs), NmConfig::PAT_2_4);
+        let comp = Compressed::compress(&w, &mask);
+        let x = Mat::randn(t, c_in, 1.0, &mut rng);
+        let src = rng.permutation(c_in);
+
+        let idx: Vec<i32> = comp.idx().iter().map(|&v| v as i32).collect();
+        let vals = TensorValue::f32(vec![c_out, comp.k()], comp.vals().to_vec()).unwrap();
+        let idx = TensorValue::i32(vec![c_out, comp.k()], idx).unwrap();
+        let src_v =
+            TensorValue::i32(vec![c_in], src.iter().map(|&v| v as i32).collect()).unwrap();
+        let name = format!("sparse_fwd_{c_out}x{c_in}");
+
+        let mut engine = NativeEngine::default();
+        engine
+            .bind("layers.0.wq", &name, &[("vals", &vals), ("idx", &idx), ("src_of", &src_v)])
+            .unwrap();
+
+        let x_v = TensorValue::from_mat(&x);
+        let want =
+            engine.run_bound("layers.0.wq", std::slice::from_ref(&x_v)).unwrap()[0].to_mat().unwrap();
+
+        let mut arena = StepArena::new();
+        // Warm up the arena, then assert the steady-state call is served
+        // from the pools and stays bit-identical.
+        let y = engine.run_bound_mat("layers.0.wq", &x, &mut arena).unwrap().unwrap();
+        assert_eq!(y.data(), want.data());
+        arena.give(y);
+        arena.step();
+        let grows = arena.grow_events();
+        let y = engine.run_bound_mat("layers.0.wq", &x, &mut arena).unwrap().unwrap();
+        assert_eq!(y.data(), want.data());
+        assert_eq!(arena.grow_events(), grows, "steady-state scratch call must not allocate");
+
+        // Unknown keys report the error through the Some(Err) channel.
+        assert!(engine.run_bound_mat("nope", &x, &mut arena).unwrap().is_err());
     }
 
     #[test]

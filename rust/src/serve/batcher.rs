@@ -285,11 +285,61 @@ pub struct ContinuousBatcher<T> {
     width: usize,
     pool: VecDeque<StepItem<T>>,
     next_seq: u64,
+    /// Retired activation storage, reused for step-batch assembly so the
+    /// steady-state decode loop stops allocating per step: consumed
+    /// member buffers land here after their rows are stacked, and
+    /// [`ContinuousBatcher::recycle`] lets the serving loop return
+    /// finished batch matrices.  Bounded ([`Self::MAX_FREE`]) and
+    /// best-fit by capacity, mirroring `util::scratch::StepArena`.
+    free: Vec<Vec<f32>>,
 }
 
 impl<T> ContinuousBatcher<T> {
+    /// Cap on retired buffers kept for reuse; beyond this, returned
+    /// storage is simply dropped (the pool is an optimization, not an
+    /// obligation).
+    const MAX_FREE: usize = 64;
+
     pub fn new(width: usize, cfg: BatcherCfg) -> ContinuousBatcher<T> {
-        ContinuousBatcher { cfg, width, pool: VecDeque::new(), next_seq: 0 }
+        ContinuousBatcher { cfg, width, pool: VecDeque::new(), next_seq: 0, free: Vec::new() }
+    }
+
+    /// Return a finished matrix's storage to the assembly pool (e.g. a
+    /// dispatched batch's `x` once the serving loop is done with it, or
+    /// a preempted victim's step rows).  Purely an allocation-recycling
+    /// hint — dropping the matrix instead is always correct.
+    pub fn recycle(&mut self, m: Mat) {
+        let v = m.into_vec();
+        if v.capacity() > 0 && self.free.len() < Self::MAX_FREE {
+            self.free.push(v);
+        }
+    }
+
+    /// Retired buffers currently held for reuse (test/bench visibility).
+    pub fn recycled(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Zeroed `n`-float storage, served from the smallest sufficient
+    /// retired buffer when one exists (same best-fit rule as
+    /// `util::scratch::StepArena::take_vec`).
+    fn take_storage(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            if cap >= n && best.is_none_or(|(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut buf = self.free.swap_remove(i);
+                buf.clear();
+                buf.resize(n, 0.0);
+                buf
+            }
+            None => vec![0.0; n],
+        }
     }
 
     /// Enqueue a step (validates the activation width; decode steps must
@@ -358,7 +408,27 @@ impl<T> ContinuousBatcher<T> {
             tokens += next.x.rows();
             members.push(self.pool.pop_front().expect("front() was Some"));
         }
-        let mut x = Mat::zeros(tokens, self.width);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        // Single-member batch: its rows *are* the batch — move them
+        // through untouched (no copy, no allocation, bit-identical by
+        // construction).
+        if members.len() == 1 {
+            let item = members.pop().expect("one member");
+            return Some(StepBatch {
+                seq,
+                ids: vec![item.id],
+                spans: vec![(0, tokens)],
+                prefill: vec![item.is_prefill],
+                x: item.x,
+                payloads: vec![item.payload],
+            });
+        }
+        // Multi-member: stack rows into pooled storage.  The spans tile
+        // `[0, tokens)` contiguously, so every row of `x` is overwritten
+        // by exactly one member copy — a recycled (stale-valued) buffer
+        // is as correct as a fresh zeroed one.
+        let mut x = Mat::from_vec(tokens, self.width, self.take_storage(tokens * self.width));
         let mut ids = Vec::with_capacity(members.len());
         let mut spans = Vec::with_capacity(members.len());
         let mut prefill = Vec::with_capacity(members.len());
@@ -374,9 +444,10 @@ impl<T> ContinuousBatcher<T> {
             prefill.push(item.is_prefill);
             payloads.push(item.payload);
             lo = hi;
+            // The member's rows now live in the batch; its storage feeds
+            // the next assembly.
+            self.recycle(item.x);
         }
-        let seq = self.next_seq;
-        self.next_seq += 1;
         Some(StepBatch { seq, ids, spans, prefill, x, payloads })
     }
 
@@ -599,6 +670,35 @@ mod tests {
         // The survivors still batch in FIFO order.
         let b = cb.next_batch().unwrap();
         assert_eq!(b.ids, vec![5, 9]);
+    }
+
+    #[test]
+    fn assembly_reuses_recycled_storage_and_single_member_moves_through() {
+        let mut rng = Pcg32::seeded(12);
+        let mut cb = ContinuousBatcher::new(4, BatcherCfg { max_tokens: 100, max_requests: 8 });
+        // Single-member batch: rows move through untouched, no copy.
+        let x = Mat::randn(3, 4, 1.0, &mut rng);
+        let expect = x.data().to_vec();
+        cb.push(StepItem { id: 0, x, is_prefill: true, payload: "p" }).unwrap();
+        let b = cb.next_batch().unwrap();
+        assert_eq!(b.spans(), &[(0, 3)]);
+        assert_eq!(b.x.data(), &expect[..]);
+        assert_eq!(cb.recycled(), 0, "a moved-through batch consumes no pooled storage");
+        // Return the batch storage, then stack two members: assembly must
+        // be bit-identical to a fresh buffer while reusing the returned
+        // one, and the consumed member buffers feed the pool in turn.
+        cb.recycle(b.x);
+        assert_eq!(cb.recycled(), 1);
+        let m0 = Mat::randn(2, 4, 1.0, &mut rng);
+        let m1 = Mat::randn(1, 4, 1.0, &mut rng);
+        let mut expect = m0.data().to_vec();
+        expect.extend_from_slice(m1.data());
+        cb.push(StepItem { id: 1, x: m0, is_prefill: true, payload: "p" }).unwrap();
+        cb.push(StepItem { id: 2, x: m1, is_prefill: false, payload: "p" }).unwrap();
+        let b = cb.next_batch().unwrap();
+        assert_eq!(b.spans(), &[(0, 2), (2, 3)]);
+        assert_eq!(b.x.data(), &expect[..]);
+        assert_eq!(cb.recycled(), 2, "both member buffers were retired into the pool");
     }
 
     #[test]

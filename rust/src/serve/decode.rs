@@ -75,6 +75,7 @@ use crate::model::KvStore;
 use crate::runtime::ExecBackend;
 use crate::tensor::Mat;
 use crate::util::rng::Pcg32;
+use crate::util::scratch::StepArena;
 
 /// One generation request: prompt token ids plus stop conditions and
 /// the token-selection policy.
@@ -478,29 +479,37 @@ impl Server {
                 let rx_in = std::mem::replace(&mut prev_rx, rx);
                 let stage_rec = hub.recorder();
                 scope.spawn(move || {
+                    // One persistent arena for the whole loop: after the
+                    // first few steps size the pools, steady-state stage
+                    // work runs without touching the heap (the incoming
+                    // `work.x` retires into the arena as each stage's
+                    // output leaves it, so the pool stays balanced).
+                    let mut arena = StepArena::new();
                     for mut work in rx_in {
                         for layer in 0..n_stages {
                             if work.err.is_some() {
                                 break;
                             }
                             let s0 = Instant::now();
-                            match model.stage_cached(
+                            match model.stage_cached_scratch(
                                 engine.as_mut(),
                                 layer,
                                 &work.x,
                                 &work.spans,
                                 &mut work.caches,
                                 path,
+                                &mut arena,
                             ) {
                                 Ok(y) => {
                                     let s = s0.elapsed().as_secs_f64();
-                                    work.x = y;
+                                    arena.give(std::mem::replace(&mut work.x, y));
                                     work.stage_s.push(s);
                                     stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                 }
                                 Err(e) => work.err = Some(format!("{e:#}")),
                             }
                         }
+                        arena.step();
                         if tx.send(work).is_err() {
                             break;
                         }
@@ -512,26 +521,32 @@ impl Server {
                     let rx_in = std::mem::replace(&mut prev_rx, rx);
                     let stage_rec = hub.recorder();
                     scope.spawn(move || {
+                        // Per-stage-thread arena, same balance as the
+                        // single-engine loop: incoming `work.x` retires
+                        // in, the stage output leaves.
+                        let mut arena = StepArena::new();
                         for mut work in rx_in {
                             if work.err.is_none() {
                                 let s0 = Instant::now();
-                                match model.stage_cached(
+                                match model.stage_cached_scratch(
                                     engine.as_mut(),
                                     layer,
                                     &work.x,
                                     &work.spans,
                                     &mut work.caches,
                                     path,
+                                    &mut arena,
                                 ) {
                                     Ok(y) => {
                                         let s = s0.elapsed().as_secs_f64();
-                                        work.x = y;
+                                        arena.give(std::mem::replace(&mut work.x, y));
                                         work.stage_s.push(s);
                                         stage_rec.record(StatsEvent::StageBusy { seconds: s });
                                     }
                                     Err(e) => work.err = Some(format!("{e:#}")),
                                 }
                             }
+                            arena.step();
                             if tx.send(work).is_err() {
                                 break;
                             }
@@ -896,7 +911,11 @@ impl Server {
                         // making progress); with no victim, the parked
                         // steps wait for completions to free pages.
                         let Some(victim) = cb.steal_newest_decode() else { break };
-                        let (mut vstate, vstore) = victim.payload;
+                        let StepItem { x: vx, payload: (mut vstate, vstore), .. } = victim;
+                        // The victim's step rows are dead weight now —
+                        // retire the storage into the batcher's assembly
+                        // pool instead of freeing it.
+                        cb.recycle(vx);
                         // Dropping the store returns every page it holds
                         // (block tables and any unspent reserve).
                         drop(vstore);

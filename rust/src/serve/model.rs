@@ -12,14 +12,15 @@ use crate::coordinator::PrunedModel;
 use std::sync::Arc;
 
 use crate::model::{
-    cached_attention, causal_attention, rmsnorm, rope, swiglu, KvPool, KvStore, LinearKind,
-    LinearRef, ModelConfig,
+    cached_attention, cached_attention_scratch, causal_attention, rmsnorm, rmsnorm_scratch, rope,
+    swiglu, swiglu_scratch, KvPool, KvStore, LinearKind, LinearRef, ModelConfig,
 };
 use crate::runtime::{ExecBackend, TensorValue};
 use crate::sparsity::{Compressed, NmConfig};
 use crate::tensor::Mat;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
+use crate::util::scratch::StepArena;
 
 /// Which sublayers of each decoder layer run on the sparse path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -192,6 +193,32 @@ impl SparseLayer {
         outs.pop().expect("len checked").into_mat()
     }
 
+    /// [`SparseLayer::forward`] on arena storage: backends exposing the
+    /// [`ExecBackend::run_bound_mat`] fast path compute straight into a
+    /// recycled matrix with no `TensorValue` round-trip; everything else
+    /// falls back to the allocating call.  Bit-identical either way —
+    /// both routes run the same bound kernel.
+    pub fn forward_scratch(
+        &self,
+        engine: &mut dyn ExecBackend,
+        x: &Mat,
+        arena: &mut StepArena,
+    ) -> Result<Mat> {
+        if engine.supports_bind() {
+            if !engine.is_bound(&self.bind_key) {
+                engine.bind(
+                    &self.bind_key,
+                    &self.artifact,
+                    &[("vals", &self.vals), ("idx", &self.idx), ("src_of", &self.src)],
+                )?;
+            }
+            if let Some(res) = engine.run_bound_mat(&self.bind_key, x, arena) {
+                return res;
+            }
+        }
+        self.forward(engine, x)
+    }
+
     /// The masked weight in *storage* (permuted) channel order, rebuilt
     /// from the cached artifact tensors.
     fn stored_dense(&self) -> Mat {
@@ -293,6 +320,45 @@ fn attend_spans_cached(
         for (r, dst) in (lo..hi).enumerate() {
             o.row_mut(dst).copy_from_slice(os.row(r));
         }
+    }
+    o
+}
+
+/// `m.row_block(lo, hi)` into arena storage — same copy, recycled buffer.
+fn row_block_scratch(m: &Mat, lo: usize, hi: usize, arena: &mut StepArena) -> Mat {
+    let mut out = arena.take(hi - lo, m.cols());
+    for (r, src) in (lo..hi).enumerate() {
+        out.row_mut(r).copy_from_slice(m.row(src));
+    }
+    out
+}
+
+/// [`attend_spans_cached`] on arena storage: the per-span q/k/v copies,
+/// the per-span mix, and the assembled output all come from `arena` (the
+/// span copies are given back inside [`cached_attention_scratch`], the
+/// span mixes here).  Same copies, same arithmetic, same order — pinned
+/// bit-identical by `forward_cached_scratch_is_bit_identical`.
+#[allow(clippy::too_many_arguments)]
+fn attend_spans_cached_scratch(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    (n_heads, theta): (usize, f32),
+    seqs: &[(usize, usize)],
+    caches: &mut [KvStore],
+    layer: usize,
+    arena: &mut StepArena,
+) -> Mat {
+    let mut o = arena.take(q.rows(), q.cols());
+    for (cache, &(lo, hi)) in caches.iter_mut().zip(seqs) {
+        let qs = row_block_scratch(q, lo, hi, arena);
+        let ks = row_block_scratch(k, lo, hi, arena);
+        let vs = row_block_scratch(v, lo, hi, arena);
+        let os = cached_attention_scratch(qs, ks, vs, n_heads, theta, cache, layer, arena);
+        for (r, dst) in (lo..hi).enumerate() {
+            o.row_mut(dst).copy_from_slice(os.row(r));
+        }
+        arena.give(os);
     }
     o
 }
@@ -799,6 +865,32 @@ impl SparseModel {
         Ok(x.add(&down))
     }
 
+    /// [`SparseModel::mlp_stage`] on arena storage: every intermediate
+    /// (normed input, gate/up projections, SwiGLU mix, down projection)
+    /// is taken from and given back to `arena`; only the returned sum
+    /// stays out, for the caller to give back once consumed.
+    pub fn mlp_stage_scratch(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        arena: &mut StepArena,
+    ) -> Result<Mat> {
+        let xn = rmsnorm_scratch(x, &self.mlp_norms[layer], self.norm_eps, arena);
+        let gate = self.layer(layer, LinearKind::WGate).forward_scratch(engine, &xn, arena)?;
+        let up = self.layer(layer, LinearKind::WUp).forward_scratch(engine, &xn, arena)?;
+        arena.give(xn);
+        let h = swiglu_scratch(&gate, &up, arena);
+        arena.give(gate);
+        arena.give(up);
+        let down = self.layer(layer, LinearKind::WDown).forward_scratch(engine, &h, arena)?;
+        arena.give(h);
+        let mut out = arena.take(x.rows(), x.cols());
+        x.add_into(&down, &mut out);
+        arena.give(down);
+        Ok(out)
+    }
+
     /// One pipeline stage (decoder layer `layer`) on the sparse path,
     /// `x: [T, d]` -> `[T, d]`.
     pub fn stage(
@@ -884,6 +976,47 @@ impl SparseModel {
         Ok(x.add(&att))
     }
 
+    /// [`SparseModel::attn_stage_cached`] on arena storage — the
+    /// KV-cached attention sublayer with every intermediate recycled
+    /// through `arena` (the caches themselves still grow by the step's
+    /// new positions, which is state, not scratch).
+    pub fn attn_stage_cached_scratch(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvStore],
+        arena: &mut StepArena,
+    ) -> Result<Mat> {
+        check_seqs(seqs, x.rows())?;
+        check_caches(seqs, caches, self.cfg.n_layers)?;
+        let xn = rmsnorm_scratch(x, &self.attn_norms[layer], self.norm_eps, arena);
+        let q = self.layer(layer, LinearKind::Wq).forward_scratch(engine, &xn, arena)?;
+        let k = self.layer(layer, LinearKind::Wk).forward_scratch(engine, &xn, arena)?;
+        let v = self.layer(layer, LinearKind::Wv).forward_scratch(engine, &xn, arena)?;
+        arena.give(xn);
+        let o = attend_spans_cached_scratch(
+            &q,
+            &k,
+            &v,
+            (self.cfg.n_heads, self.cfg.rope_theta),
+            seqs,
+            caches,
+            layer,
+            arena,
+        );
+        arena.give(q);
+        arena.give(k);
+        arena.give(v);
+        let att = self.layer(layer, LinearKind::Wo).forward_scratch(engine, &o, arena)?;
+        arena.give(o);
+        let mut out = arena.take(x.rows(), x.cols());
+        x.add_into(&att, &mut out);
+        arena.give(att);
+        Ok(out)
+    }
+
     /// One KV-cached pipeline stage: [`SparseModel::attn_stage_cached`]
     /// followed by the (position-independent) MLP sublayer.  On
     /// [`ServePath::MlpOnly`] the caches are validated but untouched —
@@ -909,6 +1042,36 @@ impl SparseModel {
         }
     }
 
+    /// [`SparseModel::stage_cached`] on arena storage — the decode hot
+    /// path's per-stage entry point.  Bit-identical to `stage_cached`
+    /// (same kernels, same op order; only where the bytes live changes);
+    /// the caller gives the returned matrix back to `arena` once
+    /// consumed and calls [`StepArena::step`] at each batch-step
+    /// boundary.
+    pub fn stage_cached_scratch(
+        &self,
+        engine: &mut dyn ExecBackend,
+        layer: usize,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvStore],
+        path: ServePath,
+        arena: &mut StepArena,
+    ) -> Result<Mat> {
+        match path {
+            ServePath::MlpOnly => {
+                check_caches(seqs, caches, self.cfg.n_layers)?;
+                self.mlp_stage_scratch(engine, layer, x, arena)
+            }
+            ServePath::FullDecoder => {
+                let a = self.attn_stage_cached_scratch(engine, layer, x, seqs, caches, arena)?;
+                let out = self.mlp_stage_scratch(engine, layer, &a, arena)?;
+                arena.give(a);
+                Ok(out)
+            }
+        }
+    }
+
     /// KV-cached sparse forward through every decoder-layer stage: the
     /// incremental counterpart of [`SparseModel::forward`].  Feeding a
     /// sequence in chunks (prefill, then token-by-token decode) produces
@@ -929,10 +1092,54 @@ impl SparseModel {
         Ok(cur)
     }
 
+    /// [`SparseModel::forward_cached`] on arena storage: the whole
+    /// decoder stack runs on recycled buffers, so a steady-state decode
+    /// step — after one warmup step has sized the pools — performs zero
+    /// heap allocations inside this call (the `decode_allocs_per_step`
+    /// bench gate measures exactly this region).  The caller gives the
+    /// returned matrix back and calls [`StepArena::step`] per batch
+    /// step.  Bit-identical to `forward_cached`, pinned by
+    /// `forward_cached_scratch_is_bit_identical`.
+    pub fn forward_cached_scratch(
+        &self,
+        engine: &mut dyn ExecBackend,
+        x: &Mat,
+        seqs: &[(usize, usize)],
+        caches: &mut [KvStore],
+        path: ServePath,
+        arena: &mut StepArena,
+    ) -> Result<Mat> {
+        let mut cur = arena.take(x.rows(), x.cols());
+        cur.data_mut().copy_from_slice(x.data());
+        for layer in 0..self.n_stages() {
+            let next = self.stage_cached_scratch(engine, layer, &cur, seqs, caches, path, arena)?;
+            arena.give(cur);
+            cur = next;
+        }
+        Ok(cur)
+    }
+
     /// Embed token ids into `[T, d]` activation rows (the decode path's
     /// entry point; embeddings are dense — never pruned).
     pub fn embed(&self, tokens: &[u32]) -> Result<Mat> {
         embed_rows(&self.tok_embed, self.cfg.vocab, tokens)
+    }
+
+    /// [`SparseModel::embed`] into arena storage — same lookup copies,
+    /// recycled buffer, so the decode loop's next-token embed stays off
+    /// the allocator.
+    pub fn embed_scratch(&self, tokens: &[u32], arena: &mut StepArena) -> Result<Mat> {
+        anyhow::ensure!(!tokens.is_empty(), "cannot embed an empty token sequence");
+        let mut x = arena.take(tokens.len(), self.tok_embed.cols());
+        for (r, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!(
+                (tok as usize) < self.cfg.vocab,
+                "token {tok} outside vocab {}",
+                self.cfg.vocab
+            );
+            x.row_mut(r).copy_from_slice(self.tok_embed.row(tok as usize));
+        }
+        Ok(x)
     }
 
     /// LM-head logits `[T, vocab]` for decoder-stack outputs `h: [T, d]`
@@ -1587,6 +1794,80 @@ pub(crate) mod tests {
                     );
                 } else {
                     assert!(caches[0].is_empty(), "MLP-only must not touch the cache");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_cached_scratch_is_bit_identical() {
+        // The arena-backed decode hot path must reproduce the allocating
+        // path byte for byte — both N:M patterns, both serve paths,
+        // prefill and decode — and a second pass over the same workload
+        // (pools sized by the first) must not grow the arena at all.
+        for nm in [NmConfig::PAT_2_4, NmConfig::PAT_4_8] {
+            let sm = sparse_model_with(nm);
+            let mut engine = NativeEngine::new(NativeCfg { nm, ..NativeCfg::default() });
+            for path in [ServePath::MlpOnly, ServePath::FullDecoder] {
+                let mut rng = Pcg32::seeded(37);
+                let toks: Vec<u32> =
+                    (0..8).map(|_| rng.below(sm.cfg().vocab as u32)).collect();
+                let mut arena = StepArena::new();
+                for pass in 0..2 {
+                    let grows_at_start = arena.grow_events();
+                    let mut c_ref = vec![sm.new_cache()];
+                    let mut c_scr = vec![sm.new_cache()];
+                    let x = sm.embed(&toks[..4]).unwrap();
+                    let want = sm
+                        .forward_cached(&mut engine, &x, &[(0, 4)], &mut c_ref, path)
+                        .unwrap();
+                    let got = sm
+                        .forward_cached_scratch(
+                            &mut engine,
+                            &x,
+                            &[(0, 4)],
+                            &mut c_scr,
+                            path,
+                            &mut arena,
+                        )
+                        .unwrap();
+                    assert_eq!(got.data(), want.data(), "{} {} prefill", nm.name(), path.name());
+                    arena.give(got);
+                    arena.step();
+                    for t in 4..toks.len() {
+                        let xt = sm.embed(&toks[t..t + 1]).unwrap();
+                        let want = sm
+                            .forward_cached(&mut engine, &xt, &[(0, 1)], &mut c_ref, path)
+                            .unwrap();
+                        let got = sm
+                            .forward_cached_scratch(
+                                &mut engine,
+                                &xt,
+                                &[(0, 1)],
+                                &mut c_scr,
+                                path,
+                                &mut arena,
+                            )
+                            .unwrap();
+                        assert_eq!(
+                            got.data(),
+                            want.data(),
+                            "{} {} decode step {t}",
+                            nm.name(),
+                            path.name()
+                        );
+                        arena.give(got);
+                        arena.step();
+                    }
+                    if pass == 1 {
+                        assert_eq!(
+                            arena.grow_events(),
+                            grows_at_start,
+                            "{} {}: warmed-up pass must not grow the arena",
+                            nm.name(),
+                            path.name()
+                        );
+                    }
                 }
             }
         }

@@ -40,6 +40,26 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Matrix whose initial contents are unspecified garbage.
+    ///
+    /// INVARIANT: the caller must overwrite every element before any
+    /// element is read.  Reserved for kernels that produce fully-written
+    /// outputs (`Compressed::matmul_xt_threads` writes every output
+    /// element exactly once) — `Mat::zeros` would touch every output byte
+    /// twice, once for the fill and once for the real value.
+    pub fn uninit_filled(rows: usize, cols: usize) -> Self {
+        let n = rows * cols;
+        let mut data = Vec::with_capacity(n);
+        // SAFETY: `f32` is a plain-old-data type — every bit pattern is a
+        // valid value, there is no drop glue, and the capacity was just
+        // reserved.  The garbage values are never *used*: every caller
+        // fully overwrites the buffer before reading (the invariant
+        // above), so no computation ever depends on an indeterminate
+        // value.
+        unsafe { data.set_len(n) };
+        Mat { rows, cols, data }
+    }
+
     /// Gaussian-initialized matrix with standard deviation `std`.
     pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Self {
         Mat { rows, cols, data: rng.normal_vec(rows * cols, std) }
@@ -187,6 +207,17 @@ impl Mat {
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// [`Mat::add`] into an existing matrix (every element overwritten;
+    /// same element order as `add`) — the arena-backed serving hot path's
+    /// residual-sum form.
+    pub fn add_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.shape(), other.shape());
+        assert_eq!(out.shape(), self.shape(), "add_into shape mismatch");
+        for (o, (a, b)) in out.data.iter_mut().zip(self.data.iter().zip(&other.data)) {
+            *o = a + b;
+        }
+    }
+
     /// Scaled copy.
     pub fn scale(&self, s: f32) -> Mat {
         let data = self.data.iter().map(|a| a * s).collect();
@@ -242,7 +273,22 @@ impl Mat {
             src_of.iter().all(|&i| i < self.cols),
             "permutation index out of range"
         );
-        let mut out = Mat::zeros(self.rows, self.cols);
+        let mut out = Mat::uninit_filled(self.rows, self.cols);
+        self.permute_cols_into(src_of, &mut out);
+        out
+    }
+
+    /// [`Mat::permute_cols`] writing into an existing same-shape matrix —
+    /// the zero-allocation form the arena-backed serving hot path uses
+    /// (`out` is recycled scratch).  Every element of `out` is
+    /// overwritten.
+    pub fn permute_cols_into(&self, src_of: &[usize], out: &mut Mat) {
+        assert_eq!(src_of.len(), self.cols);
+        assert_eq!(out.shape(), self.shape(), "permute_cols_into shape mismatch");
+        assert!(
+            src_of.iter().all(|&i| i < self.cols),
+            "permutation index out of range"
+        );
         for r in 0..self.rows {
             let src = self.row(r);
             let dst = out.row_mut(r);
@@ -251,7 +297,6 @@ impl Mat {
                 *d = unsafe { *src.get_unchecked(i) };
             }
         }
-        out
     }
 
     /// Permute rows: `out[i, :] = self[dst_to_src[i], :]` (row reorder used
@@ -381,6 +426,26 @@ mod tests {
         let got = a.permute_cols(&src_of);
         let want = a.matmul(&p);
         assert!(got.mse(&want) < 1e-12);
+    }
+
+    #[test]
+    fn permute_cols_into_matches_allocating_form() {
+        let mut rng = Pcg32::seeded(12);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        let src_of = rng.permutation(6);
+        let want = a.permute_cols(&src_of);
+        // Recycled scratch starts full of garbage; every element must be
+        // overwritten.
+        let mut out = Mat::full(4, 6, f32::NAN);
+        a.permute_cols_into(&src_of, &mut out);
+        assert_eq!(out.data(), want.data());
+    }
+
+    #[test]
+    fn uninit_filled_has_the_right_shape() {
+        let m = Mat::uninit_filled(3, 5);
+        assert_eq!(m.shape(), (3, 5));
+        assert_eq!(m.data().len(), 15);
     }
 
     #[test]

@@ -10,4 +10,5 @@ pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod rng;
+pub mod scratch;
 pub mod testkit;

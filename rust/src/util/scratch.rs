@@ -1,0 +1,226 @@
+//! Double-buffered step arena for the serving hot path.
+//!
+//! The decode loop produces and consumes a burst of short-lived `f32`
+//! buffers every batch step (activations, attention scratch, micro-batch
+//! assembly).  Allocating them fresh each step puts the global allocator
+//! on the per-token critical path; this module replaces that traffic with
+//! two reusable pools that swap roles once per step — the `bozbez__nessie`
+//! chain-builder idiom (SNIPPETS.md 1–2) applied to activation scratch.
+//!
+//! Lifecycle per step:
+//!
+//! 1. [`StepArena::take`] hands out a buffer from the **active** pool
+//!    (best-fit by capacity, zero-filled to the requested shape).  Only
+//!    when no pooled buffer has enough capacity does it allocate — a
+//!    *grow event*, counted in [`StepArena::grow_events`].
+//! 2. [`StepArena::give`] returns a finished buffer to the **standby**
+//!    pool, where it sits out the rest of the step (so a buffer can never
+//!    be re-handed-out while a caller still reads a view derived from the
+//!    values it held).
+//! 3. [`StepArena::step`] swaps the pools at the step boundary: everything
+//!    given back becomes reusable capacity for the next step.
+//!
+//! Capacity is grow-only: after a warmup step at the steady-state batch
+//! shape, every `take` is satisfied from the pools and the hot path makes
+//! **zero heap allocations** (the property the `decode_allocs_per_step`
+//! bench gate pins).  Scratch grows only when a step needs more concurrent
+//! live buffers, or larger ones, than any step before it — e.g. a longer
+//! prefill chunk or a wider micro-batch.
+//!
+//! # Example
+//!
+//! ```
+//! use permllm::util::scratch::StepArena;
+//!
+//! let mut arena = StepArena::new();
+//!
+//! // Step 1: the pool is empty, so the first take allocates (grow event).
+//! let a = arena.take(4, 8);
+//! assert_eq!(a.shape(), (4, 8));
+//! assert_eq!(arena.grow_events(), 1);
+//! arena.give(a);
+//! arena.step();
+//!
+//! // Step 2: same shape — served from the recycled buffer, no growth.
+//! let b = arena.take(4, 8);
+//! assert_eq!(arena.grow_events(), 1);
+//! arena.give(b);
+//! arena.step();
+//! ```
+
+use crate::tensor::Mat;
+
+/// Two reusable pools of `f32` buffers that swap roles once per batch
+/// step.  See the [module docs](self) for the lifecycle.
+#[derive(Debug, Default)]
+pub struct StepArena {
+    /// Buffers available for `take` during the current step.
+    active: Vec<Vec<f32>>,
+    /// Buffers given back this step; promoted to `active` at `step()`.
+    standby: Vec<Vec<f32>>,
+    /// Times `take`/`take_vec` had to hit the global allocator.
+    grows: u64,
+}
+
+impl StepArena {
+    /// An empty arena.  The first step at any working-set shape grows it;
+    /// subsequent steps at the same shape are allocation-free.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled `[rows, cols]` matrix backed by pooled storage when
+    /// a pooled buffer with enough capacity exists (best fit, smallest
+    /// sufficient capacity), freshly allocated otherwise (a grow event).
+    pub fn take(&mut self, rows: usize, cols: usize) -> Mat {
+        let v = self.take_vec(rows * cols);
+        Mat::from_vec(rows, cols, v)
+    }
+
+    /// The raw-buffer form of [`StepArena::take`]: a `Vec<f32>` of
+    /// exactly `n` zeros.
+    pub fn take_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, buf) in self.active.iter().enumerate() {
+            let cap = buf.capacity();
+            if cap >= n && best.is_none_or(|(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut v = self.active.swap_remove(i);
+                v.clear();
+                v.resize(n, 0.0);
+                v
+            }
+            None => {
+                self.grows += 1;
+                vec![0.0; n]
+            }
+        }
+    }
+
+    /// Return a matrix's storage to the standby pool for reuse from the
+    /// *next* step onward.
+    pub fn give(&mut self, m: Mat) {
+        self.give_vec(m.into_vec());
+    }
+
+    /// Return a raw buffer to the standby pool.
+    pub fn give_vec(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.standby.push(v);
+        }
+    }
+
+    /// Step boundary: buffers given back this step become available for
+    /// the next one.  Buffers still in `active` (taken last step but
+    /// never re-taken this step) are kept too — capacity is grow-only.
+    pub fn step(&mut self) {
+        std::mem::swap(&mut self.active, &mut self.standby);
+        // Whatever the (now-)standby side still holds is idle capacity;
+        // fold it into the active pool rather than stranding it a step.
+        let leftovers = std::mem::take(&mut self.standby);
+        self.active.extend(leftovers);
+    }
+
+    /// How many times a `take` could not be served from the pools and
+    /// had to allocate.  Flat across steady-state steps ⇔ the hot path
+    /// is allocation-free.
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+    }
+
+    /// Buffers currently pooled (both sides) — a capacity gauge.
+    pub fn pooled(&self) -> usize {
+        self.active.len() + self.standby.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_reuses_without_growing() {
+        let mut arena = StepArena::new();
+        // Warmup step: three live buffers of mixed shapes.
+        let a = arena.take(4, 8);
+        let b = arena.take(2, 8);
+        let v = arena.take_vec(5);
+        assert_eq!(arena.grow_events(), 3);
+        arena.give(a);
+        arena.give(b);
+        arena.give_vec(v);
+        arena.step();
+        // Steady state: same working set, served entirely from the pool.
+        for _ in 0..10 {
+            let a = arena.take(4, 8);
+            let b = arena.take(2, 8);
+            let v = arena.take_vec(5);
+            assert_eq!(a.shape(), (4, 8));
+            assert!(a.data().iter().all(|&x| x == 0.0));
+            arena.give(a);
+            arena.give(b);
+            arena.give_vec(v);
+            arena.step();
+        }
+        assert_eq!(arena.grow_events(), 3);
+        assert_eq!(arena.pooled(), 3);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut arena = StepArena::new();
+        arena.give_vec(Vec::with_capacity(100));
+        arena.give_vec(Vec::with_capacity(10));
+        arena.step();
+        // Needs 8: the capacity-10 buffer is the best fit, leaving the
+        // capacity-100 one for a larger request.
+        let v = arena.take_vec(8);
+        assert!(v.capacity() < 100);
+        let w = arena.take_vec(64);
+        assert_eq!(arena.grow_events(), 0);
+        arena.give_vec(v);
+        arena.give_vec(w);
+    }
+
+    #[test]
+    fn buffers_given_this_step_are_not_rehanded_until_next() {
+        let mut arena = StepArena::new();
+        let a = arena.take_vec(16);
+        arena.give_vec(a);
+        // Same step: the standby side must not serve it.
+        let b = arena.take_vec(16);
+        assert_eq!(arena.grow_events(), 2);
+        arena.give_vec(b);
+        arena.step();
+        let _ = arena.take_vec(16);
+        assert_eq!(arena.grow_events(), 2);
+    }
+
+    #[test]
+    fn taken_buffers_are_zeroed_even_after_reuse() {
+        let mut arena = StepArena::new();
+        let mut a = arena.take(2, 3);
+        a.data_mut().fill(7.5);
+        arena.give(a);
+        arena.step();
+        let b = arena.take(2, 3);
+        assert!(b.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn leftover_active_capacity_survives_step() {
+        let mut arena = StepArena::new();
+        let a = arena.take_vec(4);
+        arena.give_vec(a);
+        arena.step();
+        // This step never takes the buffer; it must still be pooled after
+        // the next boundary.
+        arena.step();
+        let _ = arena.take_vec(4);
+        assert_eq!(arena.grow_events(), 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Steady-state decode makes zero heap allocations — the hot-path pin
+//! behind the bench artifact's `decode_allocs_per_step` field.
+//!
+//! Builds a tiny sparse model through the public pruning pipeline, runs
+//! one full generation pass through the arena-backed
+//! `SparseModel::forward_cached_scratch` to warm the `StepArena` to the
+//! workload's high-water mark (the attention score buffer needs
+//! `pos + rows` floats, which grows every decode step, so a single
+//! warmed step is not enough — only a full pass is), then repeats the
+//! identical workload and asserts, via a counting global allocator, that
+//! not a single heap allocation happens inside the steady-state
+//! forwards.  Both passes must also reproduce the plain
+//! `forward_cached` token trajectory bit-for-bit, so the zero-alloc
+//! path can never buy speed with drift.
+//!
+//! This file holds exactly one `#[test]`: libtest runs tests in the same
+//! binary concurrently, and a sibling test's allocations would bleed
+//! into the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use permllm::coordinator::{prune_with_recipe, PipelineCfg};
+use permllm::data::{Corpus, CorpusKind};
+use permllm::lcp::LcpCfg;
+use permllm::model::{synth_trained_params, ModelConfig};
+use permllm::pruning::Metric;
+use permllm::recipe::PruneRecipe;
+use permllm::runtime::{ExecBackend, NativeCfg, NativeEngine};
+use permllm::serve::{greedy_token, KvStore, ServePath, SparseModel};
+use permllm::sparsity::NmConfig;
+use permllm::tensor::Mat;
+use permllm::util::scratch::StepArena;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn tiny_sparse_model(nm: NmConfig) -> SparseModel {
+    let cfg = ModelConfig::by_name("tiny-s").unwrap();
+    let ps = synth_trained_params(&cfg, 11);
+    let corpus = Corpus::build(CorpusKind::C4Like, 5);
+    let pc = PipelineCfg {
+        nm,
+        calib_seqs: 2,
+        calib_len: 32,
+        calib_rows: 32,
+        lcp: LcpCfg { block: 16, steps: 4, lr: 0.1, nm, ..Default::default() },
+        ..Default::default()
+    };
+    let pruned = prune_with_recipe(&ps, &corpus, &PruneRecipe::oneshot(Metric::Wanda, nm), &pc);
+    SparseModel::from_pruned(&pruned).unwrap()
+}
+
+/// Prefill + `gen_steps` greedy decode steps through the arena-backed
+/// forward, counting heap allocations around each decode-step forward
+/// only (sampling and embedding are the gated scope's exits).  Returns
+/// `(allocations inside the forwards, per-prompt tokens)`.
+fn scratch_pass(
+    sm: &SparseModel,
+    engine: &mut dyn ExecBackend,
+    prompts: &[Vec<u32>],
+    gen_steps: usize,
+    arena: &mut StepArena,
+) -> (u64, Vec<Vec<u32>>) {
+    let r = prompts.len();
+    let rows = prompts[0].len();
+    let path = ServePath::FullDecoder;
+    let mut caches: Vec<KvStore> = (0..r).map(|_| sm.new_cache()).collect();
+    for c in &mut caches {
+        c.reserve(rows + gen_steps);
+    }
+    let mut x = Mat::zeros(r * rows, sm.width());
+    let mut spans = Vec::with_capacity(r);
+    for (i, p) in prompts.iter().enumerate() {
+        let e = sm.embed(p).unwrap();
+        for rr in 0..rows {
+            x.row_mut(i * rows + rr).copy_from_slice(e.row(rr));
+        }
+        spans.push((i * rows, (i + 1) * rows));
+    }
+    let h = sm.forward_cached_scratch(engine, &x, &spans, &mut caches, path, arena).unwrap();
+    let step_spans: Vec<(usize, usize)> = (0..r).map(|i| (i, i + 1)).collect();
+    let mut cur = Mat::zeros(r, sm.width());
+    for (i, &(_, hi)) in spans.iter().enumerate() {
+        cur.row_mut(i).copy_from_slice(h.row(hi - 1));
+    }
+    arena.give(h);
+    arena.step();
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); r];
+    let mut xs = Mat::zeros(r, sm.width());
+    let mut fwd_allocs = 0u64;
+    for _ in 0..gen_steps {
+        let logits = sm.logits(&cur);
+        for i in 0..r {
+            let tok = greedy_token(logits.row(i));
+            tokens[i].push(tok);
+            xs.row_mut(i).copy_from_slice(sm.embed(&[tok]).unwrap().row(0));
+        }
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let h = sm
+            .forward_cached_scratch(engine, &xs, &step_spans, &mut caches, path, arena)
+            .unwrap();
+        fwd_allocs += ALLOCS.load(Ordering::Relaxed) - a0;
+        cur.data_mut().copy_from_slice(h.data());
+        arena.give(h);
+        arena.step();
+    }
+    (fwd_allocs, tokens)
+}
+
+/// The same workload through the allocating `forward_cached` — the
+/// trajectory reference the scratch passes must reproduce exactly.
+fn reference_pass(
+    sm: &SparseModel,
+    engine: &mut dyn ExecBackend,
+    prompts: &[Vec<u32>],
+    gen_steps: usize,
+) -> Vec<Vec<u32>> {
+    let r = prompts.len();
+    let rows = prompts[0].len();
+    let path = ServePath::FullDecoder;
+    let mut caches: Vec<KvStore> = (0..r).map(|_| sm.new_cache()).collect();
+    let mut x = Mat::zeros(r * rows, sm.width());
+    let mut spans = Vec::with_capacity(r);
+    for (i, p) in prompts.iter().enumerate() {
+        let e = sm.embed(p).unwrap();
+        for rr in 0..rows {
+            x.row_mut(i * rows + rr).copy_from_slice(e.row(rr));
+        }
+        spans.push((i * rows, (i + 1) * rows));
+    }
+    let h = sm.forward_cached(engine, &x, &spans, &mut caches, path).unwrap();
+    let step_spans: Vec<(usize, usize)> = (0..r).map(|i| (i, i + 1)).collect();
+    let mut cur = Mat::zeros(r, sm.width());
+    for (i, &(_, hi)) in spans.iter().enumerate() {
+        cur.row_mut(i).copy_from_slice(h.row(hi - 1));
+    }
+    let mut tokens: Vec<Vec<u32>> = vec![Vec::new(); r];
+    for _ in 0..gen_steps {
+        let logits = sm.logits(&cur);
+        let mut xs = Mat::zeros(r, sm.width());
+        for i in 0..r {
+            let tok = greedy_token(logits.row(i));
+            tokens[i].push(tok);
+            xs.row_mut(i).copy_from_slice(sm.embed(&[tok]).unwrap().row(0));
+        }
+        cur = sm.forward_cached(engine, &xs, &step_spans, &mut caches, path).unwrap();
+    }
+    tokens
+}
+
+#[test]
+fn steady_state_decode_steps_make_zero_heap_allocations() {
+    let sm = tiny_sparse_model(NmConfig::PAT_2_4);
+    let mut engine = NativeEngine::new(NativeCfg { threads: 1, ..NativeCfg::default() });
+    let vocab = sm.cfg().vocab as u32;
+    let (n_prompts, rows, gen_steps) = (3usize, 6usize, 5usize);
+    let prompts: Vec<Vec<u32>> = (0..n_prompts)
+        .map(|i| (0..rows).map(|r| ((i * 31 + r * 7) as u32) % vocab).collect())
+        .collect();
+
+    let want = reference_pass(&sm, &mut engine, &prompts, gen_steps);
+
+    let mut arena = StepArena::new();
+    // Pass 1 (warmup): allowed to grow the arena to the workload's
+    // high-water mark, must already match the reference trajectory.
+    let (_, warm_tokens) = scratch_pass(&sm, &mut engine, &prompts, gen_steps, &mut arena);
+    assert_eq!(warm_tokens, want, "warmup scratch pass diverged from forward_cached");
+    let warm_grows = arena.grow_events();
+
+    // Pass 2 (measured): identical workload, warmed arena — zero heap
+    // allocations inside the decode-step forwards, zero arena growth.
+    let (fwd_allocs, tokens) = scratch_pass(&sm, &mut engine, &prompts, gen_steps, &mut arena);
+    assert_eq!(tokens, want, "measured scratch pass diverged from forward_cached");
+    assert_eq!(arena.grow_events(), warm_grows, "warmed-up arena grew during the measured pass");
+    assert_eq!(
+        fwd_allocs,
+        0,
+        "steady-state decode forwards must not touch the heap ({fwd_allocs} allocations \
+         across {gen_steps} steps)"
+    );
+}

@@ -344,28 +344,28 @@ impl KvPool {
 
     /// High water of [`KvPool::shared_pages`] (monotone).
     pub fn shared_pages_peak(&self) -> usize {
-        self.shared_pages_peak.load(Ordering::Acquire)
+        self.shared_pages_peak.load(Ordering::Relaxed)
     }
 
     /// Generations evicted for recompute because the pool ran dry.
     pub fn preemptions(&self) -> usize {
-        self.preemptions.load(Ordering::Acquire)
+        self.preemptions.load(Ordering::Relaxed)
     }
 
     /// Requests that diverged from a shared prefix into pages of their
     /// own (the copy-on-write fork — metadata only, shared pages are
     /// never copied because they are always full).
     pub fn cow_forks(&self) -> usize {
-        self.cow_forks.load(Ordering::Acquire)
+        self.cow_forks.load(Ordering::Relaxed)
     }
 
     /// Count one preemption (called by the scheduler that evicted).
     pub fn note_preemption(&self) {
-        self.preemptions.fetch_add(1, Ordering::AcqRel);
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
     }
 
     fn note_cow_fork(&self) {
-        self.cow_forks.fetch_add(1, Ordering::AcqRel);
+        self.cow_forks.fetch_add(1, Ordering::Relaxed);
     }
 
     fn distinct_registry_pages(st: &PoolState) -> usize {
@@ -477,7 +477,7 @@ impl KvPool {
             });
         }
         let shared = Self::distinct_registry_pages(&st);
-        self.shared_pages_peak.fetch_max(shared, Ordering::AcqRel);
+        self.shared_pages_peak.fetch_max(shared, Ordering::Relaxed);
     }
 
     /// Drop every registry entry (drain/shutdown): pages no live request

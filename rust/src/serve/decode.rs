@@ -293,7 +293,7 @@ impl DecodeClient<'_> {
         self.stats.record(StatsEvent::Admitted);
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.queue.state.lock().unwrap();
+            let mut st = self.queue.state.lock().unwrap_or_else(|e| e.into_inner());
             if st.closed {
                 // Drop the state lock first: `unadmit` -> `release`
                 // re-takes it to publish the wakeup.
@@ -700,7 +700,8 @@ impl Server {
                             drop(cache);
                             queue_ref.release();
                         } else {
-                            let mut st = queue_ref.state.lock().unwrap();
+                            let mut st =
+                                queue_ref.state.lock().unwrap_or_else(|e| e.into_inner());
                             st.rejoin.push(Rejoin { state, cache, token: tok });
                             drop(st);
                             queue_ref.arrived.notify_all();
@@ -719,7 +720,7 @@ impl Server {
                 'outer: loop {
                     let parked = cb.pending() > 0;
                     let (news, rejoins): (Vec<PendingGen>, Vec<Rejoin>) = {
-                        let mut st = queue.state.lock().unwrap();
+                        let mut st = queue.state.lock().unwrap_or_else(|e| e.into_inner());
                         loop {
                             if !st.pending.is_empty() || !st.rejoin.is_empty() {
                                 break;
@@ -735,8 +736,8 @@ impl Server {
                                 } else {
                                     linger
                                 };
-                                let (guard, _) =
-                                    queue.arrived.wait_timeout(st, tick).unwrap();
+                                let woken = queue.arrived.wait_timeout(st, tick);
+                                let (guard, _) = woken.unwrap_or_else(|e| e.into_inner());
                                 st = guard;
                                 break;
                             }
@@ -746,7 +747,7 @@ impl Server {
                             if st.closed && queue.in_flight.load(Ordering::Acquire) == 0 {
                                 break 'outer;
                             }
-                            st = queue.arrived.wait(st).unwrap();
+                            st = queue.arrived.wait(st).unwrap_or_else(|e| e.into_inner());
                         }
                         // Linger: let the step batch fill — cut short by
                         // the budgets or shutdown.
@@ -765,8 +766,8 @@ impl Server {
                             if now >= deadline {
                                 break;
                             }
-                            let (guard, _) =
-                                queue.arrived.wait_timeout(st, deadline - now).unwrap();
+                            let woken = queue.arrived.wait_timeout(st, deadline - now);
+                            let (guard, _) = woken.unwrap_or_else(|e| e.into_inner());
                             st = guard;
                         }
                         sched_stats.set_queue_depth(st.pending.len() + st.rejoin.len());

@@ -251,15 +251,15 @@ impl Counters {
         if delta == 0 {
             return;
         }
-        let now = self.kv_bytes.fetch_add(delta, Ordering::AcqRel) + delta;
-        self.kv_high_water.fetch_max(now, Ordering::AcqRel);
+        let now = self.kv_bytes.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.kv_high_water.fetch_max(now, Ordering::Relaxed);
     }
 
     fn kv_free(&self, bytes: usize) {
         // Saturating: an error path may release an estimate.
         let _ = self
             .kv_bytes
-            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| Some(n.saturating_sub(bytes)));
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| Some(n.saturating_sub(bytes)));
     }
 
     fn set_kv_pool(
@@ -273,7 +273,7 @@ impl Counters {
         self.kv_pool_pages.store(pool_pages, Ordering::Relaxed);
         self.kv_free_pages.store(free_pages, Ordering::Relaxed);
         self.kv_shared_pages.store(shared_pages, Ordering::Relaxed);
-        self.kv_shared_pages_peak.fetch_max(shared_pages, Ordering::AcqRel);
+        self.kv_shared_pages_peak.fetch_max(shared_pages, Ordering::Relaxed);
         self.kv_preemptions.store(preemptions, Ordering::Relaxed);
         self.kv_cow_forks.store(cow_forks, Ordering::Relaxed);
     }

@@ -50,6 +50,7 @@ impl Mat {
     pub fn uninit_filled(rows: usize, cols: usize) -> Self {
         let n = rows * cols;
         let mut data = Vec::with_capacity(n);
+        debug_assert!(data.capacity() >= n, "with_capacity reserved less than requested");
         // SAFETY: `f32` is a plain-old-data type — every bit pattern is a
         // valid value, there is no drop glue, and the capacity was just
         // reserved.  The garbage values are never *used*: every caller
@@ -293,7 +294,9 @@ impl Mat {
             let src = self.row(r);
             let dst = out.row_mut(r);
             for (d, &i) in dst.iter_mut().zip(src_of) {
-                // SAFETY: every index checked against `cols` above.
+                debug_assert!(i < src.len(), "permutation index outside the checked range");
+                // SAFETY: every index checked against `cols` above (and
+                // re-asserted per element in debug builds).
                 *d = unsafe { *src.get_unchecked(i) };
             }
         }

@@ -1,0 +1,1254 @@
+//! Concurrency-invariant analyzer for the PermLLM tree.
+//!
+//! `cargo run -p xtask -- analyze` lexes every `.rs` file under `rust/src`
+//! and `rust/tests` (comment- and string-aware, so rules never fire inside
+//! literals) and enforces the named rules documented in
+//! `docs/CONCURRENCY.md`:
+//!
+//! - **AL-01** every `unsafe` block carries an immediately preceding
+//!   `// SAFETY:` comment;
+//! - **AL-02** no `unwrap`/`expect`/`panic!`/`todo!` in non-test code under
+//!   `serve/`, `model/`, `runtime/`, `snapshot/`;
+//! - **AL-03** no allocation-capable calls inside `*_scratch` hot-path
+//!   functions;
+//! - **AL-04** every `Ordering::` site appears in the CONCURRENCY.md atomics
+//!   table (drift in either direction fails);
+//! - **AL-05** nested `.lock()` acquisitions respect the declared lock
+//!   partial order;
+//! - **AL-06** every `Condvar` wait sits inside a loop.
+//!
+//! Suppressions live in `analyze.allow.toml`; unused entries and entries
+//! without a justification are themselves findings.
+
+#![forbid(unsafe_code)]
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::ffi::OsStr;
+use std::fs;
+use std::path::Path;
+
+const ORDS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+const AL02_DIRS: [&str; 4] = [
+    "rust/src/serve/",
+    "rust/src/model/",
+    "rust/src/runtime/",
+    "rust/src/snapshot/",
+];
+const AL02_DOT: [&str; 2] = ["unwrap", "expect"];
+const AL02_MACRO: [&str; 3] = ["panic", "todo", "unimplemented"];
+const AL03_DOT: [&str; 5] = ["to_vec", "collect", "clone", "to_owned", "to_string"];
+const AL03_MACRO: [&str; 2] = ["vec", "format"];
+const AL03_PATH: [(&str, &str); 9] = [
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Vec", "from"),
+    ("String", "new"),
+    ("String", "with_capacity"),
+    ("String", "from"),
+    ("Box", "new"),
+    ("Mat", "zeros"),
+    ("Mat", "uninit_filled"),
+    ("Mat", "randn"),
+];
+const WAITS: [&str; 4] = ["wait", "wait_timeout", "wait_while", "wait_timeout_while"];
+const ITEM_KWS: [&str; 7] = ["pub", "crate", "mod", "fn", "use", "struct", "impl"];
+const CHAIN_PUNCT: [&str; 5] = [".", "]", "[", ")", "("];
+
+const MSG_AL01: &str = "`unsafe` block without an immediately preceding `// SAFETY:` comment";
+const MSG_NO_CALL: &str = "could not attribute `Ordering::` site to an atomic call";
+const MSG_AL05_RECV: &str = "could not resolve `.lock()` receiver";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Num,
+    Comment,
+    Str,
+    Char,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub snippet: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct AtomicSite {
+    pub field: String,
+    pub op: String,
+    pub ordering: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct AtomicRow {
+    pub file: String,
+    pub field: String,
+    pub op: String,
+    pub ordering: String,
+    pub rationale: String,
+    pub line: usize,
+}
+
+#[derive(Default)]
+pub struct Docs {
+    pub lock_ranks: HashMap<String, i64>,
+    pub atomics: Vec<AtomicRow>,
+}
+
+#[derive(Default)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub pattern: String,
+    pub reason: String,
+    pub used: usize,
+}
+
+fn msg_al02_dot(name: &str) -> String {
+    format!("`.{name}()` in non-test serving/model/runtime/snapshot code")
+}
+
+fn msg_al02_macro(name: &str) -> String {
+    format!("`{name}!` in non-test serving/model/runtime/snapshot code")
+}
+
+fn msg_al03_dot(name: &str, f: &str) -> String {
+    format!("allocation-capable `.{name}()` inside hot-path fn `{f}`")
+}
+
+fn msg_al03_macro(name: &str, f: &str) -> String {
+    format!("allocation-capable `{name}!` inside hot-path fn `{f}`")
+}
+
+fn msg_al03_path(name: &str, tail: &str, f: &str) -> String {
+    format!("allocation-capable `{name}::{tail}` inside hot-path fn `{f}`")
+}
+
+fn msg_al04_outside(op: &str) -> String {
+    format!("`Ordering::` used outside a method call (`{op}`)")
+}
+
+fn msg_al04_recv(op: &str) -> String {
+    format!("could not resolve atomic receiver for `.{op}(...)`")
+}
+
+fn msg_al04_missing(field: &str, op: &str, ord: &str) -> String {
+    let tail = "missing from docs/CONCURRENCY.md atomics table";
+    format!("atomic site `{field}.{op}` with `Ordering::{ord}` {tail}")
+}
+
+fn msg_al04_stale(r: &AtomicRow) -> String {
+    let site = format!("`{}.{}` site with `Ordering::{}`", r.field, r.op, r.ordering);
+    format!("stale atomics-table row: no {site} in `{}`", r.file)
+}
+
+fn msg_al05_undeclared(key: &str) -> String {
+    format!("lock `{key}` is not declared in docs/CONCURRENCY.md lock order")
+}
+
+fn msg_al05_order(key: &str, rank: i64, hkey: &str, hrank: i64) -> String {
+    format!("lock `{key}` (rank {rank}) acquired while holding `{hkey}` (rank {hrank})")
+}
+
+fn msg_al06(name: &str) -> String {
+    format!("`Condvar::{name}` outside a while-predicate loop (spurious wakeup hazard)")
+}
+
+fn msg_allow_unused(a: &AllowEntry) -> String {
+    format!("unused allowlist entry: {} {} {}", a.rule, a.file, a.pattern)
+}
+
+fn msg_allow_no_reason(a: &AllowEntry) -> String {
+    format!("entry for {} has no justification", a.file)
+}
+
+fn starts_with(b: &[char], i: usize, pat: &str) -> bool {
+    let mut j = i;
+    for c in pat.chars() {
+        if j >= b.len() || b[j] != c {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// End index (exclusive) of a raw string literal starting at `i`, if any.
+fn raw_string_end(b: &[char], i: usize) -> Option<usize> {
+    let n = b.len();
+    let r = if b[i] == 'b' { i + 1 } else { i };
+    if r >= n || b[r] != 'r' {
+        return None;
+    }
+    let mut h = r + 1;
+    while h < n && b[h] == '#' {
+        h += 1;
+    }
+    if h >= n || b[h] != '"' {
+        return None;
+    }
+    let hashes = h - (r + 1);
+    let mut j = h + 1;
+    while j < n {
+        if b[j] == '"' && starts_with(b, j + 1, &"#".repeat(hashes)) {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Comment/string-aware lexer. Literal tokens carry empty text so rule
+/// matching can never fire on string contents.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if starts_with(&b, i, "//") {
+            let mut j = i;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            toks.push(Tok { kind: Kind::Comment, text, line });
+            i = j;
+            continue;
+        }
+        if starts_with(&b, i, "/*") {
+            let start = line;
+            let mut depth = 1i64;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if starts_with(&b, j, "/*") {
+                    depth += 1;
+                    j += 2;
+                } else if starts_with(&b, j, "*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let text: String = b[i..j.min(n)].iter().collect();
+            toks.push(Tok { kind: Kind::Comment, text, line: start });
+            i = j;
+            continue;
+        }
+        if c == 'r' || c == 'b' {
+            if let Some(j) = raw_string_end(&b, i) {
+                let mut m = i;
+                while m < j.min(n) {
+                    if b[m] == '\n' {
+                        line += 1;
+                    }
+                    m += 1;
+                }
+                toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+                i = j;
+                continue;
+            }
+        }
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                if b[j] == '\\' {
+                    if j + 1 < n && b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            let lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && (i + 2 >= n || b[i + 2] != '\'');
+            if lifetime {
+                let mut j = i + 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                let text: String = b[i..j].iter().collect();
+                toks.push(Tok { kind: Kind::Lifetime, text, line });
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' {
+                    if j + 1 < n && b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            toks.push(Tok { kind: Kind::Ident, text, line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let ch = b[j];
+                if ch.is_alphanumeric() || ch == '_' {
+                    j += 1;
+                } else if ch == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else if (ch == '+' || ch == '-') && (b[j - 1] == 'e' || b[j - 1] == 'E') {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let text: String = b[i..j].iter().collect();
+            toks.push(Tok { kind: Kind::Num, text, line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+fn is_punct(t: &Tok, ch: &str) -> bool {
+    t.kind == Kind::Punct && t.text == ch
+}
+
+/// Indexes of non-comment tokens.
+pub fn sig(toks: &[Tok]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Comment {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// Token index of the `}` matching the `{` at `open_idx`.
+pub fn brace_match(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    let mut k = open_idx;
+    while k < toks.len() {
+        if is_punct(&toks[k], "{") {
+            depth += 1;
+        } else if is_punct(&toks[k], "}") {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// `(start_tok, end_tok)` spans of `#[cfg(test)]` items.
+pub fn test_regions(toks: &[Tok], whole_file_is_test: bool) -> Vec<(usize, usize)> {
+    if whole_file_is_test {
+        return vec![(0, toks.len().saturating_sub(1))];
+    }
+    let s = sig(toks);
+    let mut regs = Vec::new();
+    let mut si = 0usize;
+    while si + 6 < s.len() {
+        let texts: Vec<&str> = (0..7).map(|d| toks[s[si + d]].text.as_str()).collect();
+        let is_cfg_test = texts == ["#", "[", "cfg", "(", "test", ")", "]"]
+            && toks[s[si]].kind == Kind::Punct
+            && toks[s[si + 2]].kind == Kind::Ident;
+        if !is_cfg_test {
+            si += 1;
+            continue;
+        }
+        // Skip any further attributes and modifiers to reach the item start.
+        let mut k = si + 7;
+        while k < s.len() {
+            let t = &toks[s[k]];
+            if is_punct(t, "#") && k + 1 < s.len() && is_punct(&toks[s[k + 1]], "[") {
+                let mut depth = 0i64;
+                let mut m = k + 1;
+                while m < s.len() {
+                    let tt = toks[s[m]].text.as_str();
+                    if tt == "[" {
+                        depth += 1;
+                    } else if tt == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    m += 1;
+                }
+                k = m + 1;
+                continue;
+            }
+            let item = t.kind == Kind::Ident && ITEM_KWS.contains(&t.text.as_str());
+            if item {
+                break;
+            }
+            k += 1;
+        }
+        // The region runs to the matching `}` (or `;` for extern items).
+        let mut m = k;
+        while m < s.len() {
+            if is_punct(&toks[s[m]], "{") {
+                regs.push((s[si], brace_match(toks, s[m])));
+                break;
+            }
+            if is_punct(&toks[s[m]], ";") {
+                regs.push((s[si], s[m]));
+                break;
+            }
+            m += 1;
+        }
+        si += 1;
+    }
+    regs
+}
+
+fn in_regions(regs: &[(usize, usize)], idx: usize) -> bool {
+    regs.iter().any(|&(a, b)| (a..=b).contains(&idx))
+}
+
+pub struct FnInfo {
+    pub name: String,
+    pub body_open: usize,
+    pub body_close: usize,
+}
+
+/// Every `fn` item with a body, by token span (braces included).
+pub fn functions(toks: &[Tok]) -> Vec<FnInfo> {
+    let s = sig(toks);
+    let mut out = Vec::new();
+    let mut si = 0usize;
+    while si + 1 < s.len() {
+        let t = &toks[s[si]];
+        if t.kind == Kind::Ident && t.text == "fn" && toks[s[si + 1]].kind == Kind::Ident {
+            let name = toks[s[si + 1]].text.clone();
+            let mut depth = 0i64;
+            let mut m = si + 2;
+            let mut body: Option<usize> = None;
+            while m < s.len() {
+                let tt = &toks[s[m]];
+                if tt.kind == Kind::Punct {
+                    match tt.text.as_str() {
+                        "(" => depth += 1,
+                        ")" => depth -= 1,
+                        "{" if depth == 0 => {
+                            body = Some(s[m]);
+                            break;
+                        }
+                        ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                m += 1;
+            }
+            if let Some(b0) = body {
+                let body_close = brace_match(toks, b0);
+                out.push(FnInfo { name, body_open: b0, body_close });
+            }
+        }
+        si += 1;
+    }
+    out
+}
+
+/// Walk backwards from sig-index `si` to the `(` of the enclosing call.
+fn find_call_open(toks: &[Tok], s: &[usize], si: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut k = si;
+    while k > 0 {
+        k -= 1;
+        if si - k >= 600 {
+            break;
+        }
+        let t = &toks[s[k]];
+        if is_punct(t, ")") {
+            depth += 1;
+        } else if is_punct(t, "(") {
+            if depth == 0 {
+                return Some(k);
+            }
+            depth -= 1;
+        }
+    }
+    None
+}
+
+/// Field identifier of the receiver ending at sig-index `k` (the token just
+/// before the `.method(` being resolved). Handles `]`/`)` suffixes by
+/// matching brackets backwards.
+fn receiver_field(toks: &[Tok], s: &[usize], k: usize) -> Option<String> {
+    let t = &toks[s[k]];
+    if t.kind == Kind::Ident || t.kind == Kind::Num {
+        return Some(t.text.clone());
+    }
+    if t.kind == Kind::Punct && (t.text == "]" || t.text == ")") {
+        let close = t.text.clone();
+        let open = if close == "]" { "[" } else { "(" };
+        let mut depth = 0i64;
+        let mut m = k + 1;
+        while m > 0 {
+            m -= 1;
+            let tt = &toks[s[m]];
+            if tt.kind == Kind::Punct && tt.text == close {
+                depth += 1;
+            } else if tt.kind == Kind::Punct && tt.text == open {
+                depth -= 1;
+                if depth == 0 {
+                    if m >= 1 && toks[s[m - 1]].kind == Kind::Ident {
+                        return Some(toks[s[m - 1]].text.clone());
+                    }
+                    return None;
+                }
+            }
+        }
+    }
+    None
+}
+
+fn fnd(
+    findings: &mut Vec<Finding>,
+    lines: &[&str],
+    rule: &'static str,
+    file: &str,
+    line: usize,
+    message: String,
+) {
+    let snippet = if (1..=lines.len()).contains(&line) {
+        lines[line - 1].trim().to_string()
+    } else {
+        String::new()
+    };
+    findings.push(Finding { rule, file: file.to_string(), line, message, snippet });
+}
+
+fn plain(rule: &'static str, file: &str, line: usize, message: String) -> Finding {
+    let file = file.to_string();
+    Finding { rule, file, line, message, snippet: String::new() }
+}
+
+/// Run all six rules over one file. Returns findings plus the resolved
+/// atomic-ordering sites (for the AL-04 drift check in [`run`]).
+pub fn analyze_file(relpath: &str, src: &str, docs: &Docs) -> (Vec<Finding>, Vec<AtomicSite>) {
+    let toks = lex(src);
+    let lines: Vec<&str> = src.split('\n').collect();
+    let s = sig(&toks);
+    let mut pos_of: HashMap<usize, usize> = HashMap::new();
+    for (k, &idx) in s.iter().enumerate() {
+        pos_of.insert(idx, k);
+    }
+    let is_test_file = relpath.starts_with("rust/tests/");
+    let regs = test_regions(&toks, is_test_file);
+    let fns = functions(&toks);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut atomics: Vec<AtomicSite> = Vec::new();
+
+    // AL-01: map comment text per line, then walk up from each unsafe block.
+    let mut comment_lines: HashMap<usize, Vec<&str>> = HashMap::new();
+    let mut code_lines: HashSet<usize> = HashSet::new();
+    for t in &toks {
+        if t.kind == Kind::Comment {
+            let span = t.text.matches('\n').count();
+            for l in t.line..=t.line + span {
+                comment_lines.entry(l).or_default().push(t.text.as_str());
+            }
+        } else {
+            code_lines.insert(t.line);
+        }
+    }
+    let mut k = 0usize;
+    while k + 1 < s.len() {
+        let t = &toks[s[k]];
+        if t.kind == Kind::Ident && t.text == "unsafe" && is_punct(&toks[s[k + 1]], "{") {
+            let mut ok = false;
+            let mut l = t.line.saturating_sub(1);
+            while l > 0 && comment_lines.contains_key(&l) && !code_lines.contains(&l) {
+                if comment_lines[&l].iter().any(|c| c.contains("SAFETY:")) {
+                    ok = true;
+                    break;
+                }
+                l -= 1;
+            }
+            if !ok {
+                fnd(&mut findings, &lines, "AL-01", relpath, t.line, MSG_AL01.to_string());
+            }
+        }
+        k += 1;
+    }
+
+    // AL-02: panic-capable calls in non-test gated code.
+    if AL02_DIRS.iter().any(|d| relpath.starts_with(d)) {
+        for (k, &idx) in s.iter().enumerate() {
+            if in_regions(&regs, idx) {
+                continue;
+            }
+            let t = &toks[idx];
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let name = t.text.as_str();
+            if AL02_DOT.contains(&name) && k > 0 && is_punct(&toks[s[k - 1]], ".") {
+                fnd(&mut findings, &lines, "AL-02", relpath, t.line, msg_al02_dot(name));
+            }
+            if AL02_MACRO.contains(&name) && k + 1 < s.len() && is_punct(&toks[s[k + 1]], "!") {
+                fnd(&mut findings, &lines, "AL-02", relpath, t.line, msg_al02_macro(name));
+            }
+        }
+    }
+
+    // AL-03: allocation-capable calls inside `*_scratch` hot-path functions.
+    for f in &fns {
+        if !f.name.ends_with("_scratch") {
+            continue;
+        }
+        let fname = f.name.as_str();
+        let k0 = pos_of[&f.body_open];
+        let k1 = pos_of[&f.body_close];
+        let mut k = k0;
+        while k <= k1 {
+            let t = &toks[s[k]];
+            if t.kind == Kind::Ident {
+                let name = t.text.as_str();
+                let bang = k + 1 < s.len() && is_punct(&toks[s[k + 1]], "!");
+                if AL03_DOT.contains(&name) && k > 0 && is_punct(&toks[s[k - 1]], ".") {
+                    let msg = msg_al03_dot(name, fname);
+                    fnd(&mut findings, &lines, "AL-03", relpath, t.line, msg);
+                }
+                if AL03_MACRO.contains(&name) && bang {
+                    let msg = msg_al03_macro(name, fname);
+                    fnd(&mut findings, &lines, "AL-03", relpath, t.line, msg);
+                }
+                let path_call = k + 3 < s.len()
+                    && is_punct(&toks[s[k + 1]], ":")
+                    && is_punct(&toks[s[k + 2]], ":")
+                    && toks[s[k + 3]].kind == Kind::Ident
+                    && AL03_PATH.contains(&(name, toks[s[k + 3]].text.as_str()));
+                if path_call {
+                    let tail = toks[s[k + 3]].text.as_str();
+                    let msg = msg_al03_path(name, tail, fname);
+                    fnd(&mut findings, &lines, "AL-03", relpath, t.line, msg);
+                }
+            }
+            k += 1;
+        }
+    }
+
+    // AL-04: resolve every `Ordering::` use to its enclosing atomic call.
+    if relpath.starts_with("rust/src/") {
+        let mut by_call: BTreeMap<usize, Vec<(usize, String, usize)>> = BTreeMap::new();
+        let mut k = 0usize;
+        while k + 3 < s.len() {
+            let idx = s[k];
+            let t = &toks[idx];
+            let is_site = !in_regions(&regs, idx)
+                && t.kind == Kind::Ident
+                && t.text == "Ordering"
+                && is_punct(&toks[s[k + 1]], ":")
+                && is_punct(&toks[s[k + 2]], ":")
+                && toks[s[k + 3]].kind == Kind::Ident
+                && ORDS.contains(&toks[s[k + 3]].text.as_str());
+            if is_site {
+                match find_call_open(&toks, &s, k) {
+                    Some(opn) => {
+                        let ord = toks[s[k + 3]].text.clone();
+                        by_call.entry(opn).or_default().push((k, ord, t.line));
+                    }
+                    None => {
+                        let msg = MSG_NO_CALL.to_string();
+                        fnd(&mut findings, &lines, "AL-04", relpath, t.line, msg);
+                    }
+                }
+            }
+            k += 1;
+        }
+        for (opn, sites) in &by_call {
+            let opn = *opn;
+            let line = sites[0].2;
+            if opn < 3 || toks[s[opn - 1]].kind != Kind::Ident {
+                let msg = MSG_NO_CALL.to_string();
+                fnd(&mut findings, &lines, "AL-04", relpath, line, msg);
+                continue;
+            }
+            let op = toks[s[opn - 1]].text.clone();
+            if !is_punct(&toks[s[opn - 2]], ".") {
+                fnd(&mut findings, &lines, "AL-04", relpath, line, msg_al04_outside(&op));
+                continue;
+            }
+            match receiver_field(&toks, &s, opn - 3) {
+                Some(field) => {
+                    let ords: Vec<&str> = sites.iter().map(|(_, o, _)| o.as_str()).collect();
+                    let ordering = ords.join("/");
+                    atomics.push(AtomicSite { field, op, ordering, line });
+                }
+                None => {
+                    fnd(&mut findings, &lines, "AL-04", relpath, line, msg_al04_recv(&op));
+                }
+            }
+        }
+    }
+
+    // AL-05: per-function nested `.lock()` acquisitions against the declared
+    // partial order.
+    if relpath.starts_with("rust/src/") {
+        for f in &fns {
+            let k0 = pos_of[&f.body_open];
+            let k1 = pos_of[&f.body_close];
+            // (acq_tok_idx, lock field, line, release_tok_idx)
+            let mut acqs: Vec<(usize, String, usize, usize)> = Vec::new();
+            let mut k = k0;
+            while k <= k1 {
+                let idx = s[k];
+                if in_regions(&regs, idx) {
+                    k += 1;
+                    continue;
+                }
+                let t = &toks[idx];
+                let is_lock = t.kind == Kind::Ident
+                    && t.text == "lock"
+                    && k > 0
+                    && is_punct(&toks[s[k - 1]], ".")
+                    && k + 1 <= k1
+                    && is_punct(&toks[s[k + 1]], "(");
+                if !is_lock {
+                    k += 1;
+                    continue;
+                }
+                let line = t.line;
+                let field = match receiver_field(&toks, &s, k - 2) {
+                    Some(fld) => fld,
+                    None => {
+                        let msg = MSG_AL05_RECV.to_string();
+                        fnd(&mut findings, &lines, "AL-05", relpath, line, msg);
+                        k += 1;
+                        continue;
+                    }
+                };
+                // Is the guard let-bound? Walk back over the receiver chain
+                // to a `=`, then back over the pattern to `let`.
+                let k0i = k0 as i64;
+                let mut guard: Option<String> = None;
+                let mut m = k as i64 - 2;
+                while m >= k0i {
+                    let tt = &toks[s[m as usize]];
+                    let chainy = tt.kind == Kind::Ident
+                        || tt.kind == Kind::Num
+                        || (tt.kind == Kind::Punct && CHAIN_PUNCT.contains(&tt.text.as_str()));
+                    if !chainy {
+                        break;
+                    }
+                    m -= 1;
+                }
+                if m >= k0i && is_punct(&toks[s[m as usize]], "=") {
+                    let mut mm = m - 1;
+                    let mut pat: Vec<String> = Vec::new();
+                    while mm >= k0i {
+                        let tt = &toks[s[mm as usize]];
+                        if tt.kind == Kind::Ident && tt.text == "let" {
+                            break;
+                        }
+                        if tt.kind == Kind::Ident {
+                            pat.push(tt.text.clone());
+                        }
+                        mm -= 1;
+                    }
+                    if mm >= k0i && toks[s[mm as usize]].text == "let" {
+                        let names: Vec<&String> = pat.iter().filter(|p| *p != "mut").collect();
+                        guard = names.last().map(|g| (*g).clone());
+                    }
+                }
+                let release = match &guard {
+                    Some(g) => {
+                        // Held to the innermost enclosing block close, or an
+                        // explicit drop(guard).
+                        let mut depth = 0i64;
+                        let mut rel = f.body_close;
+                        let mut m2 = k;
+                        while m2 <= k1 {
+                            let tt = &toks[s[m2]];
+                            if is_punct(tt, "{") {
+                                depth += 1;
+                            } else if is_punct(tt, "}") {
+                                if depth == 0 {
+                                    rel = s[m2];
+                                    break;
+                                }
+                                depth -= 1;
+                            } else if tt.kind == Kind::Ident
+                                && tt.text == "drop"
+                                && m2 + 2 <= k1
+                                && is_punct(&toks[s[m2 + 1]], "(")
+                                && toks[s[m2 + 2]].text == *g
+                            {
+                                rel = s[m2];
+                                break;
+                            }
+                            m2 += 1;
+                        }
+                        rel
+                    }
+                    None => {
+                        // Temporary guard: held to the end of the statement.
+                        let mut depth = 0i64;
+                        let mut rel = s[k1];
+                        let mut m2 = k;
+                        while m2 <= k1 {
+                            let tt = &toks[s[m2]];
+                            if tt.kind == Kind::Punct {
+                                match tt.text.as_str() {
+                                    "(" | "[" | "{" => depth += 1,
+                                    ")" | "]" | "}" => depth -= 1,
+                                    ";" if depth <= 0 => {
+                                        rel = s[m2];
+                                        break;
+                                    }
+                                    _ => {}
+                                }
+                            }
+                            m2 += 1;
+                        }
+                        rel
+                    }
+                };
+                acqs.push((idx, field, line, release));
+                k += 1;
+            }
+            let mut held: Vec<(String, i64, usize)> = Vec::new();
+            for (idx, field, line, release) in acqs {
+                held.retain(|h| h.2 > idx);
+                let key = format!("{relpath}:{field}");
+                let rank = match docs.lock_ranks.get(&key) {
+                    Some(&r) => r,
+                    None => {
+                        let msg = msg_al05_undeclared(&key);
+                        fnd(&mut findings, &lines, "AL-05", relpath, line, msg);
+                        continue;
+                    }
+                };
+                for h in &held {
+                    if rank <= h.1 {
+                        let msg = msg_al05_order(&key, rank, &h.0, h.1);
+                        fnd(&mut findings, &lines, "AL-05", relpath, line, msg);
+                    }
+                }
+                held.push((key, rank, release));
+            }
+        }
+    }
+
+    // AL-06: condvar waits must sit inside a loop (spurious wakeups).
+    let mut loops: Vec<(usize, usize)> = Vec::new();
+    for (k, &idx) in s.iter().enumerate() {
+        let t = &toks[idx];
+        if t.kind == Kind::Ident && matches!(t.text.as_str(), "loop" | "while" | "for") {
+            let mut depth = 0i64;
+            let mut m = k + 1;
+            let mut body: Option<usize> = None;
+            while m < s.len() {
+                let tt = &toks[s[m]];
+                if tt.kind == Kind::Punct {
+                    match tt.text.as_str() {
+                        "(" => depth += 1,
+                        ")" => depth -= 1,
+                        "{" if depth == 0 => {
+                            body = Some(s[m]);
+                            break;
+                        }
+                        ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                m += 1;
+            }
+            if let Some(b0) = body {
+                loops.push((b0, brace_match(&toks, b0)));
+            }
+        }
+    }
+    let mut k = 1usize;
+    while k + 1 < s.len() {
+        let t = &toks[s[k]];
+        let is_wait = t.kind == Kind::Ident
+            && WAITS.contains(&t.text.as_str())
+            && is_punct(&toks[s[k - 1]], ".")
+            && is_punct(&toks[s[k + 1]], "(");
+        if is_wait {
+            // Zero-arg `.wait()` is `Ticket::wait`, not a condvar.
+            let zero_arg = t.text == "wait" && k + 2 < s.len() && is_punct(&toks[s[k + 2]], ")");
+            let idx = s[k];
+            if !zero_arg && !loops.iter().any(|&(a, b)| (a..=b).contains(&idx)) {
+                let msg = msg_al06(t.text.as_str());
+                fnd(&mut findings, &lines, "AL-06", relpath, t.line, msg);
+            }
+        }
+        k += 1;
+    }
+
+    (findings, atomics)
+}
+
+/// Parse the machine-checked sections of docs/CONCURRENCY.md.
+pub fn parse_docs(path: &Path) -> Docs {
+    let mut docs = Docs::default();
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return docs,
+    };
+    let mut section = 0u8; // 0 = none, 1 = locks, 2 = atomics
+    for (i, raw) in text.split('\n').enumerate() {
+        let lineno = i + 1;
+        let t = raw.trim();
+        match t {
+            "<!-- AL05:locks:begin -->" => {
+                section = 1;
+                continue;
+            }
+            "<!-- AL04:atomics:begin -->" => {
+                section = 2;
+                continue;
+            }
+            "<!-- AL05:locks:end -->" | "<!-- AL04:atomics:end -->" => {
+                section = 0;
+                continue;
+            }
+            _ => {}
+        }
+        if section == 0 || !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = t
+            .trim_matches('|')
+            .split('|')
+            .map(|c| c.trim().to_string())
+            .collect();
+        if cells.iter().all(|c| c.chars().all(|ch| "-: ".contains(ch))) {
+            continue; // separator row
+        }
+        if section == 1 {
+            if cells[0].eq_ignore_ascii_case("rank") || cells.len() < 3 {
+                continue;
+            }
+            let rank = match cells[0].parse::<i64>() {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            for site in cells[2].replace('`', "").split(',') {
+                let site = site.trim();
+                if !site.is_empty() {
+                    docs.lock_ranks.insert(site.to_string(), rank);
+                }
+            }
+        } else {
+            if cells[0].eq_ignore_ascii_case("file") || cells.len() < 5 {
+                continue;
+            }
+            docs.atomics.push(AtomicRow {
+                file: cells[0].replace('`', ""),
+                field: cells[1].replace('`', ""),
+                op: cells[2].replace('`', ""),
+                ordering: cells[3].replace('`', ""),
+                rationale: cells[4].clone(),
+                line: lineno,
+            });
+        }
+    }
+    docs
+}
+
+fn decode_value(v: &str) -> String {
+    if !v.starts_with('"') {
+        return v.to_string();
+    }
+    let inner: Vec<char> = v.chars().collect();
+    let mut out = String::new();
+    let mut i = 1usize;
+    while i < inner.len() {
+        let c = inner[i];
+        if c == '"' {
+            break;
+        }
+        if c == '\\' && i + 1 < inner.len() {
+            match inner[i + 1] {
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                e => out.push(e),
+            }
+            i += 2;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Parse analyze.allow.toml (flat `[[allow]]` entries; no toml crate).
+pub fn parse_allowlist(path: &Path) -> Vec<AllowEntry> {
+    let mut out: Vec<AllowEntry> = Vec::new();
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return out,
+    };
+    for raw in text.split('\n') {
+        let t = raw.trim();
+        if t == "[[allow]]" {
+            out.push(AllowEntry::default());
+            continue;
+        }
+        if t.starts_with('#') || !t.contains('=') {
+            continue;
+        }
+        let cur = match out.last_mut() {
+            Some(c) => c,
+            None => continue,
+        };
+        let (key, val) = match t.split_once('=') {
+            Some((k, v)) => (k.trim(), decode_value(v.trim())),
+            None => continue,
+        };
+        match key {
+            "rule" => cur.rule = val,
+            "file" => cur.file = val,
+            "pattern" => cur.pattern = val,
+            "reason" => cur.reason = val,
+            _ => {}
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<String>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, root, out);
+        } else if p.extension() == Some(OsStr::new("rs")) {
+            let rel = match p.strip_prefix(root) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let code = c as u32;
+                out.push_str(&format!("\\u{code:04x}"));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn finding_json(f: &Finding, suppressed: bool) -> String {
+    format!(
+        "  {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \
+         \"snippet\": \"{}\", \"suppressed\": {}}}",
+        json_escape(f.rule),
+        json_escape(&f.file),
+        f.line,
+        json_escape(&f.message),
+        json_escape(&f.snippet),
+        suppressed
+    )
+}
+
+/// Analyze the whole tree. `args` may contain `--dump-atomics` (print the
+/// atomics inventory as TSV and exit) and `--json PATH` (write machine-
+/// readable findings). Returns the process exit code.
+pub fn run(root: &Path, args: &[String]) -> i32 {
+    let dump = args.iter().any(|a| a == "--dump-atomics");
+    let json_path = args.iter().position(|a| a == "--json").and_then(|p| args.get(p + 1));
+
+    let mut files: Vec<String> = Vec::new();
+    for base in ["rust/src", "rust/tests"] {
+        collect_rs(&root.join(base), root, &mut files);
+    }
+    files.sort();
+
+    let docs = parse_docs(&root.join("docs/CONCURRENCY.md"));
+    let mut findings: Vec<Finding> = Vec::new();
+    type AtomicKey = (String, String, String, String);
+    let mut all_atomics: BTreeMap<AtomicKey, Vec<usize>> = BTreeMap::new();
+    for rel in &files {
+        let src = match fs::read_to_string(root.join(rel)) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let (f, sites) = analyze_file(rel, &src, &docs);
+        findings.extend(f);
+        for a in sites {
+            let key = (rel.clone(), a.field, a.op, a.ordering);
+            all_atomics.entry(key).or_default().push(a.line);
+        }
+    }
+
+    // AL-04 drift, both directions, plus empty rationales.
+    let mut table_keys: HashSet<AtomicKey> = HashSet::new();
+    for r in &docs.atomics {
+        table_keys.insert((r.file.clone(), r.field.clone(), r.op.clone(), r.ordering.clone()));
+    }
+    for (key, lns) in &all_atomics {
+        if !table_keys.contains(key) {
+            let (file, field, op, ord) = key;
+            findings.push(plain("AL-04", file, lns[0], msg_al04_missing(field, op, ord)));
+        }
+    }
+    for r in &docs.atomics {
+        let key = (r.file.clone(), r.field.clone(), r.op.clone(), r.ordering.clone());
+        if !all_atomics.contains_key(&key) {
+            findings.push(plain("AL-04", "docs/CONCURRENCY.md", r.line, msg_al04_stale(r)));
+        }
+        if r.rationale.trim().is_empty() {
+            let msg = "atomics-table row has an empty rationale".to_string();
+            findings.push(plain("AL-04", "docs/CONCURRENCY.md", r.line, msg));
+        }
+    }
+
+    if dump {
+        for ((rel, field, op, ord), lns) in &all_atomics {
+            let l: Vec<String> = lns.iter().map(|x| x.to_string()).collect();
+            let joined = l.join(",");
+            println!("{rel}\t{field}\t{op}\t{ord}\t{joined}");
+        }
+        return 0;
+    }
+
+    // Allowlist: rule + file must match exactly; pattern (if any) must be a
+    // substring of the offending source line.
+    let mut allow = parse_allowlist(&root.join("analyze.allow.toml"));
+    let mut sup_flags: Vec<bool> = vec![false; findings.len()];
+    for (fi, f) in findings.iter().enumerate() {
+        for a in allow.iter_mut() {
+            if a.rule == f.rule
+                && a.file == f.file
+                && (a.pattern.is_empty() || f.snippet.contains(&a.pattern))
+            {
+                a.used += 1;
+                sup_flags[fi] = true;
+                break;
+            }
+        }
+    }
+    let mut unsuppressed: Vec<Finding> = Vec::new();
+    for (fi, f) in findings.iter().enumerate() {
+        if !sup_flags[fi] {
+            unsuppressed.push(f.clone());
+        }
+    }
+    for a in &allow {
+        if a.reason.trim().is_empty() {
+            unsuppressed.push(plain("ALLOWLIST", "analyze.allow.toml", 0, msg_allow_no_reason(a)));
+        }
+        if a.used == 0 {
+            unsuppressed.push(plain("ALLOWLIST", "analyze.allow.toml", 0, msg_allow_unused(a)));
+        }
+    }
+
+    if let Some(p) = json_path {
+        let mut rows: Vec<String> = Vec::new();
+        for (fi, f) in findings.iter().enumerate() {
+            rows.push(finding_json(f, sup_flags[fi]));
+        }
+        for f in unsuppressed.iter().filter(|f| f.rule == "ALLOWLIST") {
+            rows.push(finding_json(f, false));
+        }
+        let body = format!("[\n{}\n]\n", rows.join(",\n"));
+        if let Err(e) = fs::write(p, body) {
+            eprintln!("warning: could not write findings JSON to {p}: {e}");
+        }
+    }
+
+    let total = findings.len();
+    let shown = unsuppressed.len();
+    let suppressed = sup_flags.iter().filter(|&&x| x).count();
+    println!("{total} findings, {suppressed} suppressed, {shown} unsuppressed");
+    for f in &unsuppressed {
+        let snip: String = f.snippet.chars().take(80).collect();
+        let rule = f.rule;
+        let file = f.file.as_str();
+        let line = f.line;
+        let msg = f.message.as_str();
+        println!("  {rule} {file}:{line} {msg}  [{snip}]");
+    }
+    if unsuppressed.is_empty() {
+        0
+    } else {
+        1
+    }
+}

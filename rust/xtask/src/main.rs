@@ -1,0 +1,12 @@
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("analyze") {
+        eprintln!("usage: cargo run -p xtask -- analyze [--dump-atomics] [--json PATH]");
+        std::process::exit(2);
+    }
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let root = root.canonicalize().unwrap_or(root);
+    std::process::exit(xtask::run(&root, &args[1..]));
+}

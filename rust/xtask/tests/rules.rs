@@ -1,0 +1,225 @@
+//! Fixture tests for each analyzer rule, plus a self-check that the real
+//! tree is clean (zero unsuppressed findings with the committed allowlist).
+
+use std::path::Path;
+use xtask::{analyze_file, parse_docs, Docs};
+
+fn rules(findings: &[xtask::Finding], rule: &str) -> Vec<String> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| format!("{}:{} {}", f.file, f.line, f.message))
+        .collect()
+}
+
+#[test]
+fn al01_flags_unsafe_block_without_safety_comment() {
+    let src = "pub fn f(v: &[f32]) -> f32 {\n    unsafe { *v.get_unchecked(0) }\n}\n";
+    let (f, _) = analyze_file("rust/src/tensor/fix.rs", src, &Docs::default());
+    assert_eq!(rules(&f, "AL-01").len(), 1, "{f:?}");
+}
+
+#[test]
+fn al01_accepts_safety_comment_and_skips_unsafe_impl() {
+    let src = "unsafe impl Send for W {}\n\
+               pub fn f(v: &[f32]) -> f32 {\n\
+                   // SAFETY: caller guarantees v is nonempty.\n\
+                   unsafe { *v.get_unchecked(0) }\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/tensor/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-01").is_empty(), "{f:?}");
+}
+
+#[test]
+fn al01_comment_run_may_span_multiple_lines() {
+    let src = "pub fn f(v: &[f32]) -> f32 {\n\
+               // SAFETY: caller guarantees v is nonempty\n\
+               // and the index is in range.\n\
+               unsafe { *v.get_unchecked(0) }\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/tensor/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-01").is_empty(), "{f:?}");
+}
+
+#[test]
+fn al02_flags_panics_in_gated_dirs_only() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &Docs::default());
+    assert_eq!(rules(&f, "AL-02").len(), 1, "{f:?}");
+    let (f, _) = analyze_file("rust/src/util/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-02").is_empty(), "util/ is not gated: {f:?}");
+}
+
+#[test]
+fn al02_ignores_cfg_test_regions_and_comments_and_strings() {
+    let src = "pub fn f() -> &'static str {\n\
+                   // a comment saying .unwrap() is fine here\n\
+                   \"string with panic!(boom) inside\"\n\
+               }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() {\n\
+                       Some(1).unwrap();\n\
+                       panic!(\"test-only\");\n\
+                   }\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-02").is_empty(), "{f:?}");
+}
+
+#[test]
+fn al03_flags_allocations_only_inside_scratch_fns() {
+    let src = "pub fn step_scratch(x: &[f32]) -> usize {\n\
+                   let v = vec![0.0f32; 4];\n\
+                   let w: Vec<f32> = Vec::new();\n\
+                   let c = x.to_vec();\n\
+                   v.len() + w.len() + c.len()\n\
+               }\n\
+               pub fn setup(x: &[f32]) -> Vec<f32> {\n\
+                   x.to_vec()\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/model/fix.rs", src, &Docs::default());
+    let hits = rules(&f, "AL-03");
+    assert_eq!(hits.len(), 3, "{hits:?}");
+    assert!(hits.iter().all(|h| h.contains("step_scratch")), "{hits:?}");
+}
+
+#[test]
+fn al04_resolves_receiver_op_and_ordering() {
+    let src = "pub fn f(c: &S) -> usize {\n\
+                   c.hits.fetch_add(1, Ordering::Relaxed);\n\
+                   c.ready.load(Ordering::Acquire)\n\
+               }\n";
+    let (f, at) = analyze_file("rust/src/serve/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-04").is_empty(), "{f:?}");
+    let got: Vec<String> = at
+        .iter()
+        .map(|a| format!("{}.{}:{}", a.field, a.op, a.ordering))
+        .collect();
+    assert_eq!(got, ["hits.fetch_add:Relaxed", "ready.load:Acquire"]);
+}
+
+#[test]
+fn al04_joins_fetch_update_orderings() {
+    let src = "pub fn f(c: &S) {\n\
+                   c.n.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| Some(v + 1));\n\
+               }\n";
+    let (_, at) = analyze_file("rust/src/serve/fix.rs", src, &Docs::default());
+    assert_eq!(at.len(), 1);
+    assert_eq!(at[0].ordering, "AcqRel/Acquire");
+}
+
+fn docs_with_ranks() -> Docs {
+    let mut docs = Docs::default();
+    docs.lock_ranks.insert("rust/src/serve/fix.rs:low".to_string(), 10);
+    docs.lock_ranks.insert("rust/src/serve/fix.rs:high".to_string(), 20);
+    docs
+}
+
+#[test]
+fn al05_flags_out_of_order_nested_locks() {
+    let src = "pub fn f(s: &S) {\n\
+                   let g1 = s.high.lock().unwrap();\n\
+                   let g2 = s.low.lock().unwrap();\n\
+                   drop(g2);\n\
+                   drop(g1);\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &docs_with_ranks());
+    let hits = rules(&f, "AL-05");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("rank 10"), "{hits:?}");
+}
+
+#[test]
+fn al05_accepts_ordered_nesting_and_sequential_locks() {
+    let src = "pub fn ordered(s: &S) {\n\
+                   let g1 = s.low.lock().unwrap();\n\
+                   let g2 = s.high.lock().unwrap();\n\
+                   drop(g2);\n\
+                   drop(g1);\n\
+               }\n\
+               pub fn sequential(s: &S) {\n\
+                   {\n\
+                       let g = s.high.lock().unwrap();\n\
+                       drop(g);\n\
+                   }\n\
+                   let g = s.low.lock().unwrap();\n\
+                   drop(g);\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &docs_with_ranks());
+    assert!(rules(&f, "AL-05").is_empty(), "{f:?}");
+}
+
+#[test]
+fn al05_flags_undeclared_lock_class() {
+    let src = "pub fn f(s: &S) {\n    let g = s.mystery.lock().unwrap();\n    drop(g);\n}\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &docs_with_ranks());
+    let hits = rules(&f, "AL-05");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].contains("not declared"), "{hits:?}");
+}
+
+#[test]
+fn al06_requires_condvar_waits_in_loops() {
+    let bad = "fn f(cv: &Condvar, m: &Mutex<bool>) {\n\
+                   let g = m.lock().unwrap();\n\
+                   let _g = cv.wait(g).unwrap();\n\
+               }\n";
+    let (f, _) = analyze_file("rust/tests/fix.rs", bad, &Docs::default());
+    assert_eq!(rules(&f, "AL-06").len(), 1, "{f:?}");
+
+    let good = "fn f(cv: &Condvar, m: &Mutex<bool>) {\n\
+                    let mut g = m.lock().unwrap();\n\
+                    while !*g {\n\
+                        g = cv.wait(g).unwrap();\n\
+                    }\n\
+                }\n";
+    let (f, _) = analyze_file("rust/tests/fix.rs", good, &Docs::default());
+    assert!(rules(&f, "AL-06").is_empty(), "{f:?}");
+}
+
+#[test]
+fn al06_ignores_zero_arg_ticket_wait() {
+    let src = "fn f(t: &Ticket) {\n    t.wait();\n}\n";
+    let (f, _) = analyze_file("rust/tests/fix.rs", src, &Docs::default());
+    assert!(rules(&f, "AL-06").is_empty(), "{f:?}");
+}
+
+#[test]
+fn lexer_does_not_lose_lines_on_string_continuations() {
+    let src = "fn f() {}\n\
+               fn g() -> String {\n\
+               format!(\n\
+               \"a \\\n\
+               b\",\n\
+               )\n\
+               }\n\
+               fn h(x: Option<u32>) -> u32 {\n\
+               x.unwrap()\n\
+               }\n";
+    let (f, _) = analyze_file("rust/src/serve/fix.rs", src, &Docs::default());
+    let hits = rules(&f, "AL-02");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert!(hits[0].starts_with("rust/src/serve/fix.rs:9 "), "{hits:?}");
+}
+
+#[test]
+fn concurrency_doc_tables_parse() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let docs = parse_docs(&root.join("docs/CONCURRENCY.md"));
+    assert!(
+        docs.lock_ranks.contains_key("rust/src/model/kv.rs:state"),
+        "lock table missing kv.rs:state: {:?}",
+        docs.lock_ranks
+    );
+    assert!(docs.atomics.len() >= 50, "atomics table too small: {}", docs.atomics.len());
+    assert!(docs.atomics.iter().all(|r| !r.rationale.trim().is_empty()));
+}
+
+#[test]
+fn real_tree_is_clean_under_committed_allowlist() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let code = xtask::run(&root, &[]);
+    assert_eq!(code, 0, "analyze found unsuppressed findings; run cargo run -p xtask -- analyze");
+}
